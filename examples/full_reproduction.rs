@@ -1,0 +1,139 @@
+//! **End-to-end driver**: the paper's complete evaluation on the real
+//! (simulated-substrate) workload, exercising all three layers:
+//!
+//!   Layer 1/2 — the AOT-compiled Pallas + JAX GP artifacts, executed
+//!   through PJRT by the rust runtime on every search iteration (pass
+//!   `--backend xla`, the default here when artifacts exist);
+//!   Layer 3 — profiling, memory modeling, search-space splitting, the
+//!   phased Bayesian search and the full Table II / Fig 4 / Fig 5
+//!   bookkeeping.
+//!
+//! Produces the paper-vs-measured comparison recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example full_reproduction -- \
+//!        [--reps N] [--backend native|xla] [--out results/]`
+//! Default reps: 200 with the native backend, 20 with the XLA backend
+//! (one PJRT call per iteration; same math, f32).
+
+use ruya::bayesopt::backend_by_name;
+use ruya::coordinator::{ExperimentConfig, ExperimentRunner};
+use ruya::report;
+use ruya::runtime::XlaRuntime;
+use ruya::util::cli::Args;
+use std::time::Instant;
+
+/// Paper Table II means for the comparison banner.
+const PAPER_CP: [f64; 3] = [8.735, 16.487, 23.629];
+const PAPER_RUYA: [f64; 3] = [3.307, 6.627, 11.631];
+const PAPER_Q: [f64; 3] = [0.379, 0.402, 0.492];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let default_backend = if XlaRuntime::artifacts_available() { "xla" } else { "native" };
+    let backend_name = args.opt_or("backend", default_backend);
+    let default_reps = if backend_name == "xla" { 20 } else { 200 };
+    let cfg = ExperimentConfig {
+        reps: args.opt_usize("reps", default_reps),
+        seed: args.opt_u64("seed", 0xC0FFEE),
+        curve_len: 48,
+    };
+
+    println!(
+        "=== Ruya full reproduction: 16 jobs x 2 methods x {} reps, backend {backend_name} ===\n",
+        cfg.reps
+    );
+    let mut backend = backend_by_name(&backend_name)?;
+    let mut runner = ExperimentRunner::new(backend.as_mut());
+
+    // Tables I and III (profiling phase).
+    let summaries = runner.profile_all(cfg.seed);
+    println!("Table I: Determined Job Memory Requirement\n{}", report::render_table1(&summaries));
+    println!("Table III: Memory Profiling Time\n{}", report::render_table3(&summaries));
+
+    // Table II (the search experiment).
+    let t0 = Instant::now();
+    let result = runner.run_table2(&cfg)?;
+    let wall = t0.elapsed();
+    println!("Table II: iterations to find a configuration with cost c\n{}", report::render_table2(&result));
+
+    println!("paper-vs-measured (means):");
+    println!("  {:22} {:>8} {:>8} {:>8}", "", "c<=1.2", "c<=1.1", "c=1.0");
+    println!(
+        "  {:22} {:>8.3} {:>8.3} {:>8.3}",
+        "CherryPick (paper)", PAPER_CP[0], PAPER_CP[1], PAPER_CP[2]
+    );
+    println!(
+        "  {:22} {:>8.3} {:>8.3} {:>8.3}",
+        "CherryPick (measured)",
+        result.mean_cherrypick[0],
+        result.mean_cherrypick[1],
+        result.mean_cherrypick[2]
+    );
+    println!(
+        "  {:22} {:>8.3} {:>8.3} {:>8.3}",
+        "Ruya (paper)", PAPER_RUYA[0], PAPER_RUYA[1], PAPER_RUYA[2]
+    );
+    println!(
+        "  {:22} {:>8.3} {:>8.3} {:>8.3}",
+        "Ruya (measured)", result.mean_ruya[0], result.mean_ruya[1], result.mean_ruya[2]
+    );
+    println!(
+        "  {:22} {:>7.1}% {:>7.1}% {:>7.1}%",
+        "quotient (paper)",
+        PAPER_Q[0] * 100.0,
+        PAPER_Q[1] * 100.0,
+        PAPER_Q[2] * 100.0
+    );
+    println!(
+        "  {:22} {:>7.1}% {:>7.1}% {:>7.1}%",
+        "quotient (measured)",
+        result.mean_quotient[0] * 100.0,
+        result.mean_quotient[1] * 100.0,
+        result.mean_quotient[2] * 100.0
+    );
+
+    let searches = 2 * 16 * cfg.reps;
+    println!(
+        "\n{} searches ({} simulated cluster executions) in {:.1} s — {:.1} ms per search",
+        searches,
+        searches * runner.space.len(),
+        wall.as_secs_f64(),
+        wall.as_secs_f64() * 1000.0 / searches as f64
+    );
+
+    // Figures 4 and 5.
+    let n = result.jobs.len() as f64;
+    let avg = |f: &dyn Fn(&ruya::coordinator::JobComparison) -> &Vec<f64>| {
+        let mut acc = vec![0.0; cfg.curve_len];
+        for j in &result.jobs {
+            for (i, v) in f(j).iter().take(cfg.curve_len).enumerate() {
+                acc[i] += v / n;
+            }
+        }
+        acc
+    };
+    let fig4 = report::render_series(
+        &avg(&|j| &j.cherrypick.best_curve),
+        &avg(&|j| &j.ruya.best_curve),
+        "Fig 4: best-found normalized cost per iteration",
+    );
+    let fig5 = report::render_series(
+        &avg(&|j| &j.cherrypick.cum_curve),
+        &avg(&|j| &j.ruya.cum_curve),
+        "Fig 5: cumulative normalized execution cost",
+    );
+    println!("{fig4}");
+    println!("{fig5}");
+
+    if let Some(dir) = args.opt("out") {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/table1.md"), report::render_table1(&summaries))?;
+        std::fs::write(format!("{dir}/table3.md"), report::render_table3(&summaries))?;
+        std::fs::write(format!("{dir}/table2.md"), report::render_table2(&result))?;
+        std::fs::write(format!("{dir}/table2.json"), report::experiment_to_json(&result))?;
+        std::fs::write(format!("{dir}/fig4.dat"), fig4)?;
+        std::fs::write(format!("{dir}/fig5.dat"), fig5)?;
+        println!("results written to {dir}/");
+    }
+    Ok(())
+}

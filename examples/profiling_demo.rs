@@ -1,0 +1,70 @@
+//! Profiling deep-dive (Figure 3): runs the single-node profiling phase
+//! for one job of each memory category and renders the memory traces,
+//! the fitted model, and the resulting search-space split.
+//!
+//! Run: `cargo run --release --example profiling_demo`
+
+use ruya::coordinator::RuyaPlanner;
+use ruya::memmodel::MemoryModel;
+use ruya::profiler::SingleNodeProfiler;
+use ruya::searchspace::SearchSpace;
+use ruya::workload::evaluation_jobs;
+
+fn sparkline(values: &[(f64, f64)], width: usize) -> String {
+    let maxv = values.iter().map(|v| v.1).fold(0.0f64, f64::max).max(1e-9);
+    let glyphs = [' ', '.', ':', '-', '=', '+', '*', '#'];
+    (0..width)
+        .map(|b| {
+            let idx = b * values.len() / width;
+            let v = values[idx].1 / maxv;
+            glyphs[((v * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+fn main() {
+    let profiler = SingleNodeProfiler::default();
+    let planner = RuyaPlanner::default();
+    let space = SearchSpace::scout();
+
+    for label in ["K-Means Spark huge", "Terasort Hadoop bigdata", "Log. Regr. Spark huge"] {
+        let job = evaluation_jobs().into_iter().find(|j| j.label() == label).unwrap();
+        println!("==========================================================");
+        println!("job: {} ({} GB input)", job.label(), job.input_gb);
+        let outcome = profiler.profile(&job, 0xC0FFEE);
+        println!(
+            "calibration: {} run(s); total profiling time {:.0} s",
+            outcome.calibration.len(),
+            outcome.total_s
+        );
+        println!("\nmemory over time (Fig 3 style, one row per sample size):");
+        for (k, run) in outcome.runs.iter().enumerate() {
+            let series = run.series.as_ref().unwrap();
+            println!(
+                "  {:4.2} GB |{}| peak {:.2} GB",
+                run.sample_gb,
+                sparkline(&series.as_rows(), 56),
+                run.peak_mem_gb
+            );
+            let _ = k;
+        }
+
+        let model = MemoryModel::fit(&outcome.readings());
+        println!(
+            "\nmodel: category {} | slope {:.2} GB/GB | R^2 {:.3}",
+            model.category.name(),
+            model.slope_gb_per_gb,
+            model.r2
+        );
+        println!("Table I cell: {}", model.table1_cell(job.input_gb));
+
+        let plan = planner.plan(&model, job.input_gb, &space);
+        println!(
+            "search-space split: {} phase(s), priority {}/{} ({:.0}% of space)\n",
+            plan.phases.len(),
+            plan.phases[0].len(),
+            space.len(),
+            plan.priority_fraction * 100.0
+        );
+    }
+}

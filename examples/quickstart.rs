@@ -1,0 +1,80 @@
+//! Quickstart: the complete Ruya workflow for one recurring job.
+//!
+//! 1. Profile the job on a (simulated) single machine with five dataset
+//!    samples, monitoring memory.
+//! 2. Fit the memory model, categorize (linear / flat / unclear) and
+//!    extrapolate the cluster memory requirement.
+//! 3. Split the 69-configuration search space into a memory-compatible
+//!    priority group and the remainder.
+//! 4. Run the Bayesian-optimized iterative search, executing candidate
+//!    configurations on the (simulated) cluster until the search
+//!    converges.
+//!
+//! Run: `cargo run --release --example quickstart [-- --backend xla]`
+
+use ruya::bayesopt::backend_by_name;
+use ruya::coordinator::{ExperimentRunner, SearchPlan};
+use ruya::util::cli::Args;
+use ruya::workload::{evaluation_jobs, JobCostTable};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let backend_name = args.opt_or("backend", "native");
+    let mut backend = backend_by_name(&backend_name)?;
+    let mut runner = ExperimentRunner::new(backend.as_mut());
+
+    // The recurring job we need a cluster for: K-Means over ~100 GB.
+    let job = evaluation_jobs()
+        .into_iter()
+        .find(|j| j.label() == "K-Means Spark huge")
+        .unwrap();
+    println!("job: {} ({} GB input)\n", job.label(), job.input_gb);
+
+    // --- Step 1+2: profile on one machine, model memory use ------------
+    let profile = runner.profile_job(&job, 1);
+    println!("profiling finished in {:.0} s (simulated laptop)", profile.profiling_time_s);
+    println!("memory model: {} (R^2 = {:.3})", profile.table1_cell, profile.model.r2);
+
+    // --- Step 3: split the search space ---------------------------------
+    let plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
+    println!(
+        "\nsearch plan: category {}, priority group {}/{} configurations",
+        plan.category.name(),
+        plan.phases[0].len(),
+        runner.space.len()
+    );
+    for &i in plan.phases[0].iter().take(8) {
+        let c = runner.space.config(i);
+        println!("  priority: {:16} ({:.0} GB usable)", c.name(), c.usable_memory_gb());
+    }
+
+    // --- Step 4: Bayesian-optimized iterative search --------------------
+    let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+    let outcome = runner.run_one(&table, &plan, 7)?;
+    println!("\nsearch trace (backend: {backend_name}):");
+    let mut best = f64::INFINITY;
+    for (t, (&idx, &cost)) in outcome.tried.iter().zip(&outcome.costs).enumerate() {
+        best = best.min(cost);
+        println!(
+            "  iter {:2}: {:16} cost {:5.2} (best {:5.2}){}",
+            t + 1,
+            runner.space.config(idx).name(),
+            cost,
+            best,
+            if cost <= 1.0 + 1e-9 { "  <- optimal" } else { "" }
+        );
+        if cost <= 1.0 + 1e-9 {
+            break;
+        }
+    }
+    let found = outcome.first_within(1.0 + 1e-9).unwrap();
+    println!("\noptimal configuration found after {found} cluster executions");
+
+    // Compare with the memory-oblivious baseline under the same seed.
+    let cp = runner.run_one(&table, &SearchPlan::unpartitioned(&runner.space), 7)?;
+    println!(
+        "CherryPick baseline (same seed): {} executions",
+        cp.first_within(1.0 + 1e-9).unwrap()
+    );
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""AOT bridge: lower the Layer-2 GP computations to HLO *text* artifacts.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); the rust binary is fully
+self-contained afterwards.  Alongside the HLO we emit ``meta.json`` with
+the frozen shapes and argument order so the rust runtime can validate its
+marshaling against the artifact generation.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, shapes) -> str:
+    """Lower a jittable fn at the given ShapeDtypeStructs to HLO text.
+
+    return_tuple=True so the rust side always unwraps a tuple, regardless
+    of arity.
+    """
+    lowered = jax.jit(fn).lower(*shapes)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+FORBIDDEN = ("custom-call", "chlo.", "erf")
+
+
+def check_portable(name: str, text: str) -> None:
+    """The artifact must be runnable by the bare 0.5.1 CPU PJRT client:
+    no lapack/Mosaic custom-calls, no chlo remnants."""
+    lower = text.lower()
+    for needle in FORBIDDEN:
+        if needle in lower:
+            lines = [l for l in lower.splitlines() if needle in l][:3]
+            raise RuntimeError(
+                f"artifact {name} is not portable: contains {needle!r}: {lines}"
+            )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # One (gp_ei, gp_nll) pair per observation tier: the rust runtime
+    # dispatches each decision to the smallest tier that fits, avoiding
+    # the O(N^3) padded factorization cost at small fill levels (§Perf).
+    entries = {}
+    for n in model.N_OBS_TIERS:
+        entries[f"gp_ei_n{n}"] = (model.gp_ei_entry, model.gp_ei_shapes(n))
+        entries[f"gp_nll_n{n}"] = (model.gp_nll_entry, model.gp_nll_shapes(n))
+
+    meta = {
+        "n_obs": model.N_OBS,
+        "n_obs_tiers": list(model.N_OBS_TIERS),
+        "n_features": model.N_FEATURES,
+        "n_candidates": model.N_CANDIDATES,
+        "n_grid": model.N_GRID,
+        "artifacts": {},
+    }
+
+    for name, (fn, shapes) in entries.items():
+        text = to_hlo_text(fn, shapes)
+        check_portable(name, text)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [list(s.shape) for s in shapes],
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernel: fused pairwise-distance + Matern-5/2 Gram matrix.
+
+This is the numeric hot spot of the whole Ruya decision path: every search
+iteration evaluates the GP over all observations x candidates, and the Gram
+construction dominates the FLOP count of a fit at the AOT shapes
+(N=64 observations, M=128 candidates, D=6 features).
+
+TPU mapping (see DESIGN.md "Hardware adaptation"): the distance term is
+expressed as |a|^2 + |b|^2 - 2 A@B^T so the dominant work is a matmul
+(MXU-shaped); tiles are blocked with BlockSpec over (rows, cols) so each
+grid step holds an (block_n x d) A-tile, a (block_m x d) B-tile and the
+(block_n x block_m) output tile in VMEM.  f32 throughout: the Gram matrix
+feeds a Cholesky factorization downstream, which is sensitive to bf16-level
+perturbation.
+
+The kernel MUST run with interpret=True in this environment: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and interpret mode lowers the
+kernel to plain HLO ops that travel through the AOT text bridge to the rust
+runtime unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 2.2360679774997896
+
+# Default tile sizes.  At the AOT shapes a Gram tile is at most
+# 32*64*4 B = 8 KiB plus two operand tiles of 32*8*4 B / 64*8*4 B -- far
+# inside a TPU core's ~16 MiB VMEM, so a single-pass (no double buffering)
+# schedule is the right one; the grid exists to keep the kernel general for
+# larger-N variants.
+DEFAULT_BLOCK_N = 32
+DEFAULT_BLOCK_M = 64
+
+
+def _matern52_tile_kernel(a_ref, b_ref, hyp_ref, o_ref):
+    """One (block_n, block_m) output tile of the Matern-5/2 Gram matrix.
+
+    a_ref: [block_n, d] slab of A rows, VMEM
+    b_ref: [block_m, d] slab of B rows, VMEM
+    hyp_ref: [1, 2] (lengthscale, variance), replicated to every grid step
+    o_ref: [block_n, block_m] output tile
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    ls = hyp_ref[0, 0]
+    var = hyp_ref[0, 1]
+
+    # Squared distances via the matmul form; clamp against cancellation so
+    # sqrt never sees a negative.
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)  # [bn, 1]
+    b2 = jnp.sum(b * b, axis=1, keepdims=True).T  # [1, bm]
+    d2 = jnp.maximum(a2 + b2 - 2.0 * jnp.dot(a, b.T), 0.0)
+
+    r = jnp.sqrt(d2) / ls
+    poly = 1.0 + SQRT5 * r + (5.0 / 3.0) * d2 / (ls * ls)
+    o_ref[...] = var * poly * jnp.exp(-SQRT5 * r)
+
+
+def _pad_rows(x, multiple):
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    return jnp.pad(x, ((0, rem), (0, 0)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def matern52_gram(
+    a,
+    b,
+    lengthscale,
+    variance,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+):
+    """Matern-5/2 Gram matrix K[i, j] = k(a_i, b_j) via the Pallas kernel.
+
+    a: [n, d], b: [m, d]; lengthscale/variance are scalars (traced).
+    Rows are padded up to the block size and the result is sliced back, so
+    any (n, m) works.  Returns [n, m] f32.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    n, d = a.shape
+    m, d2 = b.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    bn = min(block_n, max(n, 1))
+    bm = min(block_m, max(m, 1))
+
+    ap = _pad_rows(a, bn)
+    bp = _pad_rows(b, bm)
+    hyp = jnp.stack(
+        [jnp.asarray(lengthscale, jnp.float32), jnp.asarray(variance, jnp.float32)]
+    ).reshape(1, 2)
+
+    grid = (ap.shape[0] // bn, bp.shape[0] // bm)
+    out = pl.pallas_call(
+        _matern52_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(ap, bp, hyp)
+    return out[:n, :m]

@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the Pallas implementations are tested against
+(python/tests/test_kernel.py, hypothesis sweeps) and the numerics the
+Layer-2 GP model is specified in terms of.
+"""
+
+import jax.numpy as jnp
+
+SQRT5 = 2.2360679774997896
+
+
+def pairwise_sqdist_ref(a, b):
+    """Squared euclidean distances between the rows of ``a`` and ``b``.
+
+    a: [n, d], b: [m, d] -> [n, m].  Computed in the same
+    ``|a|^2 + |b|^2 - 2 a.b`` form as the kernel so both see identical
+    floating point behaviour; clamped at zero against cancellation.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    a2 = jnp.sum(a * a, axis=-1, keepdims=True)  # [n, 1]
+    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T  # [1, m]
+    d2 = a2 + b2 - 2.0 * (a @ b.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def matern52_ref(d2, lengthscale, variance):
+    """Matern-5/2 covariance from squared distances ``d2``.
+
+    k(r) = var * (1 + sqrt5 r/l + 5 r^2 / (3 l^2)) exp(-sqrt5 r/l)
+    """
+    d2 = jnp.asarray(d2)
+    r = jnp.sqrt(d2) / lengthscale
+    poly = 1.0 + SQRT5 * r + (5.0 / 3.0) * d2 / (lengthscale * lengthscale)
+    return variance * poly * jnp.exp(-SQRT5 * r)
+
+
+def matern52_gram_ref(a, b, lengthscale, variance):
+    """Full Matern-5/2 Gram matrix between row sets ``a`` [n,d], ``b`` [m,d]."""
+    return matern52_ref(pairwise_sqdist_ref(a, b), lengthscale, variance)

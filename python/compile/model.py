@@ -1,0 +1,273 @@
+"""Layer-2 JAX model: masked Gaussian-process regression + expected
+improvement -- the per-iteration decision computation of Ruya's (and
+CherryPick's) Bayesian-optimized search.
+
+Two entry points, AOT-lowered to HLO text by aot.py and executed from the
+rust coordinator on every search iteration:
+
+  gp_ei(X, y, mask, Xc, cmask, hyp)   -> (ei, mu, var)
+  gp_nll(X, y, mask, grid)            -> nll
+
+Shapes are fixed at AOT time (N observations padded, M candidates padded,
+H hyperparameter grid rows); the live fill level is communicated through
+the 0/1 masks, so ONE compiled executable serves every iteration of every
+search.
+
+Portability constraints (see /opt/xla-example/README.md): the HLO must be
+runnable by xla_extension 0.5.1's CPU PJRT client, which cannot execute
+jax's CPU lowerings of lapack-backed ops (custom-calls) nor chlo.erf.
+Cholesky, the triangular solves and the normal CDF are therefore written
+out in plain jnp ops (fori_loop + dynamic_update_slice + exp/sqrt), which
+lower to self-contained HLO.  At N=64 the loop-based factorization is a
+few hundred microseconds -- far below the cost of a cluster run it decides
+about, and amortized further by the rust runtime reusing the executable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matern import matern52_gram
+
+# AOT shapes.  N >= max search length (the evaluation space has 69 configs
+# and searches converge in far fewer iterations); M >= |space|; H is the
+# hyperparameter-selection grid.
+#
+# N is emitted in TIERS: most decisions happen at small observation counts
+# (searches find the optimum in ~7-15 executions), and the padded Cholesky
+# while-loop costs O(N^3) regardless of the live fill, so the rust runtime
+# dispatches each call to the smallest tier that fits (§Perf).
+N_OBS_TIERS = (16, 32, 64)
+N_OBS = N_OBS_TIERS[-1]
+N_FEATURES = 6
+N_CANDIDATES = 128
+N_GRID = 32
+
+# Jitter added to the active diagonal on top of the modeled noise, for
+# Cholesky robustness at f32.
+JITTER = 1e-6
+
+SQRT2 = 1.4142135623730951
+INV_SQRT_2PI = 0.3989422804014327
+
+
+# ---------------------------------------------------------------------------
+# Portable linear algebra (plain-HLO Cholesky and triangular solves)
+# ---------------------------------------------------------------------------
+
+def chol_lower(a):
+    """Cholesky factor L (lower) of SPD ``a`` [n, n] via a column-by-column
+    Cholesky-Crout fori_loop.  Lowers to a self-contained HLO while loop."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        # s = a[:, j] - (L L^T)[:, j]; columns >= j of L are still zero, so
+        # the matvec only sums k < j as required.
+        s = a[:, j] - l @ l[j, :]
+        d = jnp.sqrt(jnp.maximum(s[j], 1e-30))
+        col = jnp.where(idx > j, s / d, 0.0)
+        col = jnp.where(idx == j, d, col)
+        return l.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def solve_lower(l, b):
+    """Forward substitution: solve L z = b for lower-triangular L.
+
+    l: [n, n], b: [n] or [n, m] -> same shape as b.
+    """
+    vector = b.ndim == 1
+    bm = b[:, None] if vector else b
+    n = l.shape[0]
+
+    def body(i, z):
+        zi = (bm[i, :] - l[i, :] @ z) / l[i, i]
+        return z.at[i, :].set(zi)
+
+    z = jax.lax.fori_loop(0, n, body, jnp.zeros_like(bm))
+    return z[:, 0] if vector else z
+
+
+def solve_upper_t(l, b):
+    """Backward substitution: solve L^T x = b for lower-triangular L."""
+    vector = b.ndim == 1
+    bm = b[:, None] if vector else b
+    n = l.shape[0]
+
+    def body(k, x):
+        i = n - 1 - k
+        xi = (bm[i, :] - l[:, i] @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(bm))
+    return x[:, 0] if vector else x
+
+
+# ---------------------------------------------------------------------------
+# Portable normal CDF/PDF (no chlo.erf in the artifact)
+# ---------------------------------------------------------------------------
+
+def _erf_approx(x):
+    """Abramowitz & Stegun 7.1.26 rational erf approximation, |err|<1.5e-7.
+
+    Built only from abs/exp/polynomials so it lowers to plain HLO.
+    """
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = t * (
+        0.254829592
+        + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429)))
+    )
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def norm_cdf(x):
+    return 0.5 * (1.0 + _erf_approx(x / SQRT2))
+
+
+def norm_pdf(x):
+    return INV_SQRT_2PI * jnp.exp(-0.5 * x * x)
+
+
+# ---------------------------------------------------------------------------
+# Masked GP posterior + expected improvement
+# ---------------------------------------------------------------------------
+
+def _masked_gram(x, mask, ls, var, noise):
+    """Gram matrix of the active observations, padded rows replaced by
+    identity rows so the factorization stays well-posed at any fill level.
+
+    Active block:   K_aa + (noise + jitter) I
+    Padded block:   I   (and zero cross terms)
+    """
+    n = x.shape[0]
+    k = matern52_gram(x, x, ls, var)
+    mm = mask[:, None] * mask[None, :]
+    eye = jnp.eye(n, dtype=x.dtype)
+    return k * mm + eye * ((noise + JITTER) * mask + (1.0 - mask))
+
+
+def gp_fit(x, y, mask, hyp):
+    """Factorize the masked training Gram and precompute alpha = K^-1 y.
+
+    Returns (L, alpha).  Masked entries of y are zeroed, so their alpha
+    entries are exactly zero and they cannot influence predictions.
+    """
+    ls, var, noise = hyp[0], hyp[1], hyp[2]
+    km = _masked_gram(x, mask, ls, var, noise)
+    l = chol_lower(km)
+    ym = y * mask
+    alpha = solve_upper_t(l, solve_lower(l, ym))
+    return l, alpha
+
+
+def gp_predict(x, mask, hyp, l, alpha, xc):
+    """Posterior mean and variance at candidate rows ``xc`` [m, d]."""
+    ls, var, noise = hyp[0], hyp[1], hyp[2]
+    ks = matern52_gram(xc, x, ls, var) * mask[None, :]  # [m, n]
+    mu = ks @ alpha
+    v = solve_lower(l, ks.T)  # [n, m]
+    var_post = var - jnp.sum(v * v, axis=0)
+    # Latent variance floored at jitter scale; observation noise is NOT
+    # added (we rank configurations by latent cost, as CherryPick does).
+    return mu, jnp.maximum(var_post, 1e-9)
+
+
+def expected_improvement(mu, var, best, xi=0.0):
+    """EI for *minimization*: E[max(best - Y - xi, 0)], Y ~ N(mu, var)."""
+    sigma = jnp.sqrt(var)
+    delta = best - mu - xi
+    z = delta / jnp.maximum(sigma, 1e-12)
+    ei = delta * norm_cdf(z) + sigma * norm_pdf(z)
+    return jnp.where(sigma > 1e-12, jnp.maximum(ei, 0.0), jnp.maximum(delta, 0.0))
+
+
+def gp_ei(x, y, mask, xc, cmask, hyp):
+    """The full per-iteration decision computation.
+
+    x: [N, D] observed configurations (feature-encoded, padded)
+    y: [N] observed normalized costs (padded with zeros)
+    mask: [N] 1.0 for live observations
+    xc: [M, D] candidate configurations (padded)
+    cmask: [M] 1.0 for candidates still eligible (untried AND inside the
+        currently allowed search-space partition -- this is where Ruya's
+        priority groups enter, computed by the rust coordinator)
+    hyp: [3] (lengthscale, signal variance, noise variance)
+
+    Returns (ei [M], mu [M], var [M]); ei is zeroed outside cmask so the
+    coordinator can argmax it directly.
+    """
+    l, alpha = gp_fit(x, y, mask, hyp)
+    mu, var = gp_predict(x, mask, hyp, l, alpha, xc)
+    big = jnp.float32(3.4e38)
+    best = jnp.min(jnp.where(mask > 0.0, y, big))
+    ei = expected_improvement(mu, var, best) * cmask
+    return ei, mu, var
+
+
+# ---------------------------------------------------------------------------
+# Hyperparameter selection: negative log marginal likelihood over a grid
+# ---------------------------------------------------------------------------
+
+def gp_nll_single(x, y, mask, hyp):
+    """NLL of the active observations under hyp = (ls, var, noise).
+
+    Padded rows contribute log(1) = 0 to the determinant and 0 to the
+    quadratic form, so the value equals the NLL of the active block alone.
+    """
+    l, alpha = gp_fit(x, y, mask, hyp)
+    ym = y * mask
+    quad = 0.5 * jnp.dot(ym, alpha)
+    # log det of the masked Gram = 2 sum log diag(L); padded diag entries
+    # are exactly 1.
+    logdet = jnp.sum(jnp.log(jnp.diagonal(l)))
+    nactive = jnp.sum(mask)
+    return quad + logdet + 0.5 * nactive * jnp.log(2.0 * jnp.pi)
+
+
+def gp_nll(x, y, mask, grid):
+    """NLL for every hyperparameter triple in ``grid`` [H, 3] -> [H].
+
+    lax.map (sequential scan) rather than vmap: the body contains the
+    Pallas kernel and fori_loop factorizations, and scan keeps the lowered
+    HLO a single self-contained while loop.
+    """
+    return jax.lax.map(lambda h: gp_nll_single(x, y, mask, h), grid)
+
+
+# ---------------------------------------------------------------------------
+# AOT wrappers with the frozen artifact shapes
+# ---------------------------------------------------------------------------
+
+def gp_ei_entry(x, y, mask, xc, cmask, hyp):
+    return gp_ei(x, y, mask, xc, cmask, hyp)
+
+
+def gp_nll_entry(x, y, mask, grid):
+    return (gp_nll(x, y, mask, grid),)
+
+
+def gp_ei_shapes(n_obs=N_OBS):
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((n_obs, N_FEATURES), f32),
+        s((n_obs,), f32),
+        s((n_obs,), f32),
+        s((N_CANDIDATES, N_FEATURES), f32),
+        s((N_CANDIDATES,), f32),
+        s((3,), f32),
+    )
+
+
+def gp_nll_shapes(n_obs=N_OBS):
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((n_obs, N_FEATURES), f32),
+        s((n_obs,), f32),
+        s((n_obs,), f32),
+        s((N_GRID, 3), f32),
+    )

@@ -1,0 +1,82 @@
+"""AOT bridge tests: artifact generation, portability checks, shape
+metadata and determinism."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+REPO_PY = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class TestHloText:
+    @pytest.fixture(scope="class")
+    def ei_text(self):
+        return aot.to_hlo_text(model.gp_ei_entry, model.gp_ei_shapes())
+
+    @pytest.fixture(scope="class")
+    def nll_text(self):
+        return aot.to_hlo_text(model.gp_nll_entry, model.gp_nll_shapes())
+
+    def test_ei_is_hlo_module(self, ei_text):
+        assert ei_text.startswith("HloModule")
+        assert "ENTRY" in ei_text
+
+    def test_ei_is_portable(self, ei_text):
+        # No lapack/Mosaic custom-calls, no chlo remnants: the whole point
+        # of the hand-rolled linalg in model.py.
+        aot.check_portable("gp_ei", ei_text)
+
+    def test_nll_is_portable(self, nll_text):
+        aot.check_portable("gp_nll", nll_text)
+
+    def test_ei_has_expected_parameters(self, ei_text):
+        # 6 parameters with the frozen shapes must appear in the entry
+        # computation signature.
+        assert f"f32[{model.N_OBS},{model.N_FEATURES}]" in ei_text
+        assert f"f32[{model.N_CANDIDATES},{model.N_FEATURES}]" in ei_text
+        assert "f32[3]" in ei_text
+
+    def test_nll_has_grid_parameter(self, nll_text):
+        assert f"f32[{model.N_GRID},3]" in nll_text
+
+    def test_lowering_is_deterministic(self, ei_text):
+        again = aot.to_hlo_text(model.gp_ei_entry, model.gp_ei_shapes())
+        assert again == ei_text
+
+    def test_check_portable_rejects_custom_calls(self):
+        bad = "HloModule m\n %x = f32[2] custom-call(f32[2] %p), target=lapack_spotrf\n"
+        with pytest.raises(RuntimeError, match="custom-call"):
+            aot.check_portable("bad", bad)
+
+
+class TestAotCli:
+    def test_writes_artifacts_and_meta(self, tmp_path):
+        out = tmp_path / "artifacts"
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+            check=True,
+            cwd=REPO_PY,
+            capture_output=True,
+        )
+        meta = json.loads((out / "meta.json").read_text())
+        assert meta["n_obs"] == model.N_OBS
+        assert meta["n_obs_tiers"] == list(model.N_OBS_TIERS)
+        assert meta["n_candidates"] == model.N_CANDIDATES
+        for n in model.N_OBS_TIERS:
+            assert (out / f"gp_ei_n{n}.hlo.txt").exists()
+            assert (out / f"gp_nll_n{n}.hlo.txt").exists()
+            ei = meta["artifacts"][f"gp_ei_n{n}"]
+            assert ei["args"][0] == [n, model.N_FEATURES]
+            assert ei["args"][5] == [3]
+            assert (
+                ei["hlo_bytes"] == (out / f"gp_ei_n{n}.hlo.txt").stat().st_size
+            )
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

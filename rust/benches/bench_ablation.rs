@@ -1,0 +1,78 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  1. flat-job priority-group size (paper §III-D proposes 10–20% of the
+//!     space; the evaluation uses 10 configs ≈ 1/7),
+//!  2. the leeway margin on linear requirements,
+//!  3. single-phase priority-only vs two-phase search (is the phase-2
+//!     fallback actually needed?).
+//!
+//! Each ablation reruns a Table-II slice with one knob changed and
+//! reports mean iterations-to-optimal.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::NativeBackend;
+use ruya::coordinator::{ExperimentConfig, ExperimentRunner};
+use ruya::workload::evaluation_jobs;
+
+const REPS: usize = 25;
+
+fn mean_iters(runner: &mut ExperimentRunner, labels: &[&str]) -> (f64, f64) {
+    let cfg = ExperimentConfig { reps: REPS, seed: 0xC0FFEE, curve_len: 10 };
+    let mut ruya = 0.0;
+    let mut cp = 0.0;
+    for label in labels {
+        let job = evaluation_jobs().into_iter().find(|j| j.label() == *label).unwrap();
+        let cmp = runner.compare_job(&job, &cfg).unwrap();
+        ruya += cmp.ruya.iters_to[2] / labels.len() as f64;
+        cp += cmp.cherrypick.iters_to[2] / labels.len() as f64;
+    }
+    (ruya, cp)
+}
+
+fn main() {
+    let flat_jobs = ["Join Spark huge", "Terasort Hadoop huge", "Page Rank Hadoop bigdata"];
+    let linear_jobs = ["K-Means Spark bigdata", "K-Means Spark huge", "Naive Bayes Spark huge"];
+
+    harness::section("ablation 1: flat priority-group size (iterations to optimum)");
+    for size in [5usize, 10, 15, 20, 30] {
+        let mut backend = NativeBackend::new();
+        let mut runner = ExperimentRunner::new(&mut backend);
+        runner.planner.flat_group_size = size;
+        let (ruya, cp) = mean_iters(&mut runner, &flat_jobs);
+        println!(
+            "group size {size:2} ({:4.1}% of space): ruya {ruya:6.2}  cherrypick {cp:6.2}  quotient {:5.1}%",
+            100.0 * size as f64 / 69.0,
+            100.0 * ruya / cp
+        );
+    }
+    println!("(paper picks 10 ≈ 14% — small groups risk excluding the optimum,\n large groups approach plain BO)");
+
+    harness::section("ablation 2: linear-requirement leeway");
+    for leeway in [0.0, 0.02, 0.05, 0.10, 0.25] {
+        let mut backend = NativeBackend::new();
+        let mut runner = ExperimentRunner::new(&mut backend);
+        runner.planner.leeway = leeway;
+        let (ruya, cp) = mean_iters(&mut runner, &linear_jobs);
+        println!(
+            "leeway {:4.0}%: ruya {ruya:6.2}  cherrypick {cp:6.2}  quotient {:5.1}%",
+            leeway * 100.0,
+            100.0 * ruya / cp
+        );
+    }
+    println!("(too much leeway excludes boundary-optimal configurations)");
+
+    harness::section("ablation 3: extremes-fallback fraction (oversized requirements)");
+    for frac in [0.05, 0.12, 0.25] {
+        let mut backend = NativeBackend::new();
+        let mut runner = ExperimentRunner::new(&mut backend);
+        runner.planner.extremes_fraction = frac;
+        let (ruya, cp) = mean_iters(&mut runner, &["Naive Bayes Spark bigdata"]);
+        println!(
+            "extremes fraction {:4.0}%: ruya {ruya:6.2}  cherrypick {cp:6.2}  quotient {:5.1}%",
+            frac * 100.0,
+            100.0 * ruya / cp
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Bench/regeneration target for **Figure 1** (total cluster RAM vs
+//! normalized cost for K-Means on Spark): prints the per-machine-type
+//! cost series and verifies the memory cliff is present.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::searchspace::SearchSpace;
+use ruya::workload::{evaluation_jobs, ClusterSim, Framework, JobCostTable};
+
+fn main() {
+    harness::section("Fig 1 regeneration: RAM vs cost, K-Means on Spark");
+    let space = SearchSpace::scout();
+    let sim = ClusterSim::default();
+    for scale in ["huge", "bigdata"] {
+        let job = evaluation_jobs()
+            .into_iter()
+            .find(|j| {
+                j.algo.name == "K-Means"
+                    && j.scale.name() == scale
+                    && j.algo.framework == Framework::Spark
+            })
+            .unwrap();
+        let table = JobCostTable::build(&sim, &job, &space);
+        println!("\n# K-Means Spark {scale} (cache need {:.0} GB)", job.true_cache_need_gb());
+        println!("{:>9}  {:>9}  {:>7}  machine", "ram_gb", "cost", "cached");
+        let mut rows: Vec<usize> = (0..space.len()).collect();
+        rows.sort_by(|&a, &b| {
+            space.config(a).total_memory_gb().partial_cmp(&space.config(b).total_memory_gb()).unwrap()
+        });
+        for i in rows {
+            let c = space.config(i);
+            let fit = sim.cache_fit(&job, &c);
+            println!(
+                "{:9.1}  {:9.3}  {:7.2}  {} x{}",
+                c.total_memory_gb(),
+                table.normalized[i],
+                fit,
+                c.machine_type().name,
+                c.nodes
+            );
+        }
+
+        // Cliff summary: mean normalized cost below vs above the cliff.
+        let (mut below, mut above) = (Vec::new(), Vec::new());
+        for i in 0..space.len() {
+            let fit = sim.cache_fit(&job, &space.config(i));
+            if fit < 1.0 { below.push(table.normalized[i]) } else { above.push(table.normalized[i]) }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        println!(
+            "# cliff: {} configs below (mean cost {:.2}), {} above (mean cost {:.2})",
+            below.len(),
+            mean(&below),
+            above.len(),
+            mean(&above)
+        );
+    }
+
+    harness::section("timing: full 69-config cost-table build");
+    let job = evaluation_jobs().into_iter().find(|j| j.label() == "K-Means Spark bigdata").unwrap();
+    harness::bench_fn("JobCostTable::build (69 configs)", || {
+        std::hint::black_box(JobCostTable::build(&sim, &job, &space));
+    });
+}

@@ -1,0 +1,52 @@
+//! Bench/regeneration target for **Figure 3** (single-node memory usage
+//! over time for five linearly spaced K-Means samples): prints a compact
+//! rendering of the five traces and times the series generator.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::profiler::SingleNodeProfiler;
+use ruya::util::rng::Pcg64;
+use ruya::workload::{evaluation_jobs, Framework};
+
+fn main() {
+    harness::section("Fig 3 regeneration: memory traces of 5 profiling runs");
+    let profiler = SingleNodeProfiler::default();
+    let job = evaluation_jobs()
+        .into_iter()
+        .find(|j| j.algo.name == "K-Means" && j.scale.name() == "huge" && j.algo.framework == Framework::Spark)
+        .unwrap();
+    let outcome = profiler.profile(&job, 0xC0FFEE);
+    for (k, run) in outcome.runs.iter().enumerate() {
+        let series = run.series.as_ref().unwrap();
+        // ASCII sparkline: 60 buckets over the run.
+        let rows = series.as_rows();
+        let maxv = rows.iter().map(|r| r.1).fold(0.0f64, f64::max).max(1e-9);
+        let buckets = 60.min(rows.len());
+        let mut line = String::new();
+        for b in 0..buckets {
+            let idx = b * rows.len() / buckets;
+            let v = rows[idx].1 / maxv;
+            let glyphs = [' ', '.', ':', '-', '=', '+', '*', '#'];
+            line.push(glyphs[((v * 7.0).round() as usize).min(7)]);
+        }
+        println!(
+            "run {} ({:6.2} GB sample, {:5.0} s, peak {:5.2} GB) |{line}|",
+            k + 1,
+            run.sample_gb,
+            run.runtime_s,
+            run.peak_mem_gb
+        );
+    }
+    println!("\nreadings (sample_gb -> peak_mem_gb):");
+    for (x, y) in outcome.readings() {
+        println!("  {x:7.3} -> {y:7.3}");
+    }
+
+    harness::section("timing: one 1 Hz memory series generation");
+    let mut rng = Pcg64::from_seed(7);
+    harness::bench_fn("memory_series (165 s run)", || {
+        let s = profiler.memory_series(&job, 1.5, 165.0, &mut rng);
+        std::hint::black_box(s.stable_peak_gb());
+    });
+}

@@ -1,0 +1,84 @@
+//! §Perf bench: the per-iteration decision hot path (GP fit + EI over all
+//! candidates + hyperparameter grid), native vs XLA backend, across
+//! observation counts — the numbers recorded in EXPERIMENTS.md §Perf.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::{backend_by_name, hyperparameter_grid, GpBackend};
+use ruya::runtime::XlaRuntime;
+use ruya::searchspace::SearchSpace;
+use ruya::util::rng::Pcg64;
+
+fn bench_backend(backend: &mut dyn GpBackend, space: &SearchSpace) {
+    let d = ruya::searchspace::N_FEATURES;
+    let m = space.len();
+    let features = space.feature_matrix();
+    let grid = hyperparameter_grid();
+    let mut rng = Pcg64::from_seed(42);
+
+    for &n in &[4usize, 8, 16, 32, 64] {
+        // Synthetic observations over the first n configs.
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            x.extend(space.features(i));
+            y.push(1.0 + rng.next_f64());
+        }
+        let cmask: Vec<bool> = (0..m).map(|i| i >= n).collect();
+        let hyp = [0.5, 1.0, 1e-3];
+
+        harness::bench_fn(&format!("{}: decide (n={n:2}, m={m})", backend.name()), || {
+            std::hint::black_box(
+                backend.decide(&x, &y, n, d, &features, &cmask, m, hyp).unwrap(),
+            );
+        });
+        harness::bench_fn(&format!("{}: nll_grid (n={n:2}, H=32)", backend.name()), || {
+            std::hint::black_box(backend.nll_grid(&x, &y, n, d, &grid).unwrap());
+        });
+    }
+}
+
+fn main() {
+    let space = SearchSpace::scout();
+
+    harness::section("GP decision hot path — native backend");
+    let mut native = backend_by_name("native").unwrap();
+    bench_backend(native.as_mut(), &space);
+
+    if XlaRuntime::artifacts_available() {
+        harness::section("GP decision hot path — XLA backend (AOT artifacts via PJRT)");
+        let mut xla = backend_by_name("xla").unwrap();
+        bench_backend(xla.as_mut(), &space);
+    } else {
+        eprintln!("skipping XLA backend: artifacts not built (run `make artifacts`)");
+    }
+
+    harness::section("end-to-end per-iteration decision (nll_grid + decide)");
+    let mut native = backend_by_name("native").unwrap();
+    let d = ruya::searchspace::N_FEATURES;
+    let m = space.len();
+    let features = space.feature_matrix();
+    let grid = hyperparameter_grid();
+    let n = 24;
+    let mut rng = Pcg64::from_seed(1);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..n {
+        x.extend(space.features(i));
+        y.push(1.0 + rng.next_f64());
+    }
+    let cmask: Vec<bool> = (0..m).map(|i| i >= n).collect();
+    harness::bench_fn("native: full decision (n=24)", || {
+        let nll = native.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let best = nll
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        std::hint::black_box(
+            native.decide(&x, &y, n, d, &features, &cmask, m, grid[best]).unwrap(),
+        );
+    });
+}

@@ -1,0 +1,32 @@
+//! Bench/regeneration target for **Table I** (determined job memory
+//! requirement): runs the full profiling + categorization pipeline for
+//! all 16 jobs, prints the table, and times the per-job pipeline.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::NativeBackend;
+use ruya::coordinator::ExperimentRunner;
+use ruya::memmodel::MemoryModel;
+use ruya::profiler::SingleNodeProfiler;
+use ruya::report;
+use ruya::workload::evaluation_jobs;
+
+fn main() {
+    harness::section("Table I regeneration (profile -> categorize -> extrapolate)");
+    let mut backend = NativeBackend::new();
+    let runner = ExperimentRunner::new(&mut backend);
+    let summaries = runner.profile_all(0xC0FFEE);
+    println!("{}", report::render_table1(&summaries));
+
+    harness::section("timing: one full profiling + model fit per job");
+    let profiler = SingleNodeProfiler::default();
+    for job in evaluation_jobs().iter().take(4) {
+        let label = job.label();
+        harness::bench_fn(&format!("profile+fit [{label}]"), || {
+            let outcome = profiler.profile(job, 0xC0FFEE);
+            let model = MemoryModel::fit(&outcome.readings());
+            std::hint::black_box(model.r2);
+        });
+    }
+}

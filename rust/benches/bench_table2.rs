@@ -1,0 +1,44 @@
+//! Bench/regeneration target for **Table II** (iterations until a
+//! configuration with normalized cost c is found, CherryPick vs Ruya):
+//! runs a reduced-repetition version of the full experiment and times one
+//! complete seeded search per method.
+//!
+//! Full-scale (200-rep) numbers: `ruya table2 --reps 200` or
+//! `examples/full_reproduction.rs`; recorded in EXPERIMENTS.md.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::NativeBackend;
+use ruya::coordinator::{ExperimentConfig, ExperimentRunner, SearchPlan};
+use ruya::report;
+use ruya::workload::{evaluation_jobs, JobCostTable};
+
+fn main() {
+    harness::section("Table II regeneration (25 reps, native backend)");
+    let mut backend = NativeBackend::new();
+    let mut runner = ExperimentRunner::new(&mut backend);
+    let cfg = ExperimentConfig { reps: 25, seed: 0xC0FFEE, curve_len: 48 };
+    let result = runner.run_table2(&cfg).expect("experiment");
+    println!("{}", report::render_table2(&result));
+    println!(
+        "paper means: CP 8.735/16.487/23.629, Ruya 3.307/6.627/11.631, quotient 37.9%/40.2%/49.2%"
+    );
+
+    harness::section("timing: one full seeded search (to exhaustion, 69 configs)");
+    let job = evaluation_jobs().into_iter().find(|j| j.label() == "K-Means Spark huge").unwrap();
+    let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+    let profile = runner.profile_job(&job, cfg.seed);
+    let ruya_plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
+    let cp_plan = SearchPlan::unpartitioned(&runner.space);
+
+    let mut seed = 0u64;
+    harness::bench_fn("search to exhaustion [CherryPick]", || {
+        seed += 1;
+        std::hint::black_box(runner.run_one(&table, &cp_plan, seed).unwrap());
+    });
+    harness::bench_fn("search to exhaustion [Ruya]", || {
+        seed += 1;
+        std::hint::black_box(runner.run_one(&table, &ruya_plan, seed).unwrap());
+    });
+}

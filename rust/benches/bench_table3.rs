@@ -1,0 +1,24 @@
+//! Bench/regeneration target for **Table III** (memory profiling time per
+//! job): regenerates the table and reports the simulated wall-clock
+//! distribution against the paper's (mean ~565 s, 110..1292 s band).
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::NativeBackend;
+use ruya::coordinator::ExperimentRunner;
+use ruya::report;
+
+fn main() {
+    harness::section("Table III regeneration (simulated profiling wall-clock)");
+    let mut backend = NativeBackend::new();
+    let runner = ExperimentRunner::new(&mut backend);
+    let summaries = runner.profile_all(0xC0FFEE);
+    println!("{}", report::render_table3(&summaries));
+
+    let times: Vec<f64> = summaries.iter().map(|s| s.profiling_time_s).collect();
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    println!("measured: mean {mean:.0} s (paper 565 s), range {min:.0}..{max:.0} s (paper 110..1292 s)");
+}

@@ -1,0 +1,87 @@
+//! Criterion-lite micro-benchmark harness shared by the bench targets
+//! (the `criterion` crate is unavailable offline).
+//!
+//! Two modes per bench binary:
+//!  * timing sections (`bench_fn`): warmup + N samples, report
+//!    median/mean/p10/p90 wall-clock;
+//!  * table/figure sections: regenerate the paper artifact and print it
+//!    (the "bench" for a table is the harness that reproduces it).
+//!
+//! `cargo bench` passes `--bench` through; any other CLI args are
+//! ignored so the binaries also run standalone.
+
+use std::time::Instant;
+
+/// One timing measurement series.
+pub struct BenchStats {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchStats {
+    fn quantile(&self, q: f64) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (s[hi] - s[lo]) * (pos - lo as f64)
+        }
+    }
+
+    pub fn report(&self) {
+        let mean = self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64;
+        println!(
+            "{:44} median {:>12}  mean {:>12}  p10 {:>12}  p90 {:>12}  ({} samples)",
+            self.name,
+            fmt_ns(self.quantile(0.5)),
+            fmt_ns(mean),
+            fmt_ns(self.quantile(0.1)),
+            fmt_ns(self.quantile(0.9)),
+            self.samples_ns.len()
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with warmup; chooses the iteration count so one sample takes
+/// >= ~1 ms (amortizing timer overhead) and caps total time.
+pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters_per_sample = ((1_000_000.0 / once_ns).ceil() as usize).clamp(1, 10_000);
+    let n_samples = if once_ns > 200_000_000.0 { 5 } else { 30 };
+
+    let mut samples = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    let stats = BenchStats { name: name.to_string(), samples_ns: samples };
+    stats.report();
+    stats
+}
+
+/// Print a bench-section banner.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

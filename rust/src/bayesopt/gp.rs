@@ -1,0 +1,441 @@
+//! Native (pure-rust, f64) Gaussian-process regression with the Matérn-5/2
+//! kernel — the same math as the AOT artifact (`python/compile/model.py`),
+//! kept in-tree for three reasons: cross-validating the compiled path,
+//! running without artifacts, and serving as the CPU-native baseline in
+//! the §Perf comparison.
+
+use crate::util::stats;
+
+pub const SQRT5: f64 = 2.23606797749979;
+/// Diagonal jitter matching python/compile/model.py.
+pub const JITTER: f64 = 1e-6;
+
+/// Matérn-5/2 covariance from a squared distance.
+#[inline]
+pub fn matern52_from_d2(d2: f64, lengthscale: f64, variance: f64) -> f64 {
+    let r = d2.sqrt() / lengthscale;
+    variance * (1.0 + SQRT5 * r + (5.0 / 3.0) * d2 / (lengthscale * lengthscale))
+        * (-SQRT5 * r).exp()
+}
+
+/// Matérn-5/2 covariance between two feature rows.
+#[inline]
+pub fn matern52(a: &[f64], b: &[f64], lengthscale: f64, variance: f64) -> f64 {
+    let mut d2 = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        d2 += d * d;
+    }
+    matern52_from_d2(d2, lengthscale, variance)
+}
+
+/// Pairwise squared distances of `n` rows (row-major, `d` columns) into
+/// `out` (resized to n*n). Hyperparameter-independent — computed once per
+/// decision and shared across the whole hyperparameter grid (§Perf).
+pub fn pairwise_sqdist(x: &[f64], n: usize, d: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(n * n, 0.0);
+    for i in 0..n {
+        for j in 0..i {
+            let mut d2 = 0.0;
+            for k in 0..d {
+                let diff = x[i * d + k] - x[j * d + k];
+                d2 += diff * diff;
+            }
+            out[i * n + j] = d2;
+            out[j * n + i] = d2;
+        }
+    }
+}
+
+/// Slice dot product written so LLVM auto-vectorizes it (the hot inner
+/// kernel of the factorization and the solves — see EXPERIMENTS.md §Perf).
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Dense lower-triangular Cholesky factorization in place.
+/// Returns false if the matrix is not (numerically) SPD.
+pub fn cholesky_in_place(a: &mut [f64], n: usize) -> bool {
+    for j in 0..n {
+        // Split so row j (read+write) and rows i>j (read) borrow cleanly.
+        let (head, tail) = a.split_at_mut((j + 1) * n);
+        let row_j = &mut head[j * n..];
+        let d = row_j[j] - dot(&row_j[..j], &row_j[..j]);
+        if d <= 0.0 {
+            return false;
+        }
+        let d = d.sqrt();
+        row_j[j] = d;
+        for i in (j + 1)..n {
+            let row_i = &mut tail[(i - j - 1) * n..(i - j) * n];
+            row_i[j] = (row_i[j] - dot(&row_i[..j], &row_j[..j])) / d;
+        }
+        // Zero the upper triangle of column j.
+        for i in 0..j {
+            a[i * n + j] = 0.0;
+        }
+    }
+    true
+}
+
+/// Solve L z = b (forward substitution), in place over `b`.
+pub fn solve_lower_in_place(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in 0..n {
+        let row = &l[i * n..i * n + i];
+        let s = b[i] - dot(row, &b[..i]);
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Solve Lᵀ x = b (backward substitution), in place over `b`.
+pub fn solve_upper_t_in_place(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Standard-normal CDF via erf (same A&S 7.1.26 approximation the AOT
+/// artifact uses, so both backends agree bit-for-bit-ish).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf_approx(x / std::f64::consts::SQRT_2))
+}
+
+pub fn norm_pdf(x: f64) -> f64 {
+    (2.0 * std::f64::consts::PI).sqrt().recip() * (-0.5 * x * x).exp()
+}
+
+fn erf_approx(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * ax);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-ax * ax).exp())
+}
+
+/// Expected improvement for minimization.
+pub fn expected_improvement(mu: f64, var: f64, best: f64) -> f64 {
+    let sigma = var.max(0.0).sqrt();
+    let delta = best - mu;
+    if sigma <= 1e-12 {
+        return delta.max(0.0);
+    }
+    let z = delta / sigma;
+    (delta * norm_cdf(z) + sigma * norm_pdf(z)).max(0.0)
+}
+
+/// A fitted GP posterior over `n` observations of dimension `d`.
+///
+/// Scratch buffers are reused across refits (`fit` clears and refills),
+/// which keeps the per-search-iteration hot path allocation-free after
+/// the first fit — one of the §Perf optimizations.
+#[derive(Debug, Clone, Default)]
+pub struct NativeGp {
+    n: usize,
+    d: usize,
+    x: Vec<f64>,
+    chol: Vec<f64>,
+    alpha: Vec<f64>,
+    hyp: [f64; 3],
+    // scratch for predictions and distance/kernel reuse
+    ks_row: Vec<f64>,
+    d2_scratch: Vec<f64>,
+    kern_scratch: Vec<f64>,
+}
+
+impl NativeGp {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fit on `n` rows of `x` (row-major, d columns) and targets `y` with
+    /// hyp = (lengthscale, signal variance, noise variance).
+    /// Returns false if the Gram matrix was not SPD even with jitter.
+    pub fn fit(&mut self, x: &[f64], y: &[f64], n: usize, d: usize, hyp: [f64; 3]) -> bool {
+        let mut d2 = std::mem::take(&mut self.d2_scratch);
+        pairwise_sqdist(x, n, d, &mut d2);
+        let ok = self.fit_from_sqdist(x, y, n, d, &d2, hyp);
+        self.d2_scratch = d2;
+        ok
+    }
+
+    /// Fit with a precomputed pairwise squared-distance matrix (shared
+    /// across hyperparameter-grid evaluations — the §Perf hot path).
+    pub fn fit_from_sqdist(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        d2: &[f64],
+        hyp: [f64; 3],
+    ) -> bool {
+        assert_eq!(d2.len(), n * n);
+        let (ls, var, _) = (hyp[0], hyp[1], hyp[2]);
+        let mut kern = std::mem::take(&mut self.kern_scratch);
+        kern.clear();
+        kern.resize(n * n, 0.0);
+        for i in 0..n {
+            for j in 0..=i {
+                let k = matern52_from_d2(d2[i * n + j], ls, var);
+                kern[i * n + j] = k;
+                kern[j * n + i] = k;
+            }
+        }
+        let ok = self.fit_from_kernel(x, y, n, d, &kern, hyp);
+        self.kern_scratch = kern;
+        ok
+    }
+
+    /// Fit from a prebuilt noiseless Gram matrix. Shared by the
+    /// hyperparameter grid: the Gram depends only on the lengthscale, so
+    /// the 4 noise levels per lengthscale reuse one kernel build (§Perf).
+    pub fn fit_from_kernel(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        kern: &[f64],
+        hyp: [f64; 3],
+    ) -> bool {
+        assert_eq!(x.len(), n * d);
+        assert_eq!(y.len(), n);
+        assert_eq!(kern.len(), n * n);
+        self.n = n;
+        self.d = d;
+        self.hyp = hyp;
+        self.x.clear();
+        self.x.extend_from_slice(x);
+
+        let noise = hyp[2];
+        self.chol.clear();
+        self.chol.extend_from_slice(kern);
+        for i in 0..n {
+            self.chol[i * n + i] += noise + JITTER;
+        }
+        if !cholesky_in_place(&mut self.chol, n) {
+            return false;
+        }
+        self.alpha.clear();
+        self.alpha.extend_from_slice(y);
+        solve_lower_in_place(&self.chol, n, &mut self.alpha);
+        solve_upper_t_in_place(&self.chol, n, &mut self.alpha);
+        true
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.n
+    }
+
+    /// Posterior (mean, variance) at one candidate row.
+    pub fn predict(&mut self, xc: &[f64]) -> (f64, f64) {
+        let (ls, var, _) = (self.hyp[0], self.hyp[1], self.hyp[2]);
+        let n = self.n;
+        let d = self.d;
+        self.ks_row.clear();
+        for j in 0..n {
+            self.ks_row.push(matern52(xc, &self.x[j * d..(j + 1) * d], ls, var));
+        }
+        let mu: f64 = self.ks_row.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+        // v = L^-1 ks; var = k(x,x) - |v|^2
+        solve_lower_in_place(&self.chol, n, &mut self.ks_row);
+        let v2: f64 = self.ks_row.iter().map(|v| v * v).sum();
+        (mu, (var - v2).max(1e-9))
+    }
+
+    /// Negative log marginal likelihood of the fitted data.
+    pub fn nll(&self, y: &[f64]) -> f64 {
+        let n = self.n;
+        let quad: f64 = y.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>() * 0.5;
+        let logdet: f64 = (0..n).map(|i| self.chol[i * n + i].ln()).sum();
+        quad + logdet + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+    }
+}
+
+/// Standardize targets to zero mean / unit variance; returns
+/// (standardized, mean, std). Constant targets get std = 1.
+pub fn standardize(y: &[f64]) -> (Vec<f64>, f64, f64) {
+    let m = stats::mean(y);
+    let s = stats::stddev(y).max(1e-12);
+    let s = if s < 1e-9 { 1.0 } else { s };
+    (y.iter().map(|v| (v - m) / s).collect(), m, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_x(n: usize, d: usize) -> Vec<f64> {
+        let mut x = Vec::with_capacity(n * d);
+        for i in 0..n {
+            for j in 0..d {
+                x.push(((i * 31 + j * 7) % 97) as f64 / 97.0);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn matern_at_zero_distance_is_variance() {
+        let a = [0.3, 0.4];
+        assert!((matern52(&a, &a, 0.5, 2.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matern_decays() {
+        let a = [0.0];
+        assert!(matern52(&a, &[0.5], 1.0, 1.0) > matern52(&a, &[1.5], 1.0, 1.0));
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 5;
+        // A = M M^T + n I is SPD
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    let mi = ((i * 13 + k * 5) % 11) as f64 / 11.0;
+                    let mj = ((j * 13 + k * 5) % 11) as f64 / 11.0;
+                    s += mi * mj;
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let orig = a.clone();
+        assert!(cholesky_in_place(&mut a, n));
+        // recompute L L^T
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * a[j * n + k];
+                }
+                assert!((s - orig[i * n + j]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(!cholesky_in_place(&mut a, 2));
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let n = 4;
+        let l = vec![
+            2.0, 0.0, 0.0, 0.0, //
+            0.5, 1.5, 0.0, 0.0, //
+            0.3, 0.2, 1.0, 0.0, //
+            0.1, 0.4, 0.6, 2.5,
+        ];
+        let b = [1.0, 2.0, 3.0, 4.0];
+        let mut z = b;
+        solve_lower_in_place(&l, n, &mut z);
+        // check L z = b
+        for i in 0..n {
+            let s: f64 = (0..=i).map(|k| l[i * n + k] * z[k]).sum();
+            assert!((s - b[i]).abs() < 1e-12);
+        }
+        let mut x = b;
+        solve_upper_t_in_place(&l, n, &mut x);
+        for i in 0..n {
+            let s: f64 = (i..n).map(|k| l[k * n + i] * x[k]).sum();
+            assert!((s - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gp_interpolates_at_low_noise() {
+        let n = 6;
+        let d = 3;
+        let x = grid_x(n, d);
+        let y: Vec<f64> = (0..n)
+            .map(|i| x[i * d..(i + 1) * d].iter().sum::<f64>())
+            .collect();
+        let mut gp = NativeGp::new();
+        assert!(gp.fit(&x, &y, n, d, [0.8, 1.0, 1e-8]));
+        for i in 0..n {
+            let (mu, var) = gp.predict(&x[i * d..(i + 1) * d]);
+            assert!((mu - y[i]).abs() < 1e-4, "mu {mu} vs {}", y[i]);
+            assert!(var < 1e-4);
+        }
+    }
+
+    #[test]
+    fn posterior_variance_bounded_by_prior() {
+        let n = 8;
+        let d = 2;
+        let x = grid_x(n, d);
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut gp = NativeGp::new();
+        assert!(gp.fit(&x, &y, n, d, [0.5, 2.0, 1e-3]));
+        let (_, var) = gp.predict(&[10.0, -4.0]); // far away -> prior
+        assert!(var <= 2.0 + 1e-9 && var > 1.9);
+    }
+
+    #[test]
+    fn ei_properties() {
+        assert_eq!(expected_improvement(2.0, 0.0, 1.0), 0.0); // dominated, certain
+        assert!((expected_improvement(0.0, 0.0, 1.0) - 1.0).abs() < 1e-12);
+        // grows with sigma
+        let e1 = expected_improvement(1.5, 0.25, 1.0);
+        let e2 = expected_improvement(1.5, 1.0, 1.0);
+        assert!(e2 > e1);
+        // closed form check: mu=0, var=1, best=1
+        let e = expected_improvement(0.0, 1.0, 1.0);
+        let exact = 0.8413447 + 0.2419707;
+        assert!((e - exact).abs() < 1e-4);
+    }
+
+    #[test]
+    fn norm_cdf_accuracy() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.9750021).abs() < 1e-5);
+        assert!((norm_cdf(-1.96) - 0.0249979).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nll_penalizes_bad_lengthscale() {
+        // Smooth data: moderate lengthscale should beat a tiny one.
+        let n = 10;
+        let d = 1;
+        let x: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+        let y: Vec<f64> = x.iter().map(|t| (3.0 * t).sin()).collect();
+        let mut gp = NativeGp::new();
+        gp.fit(&x, &y, n, d, [0.5, 1.0, 1e-4]);
+        let nll_good = gp.nll(&y);
+        gp.fit(&x, &y, n, d, [0.005, 1.0, 1e-4]);
+        let nll_bad = gp.nll(&y);
+        assert!(nll_good < nll_bad, "{nll_good} vs {nll_bad}");
+    }
+
+    #[test]
+    fn standardize_roundtrip() {
+        let y = [3.0, 5.0, 7.0, 9.0];
+        let (z, m, s) = standardize(&y);
+        assert!((crate::util::stats::mean(&z)).abs() < 1e-12);
+        for (zi, yi) in z.iter().zip(&y) {
+            assert!((zi * s + m - yi).abs() < 1e-12);
+        }
+        let (z2, _, s2) = standardize(&[4.0, 4.0, 4.0]);
+        assert_eq!(s2, 1.0);
+        assert!(z2.iter().all(|v| v.abs() < 1e-12));
+    }
+}

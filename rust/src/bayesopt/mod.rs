@@ -1,0 +1,11 @@
+//! Bayesian-optimized iterative search (§III-E): Gaussian-process
+//! regression with expected improvement, hyperparameter selection by
+//! marginal likelihood, and the phase-aware search loop shared by
+//! CherryPick and Ruya.
+
+pub mod backend;
+pub mod gp;
+pub mod search;
+
+pub use backend::{backend_by_name, Decision, GpBackend, NativeBackend, XlaBackend};
+pub use search::{hyperparameter_grid, run_search, BoParams, SearchOutcome};

@@ -1,0 +1,130 @@
+//! Crispy-style one-shot configuration selection (§III-B, [16]).
+//!
+//! Crispy is Ruya's predecessor: for a *unique, one-off* job there is no
+//! budget for iterative search, so after the same profiling phase it
+//! directly picks the single most promising configuration — essentially
+//! Ruya's priority-group reasoning collapsed to one decision. Implemented
+//! here both as a library feature (`ruya crispy` in the CLI) and as a
+//! reference point for how much the *iterative* part of Ruya adds.
+
+use super::planner::RuyaPlanner;
+use crate::memmodel::{MemCategory, MemoryModel};
+use crate::searchspace::SearchSpace;
+
+/// Result of a one-shot selection.
+#[derive(Debug, Clone)]
+pub struct CrispyChoice {
+    /// Chosen configuration index.
+    pub config_idx: usize,
+    pub category: MemCategory,
+    /// Extrapolated requirement (linear jobs).
+    pub requirement_gb: Option<f64>,
+    /// Number of configurations that were memory-admissible.
+    pub admissible: usize,
+}
+
+/// One-shot selector sharing the planner's memory reasoning.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CrispySelector {
+    pub planner: RuyaPlanner,
+}
+
+impl CrispySelector {
+    /// Pick the single most promising configuration for a job with the
+    /// given fitted memory model and full input size.
+    ///
+    /// Heuristic (after the memory filter, which is Crispy's actual
+    /// contribution): cost-efficiency prefers the cheapest *effective*
+    /// compute — price per core discounted by a mild scale-out
+    /// contention factor — which is the best prior-only guess without any
+    /// execution history.
+    pub fn select(
+        &self,
+        model: &MemoryModel,
+        input_gb: f64,
+        space: &SearchSpace,
+    ) -> CrispyChoice {
+        let plan = self.planner.plan(model, input_gb, space);
+        let admissible = &plan.phases[0];
+
+        let score = |idx: usize| -> f64 {
+            let c = space.config(idx);
+            let cores = c.total_cores();
+            // Effective cores under a generic contention prior (the
+            // selector must not peek at the simulator's true constants).
+            let eff = cores / (1.0 + 0.05 * (cores - 1.0).max(0.0));
+            c.price_per_hour() / eff
+        };
+
+        let best = admissible
+            .iter()
+            .copied()
+            .min_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap())
+            .expect("plan phases are never empty");
+
+        CrispyChoice {
+            config_idx: best,
+            category: plan.category,
+            requirement_gb: plan.requirement_gb,
+            admissible: admissible.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bayesopt::NativeBackend;
+    use crate::coordinator::ExperimentRunner;
+    use crate::workload::{evaluation_jobs, JobCostTable};
+
+    #[test]
+    fn selects_admissible_config_for_linear_job() {
+        let readings: Vec<(f64, f64)> =
+            (1..=5).map(|k| (k as f64, 2.5 * k as f64)).collect();
+        let model = MemoryModel::fit(&readings);
+        let space = SearchSpace::scout();
+        let choice = CrispySelector::default().select(&model, 100.8, &space);
+        assert_eq!(choice.category, MemCategory::Linear);
+        let req = choice.requirement_gb.unwrap();
+        assert!(space.config(choice.config_idx).usable_memory_gb() >= req);
+    }
+
+    #[test]
+    fn flat_job_gets_low_memory_machine() {
+        let model = MemoryModel::fit(&[
+            (1.0, 1.2),
+            (2.0, 1.18),
+            (3.0, 1.22),
+            (4.0, 1.19),
+            (5.0, 1.21),
+        ]);
+        let space = SearchSpace::scout();
+        let choice = CrispySelector::default().select(&model, 300.0, &space);
+        assert_eq!(choice.category, MemCategory::Flat);
+        assert_eq!(choice.admissible, 10);
+        // The pick comes from the low-memory priority group.
+        let low = space.lowest_memory_configs(10);
+        assert!(low.contains(&choice.config_idx));
+    }
+
+    #[test]
+    fn one_shot_choice_is_decent_across_the_evaluation() {
+        // Crispy's one-shot pick should land well below the space's mean
+        // cost for most jobs — but (being search-free) above the optimum
+        // Ruya's iteration finds. This quantifies what iterating adds.
+        let mut backend = NativeBackend::new();
+        let runner = ExperimentRunner::new(&mut backend);
+        let selector = CrispySelector::default();
+        let mut regrets = Vec::new();
+        for job in evaluation_jobs() {
+            let profile = runner.profile_job(&job, 0xC0FFEE);
+            let choice = selector.select(&profile.model, job.input_gb, &runner.space);
+            let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+            regrets.push(table.normalized[choice.config_idx]);
+        }
+        let mean = crate::util::stats::mean(&regrets);
+        assert!(mean < 3.0, "one-shot mean normalized cost {mean}");
+        assert!(mean > 1.0, "one-shot selection cannot be universally optimal");
+    }
+}

@@ -1,0 +1,15 @@
+//! The Ruya coordinator — the paper's system contribution at Layer 3:
+//! profiling orchestration, memory-aware search-space splitting
+//! ([`planner`]) and the evaluation harness ([`experiment`]) that drives
+//! the Bayesian-optimized search over the simulated cluster substrate.
+
+mod crispy;
+mod experiment;
+mod planner;
+
+pub use crispy::{CrispyChoice, CrispySelector};
+pub use experiment::{
+    ExperimentConfig, ExperimentResult, ExperimentRunner, JobComparison, MethodStats,
+    ProfileSummary, StopQuality, THRESHOLDS,
+};
+pub use planner::{RuyaPlanner, SearchPlan};

@@ -1,0 +1,223 @@
+//! Search-space splitting (§III-D): turn the fitted memory model into a
+//! phased search plan — Ruya's core coordination contribution.
+
+use crate::memmodel::{MemCategory, MemoryModel};
+use crate::searchspace::SearchSpace;
+
+/// A phased exploration plan over the configuration space.
+#[derive(Debug, Clone)]
+pub struct SearchPlan {
+    pub category: MemCategory,
+    /// Extrapolated job memory requirement (GB), Linear jobs only.
+    pub requirement_gb: Option<f64>,
+    /// Disjoint index sets, explored in order. Union = whole space.
+    pub phases: Vec<Vec<usize>>,
+    /// |first phase| / |space| — how much the search was narrowed.
+    pub priority_fraction: f64,
+}
+
+impl SearchPlan {
+    /// A plan with a single phase spanning the whole space — plain
+    /// CherryPick, and Ruya's fallback for `unclear` jobs.
+    pub fn unpartitioned(space: &SearchSpace) -> Self {
+        Self {
+            category: MemCategory::Unclear,
+            requirement_gb: None,
+            phases: vec![(0..space.len()).collect()],
+            priority_fraction: 1.0,
+        }
+    }
+
+    /// True when the plan actually narrows the initial search space.
+    pub fn is_narrowed(&self) -> bool {
+        self.phases.len() > 1 && self.priority_fraction < 1.0
+    }
+}
+
+/// Builds Ruya search plans from memory models.
+#[derive(Debug, Clone, Copy)]
+pub struct RuyaPlanner {
+    /// Safety margin on the extrapolated requirement (§III-D "leeway to
+    /// account for slight miscalculations").
+    pub leeway: f64,
+    /// Priority-group size for flat jobs (§IV-C: "the ten configurations
+    /// with the lowest total memory", ~1/7 of the space).
+    pub flat_group_size: usize,
+    /// Fraction of the space taken from EACH memory extreme when a linear
+    /// requirement exceeds every configuration (§III-D: "very high or
+    /// very low total cluster memory").
+    pub extremes_fraction: f64,
+}
+
+impl Default for RuyaPlanner {
+    fn default() -> Self {
+        Self { leeway: 0.02, flat_group_size: 10, extremes_fraction: 0.12 }
+    }
+}
+
+impl RuyaPlanner {
+    /// Build the phased plan for a job whose profiling produced `model`,
+    /// to be executed on the full dataset of `input_gb`.
+    pub fn plan(&self, model: &MemoryModel, input_gb: f64, space: &SearchSpace) -> SearchPlan {
+        match model.category {
+            MemCategory::Unclear => SearchPlan::unpartitioned(space),
+            MemCategory::Flat => {
+                // Extra memory only adds cost: prioritize the cheapest-
+                // memory corner of the space.
+                let k = self.flat_group_size.min(space.len());
+                let priority = space.lowest_memory_configs(k);
+                self.two_phase(MemCategory::Flat, None, priority, space)
+            }
+            MemCategory::Linear => {
+                let req = model.estimate_requirement_gb(input_gb);
+                let need = req * (1.0 + self.leeway);
+                let priority = space.with_usable_memory_at_least(need);
+                if priority.is_empty() {
+                    // Requirement beyond the whole space: "some jobs can
+                    // make use of all memory they are given and others
+                    // need either enough or none" -> both extremes.
+                    let extremes = space.memory_extremes(self.extremes_fraction);
+                    self.two_phase(MemCategory::Linear, Some(req), extremes, space)
+                } else {
+                    self.two_phase(MemCategory::Linear, Some(req), priority, space)
+                }
+            }
+        }
+    }
+
+    fn two_phase(
+        &self,
+        category: MemCategory,
+        requirement_gb: Option<f64>,
+        priority: Vec<usize>,
+        space: &SearchSpace,
+    ) -> SearchPlan {
+        let in_priority: Vec<bool> = {
+            let mut f = vec![false; space.len()];
+            for &i in &priority {
+                f[i] = true;
+            }
+            f
+        };
+        let rest: Vec<usize> = (0..space.len()).filter(|&i| !in_priority[i]).collect();
+        let priority_fraction = priority.len() as f64 / space.len() as f64;
+        let phases = if rest.is_empty() {
+            vec![priority] // requirement so low the whole space qualifies
+        } else if priority.is_empty() {
+            vec![rest]
+        } else {
+            vec![priority, rest]
+        };
+        SearchPlan { category, requirement_gb, phases, priority_fraction }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmodel::MemoryModel;
+
+    fn linear_model(slope: f64) -> MemoryModel {
+        let readings: Vec<(f64, f64)> =
+            (1..=5).map(|k| (k as f64, slope * k as f64)).collect();
+        let m = MemoryModel::fit(&readings);
+        assert_eq!(m.category, MemCategory::Linear);
+        m
+    }
+
+    fn flat_model() -> MemoryModel {
+        MemoryModel::fit(&[(1.0, 1.2), (2.0, 1.15), (3.0, 1.22), (4.0, 1.18), (5.0, 1.2)])
+    }
+
+    fn unclear_model() -> MemoryModel {
+        let m =
+            MemoryModel::fit(&[(1.0, 2.0), (2.0, 7.0), (3.0, 6.0), (4.0, 14.0), (5.0, 10.0)]);
+        assert_eq!(m.category, MemCategory::Unclear);
+        m
+    }
+
+    #[test]
+    fn unclear_plan_is_plain_cherrypick() {
+        let space = SearchSpace::scout();
+        let plan = RuyaPlanner::default().plan(&unclear_model(), 100.0, &space);
+        assert_eq!(plan.phases.len(), 1);
+        assert_eq!(plan.phases[0].len(), space.len());
+        assert!(!plan.is_narrowed());
+    }
+
+    #[test]
+    fn flat_plan_prioritizes_ten_lowest_memory() {
+        let space = SearchSpace::scout();
+        let plan = RuyaPlanner::default().plan(&flat_model(), 100.0, &space);
+        assert_eq!(plan.category, MemCategory::Flat);
+        assert_eq!(plan.phases.len(), 2);
+        assert_eq!(plan.phases[0].len(), 10);
+        // ~1/7 of the space, as the paper notes.
+        assert!((plan.priority_fraction - 10.0 / 69.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_plan_filters_by_usable_memory() {
+        let space = SearchSpace::scout();
+        // K-Means/bigdata-like: 2.5 GB/GB slope, 201.2 GB input -> 503 GB
+        let plan = RuyaPlanner::default().plan(&linear_model(2.5), 201.2, &space);
+        assert_eq!(plan.category, MemCategory::Linear);
+        let req = plan.requirement_gb.unwrap();
+        assert!((req - 503.0).abs() < 1.0);
+        assert!(plan.phases.len() == 2 && !plan.phases[0].is_empty());
+        for &i in &plan.phases[0] {
+            assert!(space.config(i).usable_memory_gb() >= req);
+        }
+        // Only big r4 clusters can hold 503 GB.
+        for &i in &plan.phases[0] {
+            assert_eq!(space.config(i).machine_type().family.letter(), 'r');
+        }
+    }
+
+    #[test]
+    fn oversized_requirement_falls_back_to_extremes() {
+        let space = SearchSpace::scout();
+        // NB/bigdata-like: 754 GB requirement > max usable (~670 GB).
+        let plan = RuyaPlanner::default().plan(&linear_model(2.5), 301.6, &space);
+        assert_eq!(plan.category, MemCategory::Linear);
+        assert!(plan.phases.len() == 2);
+        let mems: Vec<f64> =
+            plan.phases[0].iter().map(|&i| space.config(i).total_memory_gb()).collect();
+        let lo = space.configs().iter().map(|c| c.total_memory_gb()).fold(f64::MAX, f64::min);
+        let hi = space.configs().iter().map(|c| c.total_memory_gb()).fold(0.0, f64::max);
+        assert!(mems.iter().any(|&m| (m - lo).abs() < 1e-9), "missing low extreme");
+        assert!(mems.iter().any(|&m| (m - hi).abs() < 1e-9), "missing high extreme");
+    }
+
+    #[test]
+    fn tiny_requirement_may_cover_whole_space() {
+        let space = SearchSpace::scout();
+        // Slope so small every config qualifies (PageRank/huge anecdote).
+        let plan = RuyaPlanner::default().plan(&linear_model(0.001), 8.4, &space);
+        assert_eq!(plan.phases.len(), 1, "no narrowing expected");
+        assert_eq!(plan.phases[0].len(), space.len());
+    }
+
+    #[test]
+    fn phases_partition_the_space() {
+        let space = SearchSpace::scout();
+        for model in [flat_model(), linear_model(2.5), unclear_model()] {
+            let plan = RuyaPlanner::default().plan(&model, 150.0, &space);
+            let mut all: Vec<usize> = plan.phases.concat();
+            all.sort_unstable();
+            let expect: Vec<usize> = (0..space.len()).collect();
+            assert_eq!(all, expect, "phases must partition the space exactly");
+        }
+    }
+
+    #[test]
+    fn leeway_shrinks_priority_group() {
+        let space = SearchSpace::scout();
+        let loose = RuyaPlanner { leeway: 0.0, ..Default::default() };
+        let tight = RuyaPlanner { leeway: 0.3, ..Default::default() };
+        let m = linear_model(2.5);
+        let p_loose = loose.plan(&m, 201.2, &space);
+        let p_tight = tight.plan(&m, 201.2, &space);
+        assert!(p_tight.phases[0].len() <= p_loose.phases[0].len());
+    }
+}

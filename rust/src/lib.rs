@@ -1,0 +1,32 @@
+//! # Ruya — memory-aware iterative optimization of cluster configurations
+//!
+//! A reproduction of *Ruya: Memory-Aware Iterative Optimization of Cluster
+//! Configurations for Big Data Processing* (Will et al., IEEE BigData 2022)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: profiling controller,
+//!   memory modeling, search-space splitting, the Bayesian-optimized
+//!   iterative search (Ruya) and the CherryPick baseline, plus the full
+//!   evaluation harness (Tables I–III, Figures 1/3/4/5).
+//! - **Layer 2** — the GP posterior + expected-improvement computation,
+//!   written in JAX (`python/compile/model.py`) and AOT-lowered to HLO
+//!   text artifacts.
+//! - **Layer 1** — the Matérn-5/2 Gram-matrix Pallas kernel
+//!   (`python/compile/kernels/matern.py`).
+//!
+//! Python is build-time only; after `make artifacts` the rust binary is
+//! self-contained and loads the artifacts through PJRT (`runtime`).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bayesopt;
+pub mod coordinator;
+pub mod memmodel;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod searchspace;
+pub mod testkit;
+pub mod util;
+pub mod workload;

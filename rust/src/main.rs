@@ -1,0 +1,427 @@
+//! `ruya` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands regenerate every table and figure of the paper's
+//! evaluation (see DESIGN.md §3 for the experiment index):
+//!
+//! ```text
+//! ruya table1                      # Table I  : memory categorization
+//! ruya table2 [--reps N]           # Table II : CherryPick vs Ruya
+//! ruya table3                      # Table III: profiling times
+//! ruya fig1                        # Fig. 1   : RAM vs cost (K-Means)
+//! ruya fig3                        # Fig. 3   : profiling memory trace
+//! ruya fig4 [--reps N]             # Fig. 4   : best cost per iteration
+//! ruya fig5 [--reps N]             # Fig. 5   : cumulative cost
+//! ruya search --job <label>        # one Ruya search, verbose trace
+//! ruya profile --job <label>       # one profiling phase, verbose
+//! ruya space                       # dump the 69-configuration space
+//! ruya all [--reps N]              # everything above, to --out dir
+//! ```
+//!
+//! Global options: `--backend native|xla` (default native; xla loads the
+//! AOT artifacts through PJRT), `--seed <u64>`, `--reps <N>` (default
+//! 200 as in the paper), `--out <dir>` (export .dat/.json/.md files).
+
+use anyhow::{bail, Context, Result};
+use ruya::bayesopt::{backend_by_name, GpBackend};
+use ruya::coordinator::{ExperimentConfig, ExperimentRunner, SearchPlan};
+use ruya::report;
+use ruya::searchspace::SearchSpace;
+use ruya::util::cli::Args;
+use ruya::workload::{evaluation_jobs, ClusterSim, JobCostTable, JobInstance};
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse(&["verbose", "help"]);
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    if args.flag("help") || sub == "help" {
+        print!("{HELP}");
+        return Ok(());
+    }
+    if sub == "space" {
+        return dump_space();
+    }
+    if sub == "fig1" {
+        return fig1(args.opt("out").map(Path::new));
+    }
+    if sub == "fig3" {
+        return fig3(args.opt_u64("seed", 0xC0FFEE), args.opt("out").map(Path::new));
+    }
+    if sub == "profile" {
+        return profile_one(args, args.opt_u64("seed", 0xC0FFEE));
+    }
+
+    let backend_name = args.opt_or("backend", "native");
+    let mut backend = backend_by_name(&backend_name)
+        .with_context(|| format!("initializing backend {backend_name}"))?;
+    let cfg = ExperimentConfig {
+        reps: args.opt_usize("reps", 200),
+        seed: args.opt_u64("seed", 0xC0FFEE),
+        curve_len: args.opt_usize("curve-len", 48),
+    };
+    let out_dir = args.opt("out").map(Path::new);
+
+    match sub.as_str() {
+        "table1" => table1(backend.as_mut(), cfg.seed, out_dir),
+        "table2" => table2(backend.as_mut(), &cfg, out_dir),
+        "table3" => table3(backend.as_mut(), cfg.seed, out_dir),
+        "fig4" | "fig5" => fig45(backend.as_mut(), &cfg, out_dir),
+        "search" => search_one(backend.as_mut(), args, &cfg),
+        "crispy" => crispy(backend.as_mut(), args, cfg.seed),
+        "stopping" => stopping(backend.as_mut(), &cfg),
+        "all" => {
+            table1(backend.as_mut(), cfg.seed, out_dir)?;
+            table3(backend.as_mut(), cfg.seed, out_dir)?;
+            fig1(out_dir)?;
+            fig3(cfg.seed, out_dir)?;
+            table2(backend.as_mut(), &cfg, out_dir)?;
+            fig45(backend.as_mut(), &cfg, out_dir)
+        }
+        other => bail!("unknown subcommand {other:?}; try `ruya help`"),
+    }
+}
+
+fn write_out(out_dir: Option<&Path>, name: &str, content: &str) -> Result<()> {
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(name), content)
+            .with_context(|| format!("writing {name}"))?;
+        eprintln!("wrote {}", dir.join(name).display());
+    }
+    Ok(())
+}
+
+fn table1(backend: &mut dyn GpBackend, seed: u64, out: Option<&Path>) -> Result<()> {
+    let runner = ExperimentRunner::new(backend);
+    let summaries = runner.profile_all(seed);
+    let rendered = report::render_table1(&summaries);
+    println!("Table I: Determined Job Memory Requirement\n\n{rendered}");
+    write_out(out, "table1.md", &rendered)
+}
+
+fn table3(backend: &mut dyn GpBackend, seed: u64, out: Option<&Path>) -> Result<()> {
+    let runner = ExperimentRunner::new(backend);
+    let summaries = runner.profile_all(seed);
+    let rendered = report::render_table3(&summaries);
+    println!("Table III: Memory Profiling Time for all Jobs\n\n{rendered}");
+    write_out(out, "table3.md", &rendered)
+}
+
+fn table2(backend: &mut dyn GpBackend, cfg: &ExperimentConfig, out: Option<&Path>) -> Result<()> {
+    eprintln!(
+        "running Table II: 16 jobs x 2 methods x {} reps (backend: {})...",
+        cfg.reps,
+        backend.name()
+    );
+    let mut runner = ExperimentRunner::new(backend);
+    let result = runner.run_table2(cfg)?;
+    let rendered = report::render_table2(&result);
+    println!("Table II: iterations until a configuration with cost c is found\n\n{rendered}");
+    write_out(out, "table2.md", &rendered)?;
+    write_out(out, "table2.json", &report::experiment_to_json(&result))
+}
+
+fn fig45(backend: &mut dyn GpBackend, cfg: &ExperimentConfig, out: Option<&Path>) -> Result<()> {
+    let mut runner = ExperimentRunner::new(backend);
+    let result = runner.run_table2(cfg)?;
+    let n = result.jobs.len() as f64;
+    let len = cfg.curve_len;
+    let avg = |f: &dyn Fn(&ruya::coordinator::JobComparison) -> &Vec<f64>| {
+        let mut acc = vec![0.0; len];
+        for j in &result.jobs {
+            for (i, v) in f(j).iter().take(len).enumerate() {
+                acc[i] += v / n;
+            }
+        }
+        acc
+    };
+    let fig4_cp = avg(&|j| &j.cherrypick.best_curve);
+    let fig4_ruya = avg(&|j| &j.ruya.best_curve);
+    let fig4 = report::render_series(
+        &fig4_cp,
+        &fig4_ruya,
+        "Fig 4: best-found normalized cost per iteration (mean over jobs)",
+    );
+    println!("{fig4}");
+    write_out(out, "fig4.dat", &fig4)?;
+
+    let fig5_cp = avg(&|j| &j.cherrypick.cum_curve);
+    let fig5_ruya = avg(&|j| &j.ruya.cum_curve);
+    let fig5 = report::render_series(
+        &fig5_cp,
+        &fig5_ruya,
+        "Fig 5: cumulative normalized execution cost (mean over jobs)",
+    );
+    println!("{fig5}");
+    write_out(out, "fig5.dat", &fig5)
+}
+
+fn fig1(out: Option<&Path>) -> Result<()> {
+    // RAM vs cost for K-Means on Spark, every machine type and scale-out.
+    let space = SearchSpace::scout();
+    let sim = ClusterSim::default();
+    let mut rows = String::from(
+        "# Fig 1: total RAM vs normalized cost, K-Means on Spark\n# ram_gb  cost_norm  machine  nodes\n",
+    );
+    for scale in ["bigdata", "huge"] {
+        let job = find_spark_job("K-Means", scale)?;
+        let table = JobCostTable::build(&sim, &job, &space);
+        rows.push_str(&format!("\n# dataset: {scale}\n"));
+        let mut by_ram: Vec<(f64, f64, String, u32)> = (0..space.len())
+            .map(|i| {
+                let c = space.config(i);
+                (
+                    c.total_memory_gb(),
+                    table.normalized[i],
+                    c.machine_type().name.to_string(),
+                    c.nodes,
+                )
+            })
+            .collect();
+        by_ram.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (ram, cost, name, nodes) in by_ram {
+            rows.push_str(&format!("{ram:8.1}  {cost:8.3}  {name}  {nodes}\n"));
+        }
+    }
+    println!("{rows}");
+    write_out(out, "fig1.dat", &rows)
+}
+
+fn fig3(seed: u64, out: Option<&Path>) -> Result<()> {
+    // Memory time series of the five K-Means profiling runs.
+    let profiler = ruya::profiler::SingleNodeProfiler::default();
+    let job = find_spark_job("K-Means", "huge")?;
+    let outcome = profiler.profile(&job, seed);
+    let mut s = String::from(
+        "# Fig 3: single-node memory over time, K-Means on Spark, 5 sample sizes\n",
+    );
+    let mut t_offset = 0.0;
+    for (k, run) in outcome.runs.iter().enumerate() {
+        s.push_str(&format!(
+            "\n# run {} sample {:.2} GB (peak {:.2} GB)\n",
+            k + 1,
+            run.sample_gb,
+            run.peak_mem_gb
+        ));
+        if let Some(series) = &run.series {
+            for (t, gb) in series.as_rows() {
+                s.push_str(&format!("{:8.1}  {gb:8.3}\n", t + t_offset));
+            }
+            t_offset += series.duration_s() + 20.0;
+        }
+    }
+    println!("{s}");
+    write_out(out, "fig3.dat", &s)
+}
+
+fn search_one(backend: &mut dyn GpBackend, args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let label = args
+        .opt("job")
+        .context("--job <label> required, e.g. --job 'K-Means Spark bigdata'")?;
+    let job = job_by_label(label)?;
+    let mut runner = ExperimentRunner::new(backend);
+    let profile = runner.profile_job(&job, cfg.seed);
+    println!(
+        "profiling: {} -> {} (R^2 {:.3}, {:.0} s)",
+        job.label(),
+        profile.table1_cell,
+        profile.model.r2,
+        profile.profiling_time_s
+    );
+    let plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
+    println!(
+        "plan: category {}, priority {}/{} configs",
+        plan.category.name(),
+        plan.phases[0].len(),
+        runner.space.len()
+    );
+    let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+    let out = runner.run_one(&table, &plan, cfg.seed ^ job.job_id)?;
+    println!("\niter  config            cost    best");
+    let mut best = f64::INFINITY;
+    for (i, (&idx, &cost)) in out.tried.iter().zip(&out.costs).enumerate() {
+        best = best.min(cost);
+        let marker = if cost <= 1.0 + 1e-9 { "  <- optimal" } else { "" };
+        println!(
+            "{:4}  {:16} {:6.3}  {:6.3}{marker}",
+            i + 1,
+            runner.space.config(idx).name(),
+            cost,
+            best
+        );
+        if cost <= 1.0 + 1e-9 {
+            break;
+        }
+    }
+    if let Some(stop) = out.stop_after {
+        println!("stopping criterion fired after {stop} executions");
+    }
+    // Baseline comparison under the same seed.
+    let cp = runner.run_one(&table, &SearchPlan::unpartitioned(&runner.space), cfg.seed ^ job.job_id)?;
+    println!(
+        "\niterations to optimum: ruya {} vs cherrypick {}",
+        out.first_within(1.0 + 1e-9).unwrap_or(0),
+        cp.first_within(1.0 + 1e-9).unwrap_or(0)
+    );
+    Ok(())
+}
+
+fn profile_one(args: &Args, seed: u64) -> Result<()> {
+    let label = args.opt("job").context("--job <label> required")?;
+    let job = job_by_label(label)?;
+    let profiler = ruya::profiler::SingleNodeProfiler::default();
+    let outcome = profiler.profile(&job, seed);
+    println!("profiling {} ({} GB input)", job.label(), job.input_gb);
+    println!("calibration runs: {}", outcome.calibration.len());
+    println!("\nsample_gb  runtime_s  peak_mem_gb");
+    for r in &outcome.runs {
+        println!("{:9.3}  {:9.1}  {:10.3}", r.sample_gb, r.runtime_s, r.peak_mem_gb);
+    }
+    let model = ruya::memmodel::MemoryModel::fit(&outcome.readings());
+    println!("\ncategory: {} (R^2 {:.4})", model.category.name(), model.r2);
+    println!("result: {}", model.table1_cell(job.input_gb));
+    println!("total profiling time: {:.0} s", outcome.total_s);
+    Ok(())
+}
+
+fn crispy(backend: &mut dyn GpBackend, args: &Args, seed: u64) -> Result<()> {
+    // One-shot (Crispy-style) selection: either one job or the whole
+    // catalog with its regret vs the simulated optimum.
+    let runner = ExperimentRunner::new(backend);
+    let selector = ruya::coordinator::CrispySelector::default();
+    let jobs: Vec<JobInstance> = match args.opt("job") {
+        Some(label) => vec![job_by_label(label)?],
+        None => evaluation_jobs(),
+    };
+    println!("Crispy one-shot selection (no iterative search):\n");
+    println!("{:27} {:16} {:>10} {:>12}", "job", "choice", "admissible", "norm. cost");
+    let mut regrets = Vec::new();
+    for job in jobs {
+        let profile = runner.profile_job(&job, seed);
+        let choice = selector.select(&profile.model, job.input_gb, &runner.space);
+        let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+        let cost = table.normalized[choice.config_idx];
+        regrets.push(cost);
+        println!(
+            "{:27} {:16} {:>10} {:>12.3}",
+            job.label(),
+            runner.space.config(choice.config_idx).name(),
+            choice.admissible,
+            cost
+        );
+    }
+    println!(
+        "\nmean one-shot normalized cost: {:.3} (iterative Ruya reaches 1.0; \
+         this is what the search iterations buy)",
+        regrets.iter().sum::<f64>() / regrets.len() as f64
+    );
+    Ok(())
+}
+
+fn stopping(backend: &mut dyn GpBackend, cfg: &ExperimentConfig) -> Result<()> {
+    // The §III-E stopping-criterion tradeoff: quality of enforced-stop
+    // searches per method.
+    let mut runner = ExperimentRunner::new(backend);
+    println!(
+        "enforced-stop search quality ({} reps): stop-iters / best cost / %optimal / search spend\n",
+        cfg.reps
+    );
+    println!(
+        "{:27} {:>7} | {:>6} {:>6} {:>5} {:>7} | {:>6} {:>6} {:>5} {:>7}",
+        "job", "cat", "CPit", "CPcost", "CP%", "CPspend", "Ruit", "Rucost", "Ru%", "Ruspend"
+    );
+    for job in evaluation_jobs() {
+        let profile = runner.profile_job(&job, cfg.seed);
+        let plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
+        let cp_plan = SearchPlan::unpartitioned(&runner.space);
+        let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+        let cp = runner.stop_quality(&table, &cp_plan, cfg, job.job_id ^ 0x57AB)?;
+        let ru = runner.stop_quality(&table, &plan, cfg, job.job_id ^ 0x57AB)?;
+        println!(
+            "{:27} {:>7} | {:>6.1} {:>6.3} {:>4.0}% {:>7.1} | {:>6.1} {:>6.3} {:>4.0}% {:>7.1}",
+            job.label(),
+            plan.category.name(),
+            cp.mean_stop_iters,
+            cp.mean_best_cost,
+            cp.frac_optimal * 100.0,
+            cp.mean_search_spend,
+            ru.mean_stop_iters,
+            ru.mean_best_cost,
+            ru.frac_optimal * 100.0,
+            ru.mean_search_spend
+        );
+    }
+    Ok(())
+}
+
+fn dump_space() -> Result<()> {
+    let space = SearchSpace::scout();
+    println!("{} configurations", space.len());
+    println!("\nidx  config            cores  total_gb  usable_gb  $/h");
+    for i in 0..space.len() {
+        let c = space.config(i);
+        println!(
+            "{i:3}  {:16} {:5}  {:8.1}  {:9.1}  {:.3}",
+            c.name(),
+            c.total_cores() as u64,
+            c.total_memory_gb(),
+            c.usable_memory_gb(),
+            c.price_per_hour()
+        );
+    }
+    Ok(())
+}
+
+fn find_spark_job(name: &str, scale: &str) -> Result<JobInstance> {
+    evaluation_jobs()
+        .into_iter()
+        .find(|j| {
+            j.algo.name == name
+                && j.scale.name() == scale
+                && j.algo.framework == ruya::workload::Framework::Spark
+        })
+        .context("job not found")
+}
+
+fn job_by_label(label: &str) -> Result<JobInstance> {
+    let all = evaluation_jobs();
+    all.iter()
+        .find(|j| j.label().eq_ignore_ascii_case(label))
+        .copied()
+        .with_context(|| {
+            let labels: Vec<String> = all.iter().map(|j| j.label()).collect();
+            format!("job {label:?} not found; known jobs:\n  {}", labels.join("\n  "))
+        })
+}
+
+const HELP: &str = r#"ruya — memory-aware iterative optimization of cluster configurations
+
+USAGE: ruya <subcommand> [options]
+
+SUBCOMMANDS
+  table1            Table I: per-job memory categorization + requirement
+  table2            Table II: CherryPick vs Ruya iterations-to-optimal
+  table3            Table III: profiling wall-clock time per job
+  fig1              Fig 1: total RAM vs normalized cost (K-Means/Spark)
+  fig3              Fig 3: profiling memory time series (K-Means/Spark)
+  fig4, fig5        Fig 4/5: convergence + cumulative-cost curves
+  search --job L    run one Ruya search (with CherryPick comparison)
+  crispy [--job L]  one-shot (Crispy-style) selection, no iteration
+  stopping          enforced-stop search quality (stopping criterion)
+  profile --job L   run one profiling phase, print readings + model
+  space             dump the 69-configuration search space
+  all               regenerate every table and figure
+
+OPTIONS
+  --backend native|xla   GP backend (default native; xla = AOT artifacts)
+  --reps N               repetitions for table2/fig4/fig5 (default 200)
+  --seed S               experiment seed (default 0xC0FFEE)
+  --out DIR              also write tables/figures to DIR
+  --curve-len N          length of fig4/fig5 series (default 48)
+"#;

@@ -1,0 +1,182 @@
+//! Memory-usage modeling and job categorization (§III-C).
+//!
+//! Fits a linear regression on the profiler's (sample size → peak memory)
+//! readings and categorizes the job by the training-set R² score:
+//! > 0.99 ⇒ *linear* (extrapolate the requirement), < 0.1 ⇒ *flat*,
+//! in between ⇒ *unclear* (fall back to plain CherryPick).
+
+use crate::util::stats::{ols_fit, r2_score};
+
+/// Categorization thresholds (§III-C / §IV-B).
+pub const R2_LINEAR_THRESHOLD: f64 = 0.99;
+pub const R2_FLAT_THRESHOLD: f64 = 0.1;
+/// Relative-growth guard: with only five readings, the R² of pure noise
+/// is Beta-distributed with mean 1/3, so a scale-free score alone cannot
+/// recognize flat jobs. If the fitted line predicts less than this much
+/// relative memory growth across the sampled range, the job is flat in
+/// the paper's sense ("memory use remains flat as the input dataset size
+/// increases") regardless of R².
+pub const FLAT_GROWTH_THRESHOLD: f64 = 0.15;
+
+/// The paper's three memory-usage categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemCategory {
+    /// Memory grows linearly with the input: prioritize configurations
+    /// with at least the extrapolated requirement.
+    Linear,
+    /// Memory independent of input: prioritize low-memory configurations.
+    Flat,
+    /// Readings inconclusive: unmodified Bayesian optimization.
+    Unclear,
+}
+
+impl MemCategory {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemCategory::Linear => "linear",
+            MemCategory::Flat => "flat",
+            MemCategory::Unclear => "unclear",
+        }
+    }
+}
+
+/// Fitted memory model for one job.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub category: MemCategory,
+    pub slope_gb_per_gb: f64,
+    pub intercept_gb: f64,
+    pub r2: f64,
+    /// The readings the model was fitted on: (sample_gb, peak_mem_gb).
+    pub readings: Vec<(f64, f64)>,
+}
+
+impl MemoryModel {
+    /// Fit on the profiler's readings. Needs at least two points; the
+    /// profiling phase always supplies five (§III-B).
+    pub fn fit(readings: &[(f64, f64)]) -> Self {
+        assert!(readings.len() >= 2, "memory model needs >= 2 profiling readings");
+        let xs: Vec<f64> = readings.iter().map(|r| r.0).collect();
+        let ys: Vec<f64> = readings.iter().map(|r| r.1).collect();
+        let (slope, intercept) = ols_fit(&xs, &ys);
+        let r2 = r2_score(&xs, &ys);
+
+        // Growth the fitted line predicts across the sampled range,
+        // relative to the mean reading (see FLAT_GROWTH_THRESHOLD).
+        let x_span = xs.iter().cloned().fold(f64::MIN, f64::max)
+            - xs.iter().cloned().fold(f64::MAX, f64::min);
+        let y_mean = crate::util::stats::mean(&ys).abs().max(1e-12);
+        let rel_growth = slope * x_span / y_mean;
+
+        let category = if rel_growth.abs() < FLAT_GROWTH_THRESHOLD {
+            MemCategory::Flat
+        } else if r2 > R2_LINEAR_THRESHOLD && slope > 0.0 {
+            MemCategory::Linear
+        } else if r2 < R2_FLAT_THRESHOLD {
+            MemCategory::Flat
+        } else {
+            MemCategory::Unclear
+        };
+        Self { category, slope_gb_per_gb: slope, intercept_gb: intercept, r2, readings: readings.to_vec() }
+    }
+
+    /// Extrapolated memory requirement of the job itself (GB) for a full
+    /// dataset of `input_gb` — excluding per-node OS/framework overhead,
+    /// which the search-space accounting adds back (§III-D). Only
+    /// meaningful for `Linear` jobs.
+    pub fn estimate_requirement_gb(&self, input_gb: f64) -> f64 {
+        (self.slope_gb_per_gb * input_gb + self.intercept_gb).max(0.0)
+    }
+
+    /// Human-readable Table I result cell.
+    pub fn table1_cell(&self, input_gb: f64) -> String {
+        match self.category {
+            MemCategory::Linear => {
+                format!("linear: {:.0} GB", self.estimate_requirement_gb(input_gb))
+            }
+            MemCategory::Flat => "flat".to_string(),
+            MemCategory::Unclear => "unclear".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_line_is_linear() {
+        let readings: Vec<(f64, f64)> =
+            (1..=5).map(|k| (k as f64, 2.5 * k as f64 + 0.1)).collect();
+        let m = MemoryModel::fit(&readings);
+        assert_eq!(m.category, MemCategory::Linear);
+        assert!((m.slope_gb_per_gb - 2.5).abs() < 1e-9);
+        assert!((m.estimate_requirement_gb(100.0) - 250.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noisy_line_still_linear_within_threshold() {
+        // 0.4% relative noise keeps R^2 > 0.99 on a strong slope.
+        let readings = [
+            (1.0, 2.504),
+            (2.0, 4.989),
+            (3.0, 7.513),
+            (4.0, 9.976),
+            (5.0, 12.532),
+        ];
+        let m = MemoryModel::fit(&readings);
+        assert!(m.r2 > 0.99, "r2 = {}", m.r2);
+        assert_eq!(m.category, MemCategory::Linear);
+    }
+
+    #[test]
+    fn uncorrelated_readings_are_flat() {
+        let readings = [(1.0, 1.2), (2.0, 1.1), (3.0, 1.25), (4.0, 1.15), (5.0, 1.18)];
+        let m = MemoryModel::fit(&readings);
+        assert_eq!(m.category, MemCategory::Flat, "r2 = {}", m.r2);
+    }
+
+    #[test]
+    fn erratic_readings_are_unclear() {
+        // Correlated but far from collinear: mid-band R^2.
+        let readings = [(1.0, 2.0), (2.0, 7.0), (3.0, 6.0), (4.0, 14.0), (5.0, 10.0)];
+        let m = MemoryModel::fit(&readings);
+        assert!(
+            m.r2 > R2_FLAT_THRESHOLD && m.r2 < R2_LINEAR_THRESHOLD,
+            "r2 = {}",
+            m.r2
+        );
+        assert_eq!(m.category, MemCategory::Unclear);
+    }
+
+    #[test]
+    fn negative_slope_never_linear() {
+        // A perfectly decreasing line has R^2 = 1 but extrapolating a
+        // negative memory requirement is nonsense.
+        let readings: Vec<(f64, f64)> =
+            (1..=5).map(|k| (k as f64, 10.0 - k as f64)).collect();
+        let m = MemoryModel::fit(&readings);
+        assert_ne!(m.category, MemCategory::Linear);
+    }
+
+    #[test]
+    fn requirement_clamped_nonnegative() {
+        let readings = [(1.0, 0.1), (2.0, 0.05), (3.0, 0.12), (4.0, 0.06), (5.0, 0.1)];
+        let m = MemoryModel::fit(&readings);
+        assert!(m.estimate_requirement_gb(0.0) >= 0.0);
+    }
+
+    #[test]
+    fn table1_cells_format() {
+        let lin = MemoryModel::fit(&[(1.0, 2.5), (2.0, 5.0), (3.0, 7.5)]);
+        assert!(lin.table1_cell(100.0).starts_with("linear: 250 GB"));
+        let flat = MemoryModel::fit(&[(1.0, 1.0), (2.0, 1.02), (3.0, 0.98)]);
+        assert_eq!(flat.table1_cell(100.0), "flat");
+    }
+
+    #[test]
+    #[should_panic(expected = "needs >= 2")]
+    fn rejects_single_reading() {
+        MemoryModel::fit(&[(1.0, 1.0)]);
+    }
+}

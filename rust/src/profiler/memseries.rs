@@ -1,0 +1,90 @@
+//! Memory-usage time series of one profiling run — the data Fig. 3 plots
+//! and the peak-extraction the memory readings come from.
+
+/// One 1 Hz memory sample.
+#[derive(Debug, Clone, Copy)]
+pub struct MemSample {
+    pub t_s: f64,
+    pub used_gb: f64,
+}
+
+/// A full profiling-run memory trace.
+#[derive(Debug, Clone)]
+pub struct MemTimeSeries {
+    pub samples: Vec<MemSample>,
+    /// End of the data-loading ramp (seconds): readings before this are
+    /// still ramping and excluded from the plateau estimate.
+    pub load_end_s: f64,
+}
+
+impl MemTimeSeries {
+    /// The stable peak: a high quantile of the post-ramp samples rather
+    /// than the raw max, so one GC-jitter spike cannot inflate the
+    /// reading (the aggressive-GC analog of §IV-B).
+    pub fn stable_peak_gb(&self) -> f64 {
+        let plateau: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|s| s.t_s >= self.load_end_s)
+            .map(|s| s.used_gb)
+            .collect();
+        if plateau.is_empty() {
+            return self.samples.iter().map(|s| s.used_gb).fold(0.0, f64::max);
+        }
+        crate::util::stats::quantile(&plateau, 0.5)
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.samples.last().map(|s| s.t_s).unwrap_or(0.0)
+    }
+
+    /// Export as (t, gb) rows for figure generation.
+    pub fn as_rows(&self) -> Vec<(f64, f64)> {
+        self.samples.iter().map(|s| (s.t_s, s.used_gb)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(values: &[f64], load_end: f64) -> MemTimeSeries {
+        MemTimeSeries {
+            samples: values
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| MemSample { t_s: i as f64, used_gb: v })
+                .collect(),
+            load_end_s: load_end,
+        }
+    }
+
+    #[test]
+    fn stable_peak_ignores_ramp() {
+        // Ramp 0..4 then plateau at ~10.
+        let s = series(&[0.0, 2.0, 4.0, 8.0, 10.0, 10.2, 9.9, 10.1, 10.0, 10.05], 4.0);
+        let peak = s.stable_peak_gb();
+        assert!((peak - 10.2).abs() < 0.2, "peak {peak}");
+    }
+
+    #[test]
+    fn stable_peak_resists_spikes() {
+        let mut vals = vec![10.0; 40];
+        vals[20] = 25.0; // one-sample spike
+        let s = series(&vals, 0.0);
+        assert!(s.stable_peak_gb() < 12.0);
+    }
+
+    #[test]
+    fn empty_plateau_falls_back_to_max() {
+        let s = series(&[1.0, 2.0, 3.0], 99.0);
+        assert_eq!(s.stable_peak_gb(), 3.0);
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let s = series(&[1.0, 2.0], 0.0);
+        assert_eq!(s.as_rows(), vec![(0.0, 1.0), (1.0, 2.0)]);
+        assert_eq!(s.duration_s(), 1.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Result rendering: the paper's tables as aligned text/markdown and the
+//! figures as gnuplot-style `.dat` series, plus JSON export for
+//! downstream tooling.
+
+use crate::coordinator::{ExperimentResult, ProfileSummary};
+use crate::util::json::JsonWriter;
+use std::fmt::Write as _;
+
+/// Render Table I (determined job memory requirement).
+pub fn render_table1(summaries: &[ProfileSummary]) -> String {
+    let mut t = TextTable::new(&["Job", "Result (Table I analogue)", "R^2"]);
+    for s in summaries {
+        t.row(&[s.label.clone(), s.table1_cell.clone(), format!("{:.3}", s.model.r2)]);
+    }
+    t.render()
+}
+
+/// Render Table III (memory profiling time for all jobs).
+pub fn render_table3(summaries: &[ProfileSummary]) -> String {
+    let mut t = TextTable::new(&["Job", "Time (s)"]);
+    let mut total = 0.0;
+    for s in summaries {
+        t.row(&[s.label.clone(), format!("{:.0}", s.profiling_time_s)]);
+        total += s.profiling_time_s;
+    }
+    t.row(&["Mean".to_string(), format!("{:.0}", total / summaries.len() as f64)]);
+    t.render()
+}
+
+/// Render Table II (iterations to c<=1.2 / c<=1.1 / c=1.0).
+pub fn render_table2(result: &ExperimentResult) -> String {
+    let mut t = TextTable::new(&[
+        "Job", "Cat.", "CP<=1.2", "CP<=1.1", "CP=1.0", "Ruya<=1.2", "Ruya<=1.1", "Ruya=1.0",
+        "Q<=1.2", "Q<=1.1", "Q=1.0",
+    ]);
+    for j in &result.jobs {
+        let q = j.quotient();
+        t.row(&[
+            j.label.clone(),
+            j.category.name().to_string(),
+            format!("{:.3}", j.cherrypick.iters_to[0]),
+            format!("{:.3}", j.cherrypick.iters_to[1]),
+            format!("{:.3}", j.cherrypick.iters_to[2]),
+            format!("{:.3}", j.ruya.iters_to[0]),
+            format!("{:.3}", j.ruya.iters_to[1]),
+            format!("{:.3}", j.ruya.iters_to[2]),
+            format!("{:.1}%", q[0] * 100.0),
+            format!("{:.1}%", q[1] * 100.0),
+            format!("{:.1}%", q[2] * 100.0),
+        ]);
+    }
+    t.row(&[
+        "Mean".to_string(),
+        String::new(),
+        format!("{:.3}", result.mean_cherrypick[0]),
+        format!("{:.3}", result.mean_cherrypick[1]),
+        format!("{:.3}", result.mean_cherrypick[2]),
+        format!("{:.3}", result.mean_ruya[0]),
+        format!("{:.3}", result.mean_ruya[1]),
+        format!("{:.3}", result.mean_ruya[2]),
+        format!("{:.1}%", result.mean_quotient[0] * 100.0),
+        format!("{:.1}%", result.mean_quotient[1] * 100.0),
+        format!("{:.1}%", result.mean_quotient[2] * 100.0),
+    ]);
+    t.render()
+}
+
+/// Averaged per-iteration series (Fig. 4 / Fig. 5) as a `.dat` block:
+/// `iteration  cherrypick  ruya`.
+pub fn render_series(cherrypick: &[f64], ruya: &[f64], header: &str) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# {header}");
+    let _ = writeln!(s, "# iter  cherrypick  ruya");
+    for i in 0..cherrypick.len().min(ruya.len()) {
+        let _ = writeln!(s, "{:3}  {:10.5}  {:10.5}", i + 1, cherrypick[i], ruya[i]);
+    }
+    s
+}
+
+/// Export the full experiment result as JSON.
+pub fn experiment_to_json(result: &ExperimentResult) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("jobs").begin_array();
+    for j in &result.jobs {
+        w.begin_object();
+        w.key("label").string(&j.label);
+        w.key("category").string(j.category.name());
+        if let Some(req) = j.requirement_gb {
+            w.key("requirement_gb").number(req);
+        }
+        w.key("priority_fraction").number(j.priority_fraction);
+        for (name, stats) in [("cherrypick", &j.cherrypick), ("ruya", &j.ruya)] {
+            w.key(name).begin_object();
+            w.key("iters_to").begin_array();
+            for v in stats.iters_to {
+                w.number(v);
+            }
+            w.end_array();
+            w.key("mean_stop").number(stats.mean_stop);
+            w.end_object();
+        }
+        w.key("quotient").begin_array();
+        for v in j.quotient() {
+            w.number(v);
+        }
+        w.end_array();
+        w.end_object();
+    }
+    w.end_array();
+    for (name, vals) in [
+        ("mean_cherrypick", &result.mean_cherrypick),
+        ("mean_ruya", &result.mean_ruya),
+        ("mean_quotient", &result.mean_quotient),
+    ] {
+        w.key(name).begin_array();
+        for v in vals.iter() {
+            w.number(*v);
+        }
+        w.end_array();
+    }
+    w.end_object();
+    w.finish()
+}
+
+/// Fixed-width text table with a markdown-ish separator row.
+pub struct TextTable {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                let _ = write!(line, " {:width$} |", cells[i], width = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(&["a", "bbbb"]);
+        t.row(&["xx".into(), "1".into()]);
+        t.row(&["y".into(), "123456".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let widths: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(widths.iter().all(|&w| w == widths[0]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = TextTable::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn series_block_format() {
+        let s = render_series(&[3.0, 2.0], &[2.5, 1.5], "fig4");
+        assert!(s.starts_with("# fig4"));
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.contains("  1 "));
+    }
+}

@@ -1,0 +1,119 @@
+//! Artifact metadata: parses `artifacts/meta.json` written by
+//! `python/compile/aot.py` so the rust side can validate that its
+//! marshaling assumptions (shapes, argument order) match what was lowered.
+//!
+//! The JSON subset parser lives in `util::json`; meta.json is machine
+//! generated with known structure.
+
+use crate::util::json::JsonValue;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Frozen AOT shapes plus the per-artifact argument shape list.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub n_obs: usize,
+    /// Observation-capacity tiers (ascending); each has its own
+    /// (gp_ei, gp_nll) artifact pair — see gp_exec.rs tier dispatch.
+    pub n_obs_tiers: Vec<usize>,
+    pub n_features: usize,
+    pub n_candidates: usize,
+    pub n_grid: usize,
+    /// artifact name -> (file name, argument shapes)
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub args: Vec<Vec<usize>>,
+}
+
+/// The artifact set on disk: metadata + directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub meta: ArtifactMeta,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = JsonValue::parse(&text)
+            .map_err(|e| anyhow!("parsing meta.json: {e}"))?;
+
+        let get_usize = |key: &str| -> Result<usize> {
+            root.get(key)
+                .and_then(JsonValue::as_f64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("meta.json missing numeric key {key}"))
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(JsonValue::as_object)
+            .ok_or_else(|| anyhow!("meta.json missing artifacts object"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let mut args = Vec::new();
+            for arg in entry
+                .get("args")
+                .and_then(JsonValue::as_array)
+                .ok_or_else(|| anyhow!("artifact {name} missing args"))?
+            {
+                let dims: Option<Vec<usize>> = arg
+                    .as_array()
+                    .map(|a| a.iter().filter_map(|d| d.as_f64().map(|v| v as usize)).collect());
+                args.push(dims.ok_or_else(|| anyhow!("artifact {name} bad arg shape"))?);
+            }
+            artifacts.insert(name.clone(), ArtifactEntry { file, args });
+        }
+
+        let n_obs = get_usize("n_obs")?;
+        let n_obs_tiers = root
+            .get("n_obs_tiers")
+            .and_then(JsonValue::as_array)
+            .map(|a| a.iter().filter_map(|v| v.as_f64().map(|f| f as usize)).collect())
+            .unwrap_or_else(|| vec![n_obs]);
+
+        Ok(Self {
+            n_obs,
+            n_obs_tiers,
+            n_features: get_usize("n_features")?,
+            n_candidates: get_usize("n_candidates")?,
+            n_grid: get_usize("n_grid")?,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_meta() {
+        let dir = crate::runtime::XlaRuntime::default_artifact_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(meta.n_features, 6);
+        assert!(!meta.n_obs_tiers.is_empty());
+        assert_eq!(*meta.n_obs_tiers.last().unwrap(), meta.n_obs);
+        for &tier in &meta.n_obs_tiers {
+            let ei = &meta.artifacts[&format!("gp_ei_n{tier}")];
+            assert_eq!(ei.args.len(), 6);
+            assert_eq!(ei.args[0], vec![tier, meta.n_features]);
+            assert!(meta.artifacts.contains_key(&format!("gp_nll_n{tier}")));
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! `GpExecutor`: the compiled GP decision path.
+//!
+//! Wraps the AOT artifacts behind a plain-slice interface. The live
+//! observation count `n` and candidate count `m` are always smaller than
+//! the frozen AOT shapes; this module owns the padding/masking contract
+//! shared with `python/compile/model.py`:
+//!   - observations are padded with zero rows and mask 0,
+//!   - candidates are padded with zero rows and cmask 0,
+//!   - the hyperparameter grid is padded by repeating its last row.
+//!
+//! **Tier dispatch (§Perf):** artifacts come in observation-capacity
+//! tiers (N = 16/32/64). The padded Cholesky while-loop costs O(N³)
+//! regardless of the live fill, and most search decisions happen at small
+//! n, so each call is dispatched to the smallest tier that fits.
+
+use super::{execute_f32, ArtifactMeta, XlaRuntime};
+use anyhow::{ensure, Context, Result};
+
+/// Frozen AOT shapes; must match python/compile/model.py (validated
+/// against meta.json at load time). AOT_N_OBS is the largest tier.
+pub const AOT_N_OBS: usize = 64;
+pub const AOT_N_FEATURES: usize = 6;
+pub const AOT_N_CANDIDATES: usize = 128;
+pub const AOT_N_GRID: usize = 32;
+
+/// Result of one `gp_ei` call, truncated to the live candidate count.
+#[derive(Debug, Clone)]
+pub struct GpDecision {
+    /// Expected improvement per candidate (zero outside the eligible set).
+    pub ei: Vec<f64>,
+    /// Posterior mean per candidate.
+    pub mu: Vec<f64>,
+    /// Posterior variance per candidate.
+    pub var: Vec<f64>,
+}
+
+struct Tier {
+    n_obs: usize,
+    ei_exe: xla::PjRtLoadedExecutable,
+    nll_exe: xla::PjRtLoadedExecutable,
+}
+
+/// Compiled GP executables (one pair per tier). One per process.
+pub struct GpExecutor {
+    tiers: Vec<Tier>, // ascending by n_obs
+    calls: std::cell::Cell<u64>,
+}
+
+impl GpExecutor {
+    /// Compile all artifact tiers on the given runtime and validate
+    /// shapes against meta.json.
+    pub fn new(rt: &XlaRuntime) -> Result<Self> {
+        let meta = ArtifactMeta::load(rt.artifact_dir())
+            .context("loading artifact metadata (run `make artifacts`)")?;
+        ensure!(
+            meta.n_obs == AOT_N_OBS
+                && meta.n_features == AOT_N_FEATURES
+                && meta.n_candidates == AOT_N_CANDIDATES
+                && meta.n_grid == AOT_N_GRID,
+            "artifact shapes {:?} do not match compiled-in constants; \
+             re-run `make artifacts` and rebuild",
+            (meta.n_obs, meta.n_features, meta.n_candidates, meta.n_grid)
+        );
+        let mut tiers = Vec::new();
+        for &n in &meta.n_obs_tiers {
+            let ei_name = format!("gp_ei_n{n}");
+            let nll_name = format!("gp_nll_n{n}");
+            let ei_file =
+                &meta.artifacts.get(&ei_name).with_context(|| format!("meta missing {ei_name}"))?.file;
+            let nll_file = &meta
+                .artifacts
+                .get(&nll_name)
+                .with_context(|| format!("meta missing {nll_name}"))?
+                .file;
+            tiers.push(Tier {
+                n_obs: n,
+                ei_exe: rt.compile_artifact(ei_file)?,
+                nll_exe: rt.compile_artifact(nll_file)?,
+            });
+        }
+        tiers.sort_by_key(|t| t.n_obs);
+        ensure!(!tiers.is_empty(), "no artifact tiers found");
+        ensure!(tiers.last().unwrap().n_obs == AOT_N_OBS, "largest tier must be AOT_N_OBS");
+        Ok(Self { tiers, calls: std::cell::Cell::new(0) })
+    }
+
+    pub fn call_count(&self) -> u64 {
+        self.calls.get()
+    }
+
+    /// Number of compiled tiers (diagnostics).
+    pub fn tier_count(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Smallest tier with capacity >= n.
+    fn tier_for(&self, n: usize) -> Result<&Tier> {
+        self.tiers
+            .iter()
+            .find(|t| t.n_obs >= n)
+            .with_context(|| format!("observation count {n} exceeds AOT capacity {AOT_N_OBS}"))
+    }
+
+    /// Posterior + expected improvement over `m` candidates given `n`
+    /// observations.
+    ///
+    /// `x`: n*D row-major observed feature rows; `y`: n observed costs;
+    /// `xc`: m*D candidate feature rows; `cmask`: m eligibility flags
+    /// (1.0 = may be proposed). Returns vectors of length `m`.
+    pub fn gp_ei(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        xc: &[f64],
+        cmask: &[f64],
+        m: usize,
+        hyp: [f64; 3],
+    ) -> Result<GpDecision> {
+        ensure!(m <= AOT_N_CANDIDATES, "candidate count {m} exceeds AOT capacity");
+        ensure!(x.len() == n * AOT_N_FEATURES && y.len() == n && xc.len() == m * AOT_N_FEATURES);
+        ensure!(cmask.len() == m);
+        let tier = self.tier_for(n)?;
+        let n_pad = tier.n_obs;
+
+        let xp = pad_matrix(x, n_pad);
+        let yp = pad_vector(y, n_pad, 0.0);
+        let mask = fill_mask(n, n_pad);
+        let xcp = pad_matrix(xc, AOT_N_CANDIDATES);
+        let mut cm = pad_vector(cmask, AOT_N_CANDIDATES, 0.0);
+        for v in cm.iter_mut() {
+            *v = if *v > 0.0 { 1.0 } else { 0.0 };
+        }
+        let hypv: Vec<f32> = hyp.iter().map(|&v| v as f32).collect();
+
+        let outs = execute_f32(
+            &tier.ei_exe,
+            &[
+                (xp, &[n_pad, AOT_N_FEATURES]),
+                (yp, &[n_pad]),
+                (mask, &[n_pad]),
+                (xcp, &[AOT_N_CANDIDATES, AOT_N_FEATURES]),
+                (cm, &[AOT_N_CANDIDATES]),
+                (hypv, &[3]),
+            ],
+        )?;
+        self.calls.set(self.calls.get() + 1);
+        ensure!(outs.len() == 3, "gp_ei returned {} outputs, expected 3", outs.len());
+        let take = |v: &[f32]| v[..m].iter().map(|&f| f as f64).collect::<Vec<f64>>();
+        Ok(GpDecision { ei: take(&outs[0]), mu: take(&outs[1]), var: take(&outs[2]) })
+    }
+
+    /// Negative log marginal likelihood for each hyperparameter triple.
+    pub fn gp_nll(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        grid: &[[f64; 3]],
+    ) -> Result<Vec<f64>> {
+        ensure!(!grid.is_empty() && grid.len() <= AOT_N_GRID);
+        ensure!(x.len() == n * AOT_N_FEATURES && y.len() == n);
+        let tier = self.tier_for(n)?;
+        let n_pad = tier.n_obs;
+
+        let xp = pad_matrix(x, n_pad);
+        let yp = pad_vector(y, n_pad, 0.0);
+        let mask = fill_mask(n, n_pad);
+        let mut g: Vec<f32> = Vec::with_capacity(AOT_N_GRID * 3);
+        for row in grid {
+            g.extend(row.iter().map(|&v| v as f32));
+        }
+        let last = *grid.last().unwrap();
+        for _ in grid.len()..AOT_N_GRID {
+            g.extend(last.iter().map(|&v| v as f32));
+        }
+
+        let outs = execute_f32(
+            &tier.nll_exe,
+            &[
+                (xp, &[n_pad, AOT_N_FEATURES]),
+                (yp, &[n_pad]),
+                (mask, &[n_pad]),
+                (g, &[AOT_N_GRID, 3]),
+            ],
+        )?;
+        self.calls.set(self.calls.get() + 1);
+        ensure!(outs.len() == 1, "gp_nll returned {} outputs, expected 1", outs.len());
+        Ok(outs[0][..grid.len()].iter().map(|&f| f as f64).collect())
+    }
+}
+
+fn pad_matrix(rows: &[f64], n_pad: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n_pad * AOT_N_FEATURES];
+    for (i, v) in rows.iter().enumerate() {
+        out[i] = *v as f32;
+    }
+    out
+}
+
+fn pad_vector(v: &[f64], n_pad: usize, fill: f32) -> Vec<f32> {
+    let mut out = vec![fill; n_pad];
+    for (i, x) in v.iter().enumerate() {
+        out[i] = *x as f32;
+    }
+    out
+}
+
+fn fill_mask(n: usize, n_pad: usize) -> Vec<f32> {
+    let mut m = vec![0f32; n_pad];
+    for v in m.iter_mut().take(n) {
+        *v = 1.0;
+    }
+    m
+}

@@ -1,0 +1,107 @@
+//! The machine-type catalog: AWS 4th-generation instance types used by
+//! the scout dataset (c/m/r families, large/xlarge/2xlarge sizes),
+//! on-demand us-east-1 prices.
+//!
+//! c machines have the least memory per core, r the most, m in between —
+//! the axis Ruya's memory-awareness exploits (§II-A).
+
+/// Instance family: compute-optimized, general-purpose, memory-optimized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MachineFamily {
+    C,
+    M,
+    R,
+}
+
+impl MachineFamily {
+    pub fn letter(&self) -> char {
+        match self {
+            MachineFamily::C => 'c',
+            MachineFamily::M => 'm',
+            MachineFamily::R => 'r',
+        }
+    }
+}
+
+/// Instance size; determines cores per machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MachineSize {
+    Large,
+    XLarge,
+    XXLarge,
+}
+
+/// One virtual-machine type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineType {
+    pub name: &'static str,
+    pub family: MachineFamily,
+    pub size: MachineSize,
+    pub cores: u32,
+    pub ram_gb: f64,
+    pub price_hourly: f64,
+}
+
+/// The nine machine types of the evaluation space.
+pub const MACHINE_CATALOG: [MachineType; 9] = [
+    MachineType { name: "c4.large",    family: MachineFamily::C, size: MachineSize::Large,   cores: 2, ram_gb: 3.75,  price_hourly: 0.100 },
+    MachineType { name: "c4.xlarge",   family: MachineFamily::C, size: MachineSize::XLarge,  cores: 4, ram_gb: 7.5,   price_hourly: 0.199 },
+    MachineType { name: "c4.2xlarge",  family: MachineFamily::C, size: MachineSize::XXLarge, cores: 8, ram_gb: 15.0,  price_hourly: 0.398 },
+    MachineType { name: "m4.large",    family: MachineFamily::M, size: MachineSize::Large,   cores: 2, ram_gb: 8.0,   price_hourly: 0.100 },
+    MachineType { name: "m4.xlarge",   family: MachineFamily::M, size: MachineSize::XLarge,  cores: 4, ram_gb: 16.0,  price_hourly: 0.200 },
+    MachineType { name: "m4.2xlarge",  family: MachineFamily::M, size: MachineSize::XXLarge, cores: 8, ram_gb: 32.0,  price_hourly: 0.400 },
+    MachineType { name: "r4.large",    family: MachineFamily::R, size: MachineSize::Large,   cores: 2, ram_gb: 15.25, price_hourly: 0.133 },
+    MachineType { name: "r4.xlarge",   family: MachineFamily::R, size: MachineSize::XLarge,  cores: 4, ram_gb: 30.5,  price_hourly: 0.266 },
+    MachineType { name: "r4.2xlarge",  family: MachineFamily::R, size: MachineSize::XXLarge, cores: 8, ram_gb: 61.0,  price_hourly: 0.532 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_per_core_ordering_c_m_r() {
+        // "c type have less memory per core than r, m in between" (§II-A)
+        for size in [MachineSize::Large, MachineSize::XLarge, MachineSize::XXLarge] {
+            let per_core = |fam: MachineFamily| {
+                MACHINE_CATALOG
+                    .iter()
+                    .find(|m| m.family == fam && m.size == size)
+                    .map(|m| m.ram_gb / m.cores as f64)
+                    .unwrap()
+            };
+            assert!(per_core(MachineFamily::C) < per_core(MachineFamily::M));
+            assert!(per_core(MachineFamily::M) < per_core(MachineFamily::R));
+        }
+    }
+
+    #[test]
+    fn sizes_double_cores() {
+        for fam in [MachineFamily::C, MachineFamily::M, MachineFamily::R] {
+            let cores = |size: MachineSize| {
+                MACHINE_CATALOG
+                    .iter()
+                    .find(|m| m.family == fam && m.size == size)
+                    .map(|m| m.cores)
+                    .unwrap()
+            };
+            assert_eq!(cores(MachineSize::XLarge), 2 * cores(MachineSize::Large));
+            assert_eq!(cores(MachineSize::XXLarge), 2 * cores(MachineSize::XLarge));
+        }
+    }
+
+    #[test]
+    fn prices_scale_with_size() {
+        for fam in [MachineFamily::C, MachineFamily::M, MachineFamily::R] {
+            let price = |size: MachineSize| {
+                MACHINE_CATALOG
+                    .iter()
+                    .find(|m| m.family == fam && m.size == size)
+                    .map(|m| m.price_hourly)
+                    .unwrap()
+            };
+            assert!(price(MachineSize::Large) < price(MachineSize::XLarge));
+            assert!(price(MachineSize::XLarge) < price(MachineSize::XXLarge));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Feature encoding of cluster configurations for the Gaussian process.
+//!
+//! CherryPick encodes each configuration "by its principal features like
+//! the number of cores and the amount of memory" (§III-E); we use six:
+//! nodes, cores/node, GB/node, total cores, total GB, $/h, min-max
+//! normalized over the search space so the GP lengthscale is comparable
+//! across dimensions. N_FEATURES must match python/compile/model.py.
+
+use super::ClusterConfig;
+
+/// Number of features per configuration; frozen into the AOT artifacts.
+pub const N_FEATURES: usize = 6;
+
+/// Min-max normalizer fitted on a configuration set.
+#[derive(Debug, Clone)]
+pub struct FeatureEncoder {
+    lo: [f64; N_FEATURES],
+    hi: [f64; N_FEATURES],
+}
+
+fn raw_features(c: &ClusterConfig) -> [f64; N_FEATURES] {
+    let m = c.machine_type();
+    [
+        c.nodes as f64,
+        m.cores as f64,
+        m.ram_gb,
+        c.total_cores(),
+        c.total_memory_gb(),
+        c.price_per_hour(),
+    ]
+}
+
+impl FeatureEncoder {
+    /// Fit normalization bounds over a configuration set.
+    pub fn fit(configs: &[ClusterConfig]) -> Self {
+        let mut lo = [f64::MAX; N_FEATURES];
+        let mut hi = [f64::MIN; N_FEATURES];
+        for c in configs {
+            let f = raw_features(c);
+            for i in 0..N_FEATURES {
+                lo[i] = lo[i].min(f[i]);
+                hi[i] = hi[i].max(f[i]);
+            }
+        }
+        Self { lo, hi }
+    }
+
+    /// Encode one configuration to `[0, 1]^N_FEATURES` (values outside the
+    /// fitted set may exceed the unit interval, which the GP tolerates).
+    pub fn encode(&self, c: &ClusterConfig) -> Vec<f64> {
+        let f = raw_features(c);
+        (0..N_FEATURES)
+            .map(|i| {
+                let span = self.hi[i] - self.lo[i];
+                if span <= 0.0 {
+                    0.5
+                } else {
+                    (f[i] - self.lo[i]) / span
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::searchspace::SearchSpace;
+
+    #[test]
+    fn encodings_are_normalized() {
+        let s = SearchSpace::scout();
+        for i in 0..s.len() {
+            let f = s.features(i);
+            assert_eq!(f.len(), N_FEATURES);
+            for v in f {
+                assert!((-1e-12..=1.0 + 1e-12).contains(&v), "feature {v} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn encodings_hit_bounds() {
+        // Some config attains 0 and some attains 1 in every dimension.
+        let s = SearchSpace::scout();
+        for dim in 0..N_FEATURES {
+            let vals: Vec<f64> = (0..s.len()).map(|i| s.features(i)[dim]).collect();
+            let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+            let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+            assert!(min.abs() < 1e-9, "dim {dim} min {min}");
+            assert!((max - 1.0).abs() < 1e-9, "dim {dim} max {max}");
+        }
+    }
+
+    #[test]
+    fn distinct_configs_have_distinct_encodings() {
+        let s = SearchSpace::scout();
+        for i in 0..s.len() {
+            for j in (i + 1)..s.len() {
+                assert_ne!(s.features(i), s.features(j), "{} vs {}", i, j);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_single_config_space() {
+        let c = SearchSpace::scout().config(0);
+        let enc = FeatureEncoder::fit(&[c]);
+        let f = enc.encode(&c);
+        assert!(f.iter().all(|&v| v == 0.5));
+    }
+}

@@ -1,0 +1,277 @@
+//! The cluster-configuration search space (§II-A, §IV-A of the paper).
+//!
+//! Mirrors the scout evaluation space: AWS 4th-generation machine types of
+//! the c/m/r families in sizes large/xlarge/2xlarge, scale-outs between 4
+//! and 48 nodes, 69 configurations in total. Also owns the feature
+//! encoding the Gaussian process sees and the usable-memory accounting
+//! used by Ruya's priority-group construction (§III-D).
+
+mod catalog;
+mod encoding;
+
+pub use catalog::{MachineFamily, MachineSize, MachineType, MACHINE_CATALOG};
+pub use encoding::FeatureEncoder;
+
+/// Per-node memory the OS keeps for itself (GB). Part of the "overhead by
+/// the operating system and the distributed dataflow framework" the paper
+/// folds into the final memory requirement (§III-D).
+pub const OS_OVERHEAD_GB: f64 = 0.5;
+/// Per-node memory the dataflow framework itself occupies (GB).
+pub const FRAMEWORK_OVERHEAD_GB: f64 = 0.45;
+/// Fraction of the remaining JVM heap available for caching data
+/// (legacy spark storage-fraction-style accounting; high because the
+/// simulated jobs are cache-dominated). Calibrated so the paper's Table I
+/// anecdotes hold: NB/bigdata (754 GB) exceeds the maximum usable memory
+/// of the space (~670 GB) while K-Means/bigdata (503 GB) retains a small
+/// all-r4 priority group.
+pub const STORAGE_FRACTION: f64 = 0.93;
+
+/// One cluster configuration: a machine type at a scale-out.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    /// Index into [`MACHINE_CATALOG`].
+    pub machine: usize,
+    /// Number of worker nodes.
+    pub nodes: u32,
+}
+
+impl ClusterConfig {
+    pub fn machine_type(&self) -> &'static MachineType {
+        &MACHINE_CATALOG[self.machine]
+    }
+
+    pub fn total_cores(&self) -> f64 {
+        self.nodes as f64 * self.machine_type().cores as f64
+    }
+
+    /// Raw total cluster RAM in GB.
+    pub fn total_memory_gb(&self) -> f64 {
+        self.nodes as f64 * self.machine_type().ram_gb
+    }
+
+    /// Cluster memory actually available for caching job data after OS,
+    /// framework and execution-memory overheads (§III-D).
+    pub fn usable_memory_gb(&self) -> f64 {
+        let per_node =
+            (self.machine_type().ram_gb - OS_OVERHEAD_GB - FRAMEWORK_OVERHEAD_GB).max(0.0);
+        self.nodes as f64 * per_node * STORAGE_FRACTION
+    }
+
+    /// Price of running this cluster for one hour (USD).
+    pub fn price_per_hour(&self) -> f64 {
+        self.nodes as f64 * self.machine_type().price_hourly
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}x{}", self.nodes, self.machine_type().name)
+    }
+}
+
+/// The full evaluation search space.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    configs: Vec<ClusterConfig>,
+    encoder: FeatureEncoder,
+}
+
+impl SearchSpace {
+    /// The paper's evaluation space: 69 configurations (23 per family).
+    /// Scale-outs per machine size follow DESIGN.md §6.
+    pub fn scout() -> Self {
+        let mut configs = Vec::new();
+        for (idx, machine) in MACHINE_CATALOG.iter().enumerate() {
+            let scaleouts: &[u32] = match machine.size {
+                MachineSize::Large => &[4, 6, 8, 10, 12, 16, 20, 24, 32, 40],
+                MachineSize::XLarge => &[4, 6, 8, 10, 12, 16, 20, 24],
+                MachineSize::XXLarge => &[4, 6, 8, 10, 12],
+            };
+            for &nodes in scaleouts {
+                configs.push(ClusterConfig { machine: idx, nodes });
+            }
+        }
+        Self::from_configs(configs)
+    }
+
+    /// Build a space from an explicit configuration list (tests, what-if
+    /// analyses, private-cluster catalogs).
+    pub fn from_configs(configs: Vec<ClusterConfig>) -> Self {
+        assert!(!configs.is_empty(), "search space cannot be empty");
+        let encoder = FeatureEncoder::fit(&configs);
+        Self { configs, encoder }
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    pub fn configs(&self) -> &[ClusterConfig] {
+        &self.configs
+    }
+
+    pub fn config(&self, idx: usize) -> ClusterConfig {
+        self.configs[idx]
+    }
+
+    pub fn encoder(&self) -> &FeatureEncoder {
+        &self.encoder
+    }
+
+    /// Normalized feature row for one configuration (length = N_FEATURES).
+    pub fn features(&self, idx: usize) -> Vec<f64> {
+        self.encoder.encode(&self.configs[idx])
+    }
+
+    /// All feature rows, row-major (len = len() * N_FEATURES) — the
+    /// candidate matrix handed to the GP backend once per search.
+    pub fn feature_matrix(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.len() * encoding::N_FEATURES);
+        for c in &self.configs {
+            out.extend(self.encoder.encode(c));
+        }
+        out
+    }
+
+    /// Indices of configurations whose usable memory meets `min_gb`.
+    pub fn with_usable_memory_at_least(&self, min_gb: f64) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&i| self.configs[i].usable_memory_gb() >= min_gb)
+            .collect()
+    }
+
+    /// The `k` configurations with the lowest total memory (ties broken by
+    /// price) — Ruya's priority group for flat-memory jobs.
+    pub fn lowest_memory_configs(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let ka = (self.configs[a].total_memory_gb(), self.configs[a].price_per_hour());
+            let kb = (self.configs[b].total_memory_gb(), self.configs[b].price_per_hour());
+            ka.partial_cmp(&kb).unwrap()
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    /// Configurations in the top or bottom `decile_fraction` of total
+    /// memory — the fallback priority group when a linear job's
+    /// requirement exceeds every available configuration (§III-D).
+    pub fn memory_extremes(&self, decile_fraction: f64) -> Vec<usize> {
+        let k = ((self.len() as f64 * decile_fraction).ceil() as usize).max(1);
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.configs[a]
+                .total_memory_gb()
+                .partial_cmp(&self.configs[b].total_memory_gb())
+                .unwrap()
+        });
+        let mut out: Vec<usize> = idx.iter().take(k).copied().collect();
+        out.extend(idx.iter().rev().take(k).copied());
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Maximum usable memory over the whole space (GB).
+    pub fn max_usable_memory_gb(&self) -> f64 {
+        self.configs
+            .iter()
+            .map(|c| c.usable_memory_gb())
+            .fold(0.0, f64::max)
+    }
+}
+
+pub use encoding::N_FEATURES;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scout_space_has_69_configs() {
+        let s = SearchSpace::scout();
+        assert_eq!(s.len(), 69);
+    }
+
+    #[test]
+    fn scaleouts_span_4_to_48_nodes() {
+        let s = SearchSpace::scout();
+        let min = s.configs().iter().map(|c| c.nodes).min().unwrap();
+        let max = s.configs().iter().map(|c| c.nodes).max().unwrap();
+        assert_eq!(min, 4);
+        assert!(max >= 40, "largest scale-out {max}");
+    }
+
+    #[test]
+    fn total_memory_spans_paper_range() {
+        // The paper's anecdotes rely on ~15 GB at the bottom and
+        // ~732 GB (r4.2xlarge x 12) at the top.
+        let s = SearchSpace::scout();
+        let min = s.configs().iter().map(|c| c.total_memory_gb()).fold(f64::MAX, f64::min);
+        let max = s.configs().iter().map(|c| c.total_memory_gb()).fold(0.0, f64::max);
+        assert!((min - 15.0).abs() < 1.0, "min total mem {min}");
+        assert!((max - 732.0).abs() < 1.0, "max total mem {max}");
+    }
+
+    #[test]
+    fn usable_memory_below_total() {
+        let s = SearchSpace::scout();
+        for c in s.configs() {
+            assert!(c.usable_memory_gb() < c.total_memory_gb());
+            assert!(c.usable_memory_gb() > 0.0);
+        }
+    }
+
+    #[test]
+    fn memory_filter_is_consistent() {
+        let s = SearchSpace::scout();
+        let idx = s.with_usable_memory_at_least(100.0);
+        assert!(!idx.is_empty());
+        for &i in &idx {
+            assert!(s.config(i).usable_memory_gb() >= 100.0);
+        }
+        let complement: Vec<usize> =
+            (0..s.len()).filter(|i| !idx.contains(i)).collect();
+        for &i in &complement {
+            assert!(s.config(i).usable_memory_gb() < 100.0);
+        }
+    }
+
+    #[test]
+    fn lowest_memory_configs_sorted_and_small() {
+        let s = SearchSpace::scout();
+        let low = s.lowest_memory_configs(10);
+        assert_eq!(low.len(), 10);
+        let max_low = low.iter().map(|&i| s.config(i).total_memory_gb()).fold(0.0, f64::max);
+        let rest_min = (0..s.len())
+            .filter(|i| !low.contains(i))
+            .map(|i| s.config(i).total_memory_gb())
+            .fold(f64::MAX, f64::min);
+        assert!(max_low <= rest_min + 1e-9);
+    }
+
+    #[test]
+    fn memory_extremes_contains_both_ends() {
+        let s = SearchSpace::scout();
+        let ext = s.memory_extremes(0.1);
+        let mems: Vec<f64> = ext.iter().map(|&i| s.config(i).total_memory_gb()).collect();
+        let global_min = s.configs().iter().map(|c| c.total_memory_gb()).fold(f64::MAX, f64::min);
+        let global_max = s.configs().iter().map(|c| c.total_memory_gb()).fold(0.0, f64::max);
+        assert!(mems.iter().any(|&m| (m - global_min).abs() < 1e-9));
+        assert!(mems.iter().any(|&m| (m - global_max).abs() < 1e-9));
+    }
+
+    #[test]
+    fn feature_matrix_dims() {
+        let s = SearchSpace::scout();
+        assert_eq!(s.feature_matrix().len(), 69 * N_FEATURES);
+    }
+
+    #[test]
+    fn config_names_readable() {
+        let s = SearchSpace::scout();
+        assert!(s.configs().iter().any(|c| c.name() == "4xc4.large"));
+    }
+}

@@ -1,0 +1,171 @@
+//! In-tree property-testing mini-framework (the `proptest` crate is not
+//! available offline). Seeded generators + a runner that, on failure,
+//! re-runs a bisection-style shrink over the generator's size parameter
+//! and reports the failing seed for reproduction.
+//!
+//! Usage:
+//! ```ignore
+//! use ruya::testkit::{Gen, property};
+//! property("costs are normalized", 100, |g| {
+//!     let n = g.usize_in(1, 50);
+//!     let xs = g.vec_f64(n, 0.0, 10.0);
+//!     // assert something; return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Seeded value generator handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    /// Size hint in [0, 1]: shrinking retries properties at smaller sizes.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Pcg64::from_seed(seed), size }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// Integer in [lo, hi], scaled down when shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).min(span);
+        lo + self.rng.next_below(scaled + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len())]
+    }
+
+    /// A random subset of 0..n of size k.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_distinct(n, k.min(n))
+    }
+}
+
+/// Result type properties return: Err carries the violation description.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of a property. Panics with the seed and the
+/// smallest failing size on violation.
+pub fn property<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: u64, mut prop: F) {
+    // Environment override for reproduction: RUYA_PROP_SEED=<seed>
+    let base = std::env::var("RUYA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x9E3779B97F4A7C15u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x2545F4914F6CDD1D));
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the same seed at smaller generator sizes and
+            // report the smallest size that still fails.
+            let mut smallest = (1.0, msg.clone());
+            for step in 1..=8 {
+                let size = 1.0 - step as f64 / 9.0;
+                let mut g = Gen::new(seed, size);
+                if let Err(m) = prop(&mut g) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed {seed:#x}, smallest failing size {:.2}):\n  {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("tautology", 50, |g| {
+            count += 1;
+            let v = g.f64_in(0.0, 1.0);
+            if (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+        assert_eq!(count, 50 );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        property("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        property("bounds", 100, |g| {
+            let n = g.usize_in(3, 17);
+            if !(3..=17).contains(&n) {
+                return Err(format!("usize_in out of bounds: {n}"));
+            }
+            let sub = g.subset(20, 5);
+            if sub.len() != 5 || sub.iter().any(|&i| i >= 20) {
+                return Err(format!("bad subset {sub:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_size() {
+        // A property failing only for large n: the panic message must
+        // report a size below 1.0 shrink attempt or stay at 1.0; we just
+        // check the runner terminates and panics.
+        let result = std::panic::catch_unwind(|| {
+            property("large-only", 20, |g| {
+                let n = g.usize_in(0, 100);
+                if n > 90 {
+                    Err(format!("fails at n={n}"))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        // Either it never generated n > 90 (fine) or it panicked with the
+        // shrink report.
+        if let Err(e) = result {
+            let msg = e.downcast_ref::<String>().cloned().unwrap_or_default();
+            assert!(msg.contains("large-only"));
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal command-line parsing (the `clap` crate is unavailable offline).
+//!
+//! Supports the patterns the `ruya` binary and the examples need:
+//! `prog <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, `--key value` options, `--flag`
+/// booleans and positionals, in any order after the subcommand.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); `known_flags` lists the
+    /// `--x` switches that do NOT consume a value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(val) = it.peek() {
+                    if val.starts_with("--") {
+                        out.flags.push(name.to_string());
+                    } else {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse(known_flags: &[&str]) -> Self {
+        Self::parse_from(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(parts.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["table2", "--reps", "200", "--backend", "xla"], &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("table2"));
+        assert_eq!(a.opt_usize("reps", 0), 200);
+        assert_eq!(a.opt("backend"), Some("xla"));
+    }
+
+    #[test]
+    fn known_flags_do_not_consume() {
+        let a = parse(&["search", "--verbose", "kmeans"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["kmeans".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["x", "--seed=99"], &[]);
+        assert_eq!(a.opt_u64("seed", 0), 99);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--quiet"], &[]);
+        assert!(a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"], &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"], &[]);
+        assert_eq!(a.opt_f64("leeway", 0.1), 0.1);
+        assert_eq!(a.opt_or("out", "results"), "results");
+    }
+}

@@ -1,0 +1,7 @@
+//! Infrastructure utilities implemented in-tree because the usual crates
+//! (`rand`, `serde`, `clap`) are unavailable in this offline environment.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,180 @@
+//! Deterministic PRNG (PCG64-DXSM style) — the `rand` crate is not
+//! available offline, and the experiment harness needs seedable,
+//! reproducible streams anyway (Table II averages 200 seeded repetitions).
+
+/// PCG64 with DXSM output permutation. 128-bit state, 64-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Seed the generator; `stream` selects an independent sequence.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64 | 0xda3e39cb94b95bdb) << 1) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.state = rng.state.wrapping_add(seed as u128).wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    pub fn from_seed(seed: u64) -> Self {
+        Self::new(seed, 0xa02bdbf7bb3c0a7)
+    }
+
+    /// Derive an independent child stream (used to give every experiment
+    /// repetition its own reproducible sequence).
+    pub fn fork(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64(), stream)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        // DXSM output on the *current* state, then advance (PCG-DXSM).
+        let hi = (self.state >> 64) as u64;
+        let lo = ((self.state as u64) | 1) as u64;
+        let mut out = hi ^ (hi >> 32);
+        out = out.wrapping_mul(0xda942042e4dd58b5);
+        out ^= out >> 48;
+        out = out.wrapping_mul(lo);
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        out
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free-enough mapping; bias is negligible
+        // for the n used here (<= a few thousand).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal multiplicative noise with median 1 and the given sigma
+    /// of the underlying normal.
+    pub fn lognormal_noise(&mut self, sigma: f64) -> f64 {
+        (sigma * self.next_gaussian()).exp()
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Shuffle a slice in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::from_seed(42);
+        let mut b = Pcg64::from_seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::from_seed(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::new(7, 1);
+        let mut b = Pcg64::new(7, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::from_seed(1);
+        for _ in 0..10_000 {
+            let v = rng.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_reasonable() {
+        let mut rng = Pcg64::from_seed(2);
+        let n = 20_000;
+        let mean = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::from_seed(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn next_below_covers_range() {
+        let mut rng = Pcg64::from_seed(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[rng.next_below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut rng = Pcg64::from_seed(5);
+        for _ in 0..100 {
+            let s = rng.sample_distinct(69, 10);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 10);
+            assert!(s.iter().all(|&i| i < 69));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_full_permutation() {
+        let mut rng = Pcg64::from_seed(6);
+        let mut s = rng.sample_distinct(8, 8);
+        s.sort_unstable();
+        assert_eq!(s, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,143 @@
+//! Small statistics helpers shared by the memory model, the experiment
+//! harness and the report layer.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for fewer than two points.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated quantile, q in [0, 1]. NaN-free input assumed.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Ordinary least squares fit y = slope * x + intercept.
+/// Returns (slope, intercept). Requires >= 2 points.
+pub fn ols_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "OLS needs at least two points");
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    if sxx == 0.0 {
+        return (0.0, my);
+    }
+    let slope = sxy / sxx;
+    (slope, my - slope * mx)
+}
+
+/// Coefficient of determination of the OLS fit on the training data
+/// itself — exactly the score Ruya thresholds at 0.1 / 0.99 (§III-C).
+///
+/// Degenerate case: if the targets are constant, the fit is perfect and
+/// the paper's "flat" reading should win, so we follow scikit-learn and
+/// return 1.0 when residuals are ~zero, else 0.0.
+pub fn r2_score(xs: &[f64], ys: &[f64]) -> f64 {
+    let (slope, intercept) = ols_fit(xs, ys);
+    let my = mean(ys);
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let pred = slope * x + intercept;
+        ss_res += (y - pred) * (y - pred);
+        ss_tot += (y - my) * (y - my);
+    }
+    if ss_tot <= f64::EPSILON * mean(ys).abs().max(1.0) {
+        return if ss_res <= ss_tot { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 0.25), 2.5);
+        assert_eq!(quantile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn ols_exact_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 7.0).collect();
+        let (slope, intercept) = ols_fit(&xs, &ys);
+        assert!((slope - 3.0).abs() < 1e-12);
+        assert!((intercept - 7.0).abs() < 1e-12);
+        assert!((r2_score(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_flat_noise_is_low() {
+        // y uncorrelated with x -> R^2 near 0
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> =
+            (0..20).map(|i| if i % 2 == 0 { 5.0 } else { 5.5 }).collect();
+        let r2 = r2_score(&xs, &ys);
+        assert!(r2 < 0.1, "r2 {r2}");
+    }
+
+    #[test]
+    fn r2_constant_targets_is_one() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [4.0, 4.0, 4.0];
+        assert_eq!(r2_score(&xs, &ys), 1.0);
+    }
+
+    #[test]
+    fn variance_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((variance(&xs) - 4.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,131 @@
+//! The materialized evaluation dataset: one frozen cost per (job, config)
+//! pair — the role the scout dataset's 1031 executions play in the paper.
+//!
+//! Costs are normalized per job to the cheapest configuration, exactly as
+//! in §IV-C: "the cheapest cluster configuration for a job always has a
+//! cost of 1.0".
+
+use super::jobs::JobInstance;
+use super::sim::ClusterSim;
+use crate::searchspace::SearchSpace;
+
+/// Per-job table of simulated executions over the whole search space.
+#[derive(Debug, Clone)]
+pub struct JobCostTable {
+    pub job: JobInstance,
+    /// Absolute cost (USD) per configuration index.
+    pub cost_usd: Vec<f64>,
+    /// Runtime (hours) per configuration index.
+    pub runtime_h: Vec<f64>,
+    /// Cost normalized to the per-job minimum (>= 1.0).
+    pub normalized: Vec<f64>,
+    /// Index of the optimal (cheapest) configuration.
+    pub optimal_idx: usize,
+}
+
+impl JobCostTable {
+    /// Run the simulator over every configuration of the space.
+    pub fn build(sim: &ClusterSim, job: &JobInstance, space: &SearchSpace) -> Self {
+        let mut cost_usd = Vec::with_capacity(space.len());
+        let mut runtime_h = Vec::with_capacity(space.len());
+        for (i, c) in space.configs().iter().enumerate() {
+            let e = sim.execute(job, c, i);
+            cost_usd.push(e.cost_usd);
+            runtime_h.push(e.runtime_h);
+        }
+        let (optimal_idx, &min_cost) = cost_usd
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("non-empty space");
+        let normalized = cost_usd.iter().map(|&c| c / min_cost).collect();
+        Self { job: *job, cost_usd, runtime_h, normalized, optimal_idx }
+    }
+
+    /// Number of configurations whose normalized cost is within `thresh`.
+    pub fn count_within(&self, thresh: f64) -> usize {
+        self.normalized.iter().filter(|&&c| c <= thresh).count()
+    }
+}
+
+/// The whole evaluation dataset: cost tables for all 16 jobs.
+#[derive(Debug, Clone)]
+pub struct ScoutDataset {
+    pub tables: Vec<JobCostTable>,
+}
+
+impl ScoutDataset {
+    pub fn build(sim: &ClusterSim, jobs: &[JobInstance], space: &SearchSpace) -> Self {
+        Self { tables: jobs.iter().map(|j| JobCostTable::build(sim, j, space)).collect() }
+    }
+
+    /// Total simulated executions materialized (the paper's dataset holds
+    /// 1031 real ones; ours is the full 16 x |space| grid).
+    pub fn execution_count(&self) -> usize {
+        self.tables.iter().map(|t| t.cost_usd.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::jobs::evaluation_jobs;
+
+    fn dataset() -> ScoutDataset {
+        let sim = ClusterSim::default();
+        let space = SearchSpace::scout();
+        ScoutDataset::build(&sim, &evaluation_jobs(), &space)
+    }
+
+    #[test]
+    fn full_grid_materialized() {
+        let ds = dataset();
+        assert_eq!(ds.execution_count(), 16 * 69);
+    }
+
+    #[test]
+    fn normalization_properties() {
+        for t in dataset().tables {
+            let min = t.normalized.iter().cloned().fold(f64::MAX, f64::min);
+            assert!((min - 1.0).abs() < 1e-12, "{}: min {min}", t.job.label());
+            assert!(t.normalized.iter().all(|&c| c >= 1.0));
+            assert!((t.normalized[t.optimal_idx] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn optimum_is_unique_enough() {
+        // The iterations-to-optimal metric needs a well-defined optimum:
+        // no job may have two configs within float-eps of the minimum.
+        for t in dataset().tables {
+            let near: usize = t
+                .normalized
+                .iter()
+                .filter(|&&c| c < 1.0 + 1e-9)
+                .count();
+            assert_eq!(near, 1, "{} has {near} co-optimal configs", t.job.label());
+        }
+    }
+
+    #[test]
+    fn cost_spread_is_meaningful() {
+        // The search problem must be non-trivial: the worst config should
+        // cost at least 2x the best for every job (the paper reports up
+        // to 10x in public clouds).
+        for t in dataset().tables {
+            let max = t.normalized.iter().cloned().fold(0.0, f64::max);
+            assert!(max > 2.0, "{}: spread only {max}", t.job.label());
+            assert!(max < 100.0, "{}: absurd spread {max}", t.job.label());
+        }
+    }
+
+    #[test]
+    fn near_optimal_band_not_too_wide() {
+        // If half the space is within 10% of optimal, random search would
+        // trivially win and the evaluation would be meaningless.
+        for t in dataset().tables {
+            let frac = t.count_within(1.1) as f64 / t.normalized.len() as f64;
+            assert!(frac < 0.5, "{}: {frac} of space within 1.1", t.job.label());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The workload substrate: the HiBench job catalog, the analytic cluster
+//! execution model and the materialized evaluation dataset — the in-tree
+//! substitute for the scout dataset of 1031 real AWS executions the paper
+//! evaluates on (DESIGN.md §4).
+
+mod dataset;
+mod jobs;
+mod params;
+mod sim;
+
+pub use dataset::{JobCostTable, ScoutDataset};
+pub use jobs::{
+    evaluation_jobs, AlgoProfile, DatasetScale, Framework, JobInstance, MemBehavior,
+};
+pub use params::{LaptopParams, SimParams};
+pub use sim::{ClusterSim, Execution};

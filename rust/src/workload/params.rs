@@ -1,0 +1,125 @@
+//! Tunable constants of the analytic cluster-execution model.
+//!
+//! These are the knobs the calibration pass (EXPERIMENTS.md §Calibration)
+//! adjusts so the simulated cost landscapes reproduce the *shape* of the
+//! paper's evaluation: the Fig-1 memory cliff, c-family cost-optimality
+//! for flat jobs, r-family for memory-hungry iterative jobs, and
+//! diminishing returns at large scale-outs.
+
+/// Universal-scalability-law and I/O constants of the simulated cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    /// USL contention coefficient (serialization on shared resources).
+    pub usl_alpha: f64,
+    /// USL coherency coefficient (pairwise coordination, kills very large
+    /// scale-outs — "suboptimal configurations can increase costs
+    /// tenfold").
+    pub usl_beta: f64,
+    /// Effective per-node disk scan bandwidth in GB/h (includes
+    /// deserialization and the GC pressure of spilling, hence far below
+    /// raw SSD speed).
+    pub disk_bw_gb_h: f64,
+    /// Memory re-read speedup over disk (cached iteration vs spilled).
+    pub mem_bw_mult: f64,
+    /// Spill amplification: a spilled partition is written once and
+    /// re-read every iteration.
+    pub spill_amp: f64,
+    /// Hadoop materializes intermediate data to disk between stages
+    /// (read + write per pass).
+    pub hadoop_stage_amp: f64,
+    /// All-to-all shuffle bandwidth degradation per extra node (network
+    /// contention; makes shuffle-heavy jobs favor small scale-outs).
+    pub net_contention: f64,
+    /// Frozen per-(job, machine-type) effect sigma: instance families
+    /// behave measurably differently for the same job (JVM, NUMA, EBS),
+    /// which makes the cost landscape rugged across families.
+    pub machine_sigma: f64,
+    /// Per-execution multiplicative log-normal noise sigma (frozen per
+    /// (job, config) pair — the scout dataset is one realization).
+    pub noise_sigma: f64,
+    /// Fixed cluster provisioning + framework start time (hours).
+    pub startup_h: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        Self {
+            usl_alpha: 0.04,
+            usl_beta: 0.0002,
+            disk_bw_gb_h: 45.0,
+            mem_bw_mult: 40.0,
+            spill_amp: 3.0,
+            hadoop_stage_amp: 2.2,
+            net_contention: 0.03,
+            machine_sigma: 0.06,
+            noise_sigma: 0.025,
+            startup_h: 0.02,
+        }
+    }
+}
+
+impl SimParams {
+    /// USL effective parallel speedup at `cores` workers.
+    pub fn speedup(&self, cores: f64) -> f64 {
+        cores / (1.0 + self.usl_alpha * (cores - 1.0) + self.usl_beta * cores * (cores - 1.0))
+    }
+}
+
+/// The simulated single-node profiling machine (§IV-A: a 2020 T14
+/// ThinkPad, 8 threads, 32 GB).
+#[derive(Debug, Clone, Copy)]
+pub struct LaptopParams {
+    pub cores: f64,
+    pub ram_gb: f64,
+    /// Effective parallel efficiency of the laptop for these jobs.
+    pub efficiency: f64,
+    /// Fixed JVM + framework startup per profiling run (seconds).
+    pub startup_s: f64,
+    /// Aggressive-GC slowdown factor (§IV-B: "at the expense of
+    /// reasonably longer runtimes").
+    pub gc_slowdown: f64,
+    /// Memory the framework + OS occupy before any data is loaded (GB);
+    /// discounted from the readings (§III-B).
+    pub base_mem_gb: f64,
+}
+
+impl Default for LaptopParams {
+    fn default() -> Self {
+        Self {
+            cores: 8.0,
+            ram_gb: 32.0,
+            efficiency: 0.75,
+            startup_s: 12.0,
+            gc_slowdown: 1.3,
+            base_mem_gb: 0.9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_monotone_then_saturating() {
+        let p = SimParams::default();
+        assert!(p.speedup(2.0) > p.speedup(1.0));
+        assert!(p.speedup(16.0) > p.speedup(8.0));
+        // Coherency term eventually dominates: enormous clusters slow down.
+        assert!(p.speedup(512.0) < p.speedup(96.0));
+    }
+
+    #[test]
+    fn speedup_at_one_core_is_one() {
+        let p = SimParams::default();
+        assert!((p.speedup(1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_sublinear() {
+        let p = SimParams::default();
+        for c in [2.0, 8.0, 32.0, 96.0] {
+            assert!(p.speedup(c) < c);
+        }
+    }
+}

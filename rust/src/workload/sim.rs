@@ -1,0 +1,302 @@
+//! The cluster-execution model: runtime and monetary cost of one job on
+//! one configuration — the substitute for the scout dataset's real AWS
+//! measurements (DESIGN.md §4, substitution 1).
+//!
+//! The model produces the qualitative landscape the paper's method
+//! depends on:
+//!   * a **memory cliff** for cache-sensitive Spark jobs (Fig. 1): once
+//!     usable cluster memory falls below the job's cache need, every
+//!     iteration re-reads the spilled fraction from disk;
+//!   * **flat** memory response for Hadoop and one-pass Spark jobs;
+//!   * USL-style diminishing (then negative) returns on scale-out;
+//!   * frozen log-normal noise per (job, configuration) pair.
+
+use super::jobs::{Framework, JobInstance};
+use super::params::SimParams;
+use crate::searchspace::ClusterConfig;
+use crate::util::rng::Pcg64;
+
+/// JVM headroom factor above the raw object footprint needed to cache
+/// the working set without GC thrash (see [`ClusterSim::cache_fit`]).
+pub const CACHE_HEADROOM: f64 = 1.08;
+
+/// Outcome of one simulated cluster execution.
+#[derive(Debug, Clone, Copy)]
+pub struct Execution {
+    pub runtime_h: f64,
+    pub cost_usd: f64,
+    /// Fraction of the cached working set that actually fit in memory.
+    pub cache_fit: f64,
+}
+
+/// Deterministic cluster simulator.
+#[derive(Debug, Clone)]
+pub struct ClusterSim {
+    pub params: SimParams,
+}
+
+impl Default for ClusterSim {
+    fn default() -> Self {
+        Self { params: SimParams::default() }
+    }
+}
+
+impl ClusterSim {
+    pub fn new(params: SimParams) -> Self {
+        Self { params }
+    }
+
+    /// Noise-free runtime model (hours).
+    pub fn runtime_noiseless_h(&self, job: &JobInstance, config: &ClusterConfig) -> f64 {
+        let p = &self.params;
+        let cores = config.total_cores();
+        let nodes = config.nodes as f64;
+        let algo = &job.algo;
+
+        // Compute phase: CPU work over all passes, scaled by USL speedup.
+        let work_core_h = job.input_gb * algo.passes as f64 * algo.cpu_core_h_per_gb_pass;
+        let compute_h = work_core_h / p.speedup(cores);
+
+        // I/O phases. Disk bandwidth scales with nodes (local disks).
+        let disk_gb_h = nodes * p.disk_bw_gb_h;
+        let mem_gb_h = disk_gb_h * p.mem_bw_mult;
+        let shuffle_gb = job.input_gb * algo.shuffle_frac;
+
+        let io_h = match algo.framework {
+            Framework::Hadoop => {
+                // Every pass reads from and materializes to disk; shuffle
+                // suffers the same all-to-all network contention.
+                let contention = 1.0 + p.net_contention * (nodes - 1.0);
+                let per_pass = job.input_gb * p.hadoop_stage_amp / disk_gb_h
+                    + shuffle_gb * 2.0 * contention / disk_gb_h;
+                algo.passes as f64 * per_pass
+            }
+            Framework::Spark => {
+                // First pass always streams from disk (cold load).
+                let load_h = job.input_gb / disk_gb_h;
+                // Shuffles are all-to-all: effective bandwidth degrades
+                // with cluster size (network contention), so shuffle-heavy
+                // jobs favor small scale-outs.
+                let contention = 1.0 + p.net_contention * (nodes - 1.0);
+                let shuffle_h =
+                    algo.passes as f64 * shuffle_gb * 2.0 * contention / disk_gb_h;
+                if algo.cache_sensitive && algo.passes > 1 {
+                    let fit = self.cache_fit(job, config);
+                    // Subsequent passes re-read the *materialized working
+                    // set* (JVM objects, mem_coeff x input): the cached
+                    // fraction from memory, the spilled fraction from disk
+                    // with serialization amplification — the Fig. 1 cliff.
+                    let working_set = job.true_cache_need_gb();
+                    let reread_gb =
+                        working_set * ((1.0 - fit) * p.spill_amp + fit / p.mem_bw_mult);
+                    let _ = mem_gb_h; // folded into the mem_bw_mult term
+                    load_h + (algo.passes - 1) as f64 * reread_gb / disk_gb_h + shuffle_h
+                } else {
+                    // One-pass or cache-insensitive Spark job.
+                    load_h + shuffle_h
+                }
+            }
+        };
+
+        p.startup_h + algo.serial_h + compute_h + io_h
+    }
+
+    /// Fraction of the job's cached working set that fits in the cluster's
+    /// usable memory (1.0 when not cache-sensitive).
+    ///
+    /// The JVM needs headroom above the raw object footprint to cache
+    /// without GC thrash, so the *effective* cliff sits at
+    /// `CACHE_HEADROOM x need` — slightly above the requirement the
+    /// profiler extrapolates. This keeps Ruya's (estimate + leeway)
+    /// predicate conservative in the right direction: priority groups may
+    /// include configs marginally below the effective cliff (small
+    /// penalty) but exclude only clearly-bottlenecked ones.
+    pub fn cache_fit(&self, job: &JobInstance, config: &ClusterConfig) -> f64 {
+        if !job.algo.cache_sensitive {
+            return 1.0;
+        }
+        let need = job.true_cache_need_gb() * CACHE_HEADROOM;
+        if need <= 0.0 {
+            return 1.0;
+        }
+        (config.usable_memory_gb() / need).min(1.0)
+    }
+
+    /// Frozen multiplicative noise for a (job, config) pair: the scout
+    /// dataset is a single realization, so repeated queries must return
+    /// identical values (search determinism depends on it).
+    ///
+    /// Two components: a per-(job, machine-type) effect — JVM/OS behaviour
+    /// really does differ across instance families, producing rugged,
+    /// learnable structure the GP must sample each family to see — and a
+    /// smaller per-execution residual.
+    fn noise(&self, job: &JobInstance, config: &ClusterConfig, config_idx: usize) -> f64 {
+        let mut mrng =
+            Pcg64::new(job.job_id.wrapping_mul(0xd1342543de82ef95), config.machine as u64);
+        let machine_effect = mrng.lognormal_noise(self.params.machine_sigma);
+        let mut rng = Pcg64::new(job.job_id.wrapping_mul(0x9e3779b97f4a7c15), config_idx as u64);
+        machine_effect * rng.lognormal_noise(self.params.noise_sigma)
+    }
+
+    /// Simulated execution of `job` on `config` (the `config_idx` ties the
+    /// frozen noise to the search-space position).
+    pub fn execute(&self, job: &JobInstance, config: &ClusterConfig, config_idx: usize) -> Execution {
+        let runtime_h =
+            self.runtime_noiseless_h(job, config) * self.noise(job, config, config_idx);
+        Execution {
+            runtime_h,
+            cost_usd: runtime_h * config.price_per_hour(),
+            cache_fit: self.cache_fit(job, config),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::searchspace::SearchSpace;
+    use crate::workload::jobs::{evaluation_jobs, DatasetScale};
+
+    fn job(name: &str, scale: DatasetScale, fw: Framework) -> JobInstance {
+        evaluation_jobs()
+            .into_iter()
+            .find(|j| j.algo.name == name && j.scale == scale && j.algo.framework == fw)
+            .unwrap()
+    }
+
+    #[test]
+    fn execution_is_deterministic() {
+        let sim = ClusterSim::default();
+        let space = SearchSpace::scout();
+        let j = job("K-Means", DatasetScale::Bigdata, Framework::Spark);
+        let a = sim.execute(&j, &space.config(7), 7);
+        let b = sim.execute(&j, &space.config(7), 7);
+        assert_eq!(a.runtime_h, b.runtime_h);
+        assert_eq!(a.cost_usd, b.cost_usd);
+    }
+
+    #[test]
+    fn noise_differs_across_configs_and_jobs() {
+        let sim = ClusterSim::default();
+        let space = SearchSpace::scout();
+        let j1 = job("K-Means", DatasetScale::Bigdata, Framework::Spark);
+        let j2 = job("K-Means", DatasetScale::Huge, Framework::Spark);
+        let r1 = sim.execute(&j1, &space.config(3), 3).runtime_h
+            / sim.runtime_noiseless_h(&j1, &space.config(3));
+        let r2 = sim.execute(&j1, &space.config(4), 4).runtime_h
+            / sim.runtime_noiseless_h(&j1, &space.config(4));
+        let r3 = sim.execute(&j2, &space.config(3), 3).runtime_h
+            / sim.runtime_noiseless_h(&j2, &space.config(3));
+        assert_ne!(r1, r2);
+        assert_ne!(r1, r3);
+    }
+
+    #[test]
+    fn memory_cliff_exists_for_kmeans() {
+        // Two r4.xlarge clusters straddling the K-Means/huge cache need
+        // (252 GB): the one below the cliff must be much slower per pass.
+        let sim = ClusterSim::default();
+        let j = job("K-Means", DatasetScale::Huge, Framework::Spark);
+        let space = SearchSpace::scout();
+        // find r4.xlarge configs (machine idx 7) below and above need
+        let below = space
+            .configs()
+            .iter()
+            .enumerate()
+            .find(|(_, c)| c.machine_type().name == "r4.xlarge" && c.usable_memory_gb() < 230.0)
+            .map(|(i, _)| i)
+            .unwrap();
+        let above = space
+            .configs()
+            .iter()
+            .enumerate()
+            .find(|(_, c)| c.machine_type().name == "r4.xlarge" && c.usable_memory_gb() > 260.0)
+            .map(|(i, _)| i)
+            .unwrap();
+        let cb = space.config(below);
+        let ca = space.config(above);
+        assert!(sim.cache_fit(&j, &cb) < 1.0);
+        assert!((sim.cache_fit(&j, &ca) - 1.0).abs() < 1e-12);
+        // Normalize by node count to compare per-resource efficiency:
+        let rb = sim.runtime_noiseless_h(&j, &cb);
+        let ra = sim.runtime_noiseless_h(&j, &ca);
+        // The below-cliff config has fewer nodes; check slowdown per core.
+        let per_core_b = rb * cb.total_cores();
+        let per_core_a = ra * ca.total_cores();
+        assert!(
+            per_core_b > 1.3 * per_core_a,
+            "no cliff: below {per_core_b} vs above {per_core_a} core-hours"
+        );
+    }
+
+    #[test]
+    fn hadoop_ignores_memory() {
+        // Same core count, very different memory: Hadoop runtime must not
+        // improve with the extra memory (same node count => same disk bw).
+        let sim = ClusterSim::default();
+        let j = job("Terasort", DatasetScale::Bigdata, Framework::Hadoop);
+        let space = SearchSpace::scout();
+        let c_low = space
+            .configs()
+            .iter()
+            .find(|c| c.machine_type().name == "c4.2xlarge" && c.nodes == 8)
+            .unwrap();
+        let r_high = space
+            .configs()
+            .iter()
+            .find(|c| c.machine_type().name == "r4.2xlarge" && c.nodes == 8)
+            .unwrap();
+        let rt_low = sim.runtime_noiseless_h(&j, c_low);
+        let rt_high = sim.runtime_noiseless_h(&j, r_high);
+        assert!(
+            (rt_low - rt_high).abs() / rt_low < 1e-9,
+            "hadoop runtime depends on memory: {rt_low} vs {rt_high}"
+        );
+    }
+
+    #[test]
+    fn more_nodes_speed_up_moderately_sized_clusters() {
+        let sim = ClusterSim::default();
+        let j = job("Join", DatasetScale::Bigdata, Framework::Spark);
+        let space = SearchSpace::scout();
+        let c4 = space.configs().iter().find(|c| c.machine_type().name == "c4.xlarge" && c.nodes == 4).unwrap();
+        let c12 = space.configs().iter().find(|c| c.machine_type().name == "c4.xlarge" && c.nodes == 12).unwrap();
+        assert!(sim.runtime_noiseless_h(&j, c12) < sim.runtime_noiseless_h(&j, c4));
+    }
+
+    #[test]
+    fn runtimes_are_plausible_hours() {
+        // Every (job, config) lands in a sane band: minutes to a day.
+        let sim = ClusterSim::default();
+        let space = SearchSpace::scout();
+        for j in evaluation_jobs() {
+            for (i, c) in space.configs().iter().enumerate() {
+                let e = sim.execute(&j, c, i);
+                // Memory-bottlenecked worst cases run for days (the paper
+                // reports tenfold cost blowups); just bound the absurd.
+                assert!(
+                    e.runtime_h > 0.02 && e.runtime_h < 120.0,
+                    "{} on {}: {} h",
+                    j.label(),
+                    c.name(),
+                    e.runtime_h
+                );
+                assert!(e.cost_usd > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_fit_boundaries() {
+        let sim = ClusterSim::default();
+        let space = SearchSpace::scout();
+        let j = job("Naive Bayes", DatasetScale::Bigdata, Framework::Spark);
+        // 754 GB exceeds every configuration's usable memory (max ~670):
+        for (i, c) in space.configs().iter().enumerate() {
+            let fit = sim.cache_fit(&j, c);
+            assert!(fit < 1.0, "config {i} unexpectedly fits NB/bigdata");
+        }
+        let j2 = job("Join", DatasetScale::Huge, Framework::Spark);
+        assert_eq!(sim.cache_fit(&j2, &space.config(0)), 1.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! End-to-end fidelity test: a reduced-repetition Table II slice must
+//! reproduce the *shape* of the paper's headline result (DESIGN.md §5
+//! calibration contract). The full-scale numbers live in EXPERIMENTS.md
+//! and are produced by `examples/full_reproduction.rs`.
+
+use ruya::bayesopt::NativeBackend;
+use ruya::coordinator::{ExperimentConfig, ExperimentRunner};
+use ruya::memmodel::MemCategory;
+
+#[test]
+fn table2_shape_matches_paper() {
+    let mut backend = NativeBackend::new();
+    let mut runner = ExperimentRunner::new(&mut backend);
+    let cfg = ExperimentConfig { reps: 12, seed: 0xC0FFEE, curve_len: 48 };
+    let result = runner.run_table2(&cfg).expect("experiment");
+
+    assert_eq!(result.jobs.len(), 16);
+
+    // Headline: Ruya needs roughly half the iterations on average.
+    // Paper: 37.9% / 40.2% / 49.2%. Contract: 25..70% at every threshold.
+    for (k, q) in result.mean_quotient.iter().enumerate() {
+        assert!(
+            (0.25..=0.70).contains(q),
+            "mean quotient[{k}] = {q:.3} outside the fidelity band"
+        );
+    }
+
+    // Unclear jobs reduce exactly to the baseline.
+    for j in result.jobs.iter().filter(|j| j.category == MemCategory::Unclear) {
+        for k in 0..3 {
+            assert!(
+                (j.quotient()[k] - 1.0).abs() < 1e-9,
+                "{}: unclear quotient {:?}",
+                j.label,
+                j.quotient()
+            );
+        }
+    }
+
+    // Flat jobs improve strongly at the near-optimal thresholds
+    // (paper: 10-43%).
+    for j in result.jobs.iter().filter(|j| j.category == MemCategory::Flat) {
+        assert!(
+            j.quotient()[0] < 0.7,
+            "{}: flat c<=1.2 quotient {:.3}",
+            j.label,
+            j.quotient()[0]
+        );
+    }
+
+    // No job category may be dramatically worse than the baseline on
+    // average (the paper: "about as good or better for each job").
+    let mut by_cat = std::collections::BTreeMap::new();
+    for j in &result.jobs {
+        by_cat.entry(j.category.name()).or_insert_with(Vec::new).push(j.quotient()[2]);
+    }
+    for (cat, qs) in by_cat {
+        let mean: f64 = qs.iter().sum::<f64>() / qs.len() as f64;
+        assert!(mean < 1.25, "category {cat} mean c=1.0 quotient {mean:.3}");
+    }
+
+    // Fig. 4 shape: Ruya's average best-found curve dominates (is below)
+    // CherryPick's over the early iterations where the paper's gap lives.
+    let len = cfg.curve_len;
+    let mut cp = vec![0.0; len];
+    let mut ruya = vec![0.0; len];
+    for j in &result.jobs {
+        for i in 0..len {
+            cp[i] += j.cherrypick.best_curve[i] / result.jobs.len() as f64;
+            ruya[i] += j.ruya.best_curve[i] / result.jobs.len() as f64;
+        }
+    }
+    let early_gap: f64 = (3..20).map(|i| cp[i] - ruya[i]).sum();
+    assert!(early_gap > 0.0, "Ruya does not dominate early iterations (gap {early_gap})");
+
+    // Fig. 5 shape: cumulative cost advantage for Ruya at iteration 25.
+    let mut cp25 = 0.0;
+    let mut ruya25 = 0.0;
+    for j in &result.jobs {
+        cp25 += j.cherrypick.cum_curve[24] / result.jobs.len() as f64;
+        ruya25 += j.ruya.cum_curve[24] / result.jobs.len() as f64;
+    }
+    assert!(
+        ruya25 < cp25,
+        "no cumulative-cost advantage at iteration 25: {ruya25:.2} vs {cp25:.2}"
+    );
+}
+
+/// Table I shape: 6 linear / 6 flat / 4 unclear with requirement estimates
+/// within 25% of the paper's values (the simulated jobs are calibrated to
+/// Table I, so this closes the loop through profiler + model).
+#[test]
+fn table1_shape_matches_paper() {
+    let mut backend = NativeBackend::new();
+    let runner = ExperimentRunner::new(&mut backend);
+    let summaries = runner.profile_all(0xC0FFEE);
+
+    let expect: &[(&str, &str)] = &[
+        ("Naive Bayes Spark bigdata", "linear"),
+        ("Naive Bayes Spark huge", "linear"),
+        ("K-Means Spark bigdata", "linear"),
+        ("K-Means Spark huge", "linear"),
+        ("Page Rank Spark bigdata", "linear"),
+        ("Page Rank Spark huge", "linear"),
+        ("Log. Regr. Spark bigdata", "unclear"),
+        ("Log. Regr. Spark huge", "unclear"),
+        ("Lin. Regr. Spark bigdata", "unclear"),
+        ("Lin. Regr. Spark huge", "unclear"),
+        ("Join Spark bigdata", "flat"),
+        ("Join Spark huge", "flat"),
+        ("Page Rank Hadoop bigdata", "flat"),
+        ("Page Rank Hadoop huge", "flat"),
+        ("Terasort Hadoop bigdata", "flat"),
+        ("Terasort Hadoop huge", "flat"),
+    ];
+    for (label, cat) in expect {
+        let s = summaries.iter().find(|s| s.label == *label).expect(label);
+        assert_eq!(s.model.category.name(), *cat, "{label}");
+    }
+
+    let gb_expect: &[(&str, f64)] = &[
+        ("Naive Bayes Spark bigdata", 754.0),
+        ("Naive Bayes Spark huge", 395.0),
+        ("K-Means Spark bigdata", 503.0),
+        ("K-Means Spark huge", 252.0),
+        ("Page Rank Spark bigdata", 86.0),
+        ("Page Rank Spark huge", 42.0),
+    ];
+    for (label, gb) in gb_expect {
+        let s = summaries.iter().find(|s| s.label == *label).unwrap();
+        let job = ruya::workload::evaluation_jobs()
+            .into_iter()
+            .find(|j| j.label() == *label)
+            .unwrap();
+        let est = s.model.estimate_requirement_gb(job.input_gb);
+        assert!(
+            (est - gb).abs() / gb < 0.25,
+            "{label}: estimate {est:.0} GB vs Table I {gb} GB"
+        );
+    }
+}
+
+/// Table III shape: per-job profiling times in a plausible band, mean in
+/// the paper's neighbourhood (~565 s), and invariance to full dataset
+/// size (§IV-D: "profiling overhead is irrespective of the size of the
+/// full dataset" — same algorithm, double input, similar time).
+#[test]
+fn table3_shape_matches_paper() {
+    let mut backend = NativeBackend::new();
+    let runner = ExperimentRunner::new(&mut backend);
+    let summaries = runner.profile_all(0xC0FFEE);
+    let times: Vec<f64> = summaries.iter().map(|s| s.profiling_time_s).collect();
+    for (s, t) in summaries.iter().zip(&times) {
+        assert!((60.0..2000.0).contains(t), "{}: {t} s", s.label);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    assert!((200.0..1000.0).contains(&mean), "mean profiling time {mean:.0} s");
+
+    // Scale invariance: bigdata vs huge of the same algorithm within 2x.
+    for pair in summaries.chunks(2) {
+        let ratio = pair[0].profiling_time_s / pair[1].profiling_time_s;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "profiling time should not scale with dataset size: {} vs {}",
+            pair[0].label,
+            pair[1].label
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! Cross-module integration tests: the complete Ruya pipeline
+//! (profile -> categorize -> plan -> search) over the simulated cluster
+//! substrate, plus native-vs-XLA backend agreement.
+
+use ruya::bayesopt::{backend_by_name, BoParams, GpBackend, NativeBackend};
+use ruya::coordinator::{ExperimentConfig, ExperimentRunner, RuyaPlanner, SearchPlan};
+use ruya::memmodel::{MemCategory, MemoryModel};
+use ruya::profiler::SingleNodeProfiler;
+use ruya::runtime::XlaRuntime;
+use ruya::searchspace::SearchSpace;
+use ruya::util::rng::Pcg64;
+use ruya::workload::{evaluation_jobs, ClusterSim, JobCostTable};
+
+/// Full pipeline for every evaluation job: the plan must be well-formed
+/// and the search must find the optimum within the space size.
+#[test]
+fn pipeline_profile_plan_search_all_jobs() {
+    let mut backend = NativeBackend::new();
+    let mut runner = ExperimentRunner::new(&mut backend);
+    for job in evaluation_jobs() {
+        let profile = runner.profile_job(&job, 11);
+        let plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
+        // Phases partition the space.
+        let mut all: Vec<usize> = plan.phases.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..runner.space.len()).collect::<Vec<_>>(), "{}", job.label());
+
+        let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+        let out = runner.run_one(&table, &plan, 1234 + job.job_id).expect("search");
+        let found = out.first_within(1.0 + 1e-9).expect("optimum never tried");
+        assert!(found <= runner.space.len(), "{}: {found}", job.label());
+        // The trace replays the cost table faithfully.
+        for (&idx, &cost) in out.tried.iter().zip(&out.costs) {
+            assert_eq!(cost, table.normalized[idx]);
+        }
+    }
+}
+
+/// The profiling -> memory-model stage recovers the ground-truth category
+/// for every job (Table I's 6/6/4 split).
+#[test]
+fn categories_recovered_for_multiple_seeds() {
+    let profiler = SingleNodeProfiler::default();
+    for seed in [1, 7, 99] {
+        let mut linear = 0;
+        let mut flat = 0;
+        let mut unclear = 0;
+        for job in evaluation_jobs() {
+            let outcome = profiler.profile(&job, seed);
+            let model = MemoryModel::fit(&outcome.readings());
+            match model.category {
+                MemCategory::Linear => linear += 1,
+                MemCategory::Flat => flat += 1,
+                MemCategory::Unclear => unclear += 1,
+            }
+        }
+        assert_eq!(linear, 6, "seed {seed}");
+        assert_eq!(flat, 6, "seed {seed}");
+        assert_eq!(unclear, 4, "seed {seed}");
+    }
+}
+
+/// Ruya with an unclear memory model must produce the identical trace to
+/// CherryPick under the same seed — the paper's fallback guarantee.
+#[test]
+fn unclear_fallback_is_exact() {
+    let mut backend = NativeBackend::new();
+    let mut runner = ExperimentRunner::new(&mut backend);
+    let job = evaluation_jobs()
+        .into_iter()
+        .find(|j| j.label() == "Log. Regr. Spark huge")
+        .unwrap();
+    let profile = runner.profile_job(&job, 5);
+    assert_eq!(profile.model.category, MemCategory::Unclear);
+    let ruya_plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
+    let cp_plan = SearchPlan::unpartitioned(&runner.space);
+    let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+    let a = runner.run_one(&table, &ruya_plan, 777).unwrap();
+    let b = runner.run_one(&table, &cp_plan, 777).unwrap();
+    assert_eq!(a.tried, b.tried);
+}
+
+/// Both GP backends, fed identical observations, must rank candidates the
+/// same way (the XLA artifact is f32; we compare proposals, not bits).
+#[test]
+fn xla_and_native_backends_agree() {
+    if !XlaRuntime::artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut native = backend_by_name("native").unwrap();
+    let mut xla = backend_by_name("xla").unwrap();
+
+    let space = SearchSpace::scout();
+    let features = space.feature_matrix();
+    let d = ruya::searchspace::N_FEATURES;
+    let m = space.len();
+
+    // Observations: 8 configs of a K-Means cost surface.
+    let job = evaluation_jobs().into_iter().find(|j| j.label() == "K-Means Spark huge").unwrap();
+    let sim = ClusterSim::default();
+    let table = JobCostTable::build(&sim, &job, &space);
+    let obs: Vec<usize> = vec![0, 9, 18, 27, 36, 45, 54, 63];
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for &i in &obs {
+        x.extend(space.features(i));
+        y.push(table.normalized[i]);
+    }
+    let (y_std, _, _) = ruya::bayesopt::gp::standardize(&y);
+    let cmask: Vec<bool> = (0..m).map(|i| !obs.contains(&i)).collect();
+    let hyp = [0.5, 1.0, 1e-3];
+
+    let dn = native.decide(&x, &y_std, obs.len(), d, &features, &cmask, m, hyp).unwrap();
+    let dx = xla.decide(&x, &y_std, obs.len(), d, &features, &cmask, m, hyp).unwrap();
+
+    // Posterior agreement (f32 tolerance).
+    for i in 0..m {
+        assert!((dn.mu[i] - dx.mu[i]).abs() < 1e-3, "mu[{i}]: {} vs {}", dn.mu[i], dx.mu[i]);
+        assert!((dn.var[i] - dx.var[i]).abs() < 1e-3, "var[{i}]");
+    }
+    // Same proposal.
+    let argmax = |ei: &[f64]| {
+        ei.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    };
+    assert_eq!(argmax(&dn.ei), argmax(&dx.ei), "backends proposed different configs");
+
+    // NLL grids agree on the best hyperparameter.
+    let grid = ruya::bayesopt::hyperparameter_grid();
+    let nn = native.nll_grid(&x, &y_std, obs.len(), d, &grid).unwrap();
+    let nx = xla.nll_grid(&x, &y_std, obs.len(), d, &grid).unwrap();
+    let argmin = |v: &[f64]| {
+        v.iter().enumerate().min_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    };
+    assert_eq!(argmin(&nn), argmin(&nx), "hyperparameter selection diverged");
+}
+
+/// A full seeded search must propose the same early trajectory on both
+/// backends.
+#[test]
+fn xla_search_trace_matches_native() {
+    if !XlaRuntime::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let space = SearchSpace::scout();
+    let sim = ClusterSim::default();
+    let job = evaluation_jobs().into_iter().find(|j| j.label() == "Join Spark huge").unwrap();
+    let table = JobCostTable::build(&sim, &job, &space);
+    let features = space.feature_matrix();
+    let d = ruya::searchspace::N_FEATURES;
+    let m = space.len();
+    let phases = vec![(0..m).collect::<Vec<_>>()];
+    let params = BoParams { max_iters: 20, ..Default::default() };
+
+    let run = |backend: &mut dyn GpBackend| {
+        let mut rng = Pcg64::from_seed(2024);
+        let costs = table.normalized.clone();
+        let mut oracle = |i: usize| costs[i];
+        ruya::bayesopt::run_search(&features, m, d, &phases, &mut oracle, backend, &mut rng, &params)
+            .unwrap()
+    };
+    let mut native = backend_by_name("native").unwrap();
+    let mut xla = backend_by_name("xla").unwrap();
+    let tn = run(native.as_mut());
+    let tx = run(xla.as_mut());
+    // f32-vs-f64 rounding may eventually fork the trajectory; the first
+    // several proposals must match exactly.
+    assert_eq!(tn.tried[..8], tx.tried[..8], "early trajectory diverged");
+}
+
+/// The experiment harness end-to-end on a small slice with both methods.
+#[test]
+fn experiment_slice_runs_and_reports() {
+    let mut backend = NativeBackend::new();
+    let mut runner = ExperimentRunner::new(&mut backend);
+    let cfg = ExperimentConfig { reps: 4, seed: 9, curve_len: 20 };
+    let job = evaluation_jobs().into_iter().find(|j| j.label() == "Terasort Hadoop huge").unwrap();
+    let cmp = runner.compare_job(&job, &cfg).unwrap();
+    assert_eq!(cmp.category, MemCategory::Flat);
+    for k in 0..3 {
+        assert!(cmp.cherrypick.iters_to[k] >= 1.0);
+        assert!(cmp.ruya.iters_to[k] >= 1.0);
+    }
+    // Thresholds are nested: iterations to 1.0 >= to 1.1 >= to 1.2.
+    for s in [&cmp.cherrypick, &cmp.ruya] {
+        assert!(s.iters_to[2] >= s.iters_to[1] - 1e-9);
+        assert!(s.iters_to[1] >= s.iters_to[0] - 1e-9);
+    }
+}
+
+/// Plans derived from different profiling seeds stay structurally stable
+/// (categories do not flap, priority-group size barely moves).
+#[test]
+fn plans_stable_across_profiling_seeds() {
+    let profiler = SingleNodeProfiler::default();
+    let planner = RuyaPlanner::default();
+    let space = SearchSpace::scout();
+    let job = evaluation_jobs().into_iter().find(|j| j.label() == "K-Means Spark bigdata").unwrap();
+    let mut sizes = Vec::new();
+    for seed in 0..6 {
+        let outcome = profiler.profile(&job, seed);
+        let model = MemoryModel::fit(&outcome.readings());
+        assert_eq!(model.category, MemCategory::Linear, "seed {seed}");
+        let plan = planner.plan(&model, job.input_gb, &space);
+        sizes.push(plan.phases[0].len());
+    }
+    let min = *sizes.iter().min().unwrap();
+    let max = *sizes.iter().max().unwrap();
+    assert!(max - min <= 3, "priority group unstable across seeds: {sizes:?}");
+}

@@ -1,0 +1,184 @@
+//! Property-based tests on the Gaussian-process layer: posterior
+//! well-posedness, EI soundness, and agreement between the native GP and
+//! first principles.
+
+use ruya::bayesopt::gp::{
+    cholesky_in_place, expected_improvement, matern52, solve_lower_in_place,
+    solve_upper_t_in_place, standardize, NativeGp,
+};
+use ruya::prop_assert;
+use ruya::testkit::{property, Gen};
+
+fn random_points(g: &mut Gen, n: usize, d: usize) -> Vec<f64> {
+    g.vec_f64(n * d, 0.0, 1.0)
+}
+
+#[test]
+fn prop_kernel_bounds_and_symmetry() {
+    property("matern52 is symmetric, positive, bounded by variance", 200, |g| {
+        let d = g.usize_in(1, 8);
+        let a = g.vec_f64(d, -3.0, 3.0);
+        let b = g.vec_f64(d, -3.0, 3.0);
+        let ls = g.f64_in(0.05, 5.0);
+        let var = g.f64_in(0.1, 10.0);
+        let kab = matern52(&a, &b, ls, var);
+        let kba = matern52(&b, &a, ls, var);
+        prop_assert!((kab - kba).abs() < 1e-12, "asymmetric: {kab} vs {kba}");
+        prop_assert!(kab > 0.0, "non-positive kernel {kab}");
+        prop_assert!(kab <= var + 1e-12, "kernel {kab} exceeds variance {var}");
+        let kaa = matern52(&a, &a, ls, var);
+        prop_assert!((kaa - var).abs() < 1e-9, "diagonal {kaa} != variance {var}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gram_cholesky_succeeds_with_noise() {
+    property("noisy Matern Gram matrices are SPD", 60, |g| {
+        let n = g.usize_in(1, 24);
+        let d = g.usize_in(1, 6);
+        let x = random_points(g, n, d);
+        let ls = g.f64_in(0.1, 2.0);
+        let noise = g.f64_in(1e-6, 1e-1);
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = matern52(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d], ls, 1.0);
+            }
+            k[i * n + i] += noise;
+        }
+        prop_assert!(cholesky_in_place(&mut k, n), "cholesky failed at n={n} noise={noise}");
+        // Diagonal of L is positive.
+        for i in 0..n {
+            prop_assert!(k[i * n + i] > 0.0, "non-positive pivot");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_triangular_solves_invert() {
+    property("forward+backward substitution solve L L^T x = b", 80, |g| {
+        let n = g.usize_in(1, 20);
+        // Build L lower-triangular with positive diagonal.
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..i {
+                l[i * n + j] = g.f64_in(-1.0, 1.0);
+            }
+            l[i * n + i] = g.f64_in(0.5, 2.0);
+        }
+        let b = g.vec_f64(n, -5.0, 5.0);
+        let mut x = b.clone();
+        solve_lower_in_place(&l, n, &mut x);
+        solve_upper_t_in_place(&l, n, &mut x);
+        // Check A x = b with A = L L^T.
+        for i in 0..n {
+            let mut s = 0.0;
+            for j in 0..n {
+                let mut a_ij = 0.0;
+                for k in 0..=i.min(j) {
+                    a_ij += l[i * n + k] * l[j * n + k];
+                }
+                s += a_ij * x[j];
+            }
+            prop_assert!((s - b[i]).abs() < 1e-6, "residual {} at row {i}", s - b[i]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_posterior_well_posed() {
+    property("posterior: finite mean, 0 <= var <= prior", 40, |g| {
+        let n = g.usize_in(1, 20);
+        let d = 6;
+        let x = random_points(g, n, d);
+        let y = g.vec_f64(n, 0.5, 5.0);
+        let ls = g.f64_in(0.1, 2.0);
+        let var = g.f64_in(0.5, 3.0);
+        let noise = g.f64_in(1e-5, 1e-1);
+        let mut gp = NativeGp::new();
+        prop_assert!(gp.fit(&x, &y, n, d, [ls, var, noise]), "fit failed");
+        for _ in 0..10 {
+            let xc = g.vec_f64(d, -0.5, 1.5);
+            let (mu, v) = gp.predict(&xc);
+            prop_assert!(mu.is_finite(), "non-finite mean");
+            prop_assert!((0.0..=var + 1e-6).contains(&v), "variance {v} outside [0, {var}]");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_posterior_shrinks_near_observations() {
+    property("variance at an observation < variance far away", 40, |g| {
+        let n = g.usize_in(2, 15);
+        let d = 6;
+        let x = random_points(g, n, d);
+        let y = g.vec_f64(n, 0.5, 5.0);
+        let mut gp = NativeGp::new();
+        prop_assert!(gp.fit(&x, &y, n, d, [0.5, 1.0, 1e-4]), "fit failed");
+        let (_, v_at) = gp.predict(&x[0..d].to_vec());
+        let far = vec![25.0; d];
+        let (_, v_far) = gp.predict(&far);
+        prop_assert!(v_at < v_far, "no shrinkage: {v_at} vs {v_far}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ei_sound() {
+    property("EI >= 0, zero when dominated & certain, monotone in best", 200, |g| {
+        let mu = g.f64_in(-3.0, 3.0);
+        let var = g.f64_in(0.0, 4.0);
+        let best1 = g.f64_in(-3.0, 3.0);
+        let best2 = best1 + g.f64_in(0.0, 2.0);
+        let e1 = expected_improvement(mu, var, best1);
+        let e2 = expected_improvement(mu, var, best2);
+        prop_assert!(e1 >= 0.0 && e2 >= 0.0, "negative EI");
+        // A worse incumbent (higher best cost) can only increase EI.
+        prop_assert!(e2 >= e1 - 1e-12, "EI not monotone in incumbent: {e1} vs {e2}");
+        if var == 0.0 && mu >= best1 {
+            prop_assert!(e1 == 0.0, "dominated certain point has EI {e1}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_standardize_is_affine_inverse() {
+    property("standardize returns an affine transform of the input", 100, |g| {
+        let n = g.usize_in(2, 30);
+        let y = g.vec_f64(n, -10.0, 10.0);
+        let (z, m, s) = standardize(&y);
+        prop_assert!(s > 0.0, "non-positive scale");
+        for (zi, yi) in z.iter().zip(&y) {
+            prop_assert!((zi * s + m - yi).abs() < 1e-9, "roundtrip failed");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gp_interpolates_with_tiny_noise() {
+    property("posterior mean ~= y at training points", 30, |g| {
+        let n = g.usize_in(2, 12);
+        let d = 6;
+        // Well-separated points to keep the Gram well-conditioned.
+        let mut x = Vec::with_capacity(n * d);
+        for i in 0..n {
+            for j in 0..d {
+                x.push(i as f64 / n as f64 + 0.03 * ((i * d + j) as f64).sin());
+            }
+        }
+        let y = g.vec_f64(n, 0.0, 3.0);
+        let mut gp = NativeGp::new();
+        prop_assert!(gp.fit(&x, &y, n, d, [0.7, 1.0, 1e-9]), "fit failed");
+        for i in 0..n {
+            let (mu, _) = gp.predict(&x[i * d..(i + 1) * d].to_vec());
+            prop_assert!((mu - y[i]).abs() < 1e-2, "no interpolation: {mu} vs {}", y[i]);
+        }
+        Ok(())
+    });
+}

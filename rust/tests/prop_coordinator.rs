@@ -1,0 +1,230 @@
+//! Property-based tests on the coordinator invariants (DESIGN.md §9),
+//! using the in-tree `testkit` harness (proptest is unavailable offline).
+
+use ruya::bayesopt::{run_search, BoParams, NativeBackend};
+use ruya::coordinator::RuyaPlanner;
+use ruya::memmodel::MemoryModel;
+use ruya::prop_assert;
+use ruya::searchspace::SearchSpace;
+use ruya::testkit::{property, Gen};
+use ruya::util::rng::Pcg64;
+
+/// Random synthetic cost surface over the scout space: smooth component
+/// over the feature encoding plus noise — enough structure for BO without
+/// depending on the workload simulator.
+fn synth_costs(g: &mut Gen, space: &SearchSpace) -> Vec<f64> {
+    let w: Vec<f64> = (0..ruya::searchspace::N_FEATURES).map(|_| g.f64_in(-2.0, 2.0)).collect();
+    let noise = g.f64_in(0.0, 0.3);
+    let mut costs: Vec<f64> = (0..space.len())
+        .map(|i| {
+            let f = space.features(i);
+            let s: f64 = f.iter().zip(&w).map(|(a, b)| a * b).sum();
+            (s.sin() + 2.5) + noise * g.rng().next_gaussian().abs()
+        })
+        .collect();
+    let min = costs.iter().cloned().fold(f64::MAX, f64::min);
+    for c in costs.iter_mut() {
+        *c /= min;
+    }
+    costs
+}
+
+/// Random memory model via random readings.
+fn synth_model(g: &mut Gen) -> MemoryModel {
+    let kind = g.usize_in(0, 2);
+    let readings: Vec<(f64, f64)> = (1..=5)
+        .map(|k| {
+            let x = k as f64;
+            let y = match kind {
+                0 => 2.0 * x + 0.001 * g.rng().next_gaussian(), // linear
+                1 => 1.2 + 0.02 * g.rng().next_gaussian(),      // flat
+                _ => 2.0 * x * (1.0 + 0.6 * g.rng().next_gaussian().abs()), // erratic
+            };
+            (x, y.max(0.01))
+        })
+        .collect();
+    MemoryModel::fit(&readings)
+}
+
+#[test]
+fn prop_plans_partition_space() {
+    let space = SearchSpace::scout();
+    let planner = RuyaPlanner::default();
+    property("plan phases partition the space", 80, |g| {
+        let model = synth_model(g);
+        let input_gb = g.f64_in(1.0, 400.0);
+        let plan = planner.plan(&model, input_gb, &space);
+        let mut all: Vec<usize> = plan.phases.concat();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..space.len()).collect();
+        prop_assert!(all == expect, "phases do not partition: {} indices", all.len());
+        prop_assert!(
+            plan.phases.iter().all(|p| !p.is_empty()),
+            "empty phase in plan"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_priority_groups_respect_predicates() {
+    let space = SearchSpace::scout();
+    let planner = RuyaPlanner::default();
+    property("priority groups respect their predicate", 60, |g| {
+        let model = synth_model(g);
+        let input_gb = g.f64_in(1.0, 400.0);
+        let plan = planner.plan(&model, input_gb, &space);
+        match plan.category {
+            ruya::memmodel::MemCategory::Linear => {
+                if let Some(req) = plan.requirement_gb {
+                    let satisfiable = !space.with_usable_memory_at_least(req * (1.0 + planner.leeway)).is_empty();
+                    if satisfiable && plan.phases.len() == 2 {
+                        for &i in &plan.phases[0] {
+                            prop_assert!(
+                                space.config(i).usable_memory_gb() >= req,
+                                "priority config {i} below requirement {req}"
+                            );
+                        }
+                    }
+                }
+            }
+            ruya::memmodel::MemCategory::Flat => {
+                prop_assert!(
+                    plan.phases[0].len() == planner.flat_group_size.min(space.len()),
+                    "flat priority size {}",
+                    plan.phases[0].len()
+                );
+            }
+            ruya::memmodel::MemCategory::Unclear => {
+                prop_assert!(plan.phases.len() == 1, "unclear must not split");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_search_never_repeats_and_terminates() {
+    let space = SearchSpace::scout();
+    let features = space.feature_matrix();
+    let m = space.len();
+    let d = ruya::searchspace::N_FEATURES;
+    property("search tries each config at most once and exhausts", 15, |g| {
+        let costs = synth_costs(g, &space);
+        let seed = g.rng().next_u64();
+        let mut backend = NativeBackend::new();
+        let mut rng = Pcg64::from_seed(seed);
+        let phases = vec![(0..m).collect::<Vec<_>>()];
+        let params = BoParams { max_iters: m, ..Default::default() };
+        let mut oracle = |i: usize| costs[i];
+        let out =
+            run_search(&features, m, d, &phases, &mut oracle, &mut backend, &mut rng, &params)
+                .map_err(|e| e.to_string())?;
+        let mut seen = out.tried.clone();
+        seen.sort_unstable();
+        let dups = seen.windows(2).filter(|w| w[0] == w[1]).count();
+        prop_assert!(dups == 0, "{dups} duplicate executions");
+        prop_assert!(out.tried.len() == m, "search did not exhaust: {}", out.tried.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_best_so_far_monotone_and_reaches_optimum() {
+    let space = SearchSpace::scout();
+    let features = space.feature_matrix();
+    let m = space.len();
+    let d = ruya::searchspace::N_FEATURES;
+    property("best-so-far is monotone and ends at 1.0", 12, |g| {
+        let costs = synth_costs(g, &space);
+        let mut backend = NativeBackend::new();
+        let mut rng = Pcg64::from_seed(g.rng().next_u64());
+        // Random two-phase plan.
+        let k = g.usize_in(1, m - 1);
+        let priority = g.subset(m, k);
+        let inp: Vec<bool> = {
+            let mut f = vec![false; m];
+            for &i in &priority {
+                f[i] = true;
+            }
+            f
+        };
+        let rest: Vec<usize> = (0..m).filter(|&i| !inp[i]).collect();
+        let phases = vec![priority, rest];
+        let params = BoParams { max_iters: m, ..Default::default() };
+        let mut oracle = |i: usize| costs[i];
+        let out =
+            run_search(&features, m, d, &phases, &mut oracle, &mut backend, &mut rng, &params)
+                .map_err(|e| e.to_string())?;
+        let mut best = f64::INFINITY;
+        for (t, &c) in out.costs.iter().enumerate() {
+            prop_assert!(c >= 1.0 - 1e-12, "normalized cost {c} < 1 at step {t}");
+            best = best.min(c);
+        }
+        prop_assert!((best - 1.0).abs() < 1e-9, "optimum missed, best {best}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_phase_order_respected() {
+    let space = SearchSpace::scout();
+    let features = space.feature_matrix();
+    let m = space.len();
+    let d = ruya::searchspace::N_FEATURES;
+    property("phase 1 fully precedes phase 2", 12, |g| {
+        let costs = synth_costs(g, &space);
+        let k = g.usize_in(2, 20);
+        let priority = g.subset(m, k);
+        let inp: Vec<bool> = {
+            let mut f = vec![false; m];
+            for &i in &priority {
+                f[i] = true;
+            }
+            f
+        };
+        let rest: Vec<usize> = (0..m).filter(|&i| !inp[i]).collect();
+        let mut backend = NativeBackend::new();
+        let mut rng = Pcg64::from_seed(g.rng().next_u64());
+        let phases = vec![priority.clone(), rest];
+        let params = BoParams { max_iters: m, ..Default::default() };
+        let mut oracle = |i: usize| costs[i];
+        let out =
+            run_search(&features, m, d, &phases, &mut oracle, &mut backend, &mut rng, &params)
+                .map_err(|e| e.to_string())?;
+        for (t, &idx) in out.tried.iter().enumerate() {
+            if t < priority.len() {
+                prop_assert!(
+                    priority.contains(&idx),
+                    "execution {t} ({idx}) escaped the priority phase"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_seed_determinism() {
+    let space = SearchSpace::scout();
+    let features = space.feature_matrix();
+    let m = space.len();
+    let d = ruya::searchspace::N_FEATURES;
+    property("identical seeds give identical traces", 8, |g| {
+        let costs = synth_costs(g, &space);
+        let seed = g.rng().next_u64();
+        let phases = vec![(0..m).collect::<Vec<_>>()];
+        let params = BoParams { max_iters: 25, ..Default::default() };
+        let mut run = || {
+            let mut backend = NativeBackend::new();
+            let mut rng = Pcg64::from_seed(seed);
+            let mut oracle = |i: usize| costs[i];
+            run_search(&features, m, d, &phases, &mut oracle, &mut backend, &mut rng, &params)
+                .map_err(|e| e.to_string())
+        };
+        let a = run()?;
+        let b = run()?;
+        prop_assert!(a.tried == b.tried, "nondeterministic trace");
+        Ok(())
+    });
+}

@@ -1,0 +1,164 @@
+//! Integration tests for the PJRT runtime layer: loading, compiling and
+//! executing the AOT artifacts, and validating the padding/masking
+//! contract shared with python/compile/model.py.
+//!
+//! All tests skip gracefully when `make artifacts` has not been run.
+
+use ruya::runtime::{GpExecutor, XlaRuntime, AOT_N_FEATURES};
+
+fn runtime_or_skip() -> Option<(XlaRuntime, GpExecutor)> {
+    if !XlaRuntime::artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let rt = XlaRuntime::new(XlaRuntime::default_artifact_dir()).expect("runtime");
+    let exec = GpExecutor::new(&rt).expect("compiling artifacts");
+    Some((rt, exec))
+}
+
+/// A tiny deterministic observation set used across the tests:
+/// y = sum of features, three points in [0,1]^6.
+fn toy_data() -> (Vec<f64>, Vec<f64>, usize) {
+    let x: Vec<f64> = vec![
+        0.1, 0.2, 0.3, 0.1, 0.2, 0.3, //
+        0.9, 0.8, 0.7, 0.9, 0.8, 0.7, //
+        0.5, 0.5, 0.5, 0.5, 0.5, 0.5, //
+    ];
+    let y: Vec<f64> = vec![1.2, 4.8, 3.0];
+    (x, y, 3)
+}
+
+fn toy_candidates() -> (Vec<f64>, Vec<f64>, usize) {
+    // 5 candidates: the 3 training points plus 2 fresh ones.
+    let (x, _, _) = toy_data();
+    let mut xc = x.clone();
+    xc.extend_from_slice(&[0.0; AOT_N_FEATURES]);
+    xc.extend_from_slice(&[1.0; AOT_N_FEATURES]);
+    (xc, vec![1.0; 5], 5)
+}
+
+#[test]
+fn artifacts_compile_and_execute() {
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let (x, y, n) = toy_data();
+    let (xc, cmask, m) = toy_candidates();
+    let d = exec.gp_ei(&x, &y, n, &xc, &cmask, m, [0.5, 1.0, 1e-4]).expect("gp_ei");
+    assert_eq!(d.ei.len(), m);
+    assert_eq!(d.mu.len(), m);
+    assert_eq!(d.var.len(), m);
+    assert!(d.ei.iter().all(|v| v.is_finite() && *v >= 0.0), "ei = {:?}", d.ei);
+    assert!(d.var.iter().all(|v| v.is_finite() && *v >= 0.0), "var = {:?}", d.var);
+}
+
+#[test]
+fn posterior_interpolates_observations() {
+    // With tiny noise, the posterior mean at a training point must be close
+    // to the observed value and its variance near zero.
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let (x, y, n) = toy_data();
+    let (xc, cmask, m) = toy_candidates();
+    let d = exec.gp_ei(&x, &y, n, &xc, &cmask, m, [0.5, 1.0, 1e-5]).expect("gp_ei");
+    for i in 0..n {
+        assert!(
+            (d.mu[i] - y[i]).abs() < 0.05,
+            "mu[{i}] = {} should be near y = {}",
+            d.mu[i],
+            y[i]
+        );
+        assert!(d.var[i] < 0.01, "var at training point = {}", d.var[i]);
+    }
+    // Fresh far-away candidate keeps close-to-prior variance.
+    assert!(d.var[4] > 0.1, "far candidate var = {}", d.var[4]);
+}
+
+#[test]
+fn candidate_mask_zeroes_ei() {
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let (x, y, n) = toy_data();
+    let (xc, mut cmask, m) = toy_candidates();
+    cmask[3] = 0.0;
+    cmask[4] = 0.0;
+    let d = exec.gp_ei(&x, &y, n, &xc, &cmask, m, [0.5, 1.0, 1e-4]).expect("gp_ei");
+    assert_eq!(d.ei[3], 0.0);
+    assert_eq!(d.ei[4], 0.0);
+}
+
+#[test]
+fn padding_is_invisible() {
+    // Padding the candidate list must not change results for live entries.
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let (x, y, n) = toy_data();
+    let (xc, cmask, m) = toy_candidates();
+    let hyp = [0.7, 1.3, 1e-3];
+    let d1 = exec.gp_ei(&x, &y, n, &xc, &cmask, m, hyp).expect("gp_ei");
+
+    let mut xc2 = xc.clone();
+    xc2.extend_from_slice(&[0.25; AOT_N_FEATURES]);
+    let mut cmask2 = cmask.clone();
+    cmask2.push(1.0);
+    let d2 = exec.gp_ei(&x, &y, n, &xc2, &cmask2, m + 1, hyp).expect("gp_ei");
+    for i in 0..m {
+        assert!((d1.mu[i] - d2.mu[i]).abs() < 1e-5);
+        assert!((d1.var[i] - d2.var[i]).abs() < 1e-5);
+        assert!((d1.ei[i] - d2.ei[i]).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn nll_prefers_true_lengthscale_family() {
+    // Data drawn from a smooth function should assign lower NLL to a
+    // moderate lengthscale than to a pathologically tiny one.
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let n = 12;
+    for i in 0..n {
+        let t = i as f64 / (n - 1) as f64;
+        let mut row = [0.0; AOT_N_FEATURES];
+        row[0] = t;
+        row[1] = 1.0 - t;
+        x.extend_from_slice(&row);
+        y.push((2.0 * t).sin());
+    }
+    let grid = [[0.01, 1.0, 1e-4], [0.5, 1.0, 1e-4], [1.0, 1.0, 1e-4]];
+    let nll = exec.gp_nll(&x, &y, n, &grid).expect("gp_nll");
+    assert_eq!(nll.len(), 3);
+    assert!(nll.iter().all(|v| v.is_finite()));
+    assert!(
+        nll[1] < nll[0],
+        "moderate lengthscale should beat tiny: {nll:?}"
+    );
+}
+
+#[test]
+fn nll_grid_matches_individual_calls() {
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let (x, y, n) = toy_data();
+    let grid = [[0.3, 1.0, 1e-3], [0.9, 2.0, 1e-2]];
+    let batch = exec.gp_nll(&x, &y, n, &grid).expect("batch");
+    for (i, h) in grid.iter().enumerate() {
+        let single = exec.gp_nll(&x, &y, n, &[*h]).expect("single");
+        assert!((batch[i] - single[0]).abs() < 1e-4, "{} vs {}", batch[i], single[0]);
+    }
+}
+
+#[test]
+fn executor_counts_calls() {
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let (x, y, n) = toy_data();
+    let (xc, cmask, m) = toy_candidates();
+    let before = exec.call_count();
+    exec.gp_ei(&x, &y, n, &xc, &cmask, m, [0.5, 1.0, 1e-4]).unwrap();
+    exec.gp_nll(&x, &y, n, &[[0.5, 1.0, 1e-4]]).unwrap();
+    assert_eq!(exec.call_count(), before + 2);
+}
+
+#[test]
+fn rejects_oversized_inputs() {
+    let Some((_rt, exec)) = runtime_or_skip() else { return };
+    let n = 65; // > AOT_N_OBS
+    let x = vec![0.0; n * AOT_N_FEATURES];
+    let y = vec![0.0; n];
+    let (xc, cmask, m) = toy_candidates();
+    assert!(exec.gp_ei(&x, &y, n, &xc, &cmask, m, [0.5, 1.0, 1e-4]).is_err());
+}
