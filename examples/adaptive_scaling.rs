@@ -11,13 +11,11 @@
 //!
 //! Run: `cargo run --release --example adaptive_scaling`
 
-use ruya::bayesopt::NativeBackend;
 use ruya::coordinator::{ExperimentRunner, SearchPlan};
 use ruya::workload::{evaluation_jobs, JobCostTable, JobInstance};
 
 fn main() -> anyhow::Result<()> {
-    let mut backend = NativeBackend::new();
-    let mut runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
 
     // Base job: K-Means, profiled ONCE at 100.8 GB.
     let base = evaluation_jobs()

@@ -11,11 +11,11 @@
 //! Produces the paper-vs-measured comparison recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example full_reproduction -- \
-//!        [--reps N] [--backend native|xla] [--out results/]`
+//!        [--reps N] [--backend native|xla] [--threads N] [--out results/]`
 //! Default reps: 200 with the native backend, 20 with the XLA backend
 //! (one PJRT call per iteration; same math, f32).
 
-use ruya::bayesopt::backend_by_name;
+use ruya::bayesopt::backend_factory_by_name;
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner};
 use ruya::report;
 use ruya::runtime::XlaRuntime;
@@ -38,12 +38,14 @@ fn main() -> anyhow::Result<()> {
         curve_len: 48,
     };
 
+    let threads = args.opt_threads();
     println!(
-        "=== Ruya full reproduction: 16 jobs x 2 methods x {} reps, backend {backend_name} ===\n",
+        "=== Ruya full reproduction: 16 jobs x 2 methods x {} reps, backend {backend_name}, \
+         {threads} thread(s) ===\n",
         cfg.reps
     );
-    let mut backend = backend_by_name(&backend_name)?;
-    let mut runner = ExperimentRunner::new(backend.as_mut());
+    let runner = ExperimentRunner::new(backend_factory_by_name(&backend_name)?)
+        .with_threads(threads);
 
     // Tables I and III (profiling phase).
     let summaries = runner.profile_all(cfg.seed);

@@ -12,7 +12,7 @@
 //!
 //! Run: `cargo run --release --example quickstart [-- --backend xla]`
 
-use ruya::bayesopt::backend_by_name;
+use ruya::bayesopt::backend_factory_by_name;
 use ruya::coordinator::{ExperimentRunner, SearchPlan};
 use ruya::util::cli::Args;
 use ruya::workload::{evaluation_jobs, JobCostTable};
@@ -20,8 +20,7 @@ use ruya::workload::{evaluation_jobs, JobCostTable};
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(&[]);
     let backend_name = args.opt_or("backend", "native");
-    let mut backend = backend_by_name(&backend_name)?;
-    let mut runner = ExperimentRunner::new(backend.as_mut());
+    let runner = ExperimentRunner::new(backend_factory_by_name(&backend_name)?);
 
     // The recurring job we need a cluster for: K-Means over ~100 GB.
     let job = evaluation_jobs()

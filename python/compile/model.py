@@ -170,9 +170,12 @@ def gp_predict(x, mask, hyp, l, alpha, xc):
     mu = ks @ alpha
     v = solve_lower(l, ks.T)  # [n, m]
     var_post = var - jnp.sum(v * v, axis=0)
-    # Latent variance floored at jitter scale; observation noise is NOT
-    # added (we rank configurations by latent cost, as CherryPick does).
-    return mu, jnp.maximum(var_post, 1e-9)
+    # Clamp only against negative cancellation; a genuinely collapsed
+    # posterior stays collapsed so expected_improvement's certain-branch
+    # (sigma <= 1e-12) is reachable — aligned with the native rust GP
+    # (bayesopt/gp.rs VAR_FLOOR). Observation noise is NOT added (we rank
+    # configurations by latent cost, as CherryPick does).
+    return mu, jnp.maximum(var_post, 0.0)
 
 
 def expected_improvement(mu, var, best, xi=0.0):

@@ -103,7 +103,7 @@ def numpy_gp(x, y, xc, ls, var, noise):
     mu = ks @ kinv_y
     v = np.linalg.solve(k, ks.T)
     var_post = var - np.einsum("ij,ji->i", ks, v)
-    return mu, np.maximum(var_post, 1e-9)
+    return mu, np.maximum(var_post, 0.0)
 
 
 class TestGpPosterior:

@@ -12,13 +12,12 @@
 #[path = "harness.rs"]
 mod harness;
 
-use ruya::bayesopt::NativeBackend;
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner};
 use ruya::workload::evaluation_jobs;
 
 const REPS: usize = 25;
 
-fn mean_iters(runner: &mut ExperimentRunner, labels: &[&str]) -> (f64, f64) {
+fn mean_iters(runner: &ExperimentRunner, labels: &[&str]) -> (f64, f64) {
     let cfg = ExperimentConfig { reps: REPS, seed: 0xC0FFEE, curve_len: 10 };
     let mut ruya = 0.0;
     let mut cp = 0.0;
@@ -37,10 +36,9 @@ fn main() {
 
     harness::section("ablation 1: flat priority-group size (iterations to optimum)");
     for size in [5usize, 10, 15, 20, 30] {
-        let mut backend = NativeBackend::new();
-        let mut runner = ExperimentRunner::new(&mut backend);
+        let mut runner = ExperimentRunner::native();
         runner.planner.flat_group_size = size;
-        let (ruya, cp) = mean_iters(&mut runner, &flat_jobs);
+        let (ruya, cp) = mean_iters(&runner, &flat_jobs);
         println!(
             "group size {size:2} ({:4.1}% of space): ruya {ruya:6.2}  cherrypick {cp:6.2}  quotient {:5.1}%",
             100.0 * size as f64 / 69.0,
@@ -51,10 +49,9 @@ fn main() {
 
     harness::section("ablation 2: linear-requirement leeway");
     for leeway in [0.0, 0.02, 0.05, 0.10, 0.25] {
-        let mut backend = NativeBackend::new();
-        let mut runner = ExperimentRunner::new(&mut backend);
+        let mut runner = ExperimentRunner::native();
         runner.planner.leeway = leeway;
-        let (ruya, cp) = mean_iters(&mut runner, &linear_jobs);
+        let (ruya, cp) = mean_iters(&runner, &linear_jobs);
         println!(
             "leeway {:4.0}%: ruya {ruya:6.2}  cherrypick {cp:6.2}  quotient {:5.1}%",
             leeway * 100.0,
@@ -65,10 +62,9 @@ fn main() {
 
     harness::section("ablation 3: extremes-fallback fraction (oversized requirements)");
     for frac in [0.05, 0.12, 0.25] {
-        let mut backend = NativeBackend::new();
-        let mut runner = ExperimentRunner::new(&mut backend);
+        let mut runner = ExperimentRunner::native();
         runner.planner.extremes_fraction = frac;
-        let (ruya, cp) = mean_iters(&mut runner, &["Naive Bayes Spark bigdata"]);
+        let (ruya, cp) = mean_iters(&runner, &["Naive Bayes Spark bigdata"]);
         println!(
             "extremes fraction {:4.0}%: ruya {ruya:6.2}  cherrypick {cp:6.2}  quotient {:5.1}%",
             frac * 100.0,

@@ -5,14 +5,12 @@
 #[path = "harness.rs"]
 mod harness;
 
-use ruya::bayesopt::NativeBackend;
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner};
 use ruya::report;
 
 fn main() {
     harness::section("Fig 4 + Fig 5 regeneration (25 reps, native backend)");
-    let mut backend = NativeBackend::new();
-    let mut runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let cfg = ExperimentConfig { reps: 25, seed: 0xC0FFEE, curve_len: 48 };
     let result = runner.run_table2(&cfg).expect("experiment");
 

@@ -5,7 +5,6 @@
 #[path = "harness.rs"]
 mod harness;
 
-use ruya::bayesopt::NativeBackend;
 use ruya::coordinator::ExperimentRunner;
 use ruya::memmodel::MemoryModel;
 use ruya::profiler::SingleNodeProfiler;
@@ -14,8 +13,7 @@ use ruya::workload::evaluation_jobs;
 
 fn main() {
     harness::section("Table I regeneration (profile -> categorize -> extrapolate)");
-    let mut backend = NativeBackend::new();
-    let runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let summaries = runner.profile_all(0xC0FFEE);
     println!("{}", report::render_table1(&summaries));
 

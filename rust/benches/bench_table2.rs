@@ -1,23 +1,22 @@
 //! Bench/regeneration target for **Table II** (iterations until a
 //! configuration with normalized cost c is found, CherryPick vs Ruya):
-//! runs a reduced-repetition version of the full experiment and times one
-//! complete seeded search per method.
+//! runs a reduced-repetition version of the full experiment, times one
+//! complete seeded search per method, and sweeps the parallel engine's
+//! worker count for the searches/second throughput record.
 //!
-//! Full-scale (200-rep) numbers: `ruya table2 --reps 200` or
-//! `examples/full_reproduction.rs`; recorded in EXPERIMENTS.md.
+//! Full-scale (200-rep) numbers: `ruya table2 --reps 200 [--threads N]`
+//! or `examples/full_reproduction.rs`; recorded in EXPERIMENTS.md.
 
 #[path = "harness.rs"]
 mod harness;
 
-use ruya::bayesopt::NativeBackend;
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner, SearchPlan};
 use ruya::report;
 use ruya::workload::{evaluation_jobs, JobCostTable};
 
 fn main() {
     harness::section("Table II regeneration (25 reps, native backend)");
-    let mut backend = NativeBackend::new();
-    let mut runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let cfg = ExperimentConfig { reps: 25, seed: 0xC0FFEE, curve_len: 48 };
     let result = runner.run_table2(&cfg).expect("experiment");
     println!("{}", report::render_table2(&result));
@@ -41,4 +40,39 @@ fn main() {
         seed += 1;
         std::hint::black_box(runner.run_one(&table, &ruya_plan, seed).unwrap());
     });
+
+    // The acceptance record for the parallel engine: a Table-II slice
+    // (4 jobs x 2 methods x 16 reps of full searches) at 1/2/4/8 worker
+    // threads. Results are bit-identical across the sweep; only the
+    // wall-clock moves.
+    harness::section("Table II throughput: repetition sharding (searches/sec)");
+    let slice = [
+        "K-Means Spark huge",
+        "Naive Bayes Spark huge",
+        "Terasort Hadoop huge",
+        "Join Spark bigdata",
+    ];
+    let jobs: Vec<_> = evaluation_jobs()
+        .into_iter()
+        .filter(|j| slice.contains(&j.label().as_str()))
+        .collect();
+    let sweep_cfg = ExperimentConfig { reps: 16, seed: 0xC0FFEE, curve_len: 48 };
+    let searches = jobs.len() * 2 * sweep_cfg.reps;
+    let mut serial_secs = None;
+    for threads in [1usize, 2, 4, 8] {
+        let sharded = ExperimentRunner::native().with_threads(threads);
+        let secs = harness::bench_throughput(
+            &format!("table2 slice ({} jobs), {threads} thread(s)", jobs.len()),
+            || {
+                for job in &jobs {
+                    std::hint::black_box(sharded.compare_job(job, &sweep_cfg).unwrap());
+                }
+                searches
+            },
+        );
+        match serial_secs {
+            None => serial_secs = Some(secs),
+            Some(base) => println!("{:44} speedup {:.2}x over serial", "", base / secs),
+        }
+    }
 }

@@ -5,14 +5,12 @@
 #[path = "harness.rs"]
 mod harness;
 
-use ruya::bayesopt::NativeBackend;
 use ruya::coordinator::ExperimentRunner;
 use ruya::report;
 
 fn main() {
     harness::section("Table III regeneration (simulated profiling wall-clock)");
-    let mut backend = NativeBackend::new();
-    let runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let summaries = runner.profile_all(0xC0FFEE);
     println!("{}", report::render_table3(&summaries));
 

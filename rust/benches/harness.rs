@@ -85,3 +85,22 @@ pub fn bench_fn<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
+
+/// Throughput measurement: run `f` once, take the number of work units it
+/// reports, and print units/second. Returns the wall-clock seconds so
+/// callers can derive speedups across configurations (the Table-II
+/// threads sweep).
+#[allow(dead_code)]
+pub fn bench_throughput<F: FnOnce() -> usize>(name: &str, f: F) -> f64 {
+    let t = Instant::now();
+    let units = f();
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "{:44} {:6} units in {:7.2} s  ->  {:8.2} units/s",
+        name,
+        units,
+        secs,
+        units as f64 / secs.max(1e-9)
+    );
+    secs
+}

@@ -51,18 +51,82 @@ pub trait GpBackend {
     fn name(&self) -> &'static str;
 }
 
+/// Creates one independent GP backend per evaluation worker. The
+/// parallel experiment engine calls the factory from inside each scoped
+/// worker thread, so the factory must be shareable (`Send + Sync`) but
+/// the backends it produces never cross a thread boundary and need no
+/// `Send` bound of their own (the PJRT-backed XLA backend is not
+/// thread-safe). Construction is fallible (the XLA backend loads and
+/// compiles artifacts); workers propagate the error instead of panicking.
+pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn GpBackend>> + Send + Sync>;
+
 /// Pure-rust backend (no artifacts needed).
 #[derive(Default)]
 pub struct NativeBackend {
     gp: NativeGp,
-    /// Pairwise-distance scratch shared across the hyperparameter grid
-    /// (hyperparameter-independent — computed once per nll_grid call).
+    /// Pairwise-distance cache shared across the hyperparameter grid
+    /// (hyperparameter-independent) *and* across BO iterations — see
+    /// [`Self::update_d2`].
     d2: Vec<f64>,
+    cache_x: Vec<f64>,
+    cache_n: usize,
+    cache_d: usize,
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Ensure `self.d2` holds the pairwise squared distances of `x`.
+    ///
+    /// The search loop appends exactly one observation per BO iteration
+    /// (and slides its window by one once a capacity-limited backend
+    /// saturates), so instead of recomputing all n² distances on every
+    /// `nll_grid`/`decide` call the cache grows or shifts by one
+    /// row+column. New entries use the same per-pair arithmetic as
+    /// [`pairwise_sqdist`](super::gp::pairwise_sqdist), keeping every
+    /// cached value bit-identical to a fresh computation.
+    fn update_d2(&mut self, x: &[f64], n: usize, d: usize) {
+        debug_assert_eq!(x.len(), n * d);
+        let (pn, pd) = (self.cache_n, self.cache_d);
+        let appended_one = pd == d && n == pn + 1 && x[..pn * d] == self.cache_x[..];
+        let slid_one =
+            pd == d && n == pn && n > 0 && x[..(n - 1) * d] == self.cache_x[d..];
+        if pd == d && pn == n && self.cache_x.as_slice() == x {
+            return; // exact hit (e.g. `decide` right after `nll_grid`)
+        } else if appended_one || slid_one {
+            let old = n - 1; // rows of the previous matrix that survive
+            let mut d2 = vec![0.0; n * n];
+            if appended_one {
+                for i in 0..old {
+                    d2[i * n..i * n + old].copy_from_slice(&self.d2[i * pn..i * pn + old]);
+                }
+            } else {
+                for i in 0..old {
+                    for j in 0..old {
+                        d2[i * n + j] = self.d2[(i + 1) * n + (j + 1)];
+                    }
+                }
+            }
+            let i = n - 1;
+            for j in 0..i {
+                let mut s = 0.0;
+                for k in 0..d {
+                    let diff = x[i * d + k] - x[j * d + k];
+                    s += diff * diff;
+                }
+                d2[i * n + j] = s;
+                d2[j * n + i] = s;
+            }
+            self.d2 = d2;
+        } else {
+            super::gp::pairwise_sqdist(x, n, d, &mut self.d2);
+        }
+        self.cache_x.clear();
+        self.cache_x.extend_from_slice(x);
+        self.cache_n = n;
+        self.cache_d = d;
     }
 }
 
@@ -78,17 +142,22 @@ impl GpBackend for NativeBackend {
         m: usize,
         hyp: [f64; 3],
     ) -> Result<Decision> {
-        anyhow::ensure!(self.gp.fit(x, y, n, d, hyp), "gram matrix not SPD");
+        self.update_d2(x, n, d);
+        anyhow::ensure!(
+            self.gp.fit_from_sqdist(x, y, n, d, &self.d2, hyp),
+            "gram matrix not SPD"
+        );
         let best = y.iter().cloned().fold(f64::INFINITY, f64::min);
-        let mut ei = Vec::with_capacity(m);
         let mut mu = Vec::with_capacity(m);
         let mut var = Vec::with_capacity(m);
-        for i in 0..m {
-            let (mi, vi) = self.gp.predict(&xc[i * d..(i + 1) * d]);
-            mu.push(mi);
-            var.push(vi);
-            ei.push(if cmask[i] { expected_improvement(mi, vi, best) } else { 0.0 });
-        }
+        // One batched solve over all candidate columns. No candidate mask
+        // is passed: the Decision contract exposes mu/var for *every*
+        // candidate (the XLA-parity tests and the search's exploration
+        // fallback read them) — only the EI respects `cmask`.
+        self.gp.predict_batch(xc, m, None, &mut mu, &mut var);
+        let ei = (0..m)
+            .map(|i| if cmask[i] { expected_improvement(mu[i], var[i], best) } else { 0.0 })
+            .collect();
         Ok(Decision { ei, mu, var })
     }
 
@@ -100,12 +169,12 @@ impl GpBackend for NativeBackend {
         d: usize,
         grid: &[[f64; 3]],
     ) -> Result<Vec<f64>> {
-        // Two levels of reuse across the grid (§Perf): the distance
-        // matrix is hyperparameter-independent (computed once), and the
-        // Gram matrix depends only on (lengthscale, variance) — grid
-        // entries that share them (the 4 noise levels per lengthscale)
-        // reuse one kernel build.
-        super::gp::pairwise_sqdist(x, n, d, &mut self.d2);
+        // Three levels of reuse across the grid (§Perf): the distance
+        // matrix is hyperparameter-independent (cached across BO
+        // iterations, see update_d2), and the Gram matrix depends only
+        // on (lengthscale, variance) — grid entries that share them (the
+        // 4 noise levels per lengthscale) reuse one kernel build.
+        self.update_d2(x, n, d);
         let mut out = vec![f64::INFINITY; grid.len()];
         let mut order: Vec<usize> = (0..grid.len()).collect();
         order.sort_by(|&a, &b| {
@@ -208,6 +277,30 @@ pub fn backend_by_name(name: &str) -> Result<Box<dyn GpBackend>> {
     }
 }
 
+/// Backend *factory* selection by name — the parallel experiment engine
+/// instantiates one backend per worker thread from this. The xla arm is
+/// validated with a cheap artifact probe so an obviously bad
+/// configuration fails at startup; the expensive PJRT client creation +
+/// artifact compilation happens once per worker, inside the worker.
+pub fn backend_factory_by_name(name: &str) -> Result<BackendFactory> {
+    match name {
+        "native" => {
+            Ok(Box::new(|| -> Result<Box<dyn GpBackend>> { Ok(Box::new(NativeBackend::new())) }))
+        }
+        "xla" => {
+            anyhow::ensure!(
+                XlaRuntime::artifacts_available(),
+                "XLA backend unavailable: AOT artifacts not found (run `make artifacts`; \
+                 the binary must also be built with the `xla-pjrt` feature)"
+            );
+            Ok(Box::new(|| -> Result<Box<dyn GpBackend>> {
+                Ok(Box::new(XlaBackend::from_default_artifacts()?))
+            }))
+        }
+        other => anyhow::bail!("unknown backend {other:?} (expected native|xla)"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,5 +332,64 @@ mod tests {
     #[test]
     fn backend_by_name_rejects_unknown() {
         assert!(backend_by_name("tpu").is_err());
+    }
+
+    #[test]
+    fn backend_factory_by_name_builds_native() {
+        let factory = backend_factory_by_name("native").unwrap();
+        assert_eq!(factory().unwrap().name(), "native");
+        assert!(backend_factory_by_name("tpu").is_err());
+    }
+
+    #[test]
+    fn decide_matches_per_row_predict() {
+        use crate::bayesopt::gp::NativeGp;
+        let n = 6;
+        let d = 3;
+        let x: Vec<f64> = (0..n * d).map(|i| ((i * 29 + 7) % 83) as f64 / 83.0).collect();
+        let y: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.43).sin()).collect();
+        let m = 9;
+        let xc: Vec<f64> = (0..m * d).map(|i| ((i * 31 + 11) % 97) as f64 / 97.0).collect();
+        let cmask: Vec<bool> = (0..m).map(|i| i % 3 != 0).collect();
+        let hyp = [0.7, 1.0, 1e-3];
+
+        let mut b = NativeBackend::new();
+        let dec = b.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+
+        let mut gp = NativeGp::new();
+        assert!(gp.fit(&x, &y, n, d, hyp));
+        let best = y.iter().cloned().fold(f64::INFINITY, f64::min);
+        for i in 0..m {
+            let (mu, var) = gp.predict(&xc[i * d..(i + 1) * d]);
+            assert!((dec.mu[i] - mu).abs() <= 1e-12, "mu[{i}]");
+            assert!((dec.var[i] - var).abs() <= 1e-12, "var[{i}]");
+            let ei = if cmask[i] { expected_improvement(mu, var, best) } else { 0.0 };
+            assert!((dec.ei[i] - ei).abs() <= 1e-12, "ei[{i}]");
+        }
+    }
+
+    #[test]
+    fn d2_cache_incremental_matches_fresh() {
+        let d = 3;
+        let rows: Vec<f64> = (0..11 * d).map(|i| (i as f64 * 0.37).sin()).collect();
+        let grid = [[0.5, 1.0, 1e-3]];
+        let mut b = NativeBackend::new();
+        // Growth path: one appended observation per call.
+        for n in 1..=10usize {
+            let x = &rows[..n * d];
+            let y: Vec<f64> = (0..n).map(|i| 0.1 * i as f64).collect();
+            b.nll_grid(x, &y, n, d, &grid).unwrap();
+            let mut fresh = Vec::new();
+            crate::bayesopt::gp::pairwise_sqdist(x, n, d, &mut fresh);
+            assert_eq!(b.d2, fresh, "grown cache diverged at n={n}");
+        }
+        // Sliding-window path: drop the oldest row, append a new one.
+        let n = 10;
+        let x: Vec<f64> = rows[d..(n + 1) * d].to_vec();
+        let y: Vec<f64> = (0..n).map(|i| 0.1 * i as f64).collect();
+        b.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let mut fresh = Vec::new();
+        crate::bayesopt::gp::pairwise_sqdist(&x, n, d, &mut fresh);
+        assert_eq!(b.d2, fresh, "slid cache diverged");
     }
 }

@@ -9,6 +9,13 @@ use crate::util::stats;
 pub const SQRT5: f64 = 2.23606797749979;
 /// Diagonal jitter matching python/compile/model.py.
 pub const JITTER: f64 = 1e-6;
+/// Posterior-variance floor: predictions clamp `k(x,x) - |v|^2` here so
+/// cancellation cannot produce a negative variance, but a genuinely
+/// collapsed posterior stays collapsed instead of being inflated.
+pub const VAR_FLOOR: f64 = 0.0;
+/// Below this posterior standard deviation [`expected_improvement`]
+/// switches to the exact certain-improvement formula.
+pub const EI_SIGMA_FLOOR: f64 = 1e-12;
 
 /// Matérn-5/2 covariance from a squared distance.
 #[inline]
@@ -126,10 +133,17 @@ fn erf_approx(x: f64) -> f64 {
 }
 
 /// Expected improvement for minimization.
+///
+/// The degenerate branch (`sigma <= EI_SIGMA_FLOOR`) treats the posterior
+/// as fully determined and returns the certain improvement `max(best -
+/// mu, 0)`. It is aligned with [`NativeGp::predict`]'s variance floor of
+/// [`VAR_FLOOR`]: a collapsed posterior reaches this branch instead of
+/// being inflated to a fake `sigma` of ~3e-5 (the old `1e-9` variance
+/// floor made the branch unreachable).
 pub fn expected_improvement(mu: f64, var: f64, best: f64) -> f64 {
     let sigma = var.max(0.0).sqrt();
     let delta = best - mu;
-    if sigma <= 1e-12 {
+    if sigma <= EI_SIGMA_FLOOR {
         return delta.max(0.0);
     }
     let z = delta / sigma;
@@ -153,6 +167,10 @@ pub struct NativeGp {
     ks_row: Vec<f64>,
     d2_scratch: Vec<f64>,
     kern_scratch: Vec<f64>,
+    // scratch for the batched prediction path (n x m cross-kernel block
+    // plus one accumulator row of width m)
+    ks_mat: Vec<f64>,
+    col_acc: Vec<f64>,
 }
 
 impl NativeGp {
@@ -253,7 +271,119 @@ impl NativeGp {
         // v = L^-1 ks; var = k(x,x) - |v|^2
         solve_lower_in_place(&self.chol, n, &mut self.ks_row);
         let v2: f64 = self.ks_row.iter().map(|v| v * v).sum();
-        (mu, (var - v2).max(1e-9))
+        (mu, (var - v2).max(VAR_FLOOR))
+    }
+
+    /// Posterior (mean, variance) for all `m` candidate rows at once.
+    ///
+    /// Builds the full `n x m` cross-kernel block once and runs a single
+    /// blocked forward-solve over every candidate column instead of `m`
+    /// independent [`predict`](Self::predict) calls with per-call
+    /// `ks_row` refills — the batched §Perf hot path behind
+    /// `NativeBackend::decide`. Per column the accumulation order matches
+    /// `predict` exactly, so the two paths agree bit-for-bit.
+    ///
+    /// `mask`: when given, only columns with `mask[j] == true` are
+    /// computed; masked columns skip all kernel and solve work and
+    /// receive the prior `(0.0, signal variance)`.
+    ///
+    /// `mu_out` / `var_out` are cleared and resized to `m`.
+    pub fn predict_batch(
+        &mut self,
+        xc: &[f64],
+        m: usize,
+        mask: Option<&[bool]>,
+        mu_out: &mut Vec<f64>,
+        var_out: &mut Vec<f64>,
+    ) {
+        let (ls, var, _) = (self.hyp[0], self.hyp[1], self.hyp[2]);
+        let n = self.n;
+        let d = self.d;
+        assert_eq!(xc.len(), m * d);
+        if let Some(ma) = mask {
+            assert_eq!(ma.len(), m);
+        }
+        mu_out.clear();
+        mu_out.resize(m, 0.0);
+        var_out.clear();
+        var_out.resize(m, var);
+        if n == 0 {
+            return;
+        }
+        let active: Vec<usize> = match mask {
+            None => (0..m).collect(),
+            Some(ma) => (0..m).filter(|&j| ma[j]).collect(),
+        };
+        let w = active.len();
+        if w == 0 {
+            return;
+        }
+
+        let mut ks = std::mem::take(&mut self.ks_mat);
+        let mut acc = std::mem::take(&mut self.col_acc);
+        ks.clear();
+        ks.resize(n * w, 0.0);
+        acc.clear();
+        acc.resize(w, 0.0);
+
+        // Cross-kernel block: row i = k(x_i, active candidates).
+        for i in 0..n {
+            let xi = &self.x[i * d..(i + 1) * d];
+            let row = &mut ks[i * w..(i + 1) * w];
+            for (c, &j) in active.iter().enumerate() {
+                row[c] = matern52(&xc[j * d..(j + 1) * d], xi, ls, var);
+            }
+        }
+
+        // mu = Ks^T alpha, accumulated in ascending observation order
+        // (the same order `predict` sums its dot product in).
+        for i in 0..n {
+            let a = self.alpha[i];
+            let row = &ks[i * w..(i + 1) * w];
+            for (c, &j) in active.iter().enumerate() {
+                mu_out[j] += row[c] * a;
+            }
+        }
+
+        // Blocked forward substitution: Z = L^-1 Ks, all columns at once.
+        // Row i: z_i = (ks_i - sum_{k<i} L[i,k] z_k) / L[i,i], with the
+        // inner sum accumulated per column in ascending k — exactly the
+        // arithmetic `solve_lower_in_place` performs per single column.
+        for i in 0..n {
+            for v in acc.iter_mut() {
+                *v = 0.0;
+            }
+            let (done, rest) = ks.split_at_mut(i * w);
+            let row_i = &mut rest[..w];
+            let l_row = &self.chol[i * n..i * n + i];
+            for (k, &l) in l_row.iter().enumerate() {
+                let zk = &done[k * w..(k + 1) * w];
+                for c in 0..w {
+                    acc[c] += l * zk[c];
+                }
+            }
+            let diag = self.chol[i * n + i];
+            for c in 0..w {
+                row_i[c] = (row_i[c] - acc[c]) / diag;
+            }
+        }
+
+        // var = k(x,x) - |z|^2 per column, ascending observation order.
+        for v in acc.iter_mut() {
+            *v = 0.0;
+        }
+        for i in 0..n {
+            let zi = &ks[i * w..(i + 1) * w];
+            for c in 0..w {
+                acc[c] += zi[c] * zi[c];
+            }
+        }
+        for (c, &j) in active.iter().enumerate() {
+            var_out[j] = (var - acc[c]).max(VAR_FLOOR);
+        }
+
+        self.ks_mat = ks;
+        self.col_acc = acc;
     }
 
     /// Negative log marginal likelihood of the fitted data.
@@ -266,10 +396,13 @@ impl NativeGp {
 }
 
 /// Standardize targets to zero mean / unit variance; returns
-/// (standardized, mean, std). Constant targets get std = 1.
+/// (standardized, mean, std). (Near-)constant targets get std = 1 so the
+/// standardized values are exactly ~zero instead of amplified rounding
+/// noise. (A former `.max(1e-12)` pre-clamp sat dead in front of this
+/// check — any value it produced was still below `1e-9`.)
 pub fn standardize(y: &[f64]) -> (Vec<f64>, f64, f64) {
     let m = stats::mean(y);
-    let s = stats::stddev(y).max(1e-12);
+    let s = stats::stddev(y);
     let s = if s < 1e-9 { 1.0 } else { s };
     (y.iter().map(|v| (v - m) / s).collect(), m, s)
 }
@@ -424,6 +557,87 @@ mod tests {
         gp.fit(&x, &y, n, d, [0.005, 1.0, 1e-4]);
         let nll_bad = gp.nll(&y);
         assert!(nll_good < nll_bad, "{nll_good} vs {nll_bad}");
+    }
+
+    #[test]
+    fn predict_batch_matches_predict() {
+        let n = 12;
+        let d = 4;
+        let x = grid_x(n, d);
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.61).cos()).collect();
+        let mut gp = NativeGp::new();
+        assert!(gp.fit(&x, &y, n, d, [0.6, 1.5, 1e-3]));
+        let m = 20;
+        let xc: Vec<f64> = (0..m * d).map(|i| ((i * 17 + 5) % 89) as f64 / 89.0).collect();
+        let mut mu = Vec::new();
+        let mut var = Vec::new();
+        gp.predict_batch(&xc, m, None, &mut mu, &mut var);
+        assert_eq!(mu.len(), m);
+        assert_eq!(var.len(), m);
+        for j in 0..m {
+            let (mu1, var1) = gp.predict(&xc[j * d..(j + 1) * d]);
+            assert!(
+                (mu[j] - mu1).abs() <= 1e-12 * mu1.abs().max(1.0),
+                "mu[{j}]: {} vs {}",
+                mu[j],
+                mu1
+            );
+            assert!((var[j] - var1).abs() <= 1e-12, "var[{j}]: {} vs {}", var[j], var1);
+        }
+    }
+
+    #[test]
+    fn predict_batch_mask_skips_columns() {
+        let n = 8;
+        let d = 3;
+        let x = grid_x(n, d);
+        let y: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64) * 0.2).collect();
+        let mut gp = NativeGp::new();
+        let signal = 1.5;
+        assert!(gp.fit(&x, &y, n, d, [0.5, signal, 1e-2]));
+        let m = 10;
+        let xc: Vec<f64> = (0..m * d).map(|i| ((i * 13 + 3) % 71) as f64 / 71.0).collect();
+        let mask: Vec<bool> = (0..m).map(|j| j % 2 == 0).collect();
+        let mut mu = Vec::new();
+        let mut var = Vec::new();
+        gp.predict_batch(&xc, m, Some(&mask), &mut mu, &mut var);
+        for j in 0..m {
+            if mask[j] {
+                let (mu1, var1) = gp.predict(&xc[j * d..(j + 1) * d]);
+                assert!((mu[j] - mu1).abs() <= 1e-12, "mu[{j}]");
+                assert!((var[j] - var1).abs() <= 1e-12, "var[{j}]");
+            } else {
+                // Masked columns skip all work and report the prior.
+                assert_eq!(mu[j], 0.0, "masked mu[{j}]");
+                assert_eq!(var[j], signal, "masked var[{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn ei_certain_path_reachable_through_predict() {
+        // A vanishing prior signal variance collapses every posterior
+        // variance; with the aligned floors `predict` reports the
+        // collapsed value (instead of inflating it to the old 1e-9) and
+        // `expected_improvement` takes the certain-improvement branch.
+        let d = 2;
+        let x = [0.1, 0.2, 0.8, 0.7];
+        let y = [2.0, 3.0];
+        let mut gp = NativeGp::new();
+        assert!(gp.fit(&x, &y, 2, d, [1.0, 1e-30, 0.0]));
+        let (mu, var) = gp.predict(&[0.1, 0.2]);
+        assert!(var <= 1e-24, "posterior variance {var} not collapsed");
+        let best = 2.0;
+        let ei = expected_improvement(mu, var, best);
+        assert_eq!(ei, (best - mu).max(0.0), "EI must equal the certain improvement");
+        assert!(ei > 1.0, "certain improvement should be ~{best}, got {ei}");
+    }
+
+    #[test]
+    fn standardize_near_constant_uses_unit_scale() {
+        let (z, _, s) = standardize(&[5.0, 5.0 + 1e-10, 5.0]);
+        assert_eq!(s, 1.0);
+        assert!(z.iter().all(|v| v.abs() < 1e-9));
     }
 
     #[test]

@@ -7,5 +7,8 @@ pub mod backend;
 pub mod gp;
 pub mod search;
 
-pub use backend::{backend_by_name, Decision, GpBackend, NativeBackend, XlaBackend};
+pub use backend::{
+    backend_by_name, backend_factory_by_name, BackendFactory, Decision, GpBackend,
+    NativeBackend, XlaBackend,
+};
 pub use search::{hyperparameter_grid, run_search, BoParams, SearchOutcome};

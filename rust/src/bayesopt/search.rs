@@ -192,13 +192,19 @@ pub fn run_search(
 
             // Stopping criterion on the raw cost scale (CherryPick: stop
             // once expected savings drop below 10% of the best seen).
+            // Both the gate and the recorded stopping point count
+            // *executions performed* (`tried.len()`), not the windowed
+            // conditioning count `n`: under a capacity-limited backend
+            // (`max_obs`) the two diverge — the old code under-reported
+            // the stop index consumed by the Fig. 5 curves, and could
+            // never fire at all when `max_obs < min_obs_for_stop`.
             let best_cost = costs.iter().cloned().fold(f64::INFINITY, f64::min);
             let ei_max_raw = ei_max_std * y_scale;
             if stop_after.is_none()
-                && n >= params.min_obs_for_stop
+                && tried.len() >= params.min_obs_for_stop
                 && ei_max_raw < params.ei_stop_rel * best_cost
             {
-                stop_after = Some(n);
+                stop_after = Some(tried.len());
                 if params.enforce_stop {
                     break 'phases;
                 }
@@ -364,6 +370,50 @@ mod tests {
         let phases = vec![vec![7usize], (0..40).filter(|&i| i != 7).collect()];
         let out = run_toy(&phases, 9, &BoParams::default());
         assert_eq!(out.tried[0], 7, "single-config priority must be tried first");
+    }
+
+    #[test]
+    fn windowed_backend_stop_counts_executions() {
+        use crate::testkit::CappedBackend;
+        // Regression: `stop_after` used to record the windowed observation
+        // count (`tried.len().min(max_obs)`) instead of executions
+        // performed — under-reporting the stopping point, and (because the
+        // gate used the same windowed count) never firing at all once
+        // `max_obs < min_obs_for_stop`.
+        let m = 40;
+        let (features, costs) = toy_space(m);
+        let phases = vec![(0..m).collect::<Vec<_>>()];
+        let cap = 8;
+        let min_stop = 10; // above the window: the old gate can never pass
+        let mut fired = 0;
+        for seed in 0..10u64 {
+            let run = |enforce: bool| {
+                let mut backend = CappedBackend::new(NativeBackend::new(), cap);
+                let mut rng = Pcg64::from_seed(seed);
+                let mut oracle = |i: usize| costs[i];
+                let params = BoParams {
+                    min_obs_for_stop: min_stop,
+                    ei_stop_rel: 0.5,
+                    enforce_stop: enforce,
+                    ..Default::default()
+                };
+                run_search(&features, m, 6, &phases, &mut oracle, &mut backend, &mut rng, &params)
+                    .expect("windowed search")
+            };
+            let out = run(false);
+            if let Some(stop) = out.stop_after {
+                fired += 1;
+                assert!(stop >= min_stop, "stop {stop} below the execution gate");
+                assert!(stop > cap, "stop {stop} capped at the backend window");
+                // The enforced run under the same seed must end exactly at
+                // the recorded stopping point with an identical prefix.
+                let enf = run(true);
+                assert_eq!(enf.tried.len(), stop, "enforced stop diverges from recorded stop");
+                assert_eq!(enf.stop_after, Some(stop));
+                assert_eq!(out.tried[..stop], enf.tried[..]);
+            }
+        }
+        assert!(fired > 0, "stopping criterion never fired under the windowed backend");
     }
 
     #[test]

@@ -74,7 +74,6 @@ impl CrispySelector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bayesopt::NativeBackend;
     use crate::coordinator::ExperimentRunner;
     use crate::workload::{evaluation_jobs, JobCostTable};
 
@@ -113,8 +112,7 @@ mod tests {
         // Crispy's one-shot pick should land well below the space's mean
         // cost for most jobs — but (being search-free) above the optimum
         // Ruya's iteration finds. This quantifies what iterating adds.
-        let mut backend = NativeBackend::new();
-        let runner = ExperimentRunner::new(&mut backend);
+        let runner = ExperimentRunner::native();
         let selector = CrispySelector::default();
         let mut regrets = Vec::new();
         for job in evaluation_jobs() {

@@ -8,9 +8,18 @@
 //! averaged over repetitions. Searches run to exhaustion (the stopping
 //! criterion is recorded, not enforced) exactly like the paper's
 //! iterations-to-reach metric.
+//!
+//! **Parallel engine:** repetitions are independent seeded searches, so
+//! they shard across `threads` scoped workers. Each worker instantiates
+//! its own GP backend from the runner's [`BackendFactory`]; repetition
+//! `r` always uses the seed `seed_base + r * 7919` and outcomes are
+//! folded back in repetition order, so every aggregate is bit-identical
+//! to the serial engine regardless of the worker count.
 
 use super::planner::{RuyaPlanner, SearchPlan};
-use crate::bayesopt::{run_search, BoParams, GpBackend, SearchOutcome};
+use crate::bayesopt::{
+    run_search, BackendFactory, BoParams, GpBackend, NativeBackend, SearchOutcome,
+};
 use crate::memmodel::{MemCategory, MemoryModel};
 use crate::profiler::SingleNodeProfiler;
 use crate::searchspace::SearchSpace;
@@ -93,25 +102,48 @@ pub struct ProfileSummary {
     pub profiling_time_s: f64,
 }
 
-/// The experiment driver. Owns the simulated substrate and drives a
-/// [`GpBackend`] through every search.
-pub struct ExperimentRunner<'a> {
+/// The experiment driver. Owns the simulated substrate and instantiates
+/// one [`GpBackend`] per evaluation worker from its factory.
+pub struct ExperimentRunner {
     pub space: SearchSpace,
     pub sim: ClusterSim,
     pub profiler: SingleNodeProfiler,
     pub planner: RuyaPlanner,
-    pub backend: &'a mut dyn GpBackend,
+    /// Worker threads for repetition sharding (1 = serial). Results are
+    /// bit-identical for every value.
+    pub threads: usize,
+    factory: BackendFactory,
 }
 
-impl<'a> ExperimentRunner<'a> {
-    pub fn new(backend: &'a mut dyn GpBackend) -> Self {
+impl ExperimentRunner {
+    pub fn new(factory: BackendFactory) -> Self {
         Self {
             space: SearchSpace::scout(),
             sim: ClusterSim::default(),
             profiler: SingleNodeProfiler::default(),
             planner: RuyaPlanner::default(),
-            backend,
+            threads: 1,
+            factory,
         }
+    }
+
+    /// Runner over the pure-rust backend — the common case in tests,
+    /// benches and examples.
+    pub fn native() -> Self {
+        Self::new(Box::new(|| -> Result<Box<dyn GpBackend>> {
+            Ok(Box::new(NativeBackend::new()))
+        }))
+    }
+
+    /// Set the repetition-sharding worker count (builder style).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// One backend instance from the runner's factory.
+    pub fn make_backend(&self) -> Result<Box<dyn GpBackend>> {
+        (self.factory)()
     }
 
     /// Profile one job and fit its memory model (Table I / III rows).
@@ -131,9 +163,22 @@ impl<'a> ExperimentRunner<'a> {
         evaluation_jobs().iter().map(|j| self.profile_job(j, seed)).collect()
     }
 
-    /// Run one search for `job` under `plan` with a per-repetition seed.
+    /// Run one search for `job` under `plan` with a per-repetition seed,
+    /// on a fresh backend from the factory.
     pub fn run_one(
-        &mut self,
+        &self,
+        table: &JobCostTable,
+        plan: &SearchPlan,
+        rep_seed: u64,
+    ) -> Result<SearchOutcome> {
+        let mut backend = (self.factory)()?;
+        self.run_one_with(backend.as_mut(), table, plan, rep_seed)
+    }
+
+    /// Run one search on a caller-provided backend (reuse across calls).
+    pub fn run_one_with(
+        &self,
+        backend: &mut dyn GpBackend,
         table: &JobCostTable,
         plan: &SearchPlan,
         rep_seed: u64,
@@ -143,17 +188,13 @@ impl<'a> ExperimentRunner<'a> {
         let d = crate::searchspace::N_FEATURES;
         let params = BoParams { max_iters: m, ..Default::default() };
         let mut rng = Pcg64::from_seed(rep_seed);
-        let costs = table.normalized.clone();
+        let costs = &table.normalized;
         let mut oracle = |i: usize| costs[i];
-        run_search(&features, m, d, &plan.phases, &mut oracle, self.backend, &mut rng, &params)
+        run_search(&features, m, d, &plan.phases, &mut oracle, backend, &mut rng, &params)
     }
 
     /// Compare CherryPick and Ruya on one job over `cfg.reps` repetitions.
-    pub fn compare_job(
-        &mut self,
-        job: &JobInstance,
-        cfg: &ExperimentConfig,
-    ) -> Result<JobComparison> {
+    pub fn compare_job(&self, job: &JobInstance, cfg: &ExperimentConfig) -> Result<JobComparison> {
         let table = JobCostTable::build(&self.sim, job, &self.space);
         let profile = self.profile_job(job, cfg.seed);
         let ruya_plan = self.planner.plan(&profile.model, job.input_gb, &self.space);
@@ -172,28 +213,90 @@ impl<'a> ExperimentRunner<'a> {
         })
     }
 
+    /// Run `cfg.reps` seeded searches (repetition `r` uses seed
+    /// `seed_base + r * 7919`, the same formula as the serial engine),
+    /// sharded across `self.threads` scoped workers. Each worker owns one
+    /// backend from the factory; outcomes come back in repetition order,
+    /// so any downstream fold is independent of the worker count.
+    fn run_reps(
+        &self,
+        table: &JobCostTable,
+        plan: &SearchPlan,
+        cfg: &ExperimentConfig,
+        seed_base: u64,
+        params: &BoParams,
+    ) -> Result<Vec<SearchOutcome>> {
+        let features = self.space.feature_matrix();
+        let m = self.space.len();
+        let d = crate::searchspace::N_FEATURES;
+        let costs = &table.normalized;
+        let run_rep = move |backend: &mut dyn GpBackend, rep: usize| -> Result<SearchOutcome> {
+            let mut rng = Pcg64::from_seed(seed_base.wrapping_add(rep as u64 * 7919));
+            let mut oracle = |i: usize| costs[i];
+            run_search(&features, m, d, &plan.phases, &mut oracle, backend, &mut rng, params)
+        };
+
+        let workers = self.threads.min(cfg.reps).max(1);
+        if workers == 1 {
+            let mut backend = (self.factory)()?;
+            return (0..cfg.reps).map(|rep| run_rep(backend.as_mut(), rep)).collect();
+        }
+
+        let mut slots: Vec<Option<Result<SearchOutcome>>> = Vec::with_capacity(cfg.reps);
+        slots.resize_with(cfg.reps, || None);
+        let chunk = cfg.reps.div_ceil(workers);
+        let factory = &self.factory;
+        std::thread::scope(|scope| {
+            for (w, chunk_slots) in slots.chunks_mut(chunk).enumerate() {
+                let run_rep = &run_rep;
+                scope.spawn(move || {
+                    let mut backend = match factory() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            // Propagate as an error on this worker's
+                            // repetitions instead of panicking the scope.
+                            for (off, slot) in chunk_slots.iter_mut().enumerate() {
+                                *slot = Some(Err(anyhow::anyhow!(
+                                    "backend construction failed for repetition {}: {e:#}",
+                                    w * chunk + off
+                                )));
+                            }
+                            return;
+                        }
+                    };
+                    for (off, slot) in chunk_slots.iter_mut().enumerate() {
+                        *slot = Some(run_rep(backend.as_mut(), w * chunk + off));
+                    }
+                });
+            }
+        });
+        slots.into_iter().map(|s| s.expect("worker filled every slot")).collect()
+    }
+
     fn run_method(
-        &mut self,
+        &self,
         table: &JobCostTable,
         plan: &SearchPlan,
         cfg: &ExperimentConfig,
         seed_base: u64,
     ) -> Result<MethodStats> {
+        let params = BoParams { max_iters: self.space.len(), ..Default::default() };
+        let outs = self.run_reps(table, plan, cfg, seed_base, &params)?;
+
+        // Fold in repetition order: every sum visits the same terms in
+        // the same sequence as the serial engine, so the aggregates are
+        // bit-identical no matter how repetitions were sharded.
         let mut iters = [Vec::new(), Vec::new(), Vec::new()];
         let mut best_curve = vec![0.0; cfg.curve_len];
         let mut cum_curve = vec![0.0; cfg.curve_len];
         let mut stops = Vec::new();
-
-        for rep in 0..cfg.reps {
-            // Same rep -> same seed for both methods (paired comparison,
-            // as the paper's shared random-initialization protocol).
-            let out = self.run_one(table, plan, seed_base.wrapping_add(rep as u64 * 7919))?;
+        for out in &outs {
             for (k, &thr) in THRESHOLDS.iter().enumerate() {
                 // The search exhausts the space, so every threshold is
                 // eventually reached.
                 iters[k].push(out.first_within(thr).unwrap_or(out.tried.len()) as f64);
             }
-            accumulate_curves(&out, &mut best_curve, &mut cum_curve);
+            accumulate_curves(out, &mut best_curve, &mut cum_curve);
             stops.push(out.stop_after.unwrap_or(out.tried.len()) as f64);
         }
 
@@ -210,7 +313,7 @@ impl<'a> ExperimentRunner<'a> {
     }
 
     /// The full Table II experiment over all 16 jobs.
-    pub fn run_table2(&mut self, cfg: &ExperimentConfig) -> Result<ExperimentResult> {
+    pub fn run_table2(&self, cfg: &ExperimentConfig) -> Result<ExperimentResult> {
         let mut jobs = Vec::new();
         for job in evaluation_jobs() {
             jobs.push(self.compare_job(&job, cfg)?);
@@ -246,32 +349,26 @@ pub struct StopQuality {
     pub mean_search_spend: f64,
 }
 
-impl<'a> ExperimentRunner<'a> {
+impl ExperimentRunner {
     /// Run enforced-stop searches for one job under a plan and aggregate
-    /// the §III-E stopping-criterion tradeoff.
+    /// the §III-E stopping-criterion tradeoff. Shards repetitions like
+    /// [`Self::run_table2`].
     pub fn stop_quality(
-        &mut self,
+        &self,
         table: &JobCostTable,
         plan: &SearchPlan,
         cfg: &ExperimentConfig,
         seed_base: u64,
     ) -> Result<StopQuality> {
-        let features = self.space.feature_matrix();
-        let m = self.space.len();
-        let d = crate::searchspace::N_FEATURES;
-        let params = BoParams { max_iters: m, enforce_stop: true, ..Default::default() };
+        let params =
+            BoParams { max_iters: self.space.len(), enforce_stop: true, ..Default::default() };
+        let outs = self.run_reps(table, plan, cfg, seed_base, &params)?;
 
         let mut stops = Vec::new();
         let mut bests = Vec::new();
         let mut spends = Vec::new();
         let mut optimal = 0usize;
-        for rep in 0..cfg.reps {
-            let mut rng = Pcg64::from_seed(seed_base.wrapping_add(rep as u64 * 7919));
-            let costs = table.normalized.clone();
-            let mut oracle = |i: usize| costs[i];
-            let out = run_search(
-                &features, m, d, &plan.phases, &mut oracle, self.backend, &mut rng, &params,
-            )?;
+        for out in &outs {
             let stop = out.tried.len();
             let best = out.best_after(stop);
             stops.push(stop as f64);
@@ -316,7 +413,6 @@ fn accumulate_curves(out: &SearchOutcome, best_curve: &mut [f64], cum_curve: &mu
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bayesopt::NativeBackend;
 
     fn small_cfg() -> ExperimentConfig {
         ExperimentConfig { reps: 8, seed: 42, curve_len: 30 }
@@ -331,8 +427,7 @@ mod tests {
 
     #[test]
     fn profile_all_matches_table1_categories() {
-        let mut backend = NativeBackend::new();
-        let runner = ExperimentRunner::new(&mut backend);
+        let runner = ExperimentRunner::native();
         let summaries = runner.profile_all(7);
         assert_eq!(summaries.len(), 16);
         let count = |c: MemCategory| {
@@ -345,8 +440,7 @@ mod tests {
 
     #[test]
     fn linear_estimates_near_table1_values() {
-        let mut backend = NativeBackend::new();
-        let runner = ExperimentRunner::new(&mut backend);
+        let runner = ExperimentRunner::native();
         let expect = [
             ("Naive Bayes Spark bigdata", 754.0),
             ("K-Means Spark bigdata", 503.0),
@@ -368,8 +462,7 @@ mod tests {
     fn flat_job_improves_substantially() {
         // Terasort (flat): the paper reports quotients of ~15%; with a
         // tiny rep count we only assert a clear win.
-        let mut backend = NativeBackend::new();
-        let mut runner = ExperimentRunner::new(&mut backend);
+        let runner = ExperimentRunner::native();
         let cmp = runner.compare_job(&job("Terasort", "bigdata"), &small_cfg()).unwrap();
         assert_eq!(cmp.category, MemCategory::Flat);
         let q = cmp.quotient();
@@ -378,8 +471,7 @@ mod tests {
 
     #[test]
     fn unclear_job_close_to_baseline() {
-        let mut backend = NativeBackend::new();
-        let mut runner = ExperimentRunner::new(&mut backend);
+        let runner = ExperimentRunner::native();
         let cmp = runner.compare_job(&job("Lin. Regr.", "huge"), &small_cfg()).unwrap();
         assert_eq!(cmp.category, MemCategory::Unclear);
         // Identical plans -> identical seeded traces -> quotient exactly 1.
@@ -394,8 +486,7 @@ mod tests {
 
     #[test]
     fn curves_are_well_formed() {
-        let mut backend = NativeBackend::new();
-        let mut runner = ExperimentRunner::new(&mut backend);
+        let runner = ExperimentRunner::native();
         let cmp = runner.compare_job(&job("Join", "huge"), &small_cfg()).unwrap();
         for stats in [&cmp.cherrypick, &cmp.ruya] {
             // Fig 4: best-so-far is non-increasing and >= 1.
@@ -408,5 +499,11 @@ mod tests {
                 assert!(w[1] > w[0]);
             }
         }
+    }
+
+    #[test]
+    fn threads_floor_at_one() {
+        let runner = ExperimentRunner::native().with_threads(0);
+        assert_eq!(runner.threads, 1);
     }
 }

@@ -19,10 +19,12 @@
 //!
 //! Global options: `--backend native|xla` (default native; xla loads the
 //! AOT artifacts through PJRT), `--seed <u64>`, `--reps <N>` (default
-//! 200 as in the paper), `--out <dir>` (export .dat/.json/.md files).
+//! 200 as in the paper), `--threads <N>` (repetition-sharding workers,
+//! default 1 — results are bit-identical for any value), `--out <dir>`
+//! (export .dat/.json/.md files).
 
 use anyhow::{bail, Context, Result};
-use ruya::bayesopt::{backend_by_name, GpBackend};
+use ruya::bayesopt::backend_factory_by_name;
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner, SearchPlan};
 use ruya::report;
 use ruya::searchspace::SearchSpace;
@@ -58,8 +60,9 @@ fn run(args: &Args) -> Result<()> {
     }
 
     let backend_name = args.opt_or("backend", "native");
-    let mut backend = backend_by_name(&backend_name)
+    let factory = backend_factory_by_name(&backend_name)
         .with_context(|| format!("initializing backend {backend_name}"))?;
+    let runner = ExperimentRunner::new(factory).with_threads(args.opt_threads());
     let cfg = ExperimentConfig {
         reps: args.opt_usize("reps", 200),
         seed: args.opt_u64("seed", 0xC0FFEE),
@@ -68,20 +71,20 @@ fn run(args: &Args) -> Result<()> {
     let out_dir = args.opt("out").map(Path::new);
 
     match sub.as_str() {
-        "table1" => table1(backend.as_mut(), cfg.seed, out_dir),
-        "table2" => table2(backend.as_mut(), &cfg, out_dir),
-        "table3" => table3(backend.as_mut(), cfg.seed, out_dir),
-        "fig4" | "fig5" => fig45(backend.as_mut(), &cfg, out_dir),
-        "search" => search_one(backend.as_mut(), args, &cfg),
-        "crispy" => crispy(backend.as_mut(), args, cfg.seed),
-        "stopping" => stopping(backend.as_mut(), &cfg),
+        "table1" => table1(&runner, cfg.seed, out_dir),
+        "table2" => table2(&runner, &backend_name, &cfg, out_dir),
+        "table3" => table3(&runner, cfg.seed, out_dir),
+        "fig4" | "fig5" => fig45(&runner, &cfg, out_dir),
+        "search" => search_one(&runner, args, &cfg),
+        "crispy" => crispy(&runner, args, cfg.seed),
+        "stopping" => stopping(&runner, &cfg),
         "all" => {
-            table1(backend.as_mut(), cfg.seed, out_dir)?;
-            table3(backend.as_mut(), cfg.seed, out_dir)?;
+            table1(&runner, cfg.seed, out_dir)?;
+            table3(&runner, cfg.seed, out_dir)?;
             fig1(out_dir)?;
             fig3(cfg.seed, out_dir)?;
-            table2(backend.as_mut(), &cfg, out_dir)?;
-            fig45(backend.as_mut(), &cfg, out_dir)
+            table2(&runner, &backend_name, &cfg, out_dir)?;
+            fig45(&runner, &cfg, out_dir)
         }
         other => bail!("unknown subcommand {other:?}; try `ruya help`"),
     }
@@ -97,29 +100,30 @@ fn write_out(out_dir: Option<&Path>, name: &str, content: &str) -> Result<()> {
     Ok(())
 }
 
-fn table1(backend: &mut dyn GpBackend, seed: u64, out: Option<&Path>) -> Result<()> {
-    let runner = ExperimentRunner::new(backend);
+fn table1(runner: &ExperimentRunner, seed: u64, out: Option<&Path>) -> Result<()> {
     let summaries = runner.profile_all(seed);
     let rendered = report::render_table1(&summaries);
     println!("Table I: Determined Job Memory Requirement\n\n{rendered}");
     write_out(out, "table1.md", &rendered)
 }
 
-fn table3(backend: &mut dyn GpBackend, seed: u64, out: Option<&Path>) -> Result<()> {
-    let runner = ExperimentRunner::new(backend);
+fn table3(runner: &ExperimentRunner, seed: u64, out: Option<&Path>) -> Result<()> {
     let summaries = runner.profile_all(seed);
     let rendered = report::render_table3(&summaries);
     println!("Table III: Memory Profiling Time for all Jobs\n\n{rendered}");
     write_out(out, "table3.md", &rendered)
 }
 
-fn table2(backend: &mut dyn GpBackend, cfg: &ExperimentConfig, out: Option<&Path>) -> Result<()> {
+fn table2(
+    runner: &ExperimentRunner,
+    backend_name: &str,
+    cfg: &ExperimentConfig,
+    out: Option<&Path>,
+) -> Result<()> {
     eprintln!(
-        "running Table II: 16 jobs x 2 methods x {} reps (backend: {})...",
-        cfg.reps,
-        backend.name()
+        "running Table II: 16 jobs x 2 methods x {} reps (backend: {backend_name}, {} thread(s))...",
+        cfg.reps, runner.threads
     );
-    let mut runner = ExperimentRunner::new(backend);
     let result = runner.run_table2(cfg)?;
     let rendered = report::render_table2(&result);
     println!("Table II: iterations until a configuration with cost c is found\n\n{rendered}");
@@ -127,8 +131,7 @@ fn table2(backend: &mut dyn GpBackend, cfg: &ExperimentConfig, out: Option<&Path
     write_out(out, "table2.json", &report::experiment_to_json(&result))
 }
 
-fn fig45(backend: &mut dyn GpBackend, cfg: &ExperimentConfig, out: Option<&Path>) -> Result<()> {
-    let mut runner = ExperimentRunner::new(backend);
+fn fig45(runner: &ExperimentRunner, cfg: &ExperimentConfig, out: Option<&Path>) -> Result<()> {
     let result = runner.run_table2(cfg)?;
     let n = result.jobs.len() as f64;
     let len = cfg.curve_len;
@@ -220,12 +223,11 @@ fn fig3(seed: u64, out: Option<&Path>) -> Result<()> {
     write_out(out, "fig3.dat", &s)
 }
 
-fn search_one(backend: &mut dyn GpBackend, args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+fn search_one(runner: &ExperimentRunner, args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     let label = args
         .opt("job")
         .context("--job <label> required, e.g. --job 'K-Means Spark bigdata'")?;
     let job = job_by_label(label)?;
-    let mut runner = ExperimentRunner::new(backend);
     let profile = runner.profile_job(&job, cfg.seed);
     println!(
         "profiling: {} -> {} (R^2 {:.3}, {:.0} s)",
@@ -290,10 +292,9 @@ fn profile_one(args: &Args, seed: u64) -> Result<()> {
     Ok(())
 }
 
-fn crispy(backend: &mut dyn GpBackend, args: &Args, seed: u64) -> Result<()> {
+fn crispy(runner: &ExperimentRunner, args: &Args, seed: u64) -> Result<()> {
     // One-shot (Crispy-style) selection: either one job or the whole
     // catalog with its regret vs the simulated optimum.
-    let runner = ExperimentRunner::new(backend);
     let selector = ruya::coordinator::CrispySelector::default();
     let jobs: Vec<JobInstance> = match args.opt("job") {
         Some(label) => vec![job_by_label(label)?],
@@ -324,10 +325,9 @@ fn crispy(backend: &mut dyn GpBackend, args: &Args, seed: u64) -> Result<()> {
     Ok(())
 }
 
-fn stopping(backend: &mut dyn GpBackend, cfg: &ExperimentConfig) -> Result<()> {
+fn stopping(runner: &ExperimentRunner, cfg: &ExperimentConfig) -> Result<()> {
     // The §III-E stopping-criterion tradeoff: quality of enforced-stop
     // searches per method.
-    let mut runner = ExperimentRunner::new(backend);
     println!(
         "enforced-stop search quality ({} reps): stop-iters / best cost / %optimal / search spend\n",
         cfg.reps
@@ -421,6 +421,8 @@ SUBCOMMANDS
 OPTIONS
   --backend native|xla   GP backend (default native; xla = AOT artifacts)
   --reps N               repetitions for table2/fig4/fig5 (default 200)
+  --threads N            repetition-sharding worker threads (default 1;
+                         results are bit-identical for any value)
   --seed S               experiment seed (default 0xC0FFEE)
   --out DIR              also write tables/figures to DIR
   --curve-len N          length of fig4/fig5 series (default 48)

@@ -1,0 +1,95 @@
+//! Dependency-free stand-in for the PJRT runtime, compiled when the
+//! `xla-pjrt` feature is off. It mirrors the public surface of the real
+//! runtime so the rest of the crate (and its tests) compiles unchanged:
+//! artifact probing reports "unavailable" and construction fails with a
+//! clear error, which every XLA-gated caller already handles by skipping.
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+const NO_PJRT: &str =
+    "built without the `xla-pjrt` feature: the PJRT runtime and AOT artifacts are unavailable \
+     (rebuild with `--features xla-pjrt` and a vendored `xla` crate)";
+
+/// Frozen AOT shapes; kept in sync with `python/compile/model.py`.
+pub const AOT_N_OBS: usize = 64;
+pub const AOT_N_FEATURES: usize = 6;
+pub const AOT_N_CANDIDATES: usize = 128;
+pub const AOT_N_GRID: usize = 32;
+
+/// Stub PJRT client handle; never constructible.
+pub struct XlaRuntime {
+    artifact_dir: PathBuf,
+}
+
+impl XlaRuntime {
+    pub fn new(_artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Same directory contract as the real runtime so error messages and
+    /// docs stay truthful.
+    pub fn default_artifact_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("RUYA_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Artifacts can never be executed without PJRT, so they are always
+    /// reported unavailable — callers skip the XLA path.
+    pub fn artifacts_available() -> bool {
+        false
+    }
+}
+
+/// Mirror of `gp_exec::GpDecision`.
+#[derive(Debug, Clone)]
+pub struct GpDecision {
+    pub ei: Vec<f64>,
+    pub mu: Vec<f64>,
+    pub var: Vec<f64>,
+}
+
+/// Stub executor; never constructible.
+pub struct GpExecutor {}
+
+impl GpExecutor {
+    pub fn new(_rt: &XlaRuntime) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn call_count(&self) -> u64 {
+        0
+    }
+
+    pub fn tier_count(&self) -> usize {
+        0
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn gp_ei(
+        &self,
+        _x: &[f64],
+        _y: &[f64],
+        _n: usize,
+        _xc: &[f64],
+        _cmask: &[f64],
+        _m: usize,
+        _hyp: [f64; 3],
+    ) -> Result<GpDecision> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn gp_nll(&self, _x: &[f64], _y: &[f64], _n: usize, _grid: &[[f64; 3]]) -> Result<Vec<f64>> {
+        bail!(NO_PJRT)
+    }
+}

@@ -106,6 +106,57 @@ macro_rules! prop_assert {
     };
 }
 
+/// A [`GpBackend`](crate::bayesopt::GpBackend) wrapper with an
+/// artificially small conditioning capacity: reproduces the
+/// windowed-history regime the AOT artifacts (`max_obs`) put the search
+/// loop in, around any inner backend. Shared by the search-loop
+/// regression tests and the end-to-end windowed-history tests.
+pub struct CappedBackend<B: crate::bayesopt::GpBackend> {
+    pub inner: B,
+    pub cap: usize,
+}
+
+impl<B: crate::bayesopt::GpBackend> CappedBackend<B> {
+    pub fn new(inner: B, cap: usize) -> Self {
+        Self { inner, cap }
+    }
+}
+
+impl<B: crate::bayesopt::GpBackend> crate::bayesopt::GpBackend for CappedBackend<B> {
+    fn decide(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        xc: &[f64],
+        cmask: &[bool],
+        m: usize,
+        hyp: [f64; 3],
+    ) -> anyhow::Result<crate::bayesopt::Decision> {
+        self.inner.decide(x, y, n, d, xc, cmask, m, hyp)
+    }
+
+    fn nll_grid(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        grid: &[[f64; 3]],
+    ) -> anyhow::Result<Vec<f64>> {
+        self.inner.nll_grid(x, y, n, d, grid)
+    }
+
+    fn max_obs(&self) -> usize {
+        self.cap
+    }
+
+    fn name(&self) -> &'static str {
+        "capped"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

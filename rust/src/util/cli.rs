@@ -73,6 +73,12 @@ impl Args {
     pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
         self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    /// Worker-thread count for the parallel experiment engine:
+    /// `--threads N`, default 1 (serial), floored at 1.
+    pub fn opt_threads(&self) -> usize {
+        self.opt_usize("threads", 1).max(1)
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +121,13 @@ mod tests {
         let a = parse(&["x", "--a", "--b", "v"], &[]);
         assert!(a.flag("a"));
         assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn threads_option_floors_at_one() {
+        assert_eq!(parse(&["table2", "--threads", "8"], &[]).opt_threads(), 8);
+        assert_eq!(parse(&["table2", "--threads", "0"], &[]).opt_threads(), 1);
+        assert_eq!(parse(&["table2"], &[]).opt_threads(), 1);
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub fn median(xs: &[f64]) -> f64 {
 
 /// Ordinary least squares fit y = slope * x + intercept.
 /// Returns (slope, intercept). Requires >= 2 points.
+///
+/// Degenerate abscissas — all xs equal *up to rounding noise* — fall
+/// back to the flat fit `(0, mean(y))`. The guard is an epsilon relative
+/// to the data scale, not an exact `== 0.0` compare: xs that differ only
+/// in the last few ulps produce a tiny nonzero `sxx`, and dividing by it
+/// would manufacture an astronomical garbage slope.
 pub fn ols_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
     assert_eq!(xs.len(), ys.len());
     assert!(xs.len() >= 2, "OLS needs at least two points");
@@ -58,7 +64,15 @@ pub fn ols_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
         sxx += (x - mx) * (x - mx);
         sxy += (x - mx) * (y - my);
     }
-    if sxx == 0.0 {
+    // Each centered term carries rounding noise of order
+    // n*EPSILON*x_scale (the computed mean contributes up to ~n ulps),
+    // so the cancellation floor of sxx is n*(n*EPSILON*x_scale)^2 — NOT
+    // EPSILON*x_scale^2, which would flatten genuine spreads below
+    // ~sqrt(EPSILON) relative (e.g. [1e9, 1e9+1, 1e9+2]).
+    let x_scale = xs.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    let n = xs.len() as f64;
+    let per_term = n * f64::EPSILON * x_scale;
+    if sxx <= n * per_term * per_term {
         return (0.0, my);
     }
     let slope = sxy / sxx;
@@ -125,6 +139,29 @@ mod tests {
             (0..20).map(|i| if i % 2 == 0 { 5.0 } else { 5.5 }).collect();
         let r2 = r2_score(&xs, &ys);
         assert!(r2 < 0.1, "r2 {r2}");
+    }
+
+    #[test]
+    fn ols_degenerate_x_from_rounding_noise() {
+        // xs equal up to float rounding: sxx is tiny but nonzero, which
+        // the old exact `== 0.0` guard missed (yielding a ~1e33 slope).
+        let xs = [0.1 + 0.2, 0.3, 0.3, 0.3]; // 0.1 + 0.2 != 0.3 in f64
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        let (slope, intercept) = ols_fit(&xs, &ys);
+        assert_eq!(slope, 0.0);
+        assert_eq!(intercept, mean(&ys));
+        // Tiny-but-genuine spread is NOT flagged as degenerate.
+        let xs2 = [1e-9, 2e-9, 3e-9];
+        let ys2 = [1.0, 2.0, 3.0];
+        let (slope2, _) = ols_fit(&xs2, &ys2);
+        assert!((slope2 - 1e9).abs() / 1e9 < 1e-6, "slope {slope2}");
+        // Small genuine spread on a huge offset survives too: the floor
+        // is keyed to the cancellation noise n*(eps*scale)^2, not to
+        // eps*scale^2.
+        let xs3 = [1e9, 1e9 + 1.0, 1e9 + 2.0];
+        let ys3 = [1.0, 2.0, 3.0];
+        let (slope3, _) = ols_fit(&xs3, &ys3);
+        assert!((slope3 - 1.0).abs() < 1e-6, "slope {slope3}");
     }
 
     #[test]

@@ -3,14 +3,12 @@
 //! calibration contract). The full-scale numbers live in EXPERIMENTS.md
 //! and are produced by `examples/full_reproduction.rs`.
 
-use ruya::bayesopt::NativeBackend;
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner};
 use ruya::memmodel::MemCategory;
 
 #[test]
 fn table2_shape_matches_paper() {
-    let mut backend = NativeBackend::new();
-    let mut runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let cfg = ExperimentConfig { reps: 12, seed: 0xC0FFEE, curve_len: 48 };
     let result = runner.run_table2(&cfg).expect("experiment");
 
@@ -91,8 +89,7 @@ fn table2_shape_matches_paper() {
 /// Table I, so this closes the loop through profiler + model).
 #[test]
 fn table1_shape_matches_paper() {
-    let mut backend = NativeBackend::new();
-    let runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let summaries = runner.profile_all(0xC0FFEE);
 
     let expect: &[(&str, &str)] = &[
@@ -146,8 +143,7 @@ fn table1_shape_matches_paper() {
 /// full dataset" — same algorithm, double input, similar time).
 #[test]
 fn table3_shape_matches_paper() {
-    let mut backend = NativeBackend::new();
-    let runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let summaries = runner.profile_all(0xC0FFEE);
     let times: Vec<f64> = summaries.iter().map(|s| s.profiling_time_s).collect();
     for (s, t) in summaries.iter().zip(&times) {

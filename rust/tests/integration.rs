@@ -2,7 +2,7 @@
 //! (profile -> categorize -> plan -> search) over the simulated cluster
 //! substrate, plus native-vs-XLA backend agreement.
 
-use ruya::bayesopt::{backend_by_name, BoParams, GpBackend, NativeBackend};
+use ruya::bayesopt::{backend_by_name, BoParams, GpBackend};
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner, RuyaPlanner, SearchPlan};
 use ruya::memmodel::{MemCategory, MemoryModel};
 use ruya::profiler::SingleNodeProfiler;
@@ -15,8 +15,7 @@ use ruya::workload::{evaluation_jobs, ClusterSim, JobCostTable};
 /// and the search must find the optimum within the space size.
 #[test]
 fn pipeline_profile_plan_search_all_jobs() {
-    let mut backend = NativeBackend::new();
-    let mut runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     for job in evaluation_jobs() {
         let profile = runner.profile_job(&job, 11);
         let plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
@@ -64,8 +63,7 @@ fn categories_recovered_for_multiple_seeds() {
 /// CherryPick under the same seed — the paper's fallback guarantee.
 #[test]
 fn unclear_fallback_is_exact() {
-    let mut backend = NativeBackend::new();
-    let mut runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let job = evaluation_jobs()
         .into_iter()
         .find(|j| j.label() == "Log. Regr. Spark huge")
@@ -172,8 +170,7 @@ fn xla_search_trace_matches_native() {
 /// The experiment harness end-to-end on a small slice with both methods.
 #[test]
 fn experiment_slice_runs_and_reports() {
-    let mut backend = NativeBackend::new();
-    let mut runner = ExperimentRunner::new(&mut backend);
+    let runner = ExperimentRunner::native();
     let cfg = ExperimentConfig { reps: 4, seed: 9, curve_len: 20 };
     let job = evaluation_jobs().into_iter().find(|j| j.label() == "Terasort Hadoop huge").unwrap();
     let cmp = runner.compare_job(&job, &cfg).unwrap();

@@ -1,0 +1,129 @@
+//! Parallel evaluation-engine tests: serial-vs-parallel bit-equivalence
+//! of the Table II aggregates, and the windowed-history (`max_obs`)
+//! search path end-to-end on the native backend.
+
+use ruya::bayesopt::{run_search, BoParams, NativeBackend};
+use ruya::coordinator::{ExperimentConfig, ExperimentRunner, SearchPlan};
+use ruya::util::rng::Pcg64;
+use ruya::workload::{evaluation_jobs, ClusterSim, JobCostTable, JobInstance};
+
+fn job(label: &str) -> JobInstance {
+    evaluation_jobs().into_iter().find(|j| j.label() == label).unwrap()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The acceptance contract: the reps=8 Table II experiment produces
+/// bit-identical `iters_to` / `best_curve` / `cum_curve` on 1 and N
+/// threads (same `ExperimentConfig`, only the worker count differs).
+#[test]
+fn parallel_engine_is_bit_identical_to_serial() {
+    let cfg = ExperimentConfig { reps: 8, seed: 42, curve_len: 30 };
+    // One two-phase (flat) job and one linear job cover both plan shapes.
+    for label in ["Terasort Hadoop bigdata", "K-Means Spark huge"] {
+        let serial =
+            ExperimentRunner::native().with_threads(1).compare_job(&job(label), &cfg).unwrap();
+        for threads in [3usize, 8] {
+            let par = ExperimentRunner::native()
+                .with_threads(threads)
+                .compare_job(&job(label), &cfg)
+                .unwrap();
+            for (which, a, b) in [
+                ("cherrypick", &serial.cherrypick, &par.cherrypick),
+                ("ruya", &serial.ruya, &par.ruya),
+            ] {
+                assert_eq!(
+                    bits(&a.iters_to),
+                    bits(&b.iters_to),
+                    "{label}/{which} iters_to diverged at {threads} threads"
+                );
+                assert_eq!(
+                    bits(&a.best_curve),
+                    bits(&b.best_curve),
+                    "{label}/{which} best_curve diverged at {threads} threads"
+                );
+                assert_eq!(
+                    bits(&a.cum_curve),
+                    bits(&b.cum_curve),
+                    "{label}/{which} cum_curve diverged at {threads} threads"
+                );
+                assert_eq!(
+                    a.mean_stop.to_bits(),
+                    b.mean_stop.to_bits(),
+                    "{label}/{which} mean_stop diverged at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+/// Enforced-stop aggregation shards identically.
+#[test]
+fn stop_quality_parallel_matches_serial() {
+    let cfg = ExperimentConfig { reps: 8, seed: 7, curve_len: 10 };
+    let j = job("Join Spark huge");
+    let run = |threads: usize| {
+        let runner = ExperimentRunner::native().with_threads(threads);
+        let table = JobCostTable::build(&runner.sim, &j, &runner.space);
+        let plan = SearchPlan::unpartitioned(&runner.space);
+        runner.stop_quality(&table, &plan, &cfg, 0x5EED).unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.mean_stop_iters.to_bits(), b.mean_stop_iters.to_bits());
+    assert_eq!(a.mean_best_cost.to_bits(), b.mean_best_cost.to_bits());
+    assert_eq!(a.frac_optimal.to_bits(), b.frac_optimal.to_bits());
+    assert_eq!(a.mean_search_spend.to_bits(), b.mean_search_spend.to_bits());
+}
+
+/// More workers than repetitions must not panic or change results.
+#[test]
+fn more_workers_than_reps_is_fine() {
+    let cfg = ExperimentConfig { reps: 3, seed: 11, curve_len: 10 };
+    let j = job("Lin. Regr. Spark huge");
+    let serial = ExperimentRunner::native().with_threads(1).compare_job(&j, &cfg).unwrap();
+    let par = ExperimentRunner::native().with_threads(16).compare_job(&j, &cfg).unwrap();
+    assert_eq!(bits(&serial.cherrypick.iters_to), bits(&par.cherrypick.iters_to));
+    assert_eq!(bits(&serial.ruya.iters_to), bits(&par.ruya.iters_to));
+}
+
+/// End-to-end windowed-history search over the real 69-configuration
+/// space and a real job's cost table: the search must keep functioning
+/// once the history exceeds the backend capacity (sliding window), still
+/// exhaust the space, find the optimum, and record an execution-count
+/// stopping point.
+#[test]
+fn windowed_history_search_end_to_end() {
+    let space = ruya::searchspace::SearchSpace::scout();
+    let features = space.feature_matrix();
+    let m = space.len();
+    let d = ruya::searchspace::N_FEATURES;
+    let j = job("K-Means Spark huge");
+    let sim = ClusterSim::default();
+    let table = JobCostTable::build(&sim, &j, &space);
+    let phases = vec![(0..m).collect::<Vec<usize>>()];
+    let params = BoParams { max_iters: m, ..Default::default() };
+
+    let mut backend = ruya::testkit::CappedBackend::new(NativeBackend::new(), 16);
+    let mut rng = Pcg64::from_seed(99);
+    let costs = &table.normalized;
+    let mut oracle = |i: usize| costs[i];
+    let out =
+        run_search(&features, m, d, &phases, &mut oracle, &mut backend, &mut rng, &params)
+            .expect("windowed search");
+
+    assert_eq!(out.tried.len(), m, "windowed search must still exhaust the space");
+    assert!(out.first_within(1.0 + 1e-9).is_some(), "optimum never tried");
+    // The trace replays the cost table faithfully.
+    for (&idx, &cost) in out.tried.iter().zip(&out.costs) {
+        assert_eq!(cost, table.normalized[idx]);
+    }
+    // A recorded stopping point counts executions, which may exceed the
+    // conditioning capacity.
+    if let Some(stop) = out.stop_after {
+        assert!(stop >= params.min_obs_for_stop);
+        assert!(stop <= m);
+    }
+}
