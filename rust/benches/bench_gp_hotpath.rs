@@ -1,11 +1,17 @@
 //! §Perf bench: the per-iteration decision hot path (GP fit + EI over all
 //! candidates + hyperparameter grid), native vs XLA backend, across
-//! observation counts — the numbers recorded in EXPERIMENTS.md §Perf.
+//! observation counts — the numbers recorded in EXPERIMENTS.md §Perf —
+//! plus the incremental-vs-scratch grid-refit sweep introduced with the
+//! rank-1 Cholesky factor cache.
+//!
+//! `--smoke` (the CI mode) runs tiny sizes only and *asserts* that the
+//! incremental factor paths engage (appends/slides/reuses > 0), so the
+//! hot path cannot silently regress to scratch-fit behavior.
 
 #[path = "harness.rs"]
 mod harness;
 
-use ruya::bayesopt::{backend_by_name, hyperparameter_grid, GpBackend};
+use ruya::bayesopt::{backend_by_name, hyperparameter_grid, GpBackend, NativeBackend};
 use ruya::runtime::XlaRuntime;
 use ruya::searchspace::SearchSpace;
 use ruya::util::rng::Pcg64;
@@ -39,19 +45,113 @@ fn bench_backend(backend: &mut dyn GpBackend, space: &SearchSpace) {
     }
 }
 
+/// One BO-search-shaped growth sequence: nll_grid over the 32-point grid
+/// at every n in 1..=n_max, exactly the per-iteration call pattern of
+/// `run_search`. Returns nothing; the backend's caches do the work.
+fn grid_growth(backend: &mut NativeBackend, x: &[f64], y: &[f64], n_max: usize, d: usize) {
+    let grid = hyperparameter_grid();
+    for n in 1..=n_max {
+        std::hint::black_box(backend.nll_grid(&x[..n * d], &y[..n], n, d, &grid).unwrap());
+    }
+}
+
+/// Incremental-vs-scratch grid refit sweep (the tentpole measurement):
+/// a full growth sequence 1..=n, H=32, once with the rank-1 factor cache
+/// and once forced to refactorize cold on every step (the pre-refactor
+/// behavior). Prints both timings plus the speedup per n.
+fn incremental_sweep(space: &SearchSpace, sizes: &[usize]) {
+    harness::section("incremental vs scratch grid refit (growth 1..=n, H=32, native)");
+    let d = ruya::searchspace::N_FEATURES;
+    let mut rng = Pcg64::from_seed(7);
+    let n_max = *sizes.iter().max().unwrap();
+    let mut x = Vec::with_capacity(n_max * d);
+    let mut y = Vec::with_capacity(n_max);
+    for i in 0..n_max {
+        x.extend(space.features(i % space.len()));
+        y.push(1.0 + rng.next_f64());
+    }
+    for &n in sizes {
+        let inc = harness::bench_fn(&format!("incremental grid growth (n=1..={n:2})"), || {
+            let mut b = NativeBackend::new();
+            grid_growth(&mut b, &x, &y, n, d);
+        });
+        let scr = harness::bench_fn(&format!("scratch     grid growth (n=1..={n:2})"), || {
+            let mut b = NativeBackend::new();
+            b.set_incremental(false);
+            grid_growth(&mut b, &x, &y, n, d);
+        });
+        println!(
+            "    -> speedup at n={n:2}: {:.2}x (incremental {} vs scratch {})",
+            scr.median() / inc.median(),
+            harness::fmt_ns(inc.median()),
+            harness::fmt_ns(scr.median()),
+        );
+    }
+}
+
+/// Functional guard (always run; the whole point of `--smoke`): drive a
+/// growth + sliding-window sequence and assert the incremental paths
+/// engaged. A regression to scratch fits fails here, not just in timing.
+fn assert_incremental_engages(space: &SearchSpace) {
+    let d = ruya::searchspace::N_FEATURES;
+    let grid = hyperparameter_grid();
+    let mut rng = Pcg64::from_seed(3);
+    let total = 12usize;
+    let window = 8usize;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..total {
+        x.extend(space.features(i % space.len()));
+        y.push(1.0 + rng.next_f64());
+    }
+    let mut b = NativeBackend::new();
+    let m = space.len();
+    let features = space.feature_matrix();
+    for step in 3..=total {
+        let (lo, n) = if step <= window { (0, step) } else { (step - window, window) };
+        let xs = &x[lo * d..(lo + n) * d];
+        let ys = &y[lo..lo + n];
+        b.nll_grid(xs, ys, n, d, &grid).unwrap();
+        // decide right after nll_grid, as the search loop does.
+        let cmask: Vec<bool> = (0..m).map(|i| i >= n).collect();
+        b.decide(xs, ys, n, d, &features, &cmask, m, grid[5]).unwrap();
+    }
+    let s = b.factor_stats();
+    assert!(s.appends > 0, "rank-1 append path never engaged: {s:?}");
+    assert!(s.slides > 0, "sliding-window downdate path never engaged: {s:?}");
+    assert!(s.reuses > 0, "decide-after-nll_grid reuse path never engaged: {s:?}");
+    assert!(
+        s.appends + s.slides > s.cold_fits,
+        "incremental path did not dominate cold fits: {s:?}"
+    );
+    println!("incremental-path guard: OK ({s:?})");
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let space = SearchSpace::scout();
 
-    harness::section("GP decision hot path — native backend");
-    let mut native = backend_by_name("native").unwrap();
-    bench_backend(native.as_mut(), &space);
+    if !smoke {
+        harness::section("GP decision hot path — native backend");
+        let mut native = backend_by_name("native").unwrap();
+        bench_backend(native.as_mut(), &space);
 
-    if XlaRuntime::artifacts_available() {
-        harness::section("GP decision hot path — XLA backend (AOT artifacts via PJRT)");
-        let mut xla = backend_by_name("xla").unwrap();
-        bench_backend(xla.as_mut(), &space);
-    } else {
-        eprintln!("skipping XLA backend: artifacts not built (run `make artifacts`)");
+        if XlaRuntime::artifacts_available() {
+            harness::section("GP decision hot path — XLA backend (AOT artifacts via PJRT)");
+            let mut xla = backend_by_name("xla").unwrap();
+            bench_backend(xla.as_mut(), &space);
+        } else {
+            eprintln!("skipping XLA backend: artifacts not built (run `make artifacts`)");
+        }
+    }
+
+    let sizes: &[usize] = if smoke { &[8, 16] } else { &[8, 16, 24, 32, 48, 64] };
+    incremental_sweep(&space, sizes);
+    assert_incremental_engages(&space);
+
+    if smoke {
+        println!("\nsmoke mode: skipping the full decision-path sections");
+        return;
     }
 
     harness::section("end-to-end per-iteration decision (nll_grid + decide)");

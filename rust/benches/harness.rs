@@ -32,6 +32,12 @@ impl BenchStats {
         }
     }
 
+    /// The median wall-clock sample — the same value `report` prints.
+    #[allow(dead_code)]
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
     pub fn report(&self) {
         let mean = self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64;
         println!(

@@ -3,7 +3,8 @@
 //! (the deployed path). The search loop is backend-agnostic; integration
 //! tests assert both backends propose the same configurations.
 
-use super::gp::{expected_improvement, NativeGp};
+use super::chol::{FactorCache, FactorCacheStats, FitPlan, ObsDelta};
+use super::gp::{expected_improvement, matern52_from_d2, matern52_gram_from_d2, NativeGp};
 use crate::runtime::{GpExecutor, XlaRuntime};
 use anyhow::Result;
 
@@ -61,6 +62,12 @@ pub trait GpBackend {
 pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn GpBackend>> + Send + Sync>;
 
 /// Pure-rust backend (no artifacts needed).
+///
+/// Carries two caches across BO iterations: the hyperparameter-
+/// independent pairwise-distance matrix ([`Self::update_d2`]) and one
+/// Cholesky [`FactorCache`] slot per hyperparameter-grid point, updated
+/// by rank-1 append/slide instead of refactorized from scratch — the
+/// O(H·n³) → O(H·n²) hot-path win (see [`super::chol`]).
 #[derive(Default)]
 pub struct NativeBackend {
     gp: NativeGp,
@@ -68,9 +75,20 @@ pub struct NativeBackend {
     /// (hyperparameter-independent) *and* across BO iterations — see
     /// [`Self::update_d2`].
     d2: Vec<f64>,
+    /// Swap buffer for the grow/slide rebuild of `d2` (reused across
+    /// iterations so the steady state allocates nothing).
+    d2_swap: Vec<f64>,
     cache_x: Vec<f64>,
     cache_n: usize,
     cache_d: usize,
+    /// Per-hyperparameter Cholesky factors kept across iterations.
+    factors: FactorCache,
+    /// When false every fit refactorizes cold — the scratch baseline the
+    /// benches and the incremental-vs-scratch property tests compare
+    /// against.
+    incremental_off: bool,
+    row_scratch: Vec<f64>,
+    kern_scratch: Vec<f64>,
 }
 
 impl NativeBackend {
@@ -78,7 +96,18 @@ impl NativeBackend {
         Self::default()
     }
 
-    /// Ensure `self.d2` holds the pairwise squared distances of `x`.
+    /// Enable/disable the incremental factor path (on by default).
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental_off = !on;
+    }
+
+    /// Counters of the factorization paths taken so far.
+    pub fn factor_stats(&self) -> FactorCacheStats {
+        self.factors.stats()
+    }
+
+    /// Ensure `self.d2` holds the pairwise squared distances of `x`, and
+    /// report how the observation set changed.
     ///
     /// The search loop appends exactly one observation per BO iteration
     /// (and slides its window by one once a capacity-limited backend
@@ -86,18 +115,23 @@ impl NativeBackend {
     /// `nll_grid`/`decide` call the cache grows or shifts by one
     /// row+column. New entries use the same per-pair arithmetic as
     /// [`pairwise_sqdist`](super::gp::pairwise_sqdist), keeping every
-    /// cached value bit-identical to a fresh computation.
-    fn update_d2(&mut self, x: &[f64], n: usize, d: usize) {
+    /// cached value bit-identical to a fresh computation. The returned
+    /// [`ObsDelta`] drives the [`FactorCache`] plans.
+    fn update_d2(&mut self, x: &[f64], n: usize, d: usize) -> ObsDelta {
         debug_assert_eq!(x.len(), n * d);
         let (pn, pd) = (self.cache_n, self.cache_d);
         let appended_one = pd == d && n == pn + 1 && x[..pn * d] == self.cache_x[..];
         let slid_one =
             pd == d && n == pn && n > 0 && x[..(n - 1) * d] == self.cache_x[d..];
         if pd == d && pn == n && self.cache_x.as_slice() == x {
-            return; // exact hit (e.g. `decide` right after `nll_grid`)
+            return ObsDelta::Unchanged; // exact hit (e.g. `decide` right after `nll_grid`)
         } else if appended_one || slid_one {
             let old = n - 1; // rows of the previous matrix that survive
-            let mut d2 = vec![0.0; n * n];
+            // Build into the swap buffer (reads come from the old d2),
+            // keeping the steady-state iteration allocation-free.
+            let mut d2 = std::mem::take(&mut self.d2_swap);
+            d2.clear();
+            d2.resize(n * n, 0.0);
             if appended_one {
                 for i in 0..old {
                     d2[i * n..i * n + old].copy_from_slice(&self.d2[i * pn..i * pn + old]);
@@ -119,14 +153,75 @@ impl NativeBackend {
                 d2[i * n + j] = s;
                 d2[j * n + i] = s;
             }
-            self.d2 = d2;
+            std::mem::swap(&mut self.d2, &mut d2);
+            self.d2_swap = d2;
         } else {
             super::gp::pairwise_sqdist(x, n, d, &mut self.d2);
         }
+        let delta = if appended_one {
+            ObsDelta::Appended
+        } else if slid_one {
+            ObsDelta::Slid
+        } else {
+            ObsDelta::Replaced
+        };
         self.cache_x.clear();
         self.cache_x.extend_from_slice(x);
         self.cache_n = n;
         self.cache_d = d;
+        delta
+    }
+
+    /// Bring the [`FactorCache`] slot for `hyp` up to date with the
+    /// current `n` observations (distance matrix already refreshed by
+    /// [`Self::update_d2`]). `row_key`/`gram_key` memoize the (ls, var)
+    /// of `row_scratch`/`kern_scratch` across the grid — the 4 noise
+    /// levels per lengthscale share one cross-row (extend path) or one
+    /// Gram build (cold path). Returns the slot index, or None when the
+    /// Gram is not SPD even from a cold refactorization.
+    fn ensure_factor(
+        &mut self,
+        hyp: [f64; 3],
+        n: usize,
+        row_key: &mut (f64, f64),
+        gram_key: &mut (f64, f64),
+    ) -> Option<usize> {
+        let (idx, mut plan) = self.factors.plan(hyp, n);
+        if self.incremental_off && plan != FitPlan::Cold {
+            plan = FitPlan::Cold;
+        }
+        let key = (hyp[0], hyp[1]);
+        let extended = match plan {
+            FitPlan::Reuse => {
+                self.factors.note_reuse();
+                return Some(idx);
+            }
+            FitPlan::Extend | FitPlan::Slide => {
+                if *row_key != key {
+                    // Cross-kernel of the newest observation against the
+                    // current first n-1 rows: the last d2 row.
+                    let last = n - 1;
+                    self.row_scratch.clear();
+                    for j in 0..last {
+                        self.row_scratch
+                            .push(matern52_from_d2(self.d2[last * n + j], hyp[0], hyp[1]));
+                    }
+                    *row_key = key;
+                }
+                self.factors.extend(idx, &self.row_scratch, plan == FitPlan::Slide)
+            }
+            FitPlan::Cold => false,
+        };
+        if !extended {
+            if *gram_key != key {
+                matern52_gram_from_d2(&self.d2, n, hyp[0], hyp[1], &mut self.kern_scratch);
+                *gram_key = key;
+            }
+            if !self.factors.cold(idx, &self.kern_scratch, n) {
+                return None;
+            }
+        }
+        Some(idx)
     }
 }
 
@@ -142,11 +237,13 @@ impl GpBackend for NativeBackend {
         m: usize,
         hyp: [f64; 3],
     ) -> Result<Decision> {
-        self.update_d2(x, n, d);
-        anyhow::ensure!(
-            self.gp.fit_from_sqdist(x, y, n, d, &self.d2, hyp),
-            "gram matrix not SPD"
-        );
+        let delta = self.update_d2(x, n, d);
+        self.factors.note_delta(delta);
+        let (mut row_key, mut gram_key) = ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
+        let idx = self
+            .ensure_factor(hyp, n, &mut row_key, &mut gram_key)
+            .ok_or_else(|| anyhow::anyhow!("gram matrix not SPD"))?;
+        self.gp.fit_from_factor(x, y, n, d, self.factors.factor(idx), hyp);
         let best = y.iter().cloned().fold(f64::INFINITY, f64::min);
         let mut mu = Vec::with_capacity(m);
         let mut var = Vec::with_capacity(m);
@@ -169,36 +266,24 @@ impl GpBackend for NativeBackend {
         d: usize,
         grid: &[[f64; 3]],
     ) -> Result<Vec<f64>> {
-        // Three levels of reuse across the grid (§Perf): the distance
-        // matrix is hyperparameter-independent (cached across BO
-        // iterations, see update_d2), and the Gram matrix depends only
-        // on (lengthscale, variance) — grid entries that share them (the
-        // 4 noise levels per lengthscale) reuse one kernel build.
-        self.update_d2(x, n, d);
+        // Reuse across the grid and across iterations (§Perf): the
+        // distance matrix is hyperparameter-independent (cached across
+        // BO iterations, see update_d2); each grid point keeps its
+        // Cholesky factor alive across iterations and rank-1 extends it
+        // (O(n²)) instead of refactorizing (O(n³)); and on the cold path
+        // grid entries sharing (lengthscale, variance) — the 4 noise
+        // levels per lengthscale — reuse one cross-row / Gram build.
+        let delta = self.update_d2(x, n, d);
+        self.factors.note_delta(delta);
         let mut out = vec![f64::INFINITY; grid.len()];
         let mut order: Vec<usize> = (0..grid.len()).collect();
         order.sort_by(|&a, &b| {
             (grid[a][0], grid[a][1]).partial_cmp(&(grid[b][0], grid[b][1])).unwrap()
         });
-        let mut kern: Vec<f64> = Vec::new();
-        let mut last_key = (f64::NAN, f64::NAN);
+        let (mut row_key, mut gram_key) = ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
         for &gi in &order {
-            let hyp = grid[gi];
-            if (hyp[0], hyp[1]) != last_key {
-                let (ls, var) = (hyp[0], hyp[1]);
-                kern.clear();
-                kern.resize(n * n, 0.0);
-                for i in 0..n {
-                    for j in 0..=i {
-                        let k = super::gp::matern52_from_d2(self.d2[i * n + j], ls, var);
-                        kern[i * n + j] = k;
-                        kern[j * n + i] = k;
-                    }
-                }
-                last_key = (ls, var);
-            }
-            if self.gp.fit_from_kernel(x, y, n, d, &kern, hyp) {
-                out[gi] = self.gp.nll(y);
+            if let Some(idx) = self.ensure_factor(grid[gi], n, &mut row_key, &mut gram_key) {
+                out[gi] = self.factors.nll(idx, y);
             }
         }
         Ok(out)
@@ -268,26 +353,46 @@ impl GpBackend for XlaBackend {
     }
 }
 
+/// The backend families selectable by name. Both [`backend_by_name`]
+/// and [`backend_factory_by_name`] parse through this, so an unknown
+/// name fails identically on both paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "native" => Ok(Self::Native),
+            "xla" => Ok(Self::Xla),
+            other => anyhow::bail!("unknown backend {other:?} (expected native|xla)"),
+        }
+    }
+}
+
 /// Backend selection by name (CLI `--backend native|xla`).
 pub fn backend_by_name(name: &str) -> Result<Box<dyn GpBackend>> {
-    match name {
-        "native" => Ok(Box::new(NativeBackend::new())),
-        "xla" => Ok(Box::new(XlaBackend::from_default_artifacts()?)),
-        other => anyhow::bail!("unknown backend {other:?} (expected native|xla)"),
+    match BackendKind::parse(name)? {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+        BackendKind::Xla => Ok(Box::new(XlaBackend::from_default_artifacts()?)),
     }
 }
 
 /// Backend *factory* selection by name — the parallel experiment engine
-/// instantiates one backend per worker thread from this. The xla arm is
-/// validated with a cheap artifact probe so an obviously bad
-/// configuration fails at startup; the expensive PJRT client creation +
-/// artifact compilation happens once per worker, inside the worker.
+/// instantiates one backend per worker thread from this. Name validation
+/// is shared with [`backend_by_name`] through [`BackendKind::parse`];
+/// the xla arm additionally probes the artifacts so an obviously bad
+/// configuration fails at startup, while the expensive PJRT client
+/// creation + artifact compilation happens once per worker, inside the
+/// worker.
 pub fn backend_factory_by_name(name: &str) -> Result<BackendFactory> {
-    match name {
-        "native" => {
+    match BackendKind::parse(name)? {
+        BackendKind::Native => {
             Ok(Box::new(|| -> Result<Box<dyn GpBackend>> { Ok(Box::new(NativeBackend::new())) }))
         }
-        "xla" => {
+        BackendKind::Xla => {
             anyhow::ensure!(
                 XlaRuntime::artifacts_available(),
                 "XLA backend unavailable: AOT artifacts not found (run `make artifacts`; \
@@ -297,7 +402,6 @@ pub fn backend_factory_by_name(name: &str) -> Result<BackendFactory> {
                 Ok(Box::new(XlaBackend::from_default_artifacts()?))
             }))
         }
-        other => anyhow::bail!("unknown backend {other:?} (expected native|xla)"),
     }
 }
 
@@ -332,6 +436,69 @@ mod tests {
     #[test]
     fn backend_by_name_rejects_unknown() {
         assert!(backend_by_name("tpu").is_err());
+    }
+
+    #[test]
+    fn unknown_backend_fails_identically_on_both_paths() {
+        let direct = backend_by_name("tpu").unwrap_err().to_string();
+        let factory = backend_factory_by_name("tpu").unwrap_err().to_string();
+        assert_eq!(direct, factory, "name validation diverged between the two paths");
+        assert!(direct.contains("expected native|xla"));
+    }
+
+    #[test]
+    fn default_impls_are_usable() {
+        assert_eq!(NativeBackend::default().name(), "native");
+        assert_eq!(NativeGp::default().n_obs(), 0);
+    }
+
+    #[test]
+    fn incremental_grid_refit_matches_scratch() {
+        // Drive a growth-then-slide sequence through two backends — one
+        // incremental, one forced to cold-refit every call — and pin the
+        // nll grid and decisions to each other within 1e-9.
+        let d = 3;
+        let total = 14usize;
+        let window = 9usize;
+        let rows: Vec<f64> =
+            (0..total * d).map(|i| ((i * 23 + 5) % 73) as f64 / 73.0).collect();
+        let grid = crate::bayesopt::hyperparameter_grid();
+        let m = 6;
+        let xc: Vec<f64> = (0..m * d).map(|i| ((i * 31 + 7) % 97) as f64 / 97.0).collect();
+        let cmask = vec![true; m];
+
+        let mut inc = NativeBackend::new();
+        let mut scr = NativeBackend::new();
+        scr.set_incremental(false);
+        for step in 0..(total - 2) {
+            let (lo, n) =
+                if step + 3 <= window { (0, step + 3) } else { (step + 3 - window, window) };
+            let x = &rows[lo * d..(lo + n) * d];
+            let y: Vec<f64> = (0..n).map(|i| ((lo + i) as f64 * 0.37).sin()).collect();
+            let a = inc.nll_grid(x, &y, n, d, &grid).unwrap();
+            let b = scr.nll_grid(x, &y, n, d, &grid).unwrap();
+            for (gi, (va, vb)) in a.iter().zip(&b).enumerate() {
+                let scale = va.abs().max(vb.abs()).max(1.0);
+                assert!(
+                    (va - vb).abs() <= 1e-9 * scale,
+                    "nll[{gi}] diverged at step {step}: {va} vs {vb}"
+                );
+            }
+            let hyp = grid[7];
+            let da = inc.decide(x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+            let db = scr.decide(x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+            for j in 0..m {
+                assert!((da.mu[j] - db.mu[j]).abs() <= 1e-9, "mu[{j}] step {step}");
+                assert!((da.var[j] - db.var[j]).abs() <= 1e-9, "var[{j}] step {step}");
+                assert!((da.ei[j] - db.ei[j]).abs() <= 1e-9, "ei[{j}] step {step}");
+            }
+        }
+        let si = inc.factor_stats();
+        assert!(si.appends > 0, "append path never taken: {si:?}");
+        assert!(si.slides > 0, "slide path never taken: {si:?}");
+        assert!(si.reuses > 0, "decide after nll_grid should reuse: {si:?}");
+        let ss = scr.factor_stats();
+        assert_eq!(ss.appends + ss.slides, 0, "scratch backend must stay cold: {ss:?}");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! running without artifacts, and serving as the CPU-native baseline in
 //! the §Perf comparison.
 
+use super::chol::CholFactor;
 use crate::util::stats;
 
 pub const SQRT5: f64 = 2.23606797749979;
@@ -51,6 +52,32 @@ pub fn pairwise_sqdist(x: &[f64], n: usize, d: usize, out: &mut Vec<f64>) {
             }
             out[i * n + j] = d2;
             out[j * n + i] = d2;
+        }
+    }
+}
+
+/// Tiled Matérn-5/2 Gram build from a precomputed squared-distance
+/// matrix: the lower triangle is computed in cache-sized blocks and
+/// mirrored, halving the transcendental count versus a full pointwise
+/// map and keeping both `d2` reads and `out` writes block-local. Shared
+/// by every cold-fit path (`fit_from_sqdist`, the backend's grid
+/// refactorizations).
+pub fn matern52_gram_from_d2(d2: &[f64], n: usize, ls: f64, var: f64, out: &mut Vec<f64>) {
+    const B: usize = 64;
+    assert_eq!(d2.len(), n * n);
+    out.clear();
+    out.resize(n * n, 0.0);
+    for ib in (0..n).step_by(B) {
+        let ie = (ib + B).min(n);
+        for jb in (0..=ib).step_by(B) {
+            let je = (jb + B).min(n);
+            for i in ib..ie {
+                for j in jb..je.min(i + 1) {
+                    let k = matern52_from_d2(d2[i * n + j], ls, var);
+                    out[i * n + j] = k;
+                    out[j * n + i] = k;
+                }
+            }
         }
     }
 }
@@ -152,6 +179,16 @@ pub fn expected_improvement(mu: f64, var: f64, best: f64) -> f64 {
 
 /// A fitted GP posterior over `n` observations of dimension `d`.
 ///
+/// Two fit families exist:
+///
+/// * **cold fits** ([`fit`](Self::fit) / [`fit_from_sqdist`](Self::fit_from_sqdist)
+///   / [`fit_from_kernel`](Self::fit_from_kernel)) factorize the full
+///   Gram from scratch, O(n³);
+/// * **extend paths** ([`extend`](Self::extend) / [`slide`](Self::slide)
+///   / [`fit_from_factor`](Self::fit_from_factor)) update the existing
+///   [`CholFactor`] by one observation in O(n²) — the per-BO-iteration
+///   hot path (see [`super::chol`] for the math and fallback rules).
+///
 /// Scratch buffers are reused across refits (`fit` clears and refills),
 /// which keeps the per-search-iteration hot path allocation-free after
 /// the first fit — one of the §Perf optimizations.
@@ -160,7 +197,7 @@ pub struct NativeGp {
     n: usize,
     d: usize,
     x: Vec<f64>,
-    chol: Vec<f64>,
+    factor: CholFactor,
     alpha: Vec<f64>,
     hyp: [f64; 3],
     // scratch for predictions and distance/kernel reuse
@@ -203,21 +240,13 @@ impl NativeGp {
         assert_eq!(d2.len(), n * n);
         let (ls, var, _) = (hyp[0], hyp[1], hyp[2]);
         let mut kern = std::mem::take(&mut self.kern_scratch);
-        kern.clear();
-        kern.resize(n * n, 0.0);
-        for i in 0..n {
-            for j in 0..=i {
-                let k = matern52_from_d2(d2[i * n + j], ls, var);
-                kern[i * n + j] = k;
-                kern[j * n + i] = k;
-            }
-        }
+        matern52_gram_from_d2(d2, n, ls, var, &mut kern);
         let ok = self.fit_from_kernel(x, y, n, d, &kern, hyp);
         self.kern_scratch = kern;
         ok
     }
 
-    /// Fit from a prebuilt noiseless Gram matrix. Shared by the
+    /// Cold fit from a prebuilt noiseless Gram matrix. Shared by the
     /// hyperparameter grid: the Gram depends only on the lengthscale, so
     /// the 4 noise levels per lengthscale reuse one kernel build (§Perf).
     pub fn fit_from_kernel(
@@ -238,20 +267,77 @@ impl NativeGp {
         self.x.clear();
         self.x.extend_from_slice(x);
 
-        let noise = hyp[2];
-        self.chol.clear();
-        self.chol.extend_from_slice(kern);
-        for i in 0..n {
-            self.chol[i * n + i] += noise + JITTER;
-        }
-        if !cholesky_in_place(&mut self.chol, n) {
+        if !self.factor.refactorize(kern, n, hyp[2] + JITTER) {
             return false;
         }
-        self.alpha.clear();
-        self.alpha.extend_from_slice(y);
-        solve_lower_in_place(&self.chol, n, &mut self.alpha);
-        solve_upper_t_in_place(&self.chol, n, &mut self.alpha);
+        self.refresh_alpha(y);
         true
+    }
+
+    /// Adopt an externally maintained factor (the backend's
+    /// [`FactorCache`](super::chol::FactorCache) hot path): copies `L`
+    /// and recomputes alpha — O(n²), no factorization.
+    pub fn fit_from_factor(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        factor: &CholFactor,
+        hyp: [f64; 3],
+    ) {
+        assert_eq!(x.len(), n * d);
+        assert_eq!(y.len(), n);
+        assert_eq!(factor.n(), n);
+        self.n = n;
+        self.d = d;
+        self.hyp = hyp;
+        self.x.clear();
+        self.x.extend_from_slice(x);
+        self.factor.clone_from(factor);
+        self.refresh_alpha(y);
+    }
+
+    /// Rank-1 extend path: append one observation (features `x_new`,
+    /// full target vector `y` of length `n+1`) to the fitted posterior
+    /// in O(n²) instead of refitting. Returns false — leaving the fit
+    /// unchanged — when the update detects loss of positive definiteness;
+    /// the caller must then cold-fit.
+    pub fn extend(&mut self, x_new: &[f64], y: &[f64]) -> bool {
+        assert_eq!(x_new.len(), self.d);
+        assert_eq!(y.len(), self.n + 1);
+        let (ls, var, noise) = (self.hyp[0], self.hyp[1], self.hyp[2]);
+        let mut row = std::mem::take(&mut self.ks_row);
+        row.clear();
+        for j in 0..self.n {
+            row.push(matern52(x_new, &self.x[j * self.d..(j + 1) * self.d], ls, var));
+        }
+        let ok = self.factor.append(&row, var + noise + JITTER);
+        self.ks_row = row;
+        if !ok {
+            return false;
+        }
+        self.x.extend_from_slice(x_new);
+        self.n += 1;
+        self.refresh_alpha(y);
+        true
+    }
+
+    /// Sliding-window extend: drop the oldest observation, then append
+    /// `x_new` (`y` holds the `n` targets of the slid window). O(n²).
+    /// Returns false on loss of positive definiteness; the factor is
+    /// then stale and the caller must cold-fit before predicting.
+    pub fn slide(&mut self, x_new: &[f64], y: &[f64]) -> bool {
+        assert!(self.n > 0, "slide on an empty fit");
+        assert_eq!(y.len(), self.n);
+        self.factor.drop_first();
+        self.x.drain(..self.d);
+        self.n -= 1;
+        self.extend(x_new, y)
+    }
+
+    fn refresh_alpha(&mut self, y: &[f64]) {
+        self.factor.solve_into(y, &mut self.alpha);
     }
 
     pub fn n_obs(&self) -> usize {
@@ -269,7 +355,7 @@ impl NativeGp {
         }
         let mu: f64 = self.ks_row.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
         // v = L^-1 ks; var = k(x,x) - |v|^2
-        solve_lower_in_place(&self.chol, n, &mut self.ks_row);
+        solve_lower_in_place(self.factor.l(), n, &mut self.ks_row);
         let v2: f64 = self.ks_row.iter().map(|v| v * v).sum();
         (mu, (var - v2).max(VAR_FLOOR))
     }
@@ -319,12 +405,14 @@ impl NativeGp {
             return;
         }
 
+        // Row-block width of the blocked TRSM below.
+        const TB: usize = 32;
         let mut ks = std::mem::take(&mut self.ks_mat);
         let mut acc = std::mem::take(&mut self.col_acc);
         ks.clear();
         ks.resize(n * w, 0.0);
         acc.clear();
-        acc.resize(w, 0.0);
+        acc.resize(TB.min(n) * w, 0.0);
 
         // Cross-kernel block: row i = k(x_i, active candidates).
         for i in 0..n {
@@ -345,31 +433,55 @@ impl NativeGp {
             }
         }
 
-        // Blocked forward substitution: Z = L^-1 Ks, all columns at once.
-        // Row i: z_i = (ks_i - sum_{k<i} L[i,k] z_k) / L[i,i], with the
-        // inner sum accumulated per column in ascending k — exactly the
-        // arithmetic `solve_lower_in_place` performs per single column.
-        for i in 0..n {
-            for v in acc.iter_mut() {
+        // Blocked TRSM: Z = L^-1 Ks, all columns at once, rows in blocks
+        // of TB. Row i: z_i = (ks_i - sum_{k<i} L[i,k] z_k) / L[i,i].
+        // For each block the contribution of all *prior* blocks is
+        // accumulated first (streaming each finished z_k row across the
+        // whole block — the cache-friendly GEMM-shaped part), then the
+        // small triangular block is solved in place. Per (row, column)
+        // the inner sum still visits k in ascending order, so the
+        // arithmetic is bit-identical to the per-column
+        // `solve_lower_in_place` that `predict` performs.
+        let lmat = self.factor.l();
+        for rb in (0..n).step_by(TB) {
+            let re = (rb + TB).min(n);
+            for v in acc[..(re - rb) * w].iter_mut() {
                 *v = 0.0;
             }
-            let (done, rest) = ks.split_at_mut(i * w);
-            let row_i = &mut rest[..w];
-            let l_row = &self.chol[i * n..i * n + i];
-            for (k, &l) in l_row.iter().enumerate() {
+            let (done, rest) = ks.split_at_mut(rb * w);
+            // GEMM part: acc[i - rb] += L[i, k] z_k for all k < rb.
+            for k in 0..rb {
                 let zk = &done[k * w..(k + 1) * w];
-                for c in 0..w {
-                    acc[c] += l * zk[c];
+                for i in rb..re {
+                    let l = lmat[i * n + k];
+                    let a = &mut acc[(i - rb) * w..(i - rb + 1) * w];
+                    for c in 0..w {
+                        a[c] += l * zk[c];
+                    }
                 }
             }
-            let diag = self.chol[i * n + i];
-            for c in 0..w {
-                row_i[c] = (row_i[c] - acc[c]) / diag;
+            // Triangular part: rows rb..re against freshly solved rows.
+            for i in rb..re {
+                let off = (i - rb) * w;
+                let (prior, cur) = rest.split_at_mut(off);
+                let row_i = &mut cur[..w];
+                let a = &mut acc[off..off + w];
+                for k in rb..i {
+                    let l = lmat[i * n + k];
+                    let zk = &prior[(k - rb) * w..(k - rb + 1) * w];
+                    for c in 0..w {
+                        a[c] += l * zk[c];
+                    }
+                }
+                let diag = lmat[i * n + i];
+                for c in 0..w {
+                    row_i[c] = (row_i[c] - a[c]) / diag;
+                }
             }
         }
 
         // var = k(x,x) - |z|^2 per column, ascending observation order.
-        for v in acc.iter_mut() {
+        for v in acc[..w].iter_mut() {
             *v = 0.0;
         }
         for i in 0..n {
@@ -390,8 +502,7 @@ impl NativeGp {
     pub fn nll(&self, y: &[f64]) -> f64 {
         let n = self.n;
         let quad: f64 = y.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>() * 0.5;
-        let logdet: f64 = (0..n).map(|i| self.chol[i * n + i].ln()).sum();
-        quad + logdet + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+        quad + self.factor.sum_log_diag() + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
     }
 }
 

@@ -4,11 +4,13 @@
 //! CherryPick and Ruya.
 
 pub mod backend;
+pub mod chol;
 pub mod gp;
 pub mod search;
 
 pub use backend::{
-    backend_by_name, backend_factory_by_name, BackendFactory, Decision, GpBackend,
-    NativeBackend, XlaBackend,
+    backend_by_name, backend_factory_by_name, BackendFactory, BackendKind, Decision,
+    GpBackend, NativeBackend, XlaBackend,
 };
+pub use chol::{CholFactor, FactorCache, FactorCacheStats};
 pub use search::{hyperparameter_grid, run_search, BoParams, SearchOutcome};

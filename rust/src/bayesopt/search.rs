@@ -6,6 +6,14 @@
 //! by marginal likelihood over a fixed grid, score every still-eligible
 //! candidate with expected improvement through the [`GpBackend`], and run
 //! the argmax configuration on the (simulated) cluster via the oracle.
+//!
+//! The loop's calling pattern is load-bearing for the backend's
+//! incremental caches (`NativeBackend`'s distance matrix and per-grid
+//! Cholesky [`FactorCache`](super::chol::FactorCache)): each iteration
+//! appends exactly one observation (or slides the window by one under a
+//! capacity-limited backend) and calls `nll_grid` then `decide` with the
+//! *same* window, so per-iteration grid refits are rank-1 updates
+//! (O(H·n²)) instead of scratch refactorizations (O(H·n³)).
 
 use super::backend::GpBackend;
 use crate::util::rng::Pcg64;
@@ -414,6 +422,57 @@ mod tests {
             }
         }
         assert!(fired > 0, "stopping criterion never fired under the windowed backend");
+    }
+
+    #[test]
+    fn search_drives_incremental_factor_path() {
+        // The search's append-one / same-window calling pattern must keep
+        // the backend on the rank-1 paths: cold refactorizations happen
+        // only on the first GP iteration (one per grid point) plus rare
+        // PD fallbacks, every later nll_grid extends, and each decide
+        // right after nll_grid reuses its factor.
+        let m = 40;
+        let (features, costs) = toy_space(m);
+        let mut backend = NativeBackend::new();
+        let mut rng = Pcg64::from_seed(17);
+        let mut oracle = |i: usize| costs[i];
+        let phases = vec![(0..m).collect::<Vec<_>>()];
+        let out = run_search(
+            &features,
+            m,
+            6,
+            &phases,
+            &mut oracle,
+            &mut backend,
+            &mut rng,
+            &BoParams::default(),
+        )
+        .expect("search");
+        assert_eq!(out.tried.len(), m);
+        let s = backend.factor_stats();
+        assert!(s.appends > 0, "append path never engaged: {s:?}");
+        assert!(s.reuses > 0, "decide never reused the nll_grid factor: {s:?}");
+        assert!(
+            s.cold_fits < 32 + (s.appends + s.slides) / 8,
+            "cold fits should be a one-off warmup, not the steady state: {s:?}"
+        );
+        // Sliding only happens under a capacity-limited backend: run one.
+        let mut capped = crate::testkit::CappedBackend::new(NativeBackend::new(), 10);
+        let mut rng = Pcg64::from_seed(17);
+        let mut oracle = |i: usize| costs[i];
+        run_search(
+            &features,
+            m,
+            6,
+            &phases,
+            &mut oracle,
+            &mut capped,
+            &mut rng,
+            &BoParams::default(),
+        )
+        .expect("windowed search");
+        let s = capped.inner.factor_stats();
+        assert!(s.slides > 0, "windowed search never took the slide path: {s:?}");
     }
 
     #[test]

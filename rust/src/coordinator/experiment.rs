@@ -15,6 +15,13 @@
 //! `r` always uses the seed `seed_base + r * 7919` and outcomes are
 //! folded back in repetition order, so every aggregate is bit-identical
 //! to the serial engine regardless of the worker count.
+//!
+//! [`ExperimentRunner::run_table2`] additionally shards at the *(job,
+//! method)* level: all 16 jobs × 2 methods × `reps` searches form one
+//! flat task list split across the workers, so small-`reps` runs also
+//! saturate `--threads` instead of serializing on the 32 (job, method)
+//! pairs. Folds still walk each pair's outcomes in repetition order and
+//! the pairs in job order, keeping every aggregate bit-identical.
 
 use super::planner::{RuyaPlanner, SearchPlan};
 use crate::bayesopt::{
@@ -213,11 +220,78 @@ impl ExperimentRunner {
         })
     }
 
-    /// Run `cfg.reps` seeded searches (repetition `r` uses seed
-    /// `seed_base + r * 7919`, the same formula as the serial engine),
-    /// sharded across `self.threads` scoped workers. Each worker owns one
-    /// backend from the factory; outcomes come back in repetition order,
-    /// so any downstream fold is independent of the worker count.
+    /// Run `reps` seeded searches for every `(table, plan, seed_base)`
+    /// unit — repetition `r` of a unit uses seed `seed_base + r * 7919`,
+    /// the same formula as the serial engine — sharding the flat
+    /// units × reps task list across `self.threads` scoped workers. Each
+    /// worker owns one backend from the factory; outcomes come back
+    /// grouped per unit in repetition order, so any downstream fold is
+    /// independent of the worker count.
+    fn run_units(
+        &self,
+        units: &[(&JobCostTable, &SearchPlan, u64)],
+        reps: usize,
+        params: &BoParams,
+    ) -> Result<Vec<Vec<SearchOutcome>>> {
+        let features = self.space.feature_matrix();
+        let m = self.space.len();
+        let d = crate::searchspace::N_FEATURES;
+        let total = units.len() * reps;
+        let run_task = move |backend: &mut dyn GpBackend, task: usize| -> Result<SearchOutcome> {
+            let (table, plan, seed_base) = units[task / reps];
+            let rep = (task % reps) as u64;
+            let mut rng = Pcg64::from_seed(seed_base.wrapping_add(rep * 7919));
+            let costs = &table.normalized;
+            let mut oracle = |i: usize| costs[i];
+            run_search(&features, m, d, &plan.phases, &mut oracle, backend, &mut rng, params)
+        };
+
+        let workers = self.threads.min(total).max(1);
+        let outcomes: Vec<Result<SearchOutcome>> = if workers == 1 {
+            let mut backend = (self.factory)()?;
+            (0..total).map(|task| run_task(backend.as_mut(), task)).collect()
+        } else {
+            let mut slots: Vec<Option<Result<SearchOutcome>>> = Vec::with_capacity(total);
+            slots.resize_with(total, || None);
+            let chunk = total.div_ceil(workers);
+            let factory = &self.factory;
+            std::thread::scope(|scope| {
+                for (w, chunk_slots) in slots.chunks_mut(chunk).enumerate() {
+                    let run_task = &run_task;
+                    scope.spawn(move || {
+                        let mut backend = match factory() {
+                            Ok(b) => b,
+                            Err(e) => {
+                                // Propagate as an error on this worker's
+                                // tasks instead of panicking the scope.
+                                for (off, slot) in chunk_slots.iter_mut().enumerate() {
+                                    *slot = Some(Err(anyhow::anyhow!(
+                                        "backend construction failed for task {}: {e:#}",
+                                        w * chunk + off
+                                    )));
+                                }
+                                return;
+                            }
+                        };
+                        for (off, slot) in chunk_slots.iter_mut().enumerate() {
+                            *slot = Some(run_task(backend.as_mut(), w * chunk + off));
+                        }
+                    });
+                }
+            });
+            slots.into_iter().map(|s| s.expect("worker filled every slot")).collect()
+        };
+
+        let mut grouped: Vec<Vec<SearchOutcome>> = Vec::with_capacity(units.len());
+        let mut it = outcomes.into_iter();
+        for _ in 0..units.len() {
+            grouped.push(it.by_ref().take(reps).collect::<Result<Vec<_>>>()?);
+        }
+        Ok(grouped)
+    }
+
+    /// Run `cfg.reps` seeded searches for one (table, plan) pair —
+    /// repetition sharding only (see [`Self::run_units`]).
     fn run_reps(
         &self,
         table: &JobCostTable,
@@ -226,51 +300,8 @@ impl ExperimentRunner {
         seed_base: u64,
         params: &BoParams,
     ) -> Result<Vec<SearchOutcome>> {
-        let features = self.space.feature_matrix();
-        let m = self.space.len();
-        let d = crate::searchspace::N_FEATURES;
-        let costs = &table.normalized;
-        let run_rep = move |backend: &mut dyn GpBackend, rep: usize| -> Result<SearchOutcome> {
-            let mut rng = Pcg64::from_seed(seed_base.wrapping_add(rep as u64 * 7919));
-            let mut oracle = |i: usize| costs[i];
-            run_search(&features, m, d, &plan.phases, &mut oracle, backend, &mut rng, params)
-        };
-
-        let workers = self.threads.min(cfg.reps).max(1);
-        if workers == 1 {
-            let mut backend = (self.factory)()?;
-            return (0..cfg.reps).map(|rep| run_rep(backend.as_mut(), rep)).collect();
-        }
-
-        let mut slots: Vec<Option<Result<SearchOutcome>>> = Vec::with_capacity(cfg.reps);
-        slots.resize_with(cfg.reps, || None);
-        let chunk = cfg.reps.div_ceil(workers);
-        let factory = &self.factory;
-        std::thread::scope(|scope| {
-            for (w, chunk_slots) in slots.chunks_mut(chunk).enumerate() {
-                let run_rep = &run_rep;
-                scope.spawn(move || {
-                    let mut backend = match factory() {
-                        Ok(b) => b,
-                        Err(e) => {
-                            // Propagate as an error on this worker's
-                            // repetitions instead of panicking the scope.
-                            for (off, slot) in chunk_slots.iter_mut().enumerate() {
-                                *slot = Some(Err(anyhow::anyhow!(
-                                    "backend construction failed for repetition {}: {e:#}",
-                                    w * chunk + off
-                                )));
-                            }
-                            return;
-                        }
-                    };
-                    for (off, slot) in chunk_slots.iter_mut().enumerate() {
-                        *slot = Some(run_rep(backend.as_mut(), w * chunk + off));
-                    }
-                });
-            }
-        });
-        slots.into_iter().map(|s| s.expect("worker filled every slot")).collect()
+        let mut grouped = self.run_units(&[(table, plan, seed_base)], cfg.reps, params)?;
+        Ok(grouped.pop().expect("one unit in, one group out"))
     }
 
     fn run_method(
@@ -282,41 +313,52 @@ impl ExperimentRunner {
     ) -> Result<MethodStats> {
         let params = BoParams { max_iters: self.space.len(), ..Default::default() };
         let outs = self.run_reps(table, plan, cfg, seed_base, &params)?;
-
-        // Fold in repetition order: every sum visits the same terms in
-        // the same sequence as the serial engine, so the aggregates are
-        // bit-identical no matter how repetitions were sharded.
-        let mut iters = [Vec::new(), Vec::new(), Vec::new()];
-        let mut best_curve = vec![0.0; cfg.curve_len];
-        let mut cum_curve = vec![0.0; cfg.curve_len];
-        let mut stops = Vec::new();
-        for out in &outs {
-            for (k, &thr) in THRESHOLDS.iter().enumerate() {
-                // The search exhausts the space, so every threshold is
-                // eventually reached.
-                iters[k].push(out.first_within(thr).unwrap_or(out.tried.len()) as f64);
-            }
-            accumulate_curves(out, &mut best_curve, &mut cum_curve);
-            stops.push(out.stop_after.unwrap_or(out.tried.len()) as f64);
-        }
-
-        let n = cfg.reps as f64;
-        for v in best_curve.iter_mut().chain(cum_curve.iter_mut()) {
-            *v /= n;
-        }
-        Ok(MethodStats {
-            iters_to: [mean(&iters[0]), mean(&iters[1]), mean(&iters[2])],
-            best_curve,
-            cum_curve,
-            mean_stop: mean(&stops),
-        })
+        Ok(fold_method_stats(&outs, cfg))
     }
 
     /// The full Table II experiment over all 16 jobs.
+    ///
+    /// All 16 jobs × 2 methods × `cfg.reps` searches shard as one flat
+    /// task list across the workers (job-level + repetition-level
+    /// parallelism), so small-`reps` runs still saturate `--threads`.
+    /// Per-rep seeds and fold order match the per-job
+    /// [`Self::compare_job`] path exactly, keeping every aggregate
+    /// bit-identical regardless of the worker count or sharding shape.
     pub fn run_table2(&self, cfg: &ExperimentConfig) -> Result<ExperimentResult> {
+        // Per-job preparation (profiling + planning) is cheap and serial.
+        let job_list = evaluation_jobs();
+        let preps: Vec<(JobCostTable, SearchPlan, SearchPlan, u64)> = job_list
+            .iter()
+            .map(|job| {
+                let table = JobCostTable::build(&self.sim, job, &self.space);
+                let profile = self.profile_job(job, cfg.seed);
+                let ruya_plan = self.planner.plan(&profile.model, job.input_gb, &self.space);
+                let cp_plan = SearchPlan::unpartitioned(&self.space);
+                (table, cp_plan, ruya_plan, job.job_id ^ 0x5EED)
+            })
+            .collect();
+
+        // Unit order fixes the fold order: [job0·cp, job0·ruya, job1·cp, …].
+        let units: Vec<(&JobCostTable, &SearchPlan, u64)> = preps
+            .iter()
+            .flat_map(|(table, cp, ruya, seed)| {
+                [(table, cp, *seed), (table, ruya, *seed)]
+            })
+            .collect();
+        let params = BoParams { max_iters: self.space.len(), ..Default::default() };
+        let grouped = self.run_units(&units, cfg.reps, &params)?;
+
         let mut jobs = Vec::new();
-        for job in evaluation_jobs() {
-            jobs.push(self.compare_job(&job, cfg)?);
+        for (ji, (job, prep)) in job_list.iter().zip(&preps).enumerate() {
+            let ruya_plan = &prep.2;
+            jobs.push(JobComparison {
+                label: job.label(),
+                category: ruya_plan.category,
+                requirement_gb: ruya_plan.requirement_gb,
+                priority_fraction: ruya_plan.priority_fraction,
+                cherrypick: fold_method_stats(&grouped[ji * 2], cfg),
+                ruya: fold_method_stats(&grouped[ji * 2 + 1], cfg),
+            });
         }
         let mut mean_cp = [0.0; 3];
         let mut mean_ruya = [0.0; 3];
@@ -384,6 +426,37 @@ impl ExperimentRunner {
             frac_optimal: optimal as f64 / cfg.reps as f64,
             mean_search_spend: mean(&spends),
         })
+    }
+}
+
+/// Fold one (job, method)'s outcomes into [`MethodStats`], walking
+/// repetitions in order: every sum visits the same terms in the same
+/// sequence as the serial engine, so the aggregates are bit-identical no
+/// matter how the searches were sharded (repetition-only or flat
+/// job × method × repetition).
+fn fold_method_stats(outs: &[SearchOutcome], cfg: &ExperimentConfig) -> MethodStats {
+    let mut iters = [Vec::new(), Vec::new(), Vec::new()];
+    let mut best_curve = vec![0.0; cfg.curve_len];
+    let mut cum_curve = vec![0.0; cfg.curve_len];
+    let mut stops = Vec::new();
+    for out in outs {
+        for (k, &thr) in THRESHOLDS.iter().enumerate() {
+            // The search exhausts the space, so every threshold is
+            // eventually reached.
+            iters[k].push(out.first_within(thr).unwrap_or(out.tried.len()) as f64);
+        }
+        accumulate_curves(out, &mut best_curve, &mut cum_curve);
+        stops.push(out.stop_after.unwrap_or(out.tried.len()) as f64);
+    }
+    let n = cfg.reps as f64;
+    for v in best_curve.iter_mut().chain(cum_curve.iter_mut()) {
+        *v /= n;
+    }
+    MethodStats {
+        iters_to: [mean(&iters[0]), mean(&iters[1]), mean(&iters[2])],
+        best_curve,
+        cum_curve,
+        mean_stop: mean(&stops),
     }
 }
 

@@ -19,8 +19,9 @@
 //!
 //! Global options: `--backend native|xla` (default native; xla loads the
 //! AOT artifacts through PJRT), `--seed <u64>`, `--reps <N>` (default
-//! 200 as in the paper), `--threads <N>` (repetition-sharding workers,
-//! default 1 — results are bit-identical for any value), `--out <dir>`
+//! 200 as in the paper), `--threads <N>` (worker threads; `table2`
+//! shards jobs x methods x repetitions as one flat task list, other
+//! commands shard repetitions — results are bit-identical for any value), `--out <dir>`
 //! (export .dat/.json/.md files).
 
 use anyhow::{bail, Context, Result};
@@ -421,8 +422,9 @@ SUBCOMMANDS
 OPTIONS
   --backend native|xla   GP backend (default native; xla = AOT artifacts)
   --reps N               repetitions for table2/fig4/fig5 (default 200)
-  --threads N            repetition-sharding worker threads (default 1;
-                         results are bit-identical for any value)
+  --threads N            worker threads (default 1; table2 shards jobs x
+                         methods x repetitions, other commands shard
+                         repetitions; results bit-identical for any value)
   --seed S               experiment seed (default 0xC0FFEE)
   --out DIR              also write tables/figures to DIR
   --curve-len N          length of fig4/fig5 series (default 48)

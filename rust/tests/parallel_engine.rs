@@ -89,6 +89,47 @@ fn more_workers_than_reps_is_fine() {
     assert_eq!(bits(&serial.ruya.iters_to), bits(&par.ruya.iters_to));
 }
 
+/// Job-level sharding: `run_table2` splits all 16 jobs × 2 methods ×
+/// reps searches across workers as one flat task list, so even reps=2
+/// exercises multi-worker sharding — and every aggregate must stay
+/// bit-identical to the single-threaded run, per job and overall.
+#[test]
+fn run_table2_job_sharding_is_bit_identical() {
+    let cfg = ExperimentConfig { reps: 2, seed: 9, curve_len: 20 };
+    let serial = ExperimentRunner::native().with_threads(1).run_table2(&cfg).unwrap();
+    let par = ExperimentRunner::native().with_threads(8).run_table2(&cfg).unwrap();
+    assert_eq!(serial.jobs.len(), par.jobs.len());
+    for (a, b) in serial.jobs.iter().zip(&par.jobs) {
+        assert_eq!(a.label, b.label, "job order changed under sharding");
+        assert_eq!(bits(&a.cherrypick.iters_to), bits(&b.cherrypick.iters_to), "{}", a.label);
+        assert_eq!(bits(&a.ruya.iters_to), bits(&b.ruya.iters_to), "{}", a.label);
+        assert_eq!(bits(&a.cherrypick.best_curve), bits(&b.cherrypick.best_curve));
+        assert_eq!(bits(&a.ruya.cum_curve), bits(&b.ruya.cum_curve));
+    }
+    assert_eq!(bits(&serial.mean_cherrypick), bits(&par.mean_cherrypick));
+    assert_eq!(bits(&serial.mean_ruya), bits(&par.mean_ruya));
+    assert_eq!(bits(&serial.mean_quotient), bits(&par.mean_quotient));
+}
+
+/// The flat job-sharded `run_table2` path must agree bit-for-bit with
+/// composing the per-job `compare_job` path (same seeds, same folds).
+#[test]
+fn run_table2_matches_compare_job_composition() {
+    let cfg = ExperimentConfig { reps: 2, seed: 5, curve_len: 15 };
+    let runner = ExperimentRunner::native().with_threads(4);
+    let table2 = runner.run_table2(&cfg).unwrap();
+    for row in table2.jobs.iter().take(3) {
+        let jc = runner
+            .compare_job(&job(&row.label), &cfg)
+            .unwrap();
+        assert_eq!(bits(&row.cherrypick.iters_to), bits(&jc.cherrypick.iters_to), "{}", row.label);
+        assert_eq!(bits(&row.ruya.iters_to), bits(&jc.ruya.iters_to), "{}", row.label);
+        assert_eq!(bits(&row.cherrypick.cum_curve), bits(&jc.cherrypick.cum_curve));
+        assert_eq!(bits(&row.ruya.best_curve), bits(&jc.ruya.best_curve));
+        assert_eq!(row.cherrypick.mean_stop.to_bits(), jc.cherrypick.mean_stop.to_bits());
+    }
+}
+
 /// End-to-end windowed-history search over the real 69-configuration
 /// space and a real job's cost table: the search must keep functioning
 /// once the history exceeds the backend capacity (sliding window), still
