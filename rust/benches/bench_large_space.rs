@@ -1,0 +1,163 @@
+//! §Perf bench: exact-vs-low-rank decide latency across search-space
+//! sizes — the measurement behind the generated-catalog workload class.
+//!
+//! Sweeps `decide` (one GP fit + EI over all candidates) over
+//! n_candidates ∈ {69 (scout), 1k, 5k (generated)} at small and large
+//! observation counts, with the low-rank path forced off vs the Auto
+//! policy, and reports each configuration's latency as a multiple of the
+//! 69-config exact baseline.
+//!
+//! Regime note: each cell repeats `decide` on a *fixed* history, so the
+//! exact path's factor/d2 caches are warm (a cache-hit refit plus
+//! scoring) while the low-rank path re-fits from scratch every call
+//! (FPS + two u x u factorizations — it has no incremental refresh yet,
+//! see ROADMAP). This favors the exact path: in the real search loop the
+//! history grows every iteration, so the printed exact/auto speedups are
+//! a *lower bound* on the low-rank advantage.
+//!
+//! `--smoke` (the CI mode) runs tiny sizes only and *asserts* the
+//! documented policy thresholds: the Nyström path engages above
+//! `LOWRANK_CANDIDATE_THRESHOLD` (with enough observations) and the
+//! exact path keeps serving everything below it.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::{
+    GpBackend, LowRankPolicy, NativeBackend, LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS,
+};
+use ruya::searchspace::SearchSpace;
+use ruya::util::rng::Pcg64;
+
+/// Synthetic observations over distinct space rows (cycling would create
+/// duplicate rows, which the exact Gram tolerates but never needs here:
+/// callers keep `n <= space.len()`).
+fn observations(space: &SearchSpace, n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n <= space.len());
+    let mut rng = Pcg64::from_seed(42);
+    let mut x = Vec::with_capacity(n * ruya::searchspace::N_FEATURES);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        x.extend(space.features(i));
+        y.push(1.0 + rng.next_f64());
+    }
+    (x, y)
+}
+
+/// Median decide latency (ns) for one (space, n_obs, policy) cell.
+fn decide_latency(space: &SearchSpace, n: usize, policy: LowRankPolicy, label: &str) -> f64 {
+    let d = ruya::searchspace::N_FEATURES;
+    let m = space.len();
+    let features = space.feature_matrix();
+    let (x, y) = observations(space, n);
+    let cmask: Vec<bool> = (0..m).map(|i| i >= n).collect();
+    let hyp = [0.5, 1.0, 1e-3];
+    let mut backend = NativeBackend::new();
+    backend.set_lowrank_policy(policy);
+    let stats = harness::bench_fn(label, || {
+        std::hint::black_box(
+            backend.decide(&x, &y, n, d, &features, &cmask, m, hyp).unwrap(),
+        );
+    });
+    stats.median()
+}
+
+fn latency_sweep() {
+    harness::section("decide latency: exact vs low-rank across space sizes");
+    println!(
+        "(fixed-history cells: exact runs warm-cache, low-rank re-fits per call —\n \
+         speedups are a lower bound on the low-rank advantage; see module docs)"
+    );
+    let scout = SearchSpace::scout();
+    let spaces: Vec<(String, SearchSpace)> = vec![
+        ("scout:69".into(), scout),
+        ("generated:1000".into(), SearchSpace::generated(1, 1000)),
+        ("generated:5000".into(), SearchSpace::generated(1, 5000)),
+    ];
+    // The acceptance baseline: the exact path on the 69-config space at
+    // the same observation count the big spaces are measured at.
+    let n_small = 48;
+    let baseline =
+        decide_latency(&spaces[0].1, n_small, LowRankPolicy::Off, "scout:69 exact (n=48)");
+    println!("    -> baseline: 69-config exact decide at n=48");
+
+    for (name, space) in spaces.iter().skip(1) {
+        for &n in &[n_small, 256usize] {
+            let exact = decide_latency(
+                space,
+                n,
+                LowRankPolicy::Off,
+                &format!("{name} exact   (n={n:3})"),
+            );
+            let auto = decide_latency(
+                space,
+                n,
+                LowRankPolicy::Auto,
+                &format!("{name} auto    (n={n:3})"),
+            );
+            println!(
+                "    -> {name} n={n:3}: exact {:.2}x baseline, auto {:.2}x baseline, \
+                 lowrank speedup {:.2}x",
+                exact / baseline,
+                auto / baseline,
+                exact / auto,
+            );
+        }
+    }
+}
+
+/// Functional guard (the whole point of `--smoke`): the documented
+/// policy thresholds must route decides to the right path.
+fn assert_policy_thresholds() {
+    let d = ruya::searchspace::N_FEATURES;
+    let hyp = [0.5, 1.0, 1e-3];
+
+    // The smallest history the Auto policy genuinely approximates.
+    let engaged = LOWRANK_MIN_OBS + 1;
+
+    // Below the candidate threshold (the scout space): exact, always.
+    let scout = SearchSpace::scout();
+    let m = scout.len();
+    assert!(m <= LOWRANK_CANDIDATE_THRESHOLD, "scout space unexpectedly large");
+    let features = scout.feature_matrix();
+    let (x, y) = observations(&scout, engaged.min(scout.len()));
+    let n = engaged.min(scout.len());
+    let cmask = vec![true; m];
+    let mut b = NativeBackend::new();
+    b.decide(&x, &y, n, d, &features, &cmask, m, hyp).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.exact, 1, "small space must stay exact: {s:?}");
+    assert_eq!(s.lowrank, 0, "small space must not engage low-rank: {s:?}");
+
+    // Above the threshold with a long enough history: low-rank engages.
+    let big = SearchSpace::generated(3, LOWRANK_CANDIDATE_THRESHOLD + 200);
+    let mb = big.len();
+    let fb = big.feature_matrix();
+    let cb = vec![true; mb];
+    let (xb, yb) = observations(&big, engaged);
+    let mut b = NativeBackend::new();
+    b.decide(&xb, &yb, engaged, d, &fb, &cb, mb, hyp).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.lowrank, 1, "large space must engage low-rank: {s:?}");
+    assert_eq!(s.exact, 0, "large space must not fall back silently: {s:?}");
+
+    // Above the threshold but history within the inducing cap (low-rank
+    // would be exact math at extra cost): exact.
+    let (xs, ys) = observations(&big, LOWRANK_MIN_OBS);
+    let mut b = NativeBackend::new();
+    b.decide(&xs, &ys, LOWRANK_MIN_OBS, d, &fb, &cb, mb, hyp).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.exact, 1, "within-cap decide must stay exact: {s:?}");
+
+    println!("low-rank policy-threshold guard: OK");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    assert_policy_thresholds();
+    if smoke {
+        println!("\nsmoke mode: skipping the full latency sweep");
+        return;
+    }
+    latency_sweep();
+}

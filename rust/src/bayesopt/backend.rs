@@ -5,8 +5,61 @@
 
 use super::chol::{FactorCache, FactorCacheStats, FitPlan, ObsDelta};
 use super::gp::{expected_improvement, matern52_from_d2, matern52_gram_from_d2, NativeGp};
+use super::lowrank::{LowRankGp, DEFAULT_MAX_INDUCING};
 use crate::runtime::{GpExecutor, XlaRuntime};
 use anyhow::Result;
+
+/// Candidate count above which [`NativeBackend::decide`] switches from
+/// the exact posterior to the Nyström low-rank path (policy
+/// [`LowRankPolicy::Auto`]). Below this the exact O(n²)-per-candidate
+/// scoring is cheap enough that the low-rank machinery only adds
+/// overhead; the paper's 69-config scout space stays far under it.
+pub const LOWRANK_CANDIDATE_THRESHOLD: usize = 512;
+
+/// Observation count at or below which the exact path is always used,
+/// even over a large candidate set. Equal to the default inducing cap on
+/// purpose: with `n <= DEFAULT_MAX_INDUCING` farthest-point sampling
+/// would select every observation as an inducing point — exact math
+/// through a costlier scratch fit, bypassing the incremental factor
+/// cache for no approximation benefit. The low-rank path engages only
+/// where it genuinely approximates (`u < n`).
+pub const LOWRANK_MIN_OBS: usize = DEFAULT_MAX_INDUCING;
+
+/// Tile width of the chunked batched acquisition: `decide` streams
+/// candidates through `predict_batch` in fixed-size tiles so the
+/// intermediate cross-kernel block stays `n x 1024` instead of `n x m`
+/// for a generated 5k-config catalog. Per-column arithmetic is
+/// independent of the tiling, so results are bit-identical to one
+/// m-wide call.
+pub const DECIDE_TILE: usize = 1024;
+
+/// How [`NativeBackend`] chooses between the exact and the Nyström
+/// low-rank posterior when scoring candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LowRankPolicy {
+    /// Low-rank when `m > LOWRANK_CANDIDATE_THRESHOLD` and
+    /// `n > LOWRANK_MIN_OBS`; exact otherwise.
+    #[default]
+    Auto,
+    /// Always exact (the scratch baseline for benches and parity tests).
+    Off,
+    /// Always low-rank with the given inducing cap (parity tests use
+    /// `max_inducing >= n` to hit the exact-equality special case).
+    Force { max_inducing: usize },
+}
+
+/// Which `decide` paths a [`NativeBackend`] has taken — the observable
+/// the `bench_large_space --smoke` CI step asserts on.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DecideStats {
+    /// Decisions served by the exact (Cholesky-factor) posterior.
+    pub exact: u64,
+    /// Decisions served by the Nyström low-rank posterior.
+    pub lowrank: u64,
+    /// Low-rank fits that lost positive definiteness and fell back to
+    /// the exact path.
+    pub lowrank_fallbacks: u64,
+}
 
 /// Posterior + acquisition over all candidates for one search iteration.
 #[derive(Debug, Clone)]
@@ -68,6 +121,14 @@ pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn GpBackend>> + Send + Sy
 /// Cholesky [`FactorCache`] slot per hyperparameter-grid point, updated
 /// by rank-1 append/slide instead of refactorized from scratch — the
 /// O(H·n³) → O(H·n²) hot-path win (see [`super::chol`]).
+///
+/// Candidate scoring in [`GpBackend::decide`] is two-tier: small spaces
+/// go through the exact posterior in [`DECIDE_TILE`]-wide chunks, while
+/// generated-catalog-scale spaces (see [`LowRankPolicy`] and
+/// [`LOWRANK_CANDIDATE_THRESHOLD`]) are served by the Nyström low-rank
+/// posterior of [`super::lowrank`], whose per-candidate cost is
+/// independent of the observation count. `nll_grid` (observation-only
+/// work) always stays on the exact incremental path.
 #[derive(Default)]
 pub struct NativeBackend {
     gp: NativeGp,
@@ -89,6 +150,13 @@ pub struct NativeBackend {
     incremental_off: bool,
     row_scratch: Vec<f64>,
     kern_scratch: Vec<f64>,
+    /// The large-space candidate-scoring posterior and its policy.
+    lowrank: LowRankGp,
+    lowrank_policy: LowRankPolicy,
+    decide_stats: DecideStats,
+    /// Per-tile prediction buffers of the chunked exact path.
+    mu_tile: Vec<f64>,
+    var_tile: Vec<f64>,
 }
 
 impl NativeBackend {
@@ -101,9 +169,33 @@ impl NativeBackend {
         self.incremental_off = !on;
     }
 
+    /// Select how `decide` chooses between the exact and the low-rank
+    /// candidate-scoring path (default [`LowRankPolicy::Auto`]).
+    pub fn set_lowrank_policy(&mut self, policy: LowRankPolicy) {
+        self.lowrank_policy = policy;
+    }
+
     /// Counters of the factorization paths taken so far.
     pub fn factor_stats(&self) -> FactorCacheStats {
         self.factors.stats()
+    }
+
+    /// Counters of the decide paths taken so far.
+    pub fn decide_stats(&self) -> DecideStats {
+        self.decide_stats
+    }
+
+    /// Inducing cap to use for this decision, or None for the exact path.
+    fn lowrank_limit(&self, n: usize, m: usize) -> Option<usize> {
+        match self.lowrank_policy {
+            LowRankPolicy::Off => None,
+            LowRankPolicy::Force { max_inducing } => {
+                (n > 0).then_some(max_inducing.max(1))
+            }
+            LowRankPolicy::Auto => (m > LOWRANK_CANDIDATE_THRESHOLD
+                && n > LOWRANK_MIN_OBS)
+                .then_some(DEFAULT_MAX_INDUCING),
+        }
     }
 
     /// Ensure `self.d2` holds the pairwise squared distances of `x`, and
@@ -237,6 +329,30 @@ impl GpBackend for NativeBackend {
         m: usize,
         hyp: [f64; 3],
     ) -> Result<Decision> {
+        let best = y.iter().cloned().fold(f64::INFINITY, f64::min);
+
+        // Large-space path: Nyström low-rank posterior, per-candidate
+        // cost independent of n (see LOWRANK_CANDIDATE_THRESHOLD /
+        // LowRankPolicy). The factor cache is untouched — nll_grid keeps
+        // maintaining it, and its own update_d2 call still sees the
+        // append/slide deltas of the search loop.
+        if let Some(max_inducing) = self.lowrank_limit(n, m) {
+            if self.lowrank.fit(x, y, n, d, hyp, max_inducing) {
+                self.decide_stats.lowrank += 1;
+                let mut mu = Vec::with_capacity(m);
+                let mut var = Vec::with_capacity(m);
+                self.lowrank.predict_batch(xc, m, &mut mu, &mut var);
+                let ei = (0..m)
+                    .map(|i| {
+                        if cmask[i] { expected_improvement(mu[i], var[i], best) } else { 0.0 }
+                    })
+                    .collect();
+                return Ok(Decision { ei, mu, var });
+            }
+            // Degenerate inducing Gram: fall through to the exact path.
+            self.decide_stats.lowrank_fallbacks += 1;
+        }
+
         let delta = self.update_d2(x, n, d);
         self.factors.note_delta(delta);
         let (mut row_key, mut gram_key) = ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
@@ -244,14 +360,28 @@ impl GpBackend for NativeBackend {
             .ensure_factor(hyp, n, &mut row_key, &mut gram_key)
             .ok_or_else(|| anyhow::anyhow!("gram matrix not SPD"))?;
         self.gp.fit_from_factor(x, y, n, d, self.factors.factor(idx), hyp);
-        let best = y.iter().cloned().fold(f64::INFINITY, f64::min);
+        self.decide_stats.exact += 1;
         let mut mu = Vec::with_capacity(m);
         let mut var = Vec::with_capacity(m);
-        // One batched solve over all candidate columns. No candidate mask
+        // Batched solves over the candidate columns, streamed in
+        // DECIDE_TILE-wide chunks: the n x tile cross-kernel block stays
+        // a fixed size however large the space is, and per-column
+        // arithmetic is identical to one m-wide call. No candidate mask
         // is passed: the Decision contract exposes mu/var for *every*
         // candidate (the XLA-parity tests and the search's exploration
         // fallback read them) — only the EI respects `cmask`.
-        self.gp.predict_batch(xc, m, None, &mut mu, &mut var);
+        for start in (0..m).step_by(DECIDE_TILE) {
+            let w = DECIDE_TILE.min(m - start);
+            self.gp.predict_batch(
+                &xc[start * d..(start + w) * d],
+                w,
+                None,
+                &mut self.mu_tile,
+                &mut self.var_tile,
+            );
+            mu.extend_from_slice(&self.mu_tile);
+            var.extend_from_slice(&self.var_tile);
+        }
         let ei = (0..m)
             .map(|i| if cmask[i] { expected_improvement(mu[i], var[i], best) } else { 0.0 })
             .collect();
@@ -456,43 +586,27 @@ mod tests {
     fn incremental_grid_refit_matches_scratch() {
         // Drive a growth-then-slide sequence through two backends — one
         // incremental, one forced to cold-refit every call — and pin the
-        // nll grid and decisions to each other within 1e-9.
+        // nll grid and decisions to each other within 1e-9, all through
+        // the shared testkit parity harness (the same entry point that
+        // pins low-rank-vs-exact in tests/prop_lowrank.rs).
+        use crate::testkit::{assert_backend_parity, ParityScript};
         let d = 3;
         let total = 14usize;
         let window = 9usize;
         let rows: Vec<f64> =
             (0..total * d).map(|i| ((i * 23 + 5) % 73) as f64 / 73.0).collect();
+        let ys: Vec<f64> = (0..total).map(|i| (i as f64 * 0.37).sin()).collect();
+        let script =
+            ParityScript::new(rows, ys, d).growth(window).slides(window, total - window);
         let grid = crate::bayesopt::hyperparameter_grid();
         let m = 6;
         let xc: Vec<f64> = (0..m * d).map(|i| ((i * 31 + 7) % 97) as f64 / 97.0).collect();
-        let cmask = vec![true; m];
 
         let mut inc = NativeBackend::new();
         let mut scr = NativeBackend::new();
         scr.set_incremental(false);
-        for step in 0..(total - 2) {
-            let (lo, n) =
-                if step + 3 <= window { (0, step + 3) } else { (step + 3 - window, window) };
-            let x = &rows[lo * d..(lo + n) * d];
-            let y: Vec<f64> = (0..n).map(|i| ((lo + i) as f64 * 0.37).sin()).collect();
-            let a = inc.nll_grid(x, &y, n, d, &grid).unwrap();
-            let b = scr.nll_grid(x, &y, n, d, &grid).unwrap();
-            for (gi, (va, vb)) in a.iter().zip(&b).enumerate() {
-                let scale = va.abs().max(vb.abs()).max(1.0);
-                assert!(
-                    (va - vb).abs() <= 1e-9 * scale,
-                    "nll[{gi}] diverged at step {step}: {va} vs {vb}"
-                );
-            }
-            let hyp = grid[7];
-            let da = inc.decide(x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
-            let db = scr.decide(x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
-            for j in 0..m {
-                assert!((da.mu[j] - db.mu[j]).abs() <= 1e-9, "mu[{j}] step {step}");
-                assert!((da.var[j] - db.var[j]).abs() <= 1e-9, "var[{j}] step {step}");
-                assert!((da.ei[j] - db.ei[j]).abs() <= 1e-9, "ei[{j}] step {step}");
-            }
-        }
+        let report = assert_backend_parity(&mut inc, &mut scr, &script, &xc, m, &grid, 1e-9);
+        assert_eq!(report.steps, total, "growth + slide steps");
         let si = inc.factor_stats();
         assert!(si.appends > 0, "append path never taken: {si:?}");
         assert!(si.slides > 0, "slide path never taken: {si:?}");
@@ -532,6 +646,91 @@ mod tests {
             assert!((dec.var[i] - var).abs() <= 1e-12, "var[{i}]");
             let ei = if cmask[i] { expected_improvement(mu, var, best) } else { 0.0 };
             assert!((dec.ei[i] - ei).abs() <= 1e-12, "ei[{i}]");
+        }
+    }
+
+    /// Synthetic observation rows + candidate rows for path tests.
+    fn synth(n: usize, m: usize, d: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let x: Vec<f64> = (0..n * d).map(|i| ((i * 29 + 7) % 83) as f64 / 83.0).collect();
+        let y: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.43).sin()).collect();
+        let xc: Vec<f64> = (0..m * d).map(|i| ((i * 31 + 11) % 97) as f64 / 97.0).collect();
+        (x, y, xc)
+    }
+
+    #[test]
+    fn auto_policy_follows_documented_thresholds() {
+        let d = 3;
+        let hyp = [0.7, 1.0, 1e-3];
+        let engaged = LOWRANK_MIN_OBS + 1; // smallest history the Auto policy approximates
+        let mut b = NativeBackend::new();
+        // Below the candidate threshold: exact, regardless of n.
+        let (x, y, xc) = synth(engaged, 16, d);
+        b.decide(&x, &y, engaged, d, &xc, &vec![true; 16], 16, hyp).unwrap();
+        assert_eq!(b.decide_stats(), DecideStats { exact: 1, ..Default::default() });
+        // Above the candidate threshold with enough observations: lowrank.
+        let m = LOWRANK_CANDIDATE_THRESHOLD + 1;
+        let (x, y, xc) = synth(engaged, m, d);
+        b.decide(&x, &y, engaged, d, &xc, &vec![true; m], m, hyp).unwrap();
+        assert_eq!(b.decide_stats(), DecideStats { exact: 1, lowrank: 1, ..Default::default() });
+        // Large space but history within the inducing cap (the low-rank
+        // posterior would be exact math at extra cost): exact again.
+        let (x, y, xc) = synth(LOWRANK_MIN_OBS, m, d);
+        b.decide(&x, &y, LOWRANK_MIN_OBS, d, &xc, &vec![true; m], m, hyp).unwrap();
+        assert_eq!(b.decide_stats(), DecideStats { exact: 2, lowrank: 1, ..Default::default() });
+        // Policy Off never takes the low-rank path.
+        let mut off = NativeBackend::new();
+        off.set_lowrank_policy(LowRankPolicy::Off);
+        let (x, y, xc) = synth(engaged, m, d);
+        off.decide(&x, &y, engaged, d, &xc, &vec![true; m], m, hyp).unwrap();
+        assert_eq!(off.decide_stats().lowrank, 0);
+        assert_eq!(off.decide_stats().exact, 1);
+    }
+
+    #[test]
+    fn forced_full_inducing_decide_matches_exact() {
+        // Force { max_inducing >= n } pins the exact-equality special
+        // case (module docs of `lowrank`) at the backend level.
+        let d = 3;
+        let (n, m) = (12, 20);
+        let (x, y, xc) = synth(n, m, d);
+        let cmask = vec![true; m];
+        let hyp = [0.6, 1.0, 1e-3];
+        let mut exact = NativeBackend::new();
+        exact.set_lowrank_policy(LowRankPolicy::Off);
+        let mut forced = NativeBackend::new();
+        forced.set_lowrank_policy(LowRankPolicy::Force { max_inducing: 64 });
+        let de = exact.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+        let df = forced.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+        assert_eq!(forced.decide_stats().lowrank, 1);
+        for j in 0..m {
+            assert!((de.mu[j] - df.mu[j]).abs() <= 1e-6, "mu[{j}]: {} vs {}", de.mu[j], df.mu[j]);
+            assert!((de.var[j] - df.var[j]).abs() <= 1e-6, "var[{j}]");
+            // EI amplifies variance error by ~1/(2 sigma); give it headroom.
+            assert!((de.ei[j] - df.ei[j]).abs() <= 1e-5, "ei[{j}]");
+        }
+    }
+
+    #[test]
+    fn tiled_decide_matches_per_row_predict_across_tile_boundary() {
+        use crate::bayesopt::gp::NativeGp;
+        let d = 3;
+        let n = 6;
+        let m = DECIDE_TILE * 2 + 37; // three tiles, last one ragged
+        let (x, y, xc) = synth(n, m, d);
+        let cmask = vec![true; m];
+        let hyp = [0.7, 1.0, 1e-3];
+        let mut b = NativeBackend::new(); // Auto, but n < LOWRANK_MIN_OBS -> exact
+        let dec = b.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+        assert_eq!(b.decide_stats().exact, 1);
+        assert_eq!(dec.mu.len(), m);
+        let mut gp = NativeGp::new();
+        assert!(gp.fit(&x, &y, n, d, hyp));
+        // Spot-check columns straddling every tile boundary plus the ends.
+        for &j in &[0, 1, DECIDE_TILE - 1, DECIDE_TILE, 2 * DECIDE_TILE - 1, 2 * DECIDE_TILE, m - 1]
+        {
+            let (mu, var) = gp.predict(&xc[j * d..(j + 1) * d]);
+            assert!((dec.mu[j] - mu).abs() <= 1e-12, "mu[{j}]");
+            assert!((dec.var[j] - var).abs() <= 1e-12, "var[{j}]");
         }
     }
 

@@ -7,7 +7,13 @@
 use super::chol::CholFactor;
 use crate::util::stats;
 
-pub const SQRT5: f64 = 2.23606797749979;
+// Kernel math lives in [`super::kernel`] (shared with the low-rank
+// posterior); re-exported here so long-standing `gp::matern52`-style
+// paths keep working.
+pub use super::kernel::{
+    matern52, matern52_cross, matern52_from_d2, matern52_gram_from_d2, pairwise_sqdist, SQRT5,
+};
+
 /// Diagonal jitter matching python/compile/model.py.
 pub const JITTER: f64 = 1e-6;
 /// Posterior-variance floor: predictions clamp `k(x,x) - |v|^2` here so
@@ -17,70 +23,6 @@ pub const VAR_FLOOR: f64 = 0.0;
 /// Below this posterior standard deviation [`expected_improvement`]
 /// switches to the exact certain-improvement formula.
 pub const EI_SIGMA_FLOOR: f64 = 1e-12;
-
-/// Matérn-5/2 covariance from a squared distance.
-#[inline]
-pub fn matern52_from_d2(d2: f64, lengthscale: f64, variance: f64) -> f64 {
-    let r = d2.sqrt() / lengthscale;
-    variance * (1.0 + SQRT5 * r + (5.0 / 3.0) * d2 / (lengthscale * lengthscale))
-        * (-SQRT5 * r).exp()
-}
-
-/// Matérn-5/2 covariance between two feature rows.
-#[inline]
-pub fn matern52(a: &[f64], b: &[f64], lengthscale: f64, variance: f64) -> f64 {
-    let mut d2 = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        let d = x - y;
-        d2 += d * d;
-    }
-    matern52_from_d2(d2, lengthscale, variance)
-}
-
-/// Pairwise squared distances of `n` rows (row-major, `d` columns) into
-/// `out` (resized to n*n). Hyperparameter-independent — computed once per
-/// decision and shared across the whole hyperparameter grid (§Perf).
-pub fn pairwise_sqdist(x: &[f64], n: usize, d: usize, out: &mut Vec<f64>) {
-    out.clear();
-    out.resize(n * n, 0.0);
-    for i in 0..n {
-        for j in 0..i {
-            let mut d2 = 0.0;
-            for k in 0..d {
-                let diff = x[i * d + k] - x[j * d + k];
-                d2 += diff * diff;
-            }
-            out[i * n + j] = d2;
-            out[j * n + i] = d2;
-        }
-    }
-}
-
-/// Tiled Matérn-5/2 Gram build from a precomputed squared-distance
-/// matrix: the lower triangle is computed in cache-sized blocks and
-/// mirrored, halving the transcendental count versus a full pointwise
-/// map and keeping both `d2` reads and `out` writes block-local. Shared
-/// by every cold-fit path (`fit_from_sqdist`, the backend's grid
-/// refactorizations).
-pub fn matern52_gram_from_d2(d2: &[f64], n: usize, ls: f64, var: f64, out: &mut Vec<f64>) {
-    const B: usize = 64;
-    assert_eq!(d2.len(), n * n);
-    out.clear();
-    out.resize(n * n, 0.0);
-    for ib in (0..n).step_by(B) {
-        let ie = (ib + B).min(n);
-        for jb in (0..=ib).step_by(B) {
-            let je = (jb + B).min(n);
-            for i in ib..ie {
-                for j in jb..je.min(i + 1) {
-                    let k = matern52_from_d2(d2[i * n + j], ls, var);
-                    out[i * n + j] = k;
-                    out[j * n + i] = k;
-                }
-            }
-        }
-    }
-}
 
 /// Slice dot product written so LLVM auto-vectorizes it (the hot inner
 /// kernel of the factorization and the solves — see EXPERIMENTS.md §Perf).

@@ -1,0 +1,137 @@
+//! The Matérn-5/2 covariance kernel and its batched Gram/cross builders —
+//! shared by the exact GP ([`super::gp`]), the incremental factor cache
+//! ([`super::chol`] via the backend) and the Nyström low-rank posterior
+//! ([`super::lowrank`]). Factored out of `gp.rs` so neither posterior
+//! family owns the kernel math; the same arithmetic (and therefore the
+//! same bits) feeds every path.
+
+pub const SQRT5: f64 = 2.23606797749979;
+
+/// Matérn-5/2 covariance from a squared distance.
+#[inline]
+pub fn matern52_from_d2(d2: f64, lengthscale: f64, variance: f64) -> f64 {
+    let r = d2.sqrt() / lengthscale;
+    variance * (1.0 + SQRT5 * r + (5.0 / 3.0) * d2 / (lengthscale * lengthscale))
+        * (-SQRT5 * r).exp()
+}
+
+/// Matérn-5/2 covariance between two feature rows.
+#[inline]
+pub fn matern52(a: &[f64], b: &[f64], lengthscale: f64, variance: f64) -> f64 {
+    let mut d2 = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        d2 += d * d;
+    }
+    matern52_from_d2(d2, lengthscale, variance)
+}
+
+/// Pairwise squared distances of `n` rows (row-major, `d` columns) into
+/// `out` (resized to n*n). Hyperparameter-independent — computed once per
+/// decision and shared across the whole hyperparameter grid (§Perf).
+pub fn pairwise_sqdist(x: &[f64], n: usize, d: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(n * n, 0.0);
+    for i in 0..n {
+        for j in 0..i {
+            let mut d2 = 0.0;
+            for k in 0..d {
+                let diff = x[i * d + k] - x[j * d + k];
+                d2 += diff * diff;
+            }
+            out[i * n + j] = d2;
+            out[j * n + i] = d2;
+        }
+    }
+}
+
+/// Tiled Matérn-5/2 Gram build from a precomputed squared-distance
+/// matrix: the lower triangle is computed in cache-sized blocks and
+/// mirrored, halving the transcendental count versus a full pointwise
+/// map and keeping both `d2` reads and `out` writes block-local. Shared
+/// by every cold-fit path (`fit_from_sqdist`, the backend's grid
+/// refactorizations).
+pub fn matern52_gram_from_d2(d2: &[f64], n: usize, ls: f64, var: f64, out: &mut Vec<f64>) {
+    const B: usize = 64;
+    assert_eq!(d2.len(), n * n);
+    out.clear();
+    out.resize(n * n, 0.0);
+    for ib in (0..n).step_by(B) {
+        let ie = (ib + B).min(n);
+        for jb in (0..=ib).step_by(B) {
+            let je = (jb + B).min(n);
+            for i in ib..ie {
+                for j in jb..je.min(i + 1) {
+                    let k = matern52_from_d2(d2[i * n + j], ls, var);
+                    out[i * n + j] = k;
+                    out[j * n + i] = k;
+                }
+            }
+        }
+    }
+}
+
+/// Cross-kernel block `K(a, b)` of two row sets into `out` (resized to
+/// `na * nb`, row-major: row i = k(a_i, b_*)). The low-rank posterior
+/// builds its inducing-vs-observation and inducing-vs-candidate blocks
+/// through this one function so both sides share the arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub fn matern52_cross(
+    a: &[f64],
+    na: usize,
+    b: &[f64],
+    nb: usize,
+    d: usize,
+    ls: f64,
+    var: f64,
+    out: &mut Vec<f64>,
+) {
+    assert_eq!(a.len(), na * d);
+    assert_eq!(b.len(), nb * d);
+    out.clear();
+    out.resize(na * nb, 0.0);
+    for i in 0..na {
+        let ai = &a[i * d..(i + 1) * d];
+        let row = &mut out[i * nb..(i + 1) * nb];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = matern52(ai, &b[j * d..(j + 1) * d], ls, var);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cross_block_matches_pointwise() {
+        let d = 3;
+        let a: Vec<f64> = (0..4 * d).map(|i| ((i * 13 + 1) % 31) as f64 / 31.0).collect();
+        let b: Vec<f64> = (0..5 * d).map(|i| ((i * 17 + 3) % 29) as f64 / 29.0).collect();
+        let mut out = Vec::new();
+        matern52_cross(&a, 4, &b, 5, d, 0.7, 1.3, &mut out);
+        assert_eq!(out.len(), 20);
+        for i in 0..4 {
+            for j in 0..5 {
+                let want = matern52(&a[i * d..(i + 1) * d], &b[j * d..(j + 1) * d], 0.7, 1.3);
+                assert_eq!(out[i * 5 + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_from_d2_matches_cross_with_itself() {
+        let d = 2;
+        let n = 7;
+        let x: Vec<f64> = (0..n * d).map(|i| ((i * 23 + 5) % 41) as f64 / 41.0).collect();
+        let mut d2 = Vec::new();
+        pairwise_sqdist(&x, n, d, &mut d2);
+        let mut gram = Vec::new();
+        matern52_gram_from_d2(&d2, n, 0.5, 2.0, &mut gram);
+        let mut cross = Vec::new();
+        matern52_cross(&x, n, &x, n, d, 0.5, 2.0, &mut cross);
+        for (i, (g, c)) in gram.iter().zip(&cross).enumerate() {
+            assert!((g - c).abs() < 1e-12, "entry {i}: {g} vs {c}");
+        }
+    }
+}

@@ -6,11 +6,15 @@
 pub mod backend;
 pub mod chol;
 pub mod gp;
+pub mod kernel;
+pub mod lowrank;
 pub mod search;
 
 pub use backend::{
-    backend_by_name, backend_factory_by_name, BackendFactory, BackendKind, Decision,
-    GpBackend, NativeBackend, XlaBackend,
+    backend_by_name, backend_factory_by_name, BackendFactory, BackendKind, DecideStats,
+    Decision, GpBackend, LowRankPolicy, NativeBackend, XlaBackend,
+    LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS,
 };
 pub use chol::{CholFactor, FactorCache, FactorCacheStats};
+pub use lowrank::{farthest_point_sample, LowRankGp, DEFAULT_MAX_INDUCING};
 pub use search::{hyperparameter_grid, run_search, BoParams, SearchOutcome};

@@ -116,6 +116,10 @@ pub fn run_search(
 
     let grid = hyperparameter_grid();
     let mut tried_flag = vec![false; m];
+    // Candidate-eligibility mask, refilled in place each iteration: on a
+    // generated 5k-config catalog an m-wide allocation per iteration
+    // would dominate the small-n steps.
+    let mut cmask = vec![false; m];
     let mut tried = Vec::new();
     let mut costs = Vec::new();
     let mut x_obs: Vec<f64> = Vec::new();
@@ -155,16 +159,17 @@ pub fn run_search(
                 break 'phases;
             }
             // Eligible = this phase's untried configurations.
-            let cmask: Vec<bool> = {
-                let mut mask = vec![false; m];
-                for &i in phase {
-                    if !tried_flag[i] {
-                        mask[i] = true;
-                    }
+            for v in cmask.iter_mut() {
+                *v = false;
+            }
+            let mut any_eligible = false;
+            for &i in phase {
+                if !tried_flag[i] {
+                    cmask[i] = true;
+                    any_eligible = true;
                 }
-                mask
-            };
-            if !cmask.iter().any(|&b| b) {
+            }
+            if !any_eligible {
                 break; // phase exhausted -> next phase
             }
             if tried.is_empty() {

@@ -38,6 +38,15 @@ use anyhow::Result;
 /// Cost thresholds of Table II: near-optimal 20%, 10%, and optimal.
 pub const THRESHOLDS: [f64; 3] = [1.2, 1.1, 1.0 + 1e-9];
 
+/// Iteration ceiling for the run-to-exhaustion experiment defaults.
+/// The Table II protocol exhausts the space, which is fine for the
+/// 69-config scout catalog but computationally infeasible on generated
+/// catalogs (an exhaustive 5k-config search pays O(H·n²) grid refits at
+/// n → 5000 per repetition). Experiments on spaces larger than this run
+/// capped at it instead of hanging; pass explicit `BoParams` (e.g.
+/// through [`ExperimentRunner::run_one_params`]) to override.
+pub const MAX_EXHAUSTIVE_ITERS: usize = 512;
+
 /// Experiment configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ExperimentConfig {
@@ -148,9 +157,31 @@ impl ExperimentRunner {
         self
     }
 
+    /// Replace the search space (builder style) — e.g. a generated
+    /// full-catalog space from `SearchSpace::parse_spec` (`--space
+    /// generated:<n>` on the CLI). Everything downstream (cost tables,
+    /// plans, searches) derives from `self.space`, so no other state
+    /// needs to change.
+    pub fn with_space(mut self, space: SearchSpace) -> Self {
+        self.space = space;
+        self
+    }
+
     /// One backend instance from the runner's factory.
     pub fn make_backend(&self) -> Result<Box<dyn GpBackend>> {
         (self.factory)()
+    }
+
+    /// Default run-to-exhaustion parameters for this runner's space,
+    /// capped at [`MAX_EXHAUSTIVE_ITERS`] so experiment commands stay
+    /// feasible when pointed at a generated multi-thousand-config
+    /// catalog (the scout space sits far below the cap and keeps the
+    /// paper's exact exhaustion protocol).
+    pub fn exhaustive_params(&self) -> BoParams {
+        BoParams {
+            max_iters: self.space.len().min(MAX_EXHAUSTIVE_ITERS),
+            ..Default::default()
+        }
     }
 
     /// Profile one job and fit its memory model (Table I / III rows).
@@ -182,7 +213,22 @@ impl ExperimentRunner {
         self.run_one_with(backend.as_mut(), table, plan, rep_seed)
     }
 
-    /// Run one search on a caller-provided backend (reuse across calls).
+    /// [`Self::run_one`] with explicit search parameters — the CLI uses
+    /// this to cap iterations / enforce the stopping criterion on
+    /// generated catalogs too large to exhaust.
+    pub fn run_one_params(
+        &self,
+        table: &JobCostTable,
+        plan: &SearchPlan,
+        rep_seed: u64,
+        params: &BoParams,
+    ) -> Result<SearchOutcome> {
+        let mut backend = (self.factory)()?;
+        self.run_one_with_params(backend.as_mut(), table, plan, rep_seed, params)
+    }
+
+    /// Run one search on a caller-provided backend (reuse across calls),
+    /// with the default run-to-exhaustion parameters.
     pub fn run_one_with(
         &self,
         backend: &mut dyn GpBackend,
@@ -190,14 +236,27 @@ impl ExperimentRunner {
         plan: &SearchPlan,
         rep_seed: u64,
     ) -> Result<SearchOutcome> {
+        let params = self.exhaustive_params();
+        self.run_one_with_params(backend, table, plan, rep_seed, &params)
+    }
+
+    /// Run one search on a caller-provided backend with explicit
+    /// parameters — the common core of every single-search entry point.
+    pub fn run_one_with_params(
+        &self,
+        backend: &mut dyn GpBackend,
+        table: &JobCostTable,
+        plan: &SearchPlan,
+        rep_seed: u64,
+        params: &BoParams,
+    ) -> Result<SearchOutcome> {
         let features = self.space.feature_matrix();
         let m = self.space.len();
         let d = crate::searchspace::N_FEATURES;
-        let params = BoParams { max_iters: m, ..Default::default() };
         let mut rng = Pcg64::from_seed(rep_seed);
         let costs = &table.normalized;
         let mut oracle = |i: usize| costs[i];
-        run_search(&features, m, d, &plan.phases, &mut oracle, backend, &mut rng, &params)
+        run_search(&features, m, d, &plan.phases, &mut oracle, backend, &mut rng, params)
     }
 
     /// Compare CherryPick and Ruya on one job over `cfg.reps` repetitions.
@@ -311,7 +370,7 @@ impl ExperimentRunner {
         cfg: &ExperimentConfig,
         seed_base: u64,
     ) -> Result<MethodStats> {
-        let params = BoParams { max_iters: self.space.len(), ..Default::default() };
+        let params = self.exhaustive_params();
         let outs = self.run_reps(table, plan, cfg, seed_base, &params)?;
         Ok(fold_method_stats(&outs, cfg))
     }
@@ -345,7 +404,7 @@ impl ExperimentRunner {
                 [(table, cp, *seed), (table, ruya, *seed)]
             })
             .collect();
-        let params = BoParams { max_iters: self.space.len(), ..Default::default() };
+        let params = self.exhaustive_params();
         let grouped = self.run_units(&units, cfg.reps, &params)?;
 
         let mut jobs = Vec::new();
@@ -403,7 +462,7 @@ impl ExperimentRunner {
         seed_base: u64,
     ) -> Result<StopQuality> {
         let params =
-            BoParams { max_iters: self.space.len(), enforce_stop: true, ..Default::default() };
+            BoParams { enforce_stop: true, ..self.exhaustive_params() };
         let outs = self.run_reps(table, plan, cfg, seed_base, &params)?;
 
         let mut stops = Vec::new();

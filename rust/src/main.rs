@@ -18,11 +18,14 @@
 //! ```
 //!
 //! Global options: `--backend native|xla` (default native; xla loads the
-//! AOT artifacts through PJRT), `--seed <u64>`, `--reps <N>` (default
-//! 200 as in the paper), `--threads <N>` (worker threads; `table2`
-//! shards jobs x methods x repetitions as one flat task list, other
-//! commands shard repetitions — results are bit-identical for any value), `--out <dir>`
-//! (export .dat/.json/.md files).
+//! AOT artifacts through PJRT), `--space scout|generated:<n>` (default
+//! the paper's 69-config scout space; `generated:<n>` opens a seeded
+//! synthetic n-config cloud catalog served by the low-rank GP path),
+//! `--seed <u64>`, `--reps <N>` (default 200 as in the paper),
+//! `--threads <N>` (worker threads; `table2` shards jobs x methods x
+//! repetitions as one flat task list, other commands shard repetitions —
+//! results are bit-identical for any value), `--out <dir>` (export
+//! .dat/.json/.md files).
 
 use anyhow::{bail, Context, Result};
 use ruya::bayesopt::backend_factory_by_name;
@@ -48,7 +51,7 @@ fn run(args: &Args) -> Result<()> {
         return Ok(());
     }
     if sub == "space" {
-        return dump_space();
+        return dump_space(args);
     }
     if sub == "fig1" {
         return fig1(args.opt("out").map(Path::new));
@@ -63,10 +66,16 @@ fn run(args: &Args) -> Result<()> {
     let backend_name = args.opt_or("backend", "native");
     let factory = backend_factory_by_name(&backend_name)
         .with_context(|| format!("initializing backend {backend_name}"))?;
-    let runner = ExperimentRunner::new(factory).with_threads(args.opt_threads());
+    let seed = args.opt_u64("seed", 0xC0FFEE);
+    let space_spec = args.opt_or("space", "scout");
+    let space = SearchSpace::parse_spec(&space_spec, seed)
+        .with_context(|| format!("parsing search space {space_spec}"))?;
+    let runner = ExperimentRunner::new(factory)
+        .with_threads(args.opt_threads())
+        .with_space(space);
     let cfg = ExperimentConfig {
         reps: args.opt_usize("reps", 200),
-        seed: args.opt_u64("seed", 0xC0FFEE),
+        seed,
         curve_len: args.opt_usize("curve-len", 48),
     };
     let out_dir = args.opt("out").map(Path::new);
@@ -245,7 +254,18 @@ fn search_one(runner: &ExperimentRunner, args: &Args, cfg: &ExperimentConfig) ->
         runner.space.len()
     );
     let table = JobCostTable::build(&runner.sim, &job, &runner.space);
-    let out = runner.run_one(&table, &plan, cfg.seed ^ job.job_id)?;
+    // Generated catalogs are too large to exhaust: default to a capped,
+    // criterion-stopped search there; the scout space keeps the paper's
+    // run-to-exhaustion behavior. "Large" is the same candidate-count
+    // threshold past which the backend switches to the low-rank path.
+    let large_space = runner.space.len() > ruya::bayesopt::LOWRANK_CANDIDATE_THRESHOLD;
+    let default_iters = if large_space { 150 } else { runner.space.len() };
+    let params = ruya::bayesopt::BoParams {
+        max_iters: args.opt_usize("max-iters", default_iters),
+        enforce_stop: large_space,
+        ..Default::default()
+    };
+    let out = runner.run_one_params(&table, &plan, cfg.seed ^ job.job_id, &params)?;
     println!("\niter  config            cost    best");
     let mut best = f64::INFINITY;
     for (i, (&idx, &cost)) in out.tried.iter().zip(&out.costs).enumerate() {
@@ -265,8 +285,13 @@ fn search_one(runner: &ExperimentRunner, args: &Args, cfg: &ExperimentConfig) ->
     if let Some(stop) = out.stop_after {
         println!("stopping criterion fired after {stop} executions");
     }
-    // Baseline comparison under the same seed.
-    let cp = runner.run_one(&table, &SearchPlan::unpartitioned(&runner.space), cfg.seed ^ job.job_id)?;
+    // Baseline comparison under the same seed and parameters.
+    let cp = runner.run_one_params(
+        &table,
+        &SearchPlan::unpartitioned(&runner.space),
+        cfg.seed ^ job.job_id,
+        &params,
+    )?;
     println!(
         "\niterations to optimum: ruya {} vs cherrypick {}",
         out.first_within(1.0 + 1e-9).unwrap_or(0),
@@ -361,9 +386,10 @@ fn stopping(runner: &ExperimentRunner, cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
-fn dump_space() -> Result<()> {
-    let space = SearchSpace::scout();
-    println!("{} configurations", space.len());
+fn dump_space(args: &Args) -> Result<()> {
+    let spec = args.opt_or("space", "scout");
+    let space = SearchSpace::parse_spec(&spec, args.opt_u64("seed", 0xC0FFEE))?;
+    println!("{} configurations ({spec})", space.len());
     println!("\nidx  config            cores  total_gb  usable_gb  $/h");
     for i in 0..space.len() {
         let c = space.config(i);
@@ -416,11 +442,18 @@ SUBCOMMANDS
   crispy [--job L]  one-shot (Crispy-style) selection, no iteration
   stopping          enforced-stop search quality (stopping criterion)
   profile --job L   run one profiling phase, print readings + model
-  space             dump the 69-configuration search space
+  space             dump the search space (respects --space)
   all               regenerate every table and figure
 
 OPTIONS
   --backend native|xla   GP backend (default native; xla = AOT artifacts)
+  --space SPEC           scout (default, the paper's 69 configs) or
+                         generated:<n> — a seeded synthetic n-config cloud
+                         catalog; spaces past 512 candidates are scored
+                         by the Nystrom low-rank GP path automatically
+  --max-iters N          cap search executions (search subcommand only;
+                         default: space size, or 150 with the stopping
+                         criterion enforced on spaces > 512 configs)
   --reps N               repetitions for table2/fig4/fig5 (default 200)
   --threads N            worker threads (default 1; table2 shards jobs x
                          methods x repetitions, other commands shard

@@ -4,6 +4,20 @@
 //!
 //! c machines have the least memory per core, r the most, m in between —
 //! the axis Ruya's memory-awareness exploits (§II-A).
+//!
+//! Beyond the fixed 9-type scout catalog this module owns a
+//! **deterministic generated machine grid** (see [`generated_grid`]):
+//! synthetic newer generations (`c5.large` … `r12.16xlarge`) styled on
+//! the real AWS/GCE machine grids, with per-core RAM and price derived
+//! from the family bases plus a small jitter keyed only on the machine
+//! *name* — so a given name always denotes the same specs, in every
+//! process and for every catalog seed. Generated types live in a
+//! process-global registry appended behind [`MACHINE_CATALOG`]; a
+//! [`super::ClusterConfig`]'s `machine` index resolves through
+//! [`machine_by_index`] regardless of which side it points into.
+
+use crate::util::rng::Pcg64;
+use std::sync::{Mutex, OnceLock};
 
 /// Instance family: compute-optimized, general-purpose, memory-optimized.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -14,6 +28,8 @@ pub enum MachineFamily {
 }
 
 impl MachineFamily {
+    pub const ALL: [MachineFamily; 3] = [MachineFamily::C, MachineFamily::M, MachineFamily::R];
+
     pub fn letter(&self) -> char {
         match self {
             MachineFamily::C => 'c',
@@ -21,14 +37,77 @@ impl MachineFamily {
             MachineFamily::R => 'r',
         }
     }
+
+    /// Base GB of RAM per core — the c < m < r memory axis (§II-A).
+    fn ram_per_core_gb(&self) -> f64 {
+        match self {
+            MachineFamily::C => 2.0,
+            MachineFamily::M => 4.0,
+            MachineFamily::R => 8.0,
+        }
+    }
+
+    /// Base on-demand price per core-hour (USD), from the real gen-4
+    /// catalog (c4.large $0.100 / 2 cores, r4.large $0.133 / 2 cores).
+    fn price_per_core(&self) -> f64 {
+        match self {
+            MachineFamily::C => 0.0500,
+            MachineFamily::M => 0.0500,
+            MachineFamily::R => 0.0665,
+        }
+    }
 }
 
-/// Instance size; determines cores per machine.
+/// Instance size; determines cores per machine (`2 * multiplier`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MachineSize {
     Large,
     XLarge,
     XXLarge,
+    X4Large,
+    X8Large,
+    X12Large,
+    X16Large,
+}
+
+impl MachineSize {
+    /// All sizes of the generated grid, smallest first. The scout space
+    /// only uses the first three.
+    pub const ALL: [MachineSize; 7] = [
+        MachineSize::Large,
+        MachineSize::XLarge,
+        MachineSize::XXLarge,
+        MachineSize::X4Large,
+        MachineSize::X8Large,
+        MachineSize::X12Large,
+        MachineSize::X16Large,
+    ];
+
+    /// Core-count multiplier over `large` (2 cores).
+    pub fn multiplier(&self) -> u32 {
+        match self {
+            MachineSize::Large => 1,
+            MachineSize::XLarge => 2,
+            MachineSize::XXLarge => 4,
+            MachineSize::X4Large => 8,
+            MachineSize::X8Large => 16,
+            MachineSize::X12Large => 24,
+            MachineSize::X16Large => 32,
+        }
+    }
+
+    /// AWS-style size suffix ("large", "xlarge", "2xlarge", …).
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            MachineSize::Large => "large",
+            MachineSize::XLarge => "xlarge",
+            MachineSize::XXLarge => "2xlarge",
+            MachineSize::X4Large => "4xlarge",
+            MachineSize::X8Large => "8xlarge",
+            MachineSize::X12Large => "12xlarge",
+            MachineSize::X16Large => "16xlarge",
+        }
+    }
 }
 
 /// One virtual-machine type.
@@ -54,6 +133,138 @@ pub const MACHINE_CATALOG: [MachineType; 9] = [
     MachineType { name: "r4.xlarge",   family: MachineFamily::R, size: MachineSize::XLarge,  cores: 4, ram_gb: 30.5,  price_hourly: 0.266 },
     MachineType { name: "r4.2xlarge",  family: MachineFamily::R, size: MachineSize::XXLarge, cores: 8, ram_gb: 61.0,  price_hourly: 0.532 },
 ];
+
+/// First synthetic generation number ("c5.…"); gen 4 is the real catalog.
+const FIRST_GENERATION: u32 = 5;
+/// Safety cap on synthetic generations (bounds registry growth and keeps
+/// the generation price discount positive).
+const MAX_GENERATIONS: u32 = 32;
+/// Scale-outs of the generated grid: every node count in this range.
+const GENERATED_SCALEOUT_MIN: u32 = 2;
+const GENERATED_SCALEOUT_MAX: u32 = 64;
+
+/// Machine types beyond [`MACHINE_CATALOG`], registered at runtime by the
+/// catalog generator. Entries are leaked once (deduplicated by name, and
+/// specs are a pure function of the name), so the registry is bounded by
+/// the finite generation x family x size grid.
+static DYNAMIC_MACHINES: OnceLock<Mutex<Vec<&'static MachineType>>> = OnceLock::new();
+
+fn dynamic_machines() -> &'static Mutex<Vec<&'static MachineType>> {
+    DYNAMIC_MACHINES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Resolve a machine index — static catalog first, then the generated
+/// registry. Panics on an index no [`super::ClusterConfig`] can hold.
+pub fn machine_by_index(idx: usize) -> &'static MachineType {
+    if let Some(m) = MACHINE_CATALOG.get(idx) {
+        return m;
+    }
+    let reg = dynamic_machines().lock().expect("machine registry poisoned");
+    reg[idx - MACHINE_CATALOG.len()]
+}
+
+/// Total registered machine types (static + generated).
+pub fn machine_count() -> usize {
+    MACHINE_CATALOG.len() + dynamic_machines().lock().expect("machine registry poisoned").len()
+}
+
+/// Register a machine type, deduplicating by name (specs are derived from
+/// the name alone, so a name collision is always the same machine).
+/// Returns its global index.
+fn register_machine(mt: MachineType) -> usize {
+    let mut reg = dynamic_machines().lock().expect("machine registry poisoned");
+    if let Some(pos) = reg.iter().position(|m| m.name == mt.name) {
+        debug_assert_eq!(*reg[pos], mt, "machine {:?} re-registered with different specs", mt.name);
+        return MACHINE_CATALOG.len() + pos;
+    }
+    let leaked: &'static MachineType = Box::leak(Box::new(mt));
+    reg.push(leaked);
+    MACHINE_CATALOG.len() + reg.len() - 1
+}
+
+/// FNV-1a over a machine name — the only source of spec jitter, so specs
+/// are deterministic per name across processes and catalog seeds.
+fn name_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Build (or look up) one synthetic machine type.
+fn generated_machine(family: MachineFamily, size: MachineSize, generation: u32) -> usize {
+    let name = format!("{}{}.{}", family.letter(), generation, size.suffix());
+    {
+        // Fast path: already registered — nothing to build or leak.
+        let reg = dynamic_machines().lock().expect("machine registry poisoned");
+        if let Some(pos) = reg.iter().position(|m| m.name == name) {
+            return MACHINE_CATALOG.len() + pos;
+        }
+    }
+    let mut jitter = Pcg64::from_seed(name_hash(&name));
+    let cores = 2 * size.multiplier();
+    // +-4% RAM jitter: small enough to keep the c < m < r per-core
+    // ordering (2*1.04 < 4*0.96), large enough that generations differ.
+    let ram_gb = cores as f64 * family.ram_per_core_gb() * jitter.uniform(0.96, 1.04);
+    // Newer generations get slightly cheaper per core, like real clouds.
+    let gen_discount = 1.0 - 0.01 * (generation - 4) as f64;
+    let price_hourly =
+        cores as f64 * family.price_per_core() * gen_discount * jitter.uniform(0.97, 1.03);
+    let mt = MachineType {
+        name: Box::leak(name.into_boxed_str()),
+        family,
+        size,
+        cores,
+        ram_gb,
+        price_hourly,
+    };
+    register_machine(mt)
+}
+
+/// The full generated configuration grid, in deterministic order
+/// (generation, family, size, scale-out), grown one generation at a time
+/// until it holds at least `min_len` configurations.
+///
+/// Returns `(machine_index, nodes)` pairs; `SearchSpace::generated`
+/// subsamples these into a catalog. Panics if `min_len` exceeds the
+/// capped grid (32 generations x 3 families x 7 sizes x 63 scale-outs).
+/// Configurations per synthetic generation (families x sizes x
+/// scale-outs).
+const fn generated_per_generation() -> usize {
+    let per_machine = (GENERATED_SCALEOUT_MAX - GENERATED_SCALEOUT_MIN + 1) as usize;
+    MachineFamily::ALL.len() * MachineSize::ALL.len() * per_machine
+}
+
+/// Largest catalog [`generated_grid`] can produce — the validation bound
+/// `SearchSpace::parse_spec` reports to the user.
+pub(super) const fn max_generated_len() -> usize {
+    MAX_GENERATIONS as usize * generated_per_generation()
+}
+
+pub(super) fn generated_grid(min_len: usize) -> Vec<(usize, u32)> {
+    let per_generation = generated_per_generation();
+    let generations = min_len.div_ceil(per_generation).max(1);
+    assert!(
+        generations <= MAX_GENERATIONS as usize,
+        "generated search space of {min_len} configs exceeds the {} grid cap",
+        max_generated_len()
+    );
+    let mut grid = Vec::with_capacity(generations * per_generation);
+    for g in 0..generations as u32 {
+        let generation = FIRST_GENERATION + g;
+        for family in MachineFamily::ALL {
+            for size in MachineSize::ALL {
+                let machine = generated_machine(family, size, generation);
+                for nodes in GENERATED_SCALEOUT_MIN..=GENERATED_SCALEOUT_MAX {
+                    grid.push((machine, nodes));
+                }
+            }
+        }
+    }
+    grid
+}
 
 #[cfg(test)]
 mod tests {
@@ -102,6 +313,49 @@ mod tests {
             };
             assert!(price(MachineSize::Large) < price(MachineSize::XLarge));
             assert!(price(MachineSize::XLarge) < price(MachineSize::XXLarge));
+        }
+    }
+
+    #[test]
+    fn generated_machines_preserve_family_memory_axis() {
+        let grid = generated_grid(1);
+        // First generation of the grid: check per-core RAM ordering for
+        // every size at that generation.
+        for size in MachineSize::ALL {
+            let per_core = |fam: MachineFamily| {
+                grid.iter()
+                    .map(|&(idx, _)| machine_by_index(idx))
+                    .find(|m| m.family == fam && m.size == size)
+                    .map(|m| m.ram_gb / m.cores as f64)
+                    .unwrap()
+            };
+            assert!(per_core(MachineFamily::C) < per_core(MachineFamily::M), "{size:?}");
+            assert!(per_core(MachineFamily::M) < per_core(MachineFamily::R), "{size:?}");
+        }
+    }
+
+    #[test]
+    fn generated_machine_registration_is_idempotent() {
+        let a = generated_machine(MachineFamily::C, MachineSize::X8Large, 7);
+        let count = machine_count();
+        let b = generated_machine(MachineFamily::C, MachineSize::X8Large, 7);
+        assert_eq!(a, b, "same name must resolve to the same registry index");
+        assert_eq!(machine_count(), count, "re-registration must not grow the registry");
+        let m = machine_by_index(a);
+        assert_eq!(m.name, "c7.8xlarge");
+        assert_eq!(m.cores, 32);
+        assert!(m.ram_gb > 0.0 && m.price_hourly > 0.0);
+    }
+
+    #[test]
+    fn generated_grid_is_deterministic_and_distinct() {
+        let a = generated_grid(2000);
+        let b = generated_grid(2000);
+        assert_eq!(a, b, "grid must be deterministic");
+        assert!(a.len() >= 2000);
+        let mut seen = std::collections::HashSet::new();
+        for &cfg in &a {
+            assert!(seen.insert(cfg), "duplicate grid entry {cfg:?}");
         }
     }
 }

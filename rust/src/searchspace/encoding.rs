@@ -48,17 +48,21 @@ impl FeatureEncoder {
     /// Encode one configuration to `[0, 1]^N_FEATURES` (values outside the
     /// fitted set may exceed the unit interval, which the GP tolerates).
     pub fn encode(&self, c: &ClusterConfig) -> Vec<f64> {
+        let mut out = Vec::with_capacity(N_FEATURES);
+        self.encode_into(c, &mut out);
+        out
+    }
+
+    /// [`Self::encode`] appended onto an existing buffer — the
+    /// allocation-free path `SearchSpace::feature_matrix` streams
+    /// thousands of generated-catalog rows through.
+    pub fn encode_into(&self, c: &ClusterConfig, out: &mut Vec<f64>) {
         let f = raw_features(c);
-        (0..N_FEATURES)
-            .map(|i| {
-                let span = self.hi[i] - self.lo[i];
-                if span <= 0.0 {
-                    0.5
-                } else {
-                    (f[i] - self.lo[i]) / span
-                }
-            })
-            .collect()
+        out.reserve(N_FEATURES);
+        for i in 0..N_FEATURES {
+            let span = self.hi[i] - self.lo[i];
+            out.push(if span <= 0.0 { 0.5 } else { (f[i] - self.lo[i]) / span });
+        }
     }
 }
 

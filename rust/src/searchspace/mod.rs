@@ -5,12 +5,27 @@
 //! and 48 nodes, 69 configurations in total. Also owns the feature
 //! encoding the Gaussian process sees and the usable-memory accounting
 //! used by Ruya's priority-group construction (§III-D).
+//!
+//! Beyond the paper's shortlist, [`SearchSpace::generated`] opens
+//! full-cloud-catalog-scale spaces (thousands of configurations drawn
+//! from a deterministic synthetic machine grid, see [`catalog`]) — the
+//! workload class the low-rank GP path in
+//! [`bayesopt::lowrank`](crate::bayesopt::lowrank) exists for. All
+//! priority-group helpers ([`SearchSpace::lowest_memory_configs`],
+//! [`SearchSpace::memory_extremes`]) run in O(n) selection time with
+//! deterministic tie-breaks so they stay exact and cheap on 5k-config
+//! catalogs.
 
 mod catalog;
 mod encoding;
 
-pub use catalog::{MachineFamily, MachineSize, MachineType, MACHINE_CATALOG};
+pub use catalog::{
+    machine_by_index, machine_count, MachineFamily, MachineSize, MachineType, MACHINE_CATALOG,
+};
 pub use encoding::FeatureEncoder;
+
+use crate::util::rng::Pcg64;
+use std::cmp::Ordering;
 
 /// Per-node memory the OS keeps for itself (GB). Part of the "overhead by
 /// the operating system and the distributed dataflow framework" the paper
@@ -29,7 +44,8 @@ pub const STORAGE_FRACTION: f64 = 0.93;
 /// One cluster configuration: a machine type at a scale-out.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ClusterConfig {
-    /// Index into [`MACHINE_CATALOG`].
+    /// Global machine index: [`MACHINE_CATALOG`] first, then the
+    /// generated-machine registry (resolved via [`machine_by_index`]).
     pub machine: usize,
     /// Number of worker nodes.
     pub nodes: u32,
@@ -37,7 +53,7 @@ pub struct ClusterConfig {
 
 impl ClusterConfig {
     pub fn machine_type(&self) -> &'static MachineType {
-        &MACHINE_CATALOG[self.machine]
+        catalog::machine_by_index(self.machine)
     }
 
     pub fn total_cores(&self) -> f64 {
@@ -84,6 +100,8 @@ impl SearchSpace {
                 MachineSize::Large => &[4, 6, 8, 10, 12, 16, 20, 24, 32, 40],
                 MachineSize::XLarge => &[4, 6, 8, 10, 12, 16, 20, 24],
                 MachineSize::XXLarge => &[4, 6, 8, 10, 12],
+                // Larger sizes exist only in the generated grid.
+                _ => &[],
             };
             for &nodes in scaleouts {
                 configs.push(ClusterConfig { machine: idx, nodes });
@@ -98,6 +116,62 @@ impl SearchSpace {
         assert!(!configs.is_empty(), "search space cannot be empty");
         let encoder = FeatureEncoder::fit(&configs);
         Self { configs, encoder }
+    }
+
+    /// A generated full-cloud-catalog-scale space of exactly
+    /// `target_len` distinct configurations.
+    ///
+    /// The underlying machine grid (synthetic generations of the c/m/r
+    /// families across seven sizes and scale-outs 2..=64, see
+    /// [`catalog`]) is fully deterministic; the `seed` only selects
+    /// *which* `target_len` grid entries form the catalog, so the same
+    /// `(seed, target_len)` pair yields the identical space in every
+    /// process while different seeds model different providers'
+    /// offerings. When `target_len` matches the grid size exactly the
+    /// seed is irrelevant.
+    pub fn generated(seed: u64, target_len: usize) -> Self {
+        assert!(target_len > 0, "generated search space must be non-empty");
+        let grid = catalog::generated_grid(target_len);
+        let to_config = |&(machine, nodes): &(usize, u32)| ClusterConfig { machine, nodes };
+        let configs: Vec<ClusterConfig> = if grid.len() == target_len {
+            grid.iter().map(to_config).collect()
+        } else {
+            let mut rng =
+                Pcg64::new(seed, 0x6C0D_5EED ^ (target_len as u64).rotate_left(17));
+            let mut picks = rng.sample_distinct(grid.len(), target_len);
+            // Keep grid order so the catalog reads generation-by-
+            // generation regardless of the sampling order.
+            picks.sort_unstable();
+            picks.iter().map(|&p| to_config(&grid[p])).collect()
+        };
+        Self::from_configs(configs)
+    }
+
+    /// Largest catalog [`Self::generated`] can produce (the synthetic
+    /// machine grid is capped).
+    pub fn max_generated_len() -> usize {
+        catalog::max_generated_len()
+    }
+
+    /// Parse a CLI space spec: `scout` (the paper's 69 configurations)
+    /// or `generated:<n>` (a seeded n-config generated catalog).
+    pub fn parse_spec(spec: &str, seed: u64) -> anyhow::Result<Self> {
+        if spec == "scout" {
+            return Ok(Self::scout());
+        }
+        if let Some(n) = spec.strip_prefix("generated:") {
+            let n: usize = n
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad generated-space size {n:?} in {spec:?}"))?;
+            anyhow::ensure!(n > 0, "generated search space must be non-empty");
+            anyhow::ensure!(
+                n <= Self::max_generated_len(),
+                "generated search space of {n} configs exceeds the {}-config grid cap",
+                Self::max_generated_len()
+            );
+            return Ok(Self::generated(seed, n));
+        }
+        anyhow::bail!("unknown search-space spec {spec:?} (expected scout|generated:<n>)")
     }
 
     pub fn len(&self) -> usize {
@@ -126,11 +200,13 @@ impl SearchSpace {
     }
 
     /// All feature rows, row-major (len = len() * N_FEATURES) — the
-    /// candidate matrix handed to the GP backend once per search.
+    /// candidate matrix handed to the GP backend once per search. Encodes
+    /// straight into one buffer (no per-config Vec), which matters once
+    /// generated catalogs put thousands of rows in this matrix.
     pub fn feature_matrix(&self) -> Vec<f64> {
         let mut out = Vec::with_capacity(self.len() * encoding::N_FEATURES);
         for c in &self.configs {
-            out.extend(self.encoder.encode(c));
+            self.encoder.encode_into(c, &mut out);
         }
         out
     }
@@ -142,35 +218,83 @@ impl SearchSpace {
             .collect()
     }
 
-    /// The `k` configurations with the lowest total memory (ties broken by
-    /// price) — Ruya's priority group for flat-memory jobs.
+    /// Precomputed (total memory, price) selection keys, one pass over
+    /// the configs. Comparators below read this vector instead of
+    /// calling back into `ClusterConfig` accessors, so a selection over
+    /// a 5k-config generated catalog performs n accessor calls (each of
+    /// which resolves the machine registry) rather than one per
+    /// comparison; the index tie-break makes every selection
+    /// deterministic even when a catalog holds many identically-sized
+    /// configurations at a group boundary.
+    fn memory_price_keys(&self) -> Vec<(f64, f64)> {
+        self.configs
+            .iter()
+            .map(|c| (c.total_memory_gb(), c.price_per_hour()))
+            .collect()
+    }
+
+    /// Total order by (total memory, price, index) over precomputed keys.
+    fn cmp_keyed(keys: &[(f64, f64)], a: usize, b: usize) -> Ordering {
+        let ka = (keys[a].0, keys[a].1, a);
+        let kb = (keys[b].0, keys[b].1, b);
+        ka.partial_cmp(&kb).expect("NaN in memory/price selection key")
+    }
+
+    /// Total order by (total memory, index) over precomputed keys — the
+    /// decile-boundary order of [`Self::memory_extremes`].
+    fn cmp_keyed_memory(keys: &[(f64, f64)], a: usize, b: usize) -> Ordering {
+        (keys[a].0, a).partial_cmp(&(keys[b].0, b)).expect("NaN in memory selection key")
+    }
+
+    /// The `k` configurations with the lowest total memory (ties broken
+    /// by price, then index) — Ruya's priority group for flat-memory
+    /// jobs. O(n) selection plus an O(k log k) sort of the group, so a
+    /// small group over a 5k-config generated catalog costs ~n compares
+    /// instead of a full n log n sort.
     pub fn lowest_memory_configs(&self, k: usize) -> Vec<usize> {
+        let k = k.min(self.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        let keys = self.memory_price_keys();
         let mut idx: Vec<usize> = (0..self.len()).collect();
-        idx.sort_by(|&a, &b| {
-            let ka = (self.configs[a].total_memory_gb(), self.configs[a].price_per_hour());
-            let kb = (self.configs[b].total_memory_gb(), self.configs[b].price_per_hour());
-            ka.partial_cmp(&kb).unwrap()
-        });
-        idx.truncate(k);
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| Self::cmp_keyed(&keys, a, b));
+            idx.truncate(k);
+        }
+        idx.sort_unstable_by(|&a, &b| Self::cmp_keyed(&keys, a, b));
         idx
     }
 
     /// Configurations in the top or bottom `decile_fraction` of total
     /// memory — the fallback priority group when a linear job's
     /// requirement exceeds every available configuration (§III-D).
+    /// Returned ascending by index. Boundary ties resolve by index
+    /// (lowest indices fill the bottom group, highest the top), matching
+    /// the stable-sort behavior of the small-space implementation but in
+    /// O(n) selection time.
     pub fn memory_extremes(&self, decile_fraction: f64) -> Vec<usize> {
-        let k = ((self.len() as f64 * decile_fraction).ceil() as usize).max(1);
-        let mut idx: Vec<usize> = (0..self.len()).collect();
-        idx.sort_by(|&a, &b| {
-            self.configs[a]
-                .total_memory_gb()
-                .partial_cmp(&self.configs[b].total_memory_gb())
-                .unwrap()
-        });
-        let mut out: Vec<usize> = idx.iter().take(k).copied().collect();
-        out.extend(idx.iter().rev().take(k).copied());
+        let n = self.len();
+        let k = ((n as f64 * decile_fraction).ceil() as usize).max(1);
+        let mut idx: Vec<usize> = (0..n).collect();
+        if 2 * k >= n {
+            // The two extremes cover everything.
+            return idx;
+        }
+        let keys = self.memory_price_keys();
+        // Bottom k: the k smallest by (memory, index).
+        idx.select_nth_unstable_by(k - 1, |&a, &b| Self::cmp_keyed_memory(&keys, a, b));
+        // Top k among the remainder — disjoint from the bottom since
+        // 2k < n, and equal to the global top k because the remainder
+        // holds every element the bottom selection did not take.
+        let rest = &mut idx[k..];
+        let cut = rest.len() - k;
+        rest.select_nth_unstable_by(cut, |&a, &b| Self::cmp_keyed_memory(&keys, a, b));
+        let top_start = k + cut;
+        let mut out = Vec::with_capacity(2 * k);
+        out.extend_from_slice(&idx[..k]);
+        out.extend_from_slice(&idx[top_start..]);
         out.sort_unstable();
-        out.dedup();
         out
     }
 
@@ -273,5 +397,141 @@ mod tests {
     fn config_names_readable() {
         let s = SearchSpace::scout();
         assert!(s.configs().iter().any(|c| c.name() == "4xc4.large"));
+    }
+
+    #[test]
+    fn generated_space_has_exact_len_distinct_and_stable() {
+        for &n in &[1usize, 69, 500, 1500] {
+            let a = SearchSpace::generated(7, n);
+            assert_eq!(a.len(), n, "generated space must have exactly n configs");
+            let mut seen = std::collections::HashSet::new();
+            for c in a.configs() {
+                assert!(seen.insert((c.machine, c.nodes)), "duplicate config {}", c.name());
+            }
+            // Stable across runs for the same seed.
+            let b = SearchSpace::generated(7, n);
+            assert_eq!(a.configs(), b.configs(), "n={n} not stable under the same seed");
+        }
+        // Different seeds select different subsets (same machine grid).
+        let a = SearchSpace::generated(1, 400);
+        let b = SearchSpace::generated(2, 400);
+        assert_ne!(a.configs(), b.configs(), "seeds must pick different catalogs");
+    }
+
+    #[test]
+    fn generated_space_memory_helpers_behave() {
+        let s = SearchSpace::generated(11, 2000);
+        // with_usable_memory_at_least: exact threshold semantics.
+        let min_gb = 200.0;
+        let idx = s.with_usable_memory_at_least(min_gb);
+        assert!(!idx.is_empty() && idx.len() < s.len());
+        let in_set: std::collections::HashSet<usize> = idx.iter().copied().collect();
+        for i in 0..s.len() {
+            assert_eq!(
+                in_set.contains(&i),
+                s.config(i).usable_memory_gb() >= min_gb,
+                "config {i} misfiled"
+            );
+        }
+        // memory_extremes covers the global min and max.
+        let ext = s.memory_extremes(0.1);
+        let mem = |i: usize| s.config(i).total_memory_gb();
+        let gmin = (0..s.len()).map(mem).fold(f64::MAX, f64::min);
+        let gmax = (0..s.len()).map(mem).fold(0.0, f64::max);
+        assert!(ext.iter().any(|&i| (mem(i) - gmin).abs() < 1e-9));
+        assert!(ext.iter().any(|&i| (mem(i) - gmax).abs() < 1e-9));
+        // lowest_memory_configs: every selected config <= every excluded.
+        let k = 40;
+        let low = s.lowest_memory_configs(k);
+        assert_eq!(low.len(), k);
+        let low_set: std::collections::HashSet<usize> = low.iter().copied().collect();
+        let max_low = low.iter().map(|&i| mem(i)).fold(0.0, f64::max);
+        let rest_min = (0..s.len())
+            .filter(|i| !low_set.contains(i))
+            .map(mem)
+            .fold(f64::MAX, f64::min);
+        assert!(max_low <= rest_min + 1e-9, "{max_low} vs {rest_min}");
+    }
+
+    #[test]
+    fn selection_helpers_match_full_sort_reference() {
+        // The O(n) select_nth implementations must agree with a plain
+        // full-sort reference on a generated catalog (including its
+        // duplicated-memory ties).
+        let s = SearchSpace::generated(3, 1200);
+        let key = |i: usize| {
+            (s.config(i).total_memory_gb(), s.config(i).price_per_hour(), i)
+        };
+        let mut sorted: Vec<usize> = (0..s.len()).collect();
+        sorted.sort_by(|&a, &b| key(a).partial_cmp(&key(b)).unwrap());
+        for &k in &[1usize, 7, 120, 1199, 1200, 5000] {
+            let want: Vec<usize> = sorted.iter().take(k.min(s.len())).copied().collect();
+            assert_eq!(s.lowest_memory_configs(k), want, "k={k}");
+        }
+        let mem_key = |i: usize| (s.config(i).total_memory_gb(), i);
+        let mut by_mem: Vec<usize> = (0..s.len()).collect();
+        by_mem.sort_by(|&a, &b| mem_key(a).partial_cmp(&mem_key(b)).unwrap());
+        for &frac in &[0.01, 0.1, 0.25, 0.6] {
+            let k = ((s.len() as f64 * frac).ceil() as usize).max(1);
+            let mut want: Vec<usize> = by_mem.iter().take(k).copied().collect();
+            want.extend(by_mem.iter().rev().take(k).copied());
+            want.sort_unstable();
+            want.dedup();
+            assert_eq!(s.memory_extremes(frac), want, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn boundary_ties_resolve_by_index() {
+        // A catalog of identical-memory configs except for scale-out
+        // duplicates: machine 0 at 4 nodes repeated via distinct machine
+        // indices sharing RAM. Build explicitly: four r4.large x 8 (same
+        // total memory/price) followed by two larger configs.
+        let mut configs = Vec::new();
+        for _ in 0..4 {
+            configs.push(ClusterConfig { machine: 6, nodes: 8 }); // r4.large x8
+        }
+        configs.push(ClusterConfig { machine: 8, nodes: 4 }); // bigger memory
+        configs.push(ClusterConfig { machine: 0, nodes: 4 }); // smallest memory
+        let s = SearchSpace::from_configs(configs);
+        // lowest 2: the c4 config, then the first of the tied r4 block.
+        assert_eq!(s.lowest_memory_configs(2), vec![5, 0]);
+        // Deterministic under repetition.
+        assert_eq!(s.lowest_memory_configs(2), s.lowest_memory_configs(2));
+        // Extremes at 1/6: bottom pick is config 5, top is config 4; the
+        // tied middle block never leaks in.
+        assert_eq!(s.memory_extremes(1.0 / 6.0), vec![4, 5]);
+        // A boundary running through the tied block takes the lowest
+        // indices of the tie for the bottom group, the highest for the top.
+        assert_eq!(s.memory_extremes(2.0 / 6.0), vec![0, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parse_spec_roundtrip() {
+        assert_eq!(SearchSpace::parse_spec("scout", 0).unwrap().len(), 69);
+        let g = SearchSpace::parse_spec("generated:123", 9).unwrap();
+        assert_eq!(g.len(), 123);
+        assert_eq!(g.configs(), SearchSpace::generated(9, 123).configs());
+        assert!(SearchSpace::parse_spec("generated:0", 0).is_err());
+        assert!(SearchSpace::parse_spec("generated:abc", 0).is_err());
+        assert!(SearchSpace::parse_spec("galaxy", 0).is_err());
+        // Oversized requests are a clean error, not a panic.
+        let over = SearchSpace::max_generated_len() + 1;
+        let err = SearchSpace::parse_spec(&format!("generated:{over}"), 0).unwrap_err();
+        assert!(err.to_string().contains("grid cap"), "{err}");
+    }
+
+    #[test]
+    fn generated_features_are_normalized_and_distinct_machines_resolve() {
+        let s = SearchSpace::generated(5, 800);
+        assert_eq!(s.feature_matrix().len(), 800 * N_FEATURES);
+        for i in 0..s.len() {
+            for v in s.features(i) {
+                assert!((-1e-12..=1.0 + 1e-12).contains(&v), "feature {v} out of range");
+            }
+            // Every generated machine index resolves to real specs.
+            let m = s.config(i).machine_type();
+            assert!(m.ram_gb > 0.0 && m.cores > 0 && m.price_hourly > 0.0);
+        }
     }
 }

@@ -106,6 +106,188 @@ macro_rules! prop_assert {
     };
 }
 
+/// An observation script for the backend parity harness: a shared pool
+/// of feature rows/targets plus a sequence of `[start, start+n)` windows
+/// to present to both backends in order. Consecutive windows encode the
+/// same deltas the search loop produces — `(0,n) -> (0,n+1)` is an
+/// append, `(s,n) -> (s+1,n)` a window slide, anything else a wholesale
+/// replace — so the script drives a `NativeBackend`'s incremental caches
+/// through exactly the paths under test.
+#[derive(Debug, Clone)]
+pub struct ParityScript {
+    d: usize,
+    rows: Vec<f64>,
+    ys: Vec<f64>,
+    steps: Vec<(usize, usize)>,
+}
+
+impl ParityScript {
+    /// A script over `rows` (row-major, `d` columns) with targets `ys`,
+    /// starting with no windows; chain the builders below.
+    pub fn new(rows: Vec<f64>, ys: Vec<f64>, d: usize) -> Self {
+        assert!(d > 0 && rows.len() == ys.len() * d, "rows/ys shape mismatch");
+        Self { d, rows, ys, steps: Vec::new() }
+    }
+
+    /// Total observation rows in the pool.
+    pub fn pool_len(&self) -> usize {
+        self.ys.len()
+    }
+
+    /// Append one explicit window `[start, start+n)`.
+    pub fn push_window(mut self, start: usize, n: usize) -> Self {
+        assert!(n > 0 && start + n <= self.ys.len(), "window out of pool bounds");
+        self.steps.push((start, n));
+        self
+    }
+
+    /// Append growth windows `(0,1), (0,2), …, (0,upto)` — one append
+    /// delta per step.
+    pub fn growth(mut self, upto: usize) -> Self {
+        assert!(upto <= self.ys.len());
+        for n in 1..=upto {
+            self.steps.push((0, n));
+        }
+        self
+    }
+
+    /// Append `count` sliding windows of width `window` starting at
+    /// start offset 1 — one slide delta per step (call after
+    /// [`Self::growth`]`(window)`).
+    pub fn slides(mut self, window: usize, count: usize) -> Self {
+        for s in 1..=count {
+            assert!(s + window <= self.ys.len(), "slide past the pool end");
+            self.steps.push((s, window));
+        }
+        self
+    }
+
+    /// The windows of the script.
+    pub fn steps(&self) -> &[(usize, usize)] {
+        &self.steps
+    }
+}
+
+/// Largest parity error per compared quantity, over a whole script.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ParityReport {
+    pub steps: usize,
+    pub max_nll_err: f64,
+    pub max_mu_err: f64,
+    pub max_var_err: f64,
+    pub max_ei_err: f64,
+}
+
+/// Drive two backends through the same observation script and assert
+/// that, at every step, their hyperparameter-grid NLLs, posterior
+/// means/variances over all `m` candidates, EI scores, and the chosen
+/// argmax agree within relative tolerance `tol` (scale
+/// `max(|a|,|b|,1)`). The decide hyperparameters are the grid argmin of
+/// backend `a`'s NLL — the same selection the search loop performs — so
+/// both backends are compared on the posterior that would actually be
+/// used. Panics with step/index context on the first violation; returns
+/// the worst observed errors for reporting.
+///
+/// This is the single pinning entry point for backend equivalences: the
+/// incremental-vs-scratch factor-cache pin and the low-rank-vs-exact pin
+/// (both the `inducing = full set` exact-equality case and the
+/// tolerance-bounded large-space case) all run through here.
+pub fn assert_backend_parity(
+    a: &mut dyn crate::bayesopt::GpBackend,
+    b: &mut dyn crate::bayesopt::GpBackend,
+    script: &ParityScript,
+    xc: &[f64],
+    m: usize,
+    grid: &[[f64; 3]],
+    tol: f64,
+) -> ParityReport {
+    assert!(!grid.is_empty(), "empty hyperparameter grid");
+    assert_eq!(xc.len(), m * script.d, "candidate matrix shape mismatch");
+    let d = script.d;
+    let cmask = vec![true; m];
+    let mut report = ParityReport::default();
+    let rel = |x: f64, y: f64| (x - y).abs() / x.abs().max(y.abs()).max(1.0);
+
+    for (step, &(start, n)) in script.steps.iter().enumerate() {
+        let x = &script.rows[start * d..(start + n) * d];
+        let y = &script.ys[start..start + n];
+
+        let nll_a = a.nll_grid(x, y, n, d, grid).expect("backend a nll_grid");
+        let nll_b = b.nll_grid(x, y, n, d, grid).expect("backend b nll_grid");
+        let mut best_g = 0usize;
+        for (g, (&va, &vb)) in nll_a.iter().zip(&nll_b).enumerate() {
+            match (va.is_finite(), vb.is_finite()) {
+                (true, true) => {
+                    let err = rel(va, vb);
+                    report.max_nll_err = report.max_nll_err.max(err);
+                    assert!(
+                        err <= tol,
+                        "parity: nll[{g}] diverged at step {step} (n={n}): {va} vs {vb}"
+                    );
+                }
+                (false, false) => {}
+                _ => panic!(
+                    "parity: nll[{g}] finiteness diverged at step {step}: {va} vs {vb}"
+                ),
+            }
+            if nll_a[g] < nll_a[best_g] {
+                best_g = g;
+            }
+        }
+
+        let hyp = grid[best_g];
+        let da = a.decide(x, y, n, d, xc, &cmask, m, hyp).expect("backend a decide");
+        let db = b.decide(x, y, n, d, xc, &cmask, m, hyp).expect("backend b decide");
+        for j in 0..m {
+            let (emu, evar, eei) =
+                (rel(da.mu[j], db.mu[j]), rel(da.var[j], db.var[j]), rel(da.ei[j], db.ei[j]));
+            report.max_mu_err = report.max_mu_err.max(emu);
+            report.max_var_err = report.max_var_err.max(evar);
+            report.max_ei_err = report.max_ei_err.max(eei);
+            assert!(
+                emu <= tol,
+                "parity: mu[{j}] diverged at step {step} (n={n}): {} vs {}",
+                da.mu[j],
+                db.mu[j]
+            );
+            assert!(
+                evar <= tol,
+                "parity: var[{j}] diverged at step {step} (n={n}): {} vs {}",
+                da.var[j],
+                db.var[j]
+            );
+            assert!(
+                eei <= tol,
+                "parity: ei[{j}] diverged at step {step} (n={n}): {} vs {}",
+                da.ei[j],
+                db.ei[j]
+            );
+        }
+        // Chosen argmax: each backend must consider the other's pick
+        // tol-equivalent to its own (robust to exact ties).
+        let pick = |ei: &[f64]| {
+            let mut best = 0usize;
+            for (i, v) in ei.iter().enumerate() {
+                if *v > ei[best] {
+                    best = i;
+                }
+            }
+            best
+        };
+        let (ia, ib) = (pick(&da.ei), pick(&db.ei));
+        let scale = da.ei[ia].abs().max(db.ei[ib].abs()).max(1.0);
+        assert!(
+            da.ei[ia] - da.ei[ib] <= tol * scale && db.ei[ib] - db.ei[ia] <= tol * scale,
+            "parity: argmax diverged at step {step} (n={n}): a picks {ia} (ei {}), \
+             b picks {ib} (ei {})",
+            da.ei[ia],
+            db.ei[ib]
+        );
+        report.steps += 1;
+    }
+    report
+}
+
 /// A [`GpBackend`](crate::bayesopt::GpBackend) wrapper with an
 /// artificially small conditioning capacity: reproduces the
 /// windowed-history regime the AOT artifacts (`max_obs`) put the search
@@ -195,6 +377,45 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn parity_script_builders_produce_search_shaped_windows() {
+        let d = 2;
+        let rows: Vec<f64> = (0..12 * d).map(|i| i as f64).collect();
+        let ys: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let script = ParityScript::new(rows, ys, d).growth(5).slides(5, 3).push_window(0, 12);
+        assert_eq!(script.pool_len(), 12);
+        assert_eq!(
+            script.steps(),
+            &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 5), (2, 5), (3, 5), (0, 12)]
+        );
+    }
+
+    #[test]
+    fn parity_harness_accepts_identical_backends() {
+        use crate::bayesopt::{hyperparameter_grid, NativeBackend};
+        let d = 3;
+        let total = 8;
+        let rows: Vec<f64> =
+            (0..total * d).map(|i| ((i * 23 + 5) % 73) as f64 / 73.0).collect();
+        let ys: Vec<f64> = (0..total).map(|i| 1.0 + (i as f64 * 0.37).sin()).collect();
+        let script = ParityScript::new(rows, ys, d).growth(6).slides(6, 2);
+        let m = 5;
+        let xc: Vec<f64> = (0..m * d).map(|i| ((i * 31 + 7) % 97) as f64 / 97.0).collect();
+        let mut a = NativeBackend::new();
+        let mut b = NativeBackend::new();
+        let report = assert_backend_parity(
+            &mut a,
+            &mut b,
+            &script,
+            &xc,
+            m,
+            &hyperparameter_grid(),
+            1e-12,
+        );
+        assert_eq!(report.steps, 8);
+        assert!(report.max_mu_err <= 1e-12);
     }
 
     #[test]

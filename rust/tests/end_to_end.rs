@@ -163,3 +163,52 @@ fn table3_shape_matches_paper() {
         );
     }
 }
+
+/// End-to-end search over a generated full-catalog-scale space: the
+/// whole stack (catalog generator -> cost table -> Ruya plan -> phased
+/// BO search) must run on a >1k-config space, stay within the iteration
+/// cap, and actually engage the low-rank decide path once the history is
+/// long enough (the documented auto-selection thresholds).
+#[test]
+fn generated_space_search_end_to_end() {
+    use ruya::bayesopt::{BoParams, NativeBackend, LOWRANK_MIN_OBS};
+    use ruya::searchspace::SearchSpace;
+    use ruya::workload::{evaluation_jobs, JobCostTable};
+
+    let runner = ExperimentRunner::native()
+        .with_space(SearchSpace::generated(0xC0FFEE, 1200));
+    let job = evaluation_jobs()[0];
+    let table = JobCostTable::build(&runner.sim, &job, &runner.space);
+    assert_eq!(table.normalized.len(), 1200);
+    let profile = runner.profile_job(&job, 7);
+    let plan = runner.planner.plan(&profile.model, job.input_gb, &runner.space);
+
+    let max_iters = LOWRANK_MIN_OBS + 8;
+    let params = BoParams { max_iters, ..Default::default() };
+    let mut backend = NativeBackend::new();
+    let out = runner
+        .run_one_with_params(&mut backend, &table, &plan, 7, &params)
+        .expect("generated-space search");
+
+    assert_eq!(out.tried.len(), max_iters, "search must hit the iteration cap");
+    let mut seen = out.tried.clone();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), out.tried.len(), "a config was tried twice");
+    assert!(out.tried.iter().all(|&i| i < 1200), "config index out of space");
+    assert!(out.costs.iter().all(|&c| c >= 1.0 - 1e-9), "normalized cost below optimum");
+
+    let stats = backend.decide_stats();
+    assert!(stats.exact > 0, "short-history decides must stay exact: {stats:?}");
+    assert!(
+        stats.lowrank > 0,
+        "the low-rank path never engaged over a 1200-config space: {stats:?}"
+    );
+
+    // Determinism end to end: same seed, fresh backend, same trace.
+    let mut backend2 = NativeBackend::new();
+    let out2 = runner
+        .run_one_with_params(&mut backend2, &table, &plan, 7, &params)
+        .expect("repeat search");
+    assert_eq!(out.tried, out2.tried);
+}

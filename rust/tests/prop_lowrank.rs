@@ -1,0 +1,208 @@
+//! Property tests for the large-search-space subsystem: the Nyström
+//! low-rank posterior (variance bounds, exact-equality reduction), the
+//! deterministic farthest-point inducing selection, and the generated
+//! cloud-catalog generator — plus the testkit parity pins of
+//! low-rank-vs-exact on both the `inducing = full set` and the
+//! tolerance-bounded large-space case.
+
+use ruya::bayesopt::{
+    farthest_point_sample, hyperparameter_grid, LowRankGp, LowRankPolicy, NativeBackend,
+};
+use ruya::prop_assert;
+use ruya::searchspace::{SearchSpace, N_FEATURES};
+use ruya::testkit::{assert_backend_parity, property, ParityScript};
+
+/// A smooth synthetic cost surface over encoded features — the kind of
+/// landscape the cluster simulator produces (gentle trends plus a mild
+/// nonlinearity), so marginal likelihood favors moderate lengthscales.
+fn smooth_cost(f: &[f64]) -> f64 {
+    1.0 + f[0] + 0.5 * f[3] + 0.3 * (2.0 * (f[1] + f[4])).sin()
+}
+
+fn obs_from_space(space: &SearchSpace, idx: &[usize]) -> (Vec<f64>, Vec<f64>) {
+    let d = N_FEATURES;
+    let feats = space.feature_matrix();
+    let mut x = Vec::with_capacity(idx.len() * d);
+    let mut y = Vec::with_capacity(idx.len());
+    for &i in idx {
+        let row = &feats[i * d..(i + 1) * d];
+        x.extend_from_slice(row);
+        y.push(smooth_cost(row));
+    }
+    (x, y)
+}
+
+#[test]
+fn prop_nystrom_variance_never_negative_nor_above_prior() {
+    property("nystrom predictive variance stays in [0, prior]", 25, |g| {
+        let n_cfg = g.usize_in(60, 300);
+        let seed = g.rng().next_u64();
+        let space = SearchSpace::generated(seed, n_cfg);
+        let n_obs = g.usize_in(5, 60).min(n_cfg);
+        let obs_idx = g.subset(n_cfg, n_obs);
+        let (x, mut y) = obs_from_space(&space, &obs_idx);
+        // Mild multiplicative noise so targets are not an exact smooth
+        // function of the features.
+        for v in y.iter_mut() {
+            *v *= g.f64_in(0.95, 1.05);
+        }
+        let hyp = [g.f64_in(0.1, 2.0), g.f64_in(0.5, 3.0), g.f64_in(1e-4, 1e-1)];
+        let max_u = g.usize_in(2, 32);
+        let mut lr = LowRankGp::new();
+        prop_assert!(
+            lr.fit(&x, &y, n_obs, N_FEATURES, hyp, max_u),
+            "low-rank fit failed (n={n_obs}, u<={max_u}, hyp={hyp:?})"
+        );
+        prop_assert!(
+            lr.inducing_count() <= max_u.min(n_obs),
+            "inducing count {} above cap {max_u}",
+            lr.inducing_count()
+        );
+        let feats = space.feature_matrix();
+        let (mut mu, mut var) = (Vec::new(), Vec::new());
+        lr.predict_batch(&feats, n_cfg, &mut mu, &mut var);
+        for j in 0..n_cfg {
+            prop_assert!(mu[j].is_finite(), "non-finite mean at {j}");
+            prop_assert!(var[j] >= 0.0, "negative variance {} at {j}", var[j]);
+            prop_assert!(
+                var[j] <= hyp[1] + 1e-9,
+                "variance {} above prior {} at {j}",
+                var[j],
+                hyp[1]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fps_deterministic_and_candidate_order_invariant() {
+    property("farthest-point selection is a function of the row set", 20, |g| {
+        let n_cfg = g.usize_in(40, 250);
+        let seed = g.rng().next_u64();
+        let space = SearchSpace::generated(seed, n_cfg);
+        let feats = space.feature_matrix();
+        let d = N_FEATURES;
+        let k = g.usize_in(2, 24);
+        let a = farthest_point_sample(&feats, n_cfg, d, k);
+        let b = farthest_point_sample(&feats, n_cfg, d, k);
+        prop_assert!(a == b, "fps not deterministic: {a:?} vs {b:?}");
+        // Permute the candidate order; the selected *row set* must not
+        // change (indices may).
+        let mut perm: Vec<usize> = (0..n_cfg).collect();
+        g.rng().shuffle(&mut perm);
+        let mut permuted = Vec::with_capacity(n_cfg * d);
+        for &p in &perm {
+            permuted.extend_from_slice(&feats[p * d..(p + 1) * d]);
+        }
+        let c = farthest_point_sample(&permuted, n_cfg, d, k);
+        let row_set = |sel: &[usize], f: &[f64]| -> Vec<Vec<u64>> {
+            let mut rows: Vec<Vec<u64>> = sel
+                .iter()
+                .map(|&i| f[i * d..(i + 1) * d].iter().map(|v| v.to_bits()).collect())
+                .collect();
+            rows.sort();
+            rows
+        };
+        prop_assert!(
+            row_set(&a, &feats) == row_set(&c, &permuted),
+            "fps row set changed under candidate permutation (k={k}, n={n_cfg})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_catalog_exact_len_distinct_stable() {
+    property("generated catalogs: exact n, distinct, seed-stable", 15, |g| {
+        let n = g.usize_in(1, 800);
+        let seed = g.rng().next_u64();
+        let s1 = SearchSpace::generated(seed, n);
+        prop_assert!(s1.len() == n, "len {} != requested {n}", s1.len());
+        let s2 = SearchSpace::generated(seed, n);
+        prop_assert!(s1.configs() == s2.configs(), "same seed produced different catalogs");
+        let mut seen = std::collections::HashSet::new();
+        for c in s1.configs() {
+            prop_assert!(
+                seen.insert((c.machine, c.nodes)),
+                "duplicate config {} in generated catalog",
+                c.name()
+            );
+            prop_assert!(c.usable_memory_gb() > 0.0, "non-positive usable memory");
+        }
+        Ok(())
+    });
+}
+
+/// Exact-equality pin: with the inducing set forced to the full
+/// observation set, the low-rank backend must match the exact backend to
+/// tight tolerance over a whole append/slide script (the `Z = X`
+/// reduction in `lowrank`'s module docs).
+#[test]
+fn parity_lowrank_full_inducing_equals_exact() {
+    let space = SearchSpace::generated(42, 120);
+    let d = N_FEATURES;
+    let pool = 14;
+    let idx: Vec<usize> = (0..pool).collect();
+    let (rows, ys) = obs_from_space(&space, &idx);
+    let script = ParityScript::new(rows, ys, d).growth(10).slides(10, pool - 10);
+    let feats = space.feature_matrix();
+    let mut exact = NativeBackend::new();
+    exact.set_lowrank_policy(LowRankPolicy::Off);
+    let mut lowrank = NativeBackend::new();
+    lowrank.set_lowrank_policy(LowRankPolicy::Force { max_inducing: usize::MAX });
+    let report = assert_backend_parity(
+        &mut exact,
+        &mut lowrank,
+        &script,
+        &feats,
+        space.len(),
+        &hyperparameter_grid(),
+        1e-5,
+    );
+    assert_eq!(report.steps, pool);
+    assert_eq!(
+        lowrank.decide_stats().lowrank,
+        pool as u64,
+        "forced policy must keep every decide on the low-rank path"
+    );
+}
+
+/// Tolerance-bounded large-space pin: a genuine approximation regime
+/// (80 observations, 32 inducing points, 1500 candidates). The DTC
+/// variance is conservative by construction, so the bound is loose; the
+/// lengthscale grid is restricted to the smooth regime marginal
+/// likelihood would pick on these targets anyway, keeping the bound
+/// meaningful.
+#[test]
+fn parity_lowrank_large_space_within_tolerance() {
+    let space = SearchSpace::generated(7, 1500);
+    let d = N_FEATURES;
+    let pool = 80;
+    // Observations spread evenly across the catalog.
+    let idx: Vec<usize> = (0..pool).map(|i| i * space.len() / pool).collect();
+    let (rows, ys) = obs_from_space(&space, &idx);
+    let script = ParityScript::new(rows, ys, d)
+        .push_window(0, 40)
+        .push_window(0, 60)
+        .push_window(0, 80);
+    let feats = space.feature_matrix();
+    let grid = [[1.5, 1.0, 1e-2], [2.0, 1.0, 1e-2]];
+    let mut exact = NativeBackend::new();
+    exact.set_lowrank_policy(LowRankPolicy::Off);
+    let mut lowrank = NativeBackend::new();
+    lowrank.set_lowrank_policy(LowRankPolicy::Force { max_inducing: 32 });
+    let report = assert_backend_parity(
+        &mut exact,
+        &mut lowrank,
+        &script,
+        &feats,
+        space.len(),
+        &grid,
+        0.5,
+    );
+    assert_eq!(report.steps, 3);
+    assert_eq!(lowrank.decide_stats().lowrank, 3);
+    // The mean must be far tighter than the conservative variance bound.
+    assert!(report.max_mu_err <= 0.2, "mean drifted: {report:?}");
+}
