@@ -89,6 +89,74 @@ fn incremental_sweep(space: &SearchSpace, sizes: &[usize]) {
     }
 }
 
+/// Worker-pool scaling of the grid nll sweep (the `--gp-threads` axis):
+/// the same growth sequence at 1/2/4/8 GP threads. Results are
+/// bit-identical for every value (the deterministic-reduction contract;
+/// see `assert_parallel_sweep_engages`) — only the latency moves.
+fn thread_sweep(space: &SearchSpace, n: usize) {
+    harness::section(&format!(
+        "grid nll sweep across the GP worker pool (growth 1..={n}, H=32)"
+    ));
+    let d = ruya::searchspace::N_FEATURES;
+    let mut rng = Pcg64::from_seed(11);
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        x.extend(space.features(i % space.len()));
+        y.push(1.0 + rng.next_f64());
+    }
+    let mut serial = 0.0;
+    for &t in &[1usize, 2, 4, 8] {
+        let stats =
+            harness::bench_fn(&format!("gp-threads {t}: grid growth (n=1..={n:2})"), || {
+                let mut b = NativeBackend::new();
+                b.set_parallelism(t);
+                grid_growth(&mut b, &x, &y, n, d);
+            });
+        if t == 1 {
+            serial = stats.median();
+        } else {
+            println!(
+                "    -> speedup at {t} gp-threads: {:.2}x",
+                serial / stats.median()
+            );
+        }
+    }
+}
+
+/// Functional guard (always run; part of the `--smoke` contract): the
+/// worker-pool nll sweep must engage at gp-threads 8 and stay
+/// bit-identical to the serial sweep over a whole growth sequence.
+fn assert_parallel_sweep_engages(space: &SearchSpace) {
+    let d = ruya::searchspace::N_FEATURES;
+    let grid = hyperparameter_grid();
+    let mut rng = Pcg64::from_seed(5);
+    let n_max = 10usize;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..n_max {
+        x.extend(space.features(i));
+        y.push(1.0 + rng.next_f64());
+    }
+    let mut serial = NativeBackend::new();
+    let mut par = NativeBackend::new();
+    par.set_parallelism(8);
+    for n in 1..=n_max {
+        let a = serial.nll_grid(&x[..n * d], &y[..n], n, d, &grid).unwrap();
+        let b = par.nll_grid(&x[..n * d], &y[..n], n, d, &grid).unwrap();
+        for (g, (va, vb)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                va.to_bits() == vb.to_bits(),
+                "threaded nll[{g}] not bit-identical at n={n}: {va} vs {vb}"
+            );
+        }
+    }
+    let s = par.decide_stats();
+    assert!(s.parallel_nll_sweeps > 0, "worker-pool nll sweep never engaged: {s:?}");
+    assert_eq!(serial.decide_stats().parallel_nll_sweeps, 0, "serial backend took the pool");
+    println!("parallel nll-sweep guard: OK ({s:?})");
+}
+
 /// Functional guard (always run; the whole point of `--smoke`): drive a
 /// growth + sliding-window sequence and assert the incremental paths
 /// engaged. A regression to scratch fits fails here, not just in timing.
@@ -147,7 +215,9 @@ fn main() {
 
     let sizes: &[usize] = if smoke { &[8, 16] } else { &[8, 16, 24, 32, 48, 64] };
     incremental_sweep(&space, sizes);
+    thread_sweep(&space, if smoke { 16 } else { 48 });
     assert_incremental_engages(&space);
+    assert_parallel_sweep_engages(&space);
 
     if smoke {
         println!("\nsmoke mode: skipping the full decision-path sections");

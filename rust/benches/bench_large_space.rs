@@ -24,7 +24,8 @@
 mod harness;
 
 use ruya::bayesopt::{
-    GpBackend, LowRankPolicy, NativeBackend, LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS,
+    GpBackend, LowRankPolicy, NativeBackend, DECIDE_TILE, LOWRANK_CANDIDATE_THRESHOLD,
+    LOWRANK_MIN_OBS,
 };
 use ruya::searchspace::SearchSpace;
 use ruya::util::rng::Pcg64;
@@ -44,8 +45,15 @@ fn observations(space: &SearchSpace, n: usize) -> (Vec<f64>, Vec<f64>) {
     (x, y)
 }
 
-/// Median decide latency (ns) for one (space, n_obs, policy) cell.
-fn decide_latency(space: &SearchSpace, n: usize, policy: LowRankPolicy, label: &str) -> f64 {
+/// Median decide latency (ns) for one (space, n_obs, policy, gp-threads)
+/// cell.
+fn decide_latency(
+    space: &SearchSpace,
+    n: usize,
+    policy: LowRankPolicy,
+    gp_threads: usize,
+    label: &str,
+) -> f64 {
     let d = ruya::searchspace::N_FEATURES;
     let m = space.len();
     let features = space.feature_matrix();
@@ -54,6 +62,7 @@ fn decide_latency(space: &SearchSpace, n: usize, policy: LowRankPolicy, label: &
     let hyp = [0.5, 1.0, 1e-3];
     let mut backend = NativeBackend::new();
     backend.set_lowrank_policy(policy);
+    backend.set_parallelism(gp_threads);
     let stats = harness::bench_fn(label, || {
         std::hint::black_box(
             backend.decide(&x, &y, n, d, &features, &cmask, m, hyp).unwrap(),
@@ -77,8 +86,13 @@ fn latency_sweep() {
     // The acceptance baseline: the exact path on the 69-config space at
     // the same observation count the big spaces are measured at.
     let n_small = 48;
-    let baseline =
-        decide_latency(&spaces[0].1, n_small, LowRankPolicy::Off, "scout:69 exact (n=48)");
+    let baseline = decide_latency(
+        &spaces[0].1,
+        n_small,
+        LowRankPolicy::Off,
+        1,
+        "scout:69 exact (n=48)",
+    );
     println!("    -> baseline: 69-config exact decide at n=48");
 
     for (name, space) in spaces.iter().skip(1) {
@@ -87,12 +101,14 @@ fn latency_sweep() {
                 space,
                 n,
                 LowRankPolicy::Off,
+                1,
                 &format!("{name} exact   (n={n:3})"),
             );
             let auto = decide_latency(
                 space,
                 n,
                 LowRankPolicy::Auto,
+                1,
                 &format!("{name} auto    (n={n:3})"),
             );
             println!(
@@ -102,6 +118,31 @@ fn latency_sweep() {
                 auto / baseline,
                 exact / auto,
             );
+        }
+    }
+}
+
+/// The `--gp-threads` axis: one exact decide over the 5k-config catalog
+/// (5 tiles) at pool widths 1/2/4/8 — the tile fan-out measurement.
+/// Results are bit-identical across the axis (see the smoke guards);
+/// only the latency moves.
+fn decide_thread_sweep() {
+    harness::section("exact decide across the GP worker pool (tile fan-out, generated:5000)");
+    let space = SearchSpace::generated(1, 5000);
+    let n = 64;
+    let mut serial = 0.0;
+    for &t in &[1usize, 2, 4, 8] {
+        let med = decide_latency(
+            &space,
+            n,
+            LowRankPolicy::Off,
+            t,
+            &format!("generated:5000 exact, gp-threads {t} (n={n})"),
+        );
+        if t == 1 {
+            serial = med;
+        } else {
+            println!("    -> speedup at {t} gp-threads: {:.2}x", serial / med);
         }
     }
 }
@@ -152,12 +193,76 @@ fn assert_policy_thresholds() {
     println!("low-rank policy-threshold guard: OK");
 }
 
+/// Functional guard (runs in `--smoke` too): on a multi-tile space the
+/// threaded decide must take the tile fan-out and match the serial tile
+/// loop bit-for-bit.
+fn assert_parallel_decide_engages() {
+    let d = ruya::searchspace::N_FEATURES;
+    let space = SearchSpace::generated(5, DECIDE_TILE + 300); // two tiles
+    let n = 12;
+    let m = space.len();
+    let features = space.feature_matrix();
+    let cmask = vec![true; m];
+    let (x, y) = observations(&space, n);
+    let hyp = [0.5, 1.0, 1e-3];
+    let mut serial = NativeBackend::new();
+    serial.set_lowrank_policy(LowRankPolicy::Off);
+    let mut par = NativeBackend::new();
+    par.set_lowrank_policy(LowRankPolicy::Off);
+    par.set_parallelism(4);
+    let ds = serial.decide(&x, &y, n, d, &features, &cmask, m, hyp).unwrap();
+    let dp = par.decide(&x, &y, n, d, &features, &cmask, m, hyp).unwrap();
+    for j in 0..m {
+        assert!(ds.mu[j].to_bits() == dp.mu[j].to_bits(), "threaded mu[{j}] diverged");
+        assert!(ds.var[j].to_bits() == dp.var[j].to_bits(), "threaded var[{j}] diverged");
+        assert!(ds.ei[j].to_bits() == dp.ei[j].to_bits(), "threaded ei[{j}] diverged");
+    }
+    let s = par.decide_stats();
+    assert!(s.parallel_decide_fanouts > 0, "decide tile fan-out never engaged: {s:?}");
+    assert_eq!(serial.decide_stats().parallel_decide_fanouts, 0);
+    println!("parallel decide-tile guard: OK ({s:?})");
+}
+
+/// Functional guard (runs in `--smoke` too): past its observation
+/// threshold `nll_grid` must route to the Woodbury low-rank marginal —
+/// and agree with the exact sweep in the `Z = X` reduction regime.
+fn assert_lowrank_nll_routes() {
+    let d = ruya::searchspace::N_FEATURES;
+    let space = SearchSpace::generated(9, 80);
+    let n = 40;
+    let (x, y) = observations(&space, n);
+    // Moderate-noise grid: the Z = X comparison divides a cancelling
+    // quadratic form by σ², so the grid's smallest noise level would
+    // amplify last-ulp error past a meaningful bound (the full grid's
+    // serial-vs-threaded bit parity is pinned in tests/parallel_gp.rs).
+    let grid = [[0.5, 1.0, 1e-2], [1.0, 1.0, 1e-2], [2.0, 1.0, 1e-1], [0.5, 1.0, 1e-1]];
+    let mut routed = NativeBackend::new();
+    routed.set_lowrank_nll_threshold(32); // lowered so the guard is cheap
+    let a = routed.nll_grid(&x, &y, n, d, &grid).unwrap();
+    let s = routed.decide_stats();
+    assert_eq!(s.nll_lowrank, 1, "low-rank nll_grid routing never engaged: {s:?}");
+    let mut exact = NativeBackend::new();
+    let b = exact.nll_grid(&x, &y, n, d, &grid).unwrap();
+    // n <= DEFAULT_MAX_INDUCING: FPS selects every observation, so the
+    // DTC marginal reduces to the exact one (lowrank module docs).
+    for (g, (va, vb)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (va - vb).abs() <= 1e-4 * va.abs().max(vb.abs()).max(1.0),
+            "routed nll[{g}] drifted: {va} vs exact {vb}"
+        );
+    }
+    println!("low-rank nll_grid routing guard: OK");
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     assert_policy_thresholds();
+    assert_parallel_decide_engages();
+    assert_lowrank_nll_routes();
     if smoke {
         println!("\nsmoke mode: skipping the full latency sweep");
         return;
     }
     latency_sweep();
+    decide_thread_sweep();
 }

@@ -2,10 +2,27 @@
 //! by the native f64 implementation or by the AOT-compiled XLA artifacts
 //! (the deployed path). The search loop is backend-agnostic; integration
 //! tests assert both backends propose the same configurations.
+//!
+//! # Deterministic parallelism
+//!
+//! [`NativeBackend`] owns an optional worker pool
+//! ([`NativeBackend::set_parallelism`], CLI `--gp-threads`): the
+//! hyperparameter-grid nll sweep fans its independent [`FactorCache`]
+//! slots across `std::thread::scope` workers, and a single exact decide
+//! fans its [`DECIDE_TILE`] candidate chunks the same way. Every unit of
+//! work writes to a fixed, disjoint output slot and no floating-point
+//! reduction ever crosses units, so **results are bit-identical for any
+//! worker count** — `testkit::assert_parallel_parity` and the CI
+//! determinism stress test pin nll grids, posteriors, EI and the chosen
+//! argmax across `--gp-threads` 1/2/4/8. [`DecideStats`] counters
+//! (`parallel_nll_sweeps`, `parallel_decide_fanouts`, `nll_exact`,
+//! `nll_lowrank`) make the routing observable.
 
-use super::chol::{FactorCache, FactorCacheStats, FitPlan, ObsDelta};
-use super::gp::{expected_improvement, matern52_from_d2, matern52_gram_from_d2, NativeGp};
-use super::lowrank::{LowRankGp, DEFAULT_MAX_INDUCING};
+use super::chol::{FactorCache, FactorCacheStats, FitPlan, ObsDelta, SlotTask};
+use super::gp::{
+    expected_improvement, matern52_from_d2, matern52_gram_from_d2, predict_into,
+};
+use super::lowrank::{farthest_point_sample, LowRankGp, DEFAULT_MAX_INDUCING};
 use crate::runtime::{GpExecutor, XlaRuntime};
 use anyhow::Result;
 
@@ -25,12 +42,24 @@ pub const LOWRANK_CANDIDATE_THRESHOLD: usize = 512;
 /// where it genuinely approximates (`u < n`).
 pub const LOWRANK_MIN_OBS: usize = DEFAULT_MAX_INDUCING;
 
+/// Observation count above which `nll_grid` switches from the exact
+/// incremental factor sweep to the Woodbury low-rank marginal
+/// ([`LowRankGp::nll`]; override via
+/// [`NativeBackend::set_lowrank_nll_threshold`]). The exact sweep is
+/// O(H·n²) per iteration once warm — ideal for the windowed search
+/// regime — but its cold refits are O(H·n³) and its distance cache
+/// O(n²); past a few thousand observations the DTC marginal
+/// (O(H·n·u²), no n×n intermediates) is what keeps hyperparameter
+/// selection tractable.
+pub const LOWRANK_NLL_OBS_THRESHOLD: usize = 2048;
+
 /// Tile width of the chunked batched acquisition: `decide` streams
-/// candidates through `predict_batch` in fixed-size tiles so the
+/// candidates through [`predict_into`] in fixed-size tiles so the
 /// intermediate cross-kernel block stays `n x 1024` instead of `n x m`
 /// for a generated 5k-config catalog. Per-column arithmetic is
 /// independent of the tiling, so results are bit-identical to one
-/// m-wide call.
+/// m-wide call — which also makes the tiles safe to fan across worker
+/// threads (each tile owns a fixed disjoint output range).
 pub const DECIDE_TILE: usize = 1024;
 
 /// How [`NativeBackend`] chooses between the exact and the Nyström
@@ -38,7 +67,9 @@ pub const DECIDE_TILE: usize = 1024;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum LowRankPolicy {
     /// Low-rank when `m > LOWRANK_CANDIDATE_THRESHOLD` and
-    /// `n > LOWRANK_MIN_OBS`; exact otherwise.
+    /// `n > LOWRANK_MIN_OBS`, or whenever the history has outgrown the
+    /// nll threshold (past which the exact factor cache is no longer
+    /// maintained — see [`LOWRANK_NLL_OBS_THRESHOLD`]); exact otherwise.
     #[default]
     Auto,
     /// Always exact (the scratch baseline for benches and parity tests).
@@ -48,8 +79,8 @@ pub enum LowRankPolicy {
     Force { max_inducing: usize },
 }
 
-/// Which `decide` paths a [`NativeBackend`] has taken — the observable
-/// the `bench_large_space --smoke` CI step asserts on.
+/// Which `decide`/`nll_grid` paths a [`NativeBackend`] has taken — the
+/// observable the CI smoke steps assert on.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DecideStats {
     /// Decisions served by the exact (Cholesky-factor) posterior.
@@ -59,6 +90,15 @@ pub struct DecideStats {
     /// Low-rank fits that lost positive definiteness and fell back to
     /// the exact path.
     pub lowrank_fallbacks: u64,
+    /// `nll_grid` calls served by the exact incremental factor sweep.
+    pub nll_exact: u64,
+    /// `nll_grid` calls served by the Woodbury low-rank marginal.
+    pub nll_lowrank: u64,
+    /// nll sweeps that actually ran on the worker pool (gp-threads > 1
+    /// and more than one unit of work).
+    pub parallel_nll_sweeps: u64,
+    /// Decides whose tiles fanned out across the worker pool.
+    pub parallel_decide_fanouts: u64,
 }
 
 /// Posterior + acquisition over all candidates for one search iteration.
@@ -114,24 +154,139 @@ pub trait GpBackend {
 /// compiles artifacts); workers propagate the error instead of panicking.
 pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn GpBackend>> + Send + Sync>;
 
+/// Grouping key of the (lengthscale, variance)-shared kernel builds: the
+/// 4 noise levels per lengthscale share one cross-row (extend path) or
+/// one Gram build (cold path). Bit keys sort positives in numeric order
+/// and, unlike `f64` tuples, totally — no NaN partial-ordering edge.
+fn hyp_group_key(hyp: [f64; 3]) -> (u64, u64) {
+    (hyp[0].to_bits(), hyp[1].to_bits())
+}
+
+/// Deal whole work groups round-robin across `workers` scoped threads —
+/// the single fan-out scaffold behind the exact nll sweep, the low-rank
+/// nll sweep and the decide tile fan-out. Group `g` lands in lane
+/// `g % workers`, in order, so the assignment is a pure function of the
+/// group list and the worker count; every item writes only its own
+/// caller-disjoint outputs. Those two properties are the whole
+/// bit-identical-for-any-worker-count contract, kept in one place so a
+/// future change cannot drift between the three call sites.
+fn fan_out_groups<T: Send, F>(groups: Vec<Vec<T>>, workers: usize, work: F)
+where
+    F: Fn(Vec<T>) + Sync,
+{
+    // Never spawn more lanes than there are groups: an empty lane still
+    // costs a thread spawn (the exact sweep has only 8 (ls,var) groups
+    // however wide the pool is).
+    let workers = workers.min(groups.len()).max(1);
+    let mut lanes: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (g, group) in groups.into_iter().enumerate() {
+        lanes[g % workers].extend(group);
+    }
+    let work = &work;
+    std::thread::scope(|scope| {
+        for lane in lanes {
+            scope.spawn(move || work(lane));
+        }
+    });
+}
+
+/// Bring one planned slot up to date from the shared distance matrix,
+/// returning whether its factor is usable (false = Gram not SPD even
+/// from a cold refactorization). THE single slot-update body: the
+/// serial nll sweep, every lane of the worker pool, and `decide`'s
+/// [`NativeBackend::ensure_factor`] all run exactly this code —
+/// identical arithmetic in identical order, so the paths cannot drift
+/// and the swept grid is bit-identical for any worker count.
+/// `row`/`gram` plus their keys memoize the (lengthscale,
+/// variance)-shared builds across consecutive tasks of one lane.
+#[allow(clippy::too_many_arguments)]
+fn update_task(
+    task: &mut SlotTask<'_>,
+    d2: &[f64],
+    n: usize,
+    row: &mut Vec<f64>,
+    gram: &mut Vec<f64>,
+    row_key: &mut (f64, f64),
+    gram_key: &mut (f64, f64),
+) -> bool {
+    let hyp = task.hyp();
+    let key = (hyp[0], hyp[1]);
+    let extended = match task.plan() {
+        FitPlan::Reuse => {
+            task.note_reuse();
+            return true;
+        }
+        FitPlan::Extend | FitPlan::Slide => {
+            let slide = task.plan() == FitPlan::Slide;
+            if *row_key != key {
+                // Cross-kernel of the newest observation against the
+                // current first n-1 rows: the last d2 row.
+                let last = n - 1;
+                row.clear();
+                for j in 0..last {
+                    row.push(matern52_from_d2(d2[last * n + j], hyp[0], hyp[1]));
+                }
+                *row_key = key;
+            }
+            task.extend(&row[..], slide)
+        }
+        FitPlan::Cold => false,
+    };
+    if !extended {
+        if *gram_key != key {
+            matern52_gram_from_d2(d2, n, hyp[0], hyp[1], gram);
+            *gram_key = key;
+        }
+        if !task.cold(gram, n) {
+            return false;
+        }
+    }
+    true
+}
+
+/// [`update_task`] + the slot's nll over `y` (INFINITY when unusable) —
+/// the per-task body of the grid nll sweep.
+#[allow(clippy::too_many_arguments)]
+fn sweep_task(
+    task: &mut SlotTask<'_>,
+    d2: &[f64],
+    y: &[f64],
+    n: usize,
+    row: &mut Vec<f64>,
+    gram: &mut Vec<f64>,
+    row_key: &mut (f64, f64),
+    gram_key: &mut (f64, f64),
+) -> f64 {
+    if update_task(task, d2, n, row, gram, row_key, gram_key) {
+        task.nll(y)
+    } else {
+        f64::INFINITY
+    }
+}
+
 /// Pure-rust backend (no artifacts needed).
 ///
 /// Carries two caches across BO iterations: the hyperparameter-
 /// independent pairwise-distance matrix ([`Self::update_d2`]) and one
 /// Cholesky [`FactorCache`] slot per hyperparameter-grid point, updated
 /// by rank-1 append/slide instead of refactorized from scratch — the
-/// O(H·n³) → O(H·n²) hot-path win (see [`super::chol`]).
+/// O(H·n³) → O(H·n²) hot-path win (see [`super::chol`], including the
+/// packed storage that makes an append a pure push).
 ///
-/// Candidate scoring in [`GpBackend::decide`] is two-tier: small spaces
-/// go through the exact posterior in [`DECIDE_TILE`]-wide chunks, while
-/// generated-catalog-scale spaces (see [`LowRankPolicy`] and
-/// [`LOWRANK_CANDIDATE_THRESHOLD`]) are served by the Nyström low-rank
-/// posterior of [`super::lowrank`], whose per-candidate cost is
-/// independent of the observation count. `nll_grid` (observation-only
-/// work) always stays on the exact incremental path.
-#[derive(Default)]
+/// `decide` *borrows* the cached packed factor (no clone into a GP):
+/// the weights `alpha = (L Lᵀ)⁻¹ y` are solved against it in place and
+/// candidates stream through [`predict_into`] in [`DECIDE_TILE`]-wide
+/// chunks — serially, or fanned across the worker pool
+/// ([`Self::set_parallelism`]) with bit-identical results.
+///
+/// Candidate scoring is two-tier: generated-catalog-scale spaces (see
+/// [`LowRankPolicy`] and [`LOWRANK_CANDIDATE_THRESHOLD`]) are served by
+/// the Nyström low-rank posterior of [`super::lowrank`], whose
+/// per-candidate cost is independent of the observation count.
+/// `nll_grid` stays on the exact incremental sweep up to
+/// [`LOWRANK_NLL_OBS_THRESHOLD`] observations and switches to the
+/// Woodbury low-rank marginal above it.
 pub struct NativeBackend {
-    gp: NativeGp,
     /// Pairwise-distance cache shared across the hyperparameter grid
     /// (hyperparameter-independent) *and* across BO iterations — see
     /// [`Self::update_d2`].
@@ -154,9 +309,41 @@ pub struct NativeBackend {
     lowrank: LowRankGp,
     lowrank_policy: LowRankPolicy,
     decide_stats: DecideStats,
-    /// Per-tile prediction buffers of the chunked exact path.
-    mu_tile: Vec<f64>,
-    var_tile: Vec<f64>,
+    /// Decide's borrowed-factor weights `(L Lᵀ)⁻¹ y` (reused scratch).
+    alpha_scratch: Vec<f64>,
+    /// Serial-path prediction scratch (each pool worker owns its own).
+    ks_scratch: Vec<f64>,
+    acc_scratch: Vec<f64>,
+    /// Worker-pool width for the grid nll sweep and the decide tile
+    /// fan-out; 1 = fully serial.
+    gp_threads: usize,
+    /// `nll_grid` switches to the low-rank marginal above this many
+    /// observations (default [`LOWRANK_NLL_OBS_THRESHOLD`]).
+    nll_lowrank_min_obs: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self {
+            d2: Vec::new(),
+            d2_swap: Vec::new(),
+            cache_x: Vec::new(),
+            cache_n: 0,
+            cache_d: 0,
+            factors: FactorCache::new(),
+            incremental_off: false,
+            row_scratch: Vec::new(),
+            kern_scratch: Vec::new(),
+            lowrank: LowRankGp::new(),
+            lowrank_policy: LowRankPolicy::Auto,
+            decide_stats: DecideStats::default(),
+            alpha_scratch: Vec::new(),
+            ks_scratch: Vec::new(),
+            acc_scratch: Vec::new(),
+            gp_threads: 1,
+            nll_lowrank_min_obs: LOWRANK_NLL_OBS_THRESHOLD,
+        }
+    }
 }
 
 impl NativeBackend {
@@ -173,6 +360,30 @@ impl NativeBackend {
     /// candidate-scoring path (default [`LowRankPolicy::Auto`]).
     pub fn set_lowrank_policy(&mut self, policy: LowRankPolicy) {
         self.lowrank_policy = policy;
+    }
+
+    /// Worker-pool width for the grid nll sweep and the decide tile
+    /// fan-out (CLI `--gp-threads`; default 1 = serial, floored at 1).
+    /// Outputs are bit-identical for every value — the module docs'
+    /// deterministic-parallelism contract. Workers are scoped threads
+    /// spawned per call (~tens of µs), so the knob pays off on large
+    /// windows and multi-tile candidate sets; on tiny scout-scale
+    /// sweeps the spawn overhead can exceed the O(n²) slot work (a
+    /// persistent pool / work-size floor is a ROADMAP item).
+    pub fn set_parallelism(&mut self, threads: usize) {
+        self.gp_threads = threads.max(1);
+    }
+
+    /// The configured worker-pool width.
+    pub fn parallelism(&self) -> usize {
+        self.gp_threads
+    }
+
+    /// Observation count above which `nll_grid` uses the Woodbury
+    /// low-rank marginal (default [`LOWRANK_NLL_OBS_THRESHOLD`]; benches
+    /// and tests lower it to exercise the routing cheaply).
+    pub fn set_lowrank_nll_threshold(&mut self, min_obs: usize) {
+        self.nll_lowrank_min_obs = min_obs;
     }
 
     /// Counters of the factorization paths taken so far.
@@ -192,9 +403,32 @@ impl NativeBackend {
             LowRankPolicy::Force { max_inducing } => {
                 (n > 0).then_some(max_inducing.max(1))
             }
-            LowRankPolicy::Auto => (m > LOWRANK_CANDIDATE_THRESHOLD
-                && n > LOWRANK_MIN_OBS)
-                .then_some(DEFAULT_MAX_INDUCING),
+            LowRankPolicy::Auto => {
+                let large_space = m > LOWRANK_CANDIDATE_THRESHOLD && n > LOWRANK_MIN_OBS;
+                // Past the nll threshold the factor cache is no longer
+                // maintained (nll_grid runs the Woodbury marginal), so
+                // an exact decide would pay an O(n³) cold refit on
+                // every hyperparameter switch at exactly the scale the
+                // threshold declares intractable — serve the whole
+                // iteration low-rank instead, whatever the space size.
+                let large_history = n > self.nll_lowrank_min_obs;
+                (large_space || large_history).then_some(DEFAULT_MAX_INDUCING)
+            }
+        }
+    }
+
+    /// Inducing cap for the low-rank `nll_grid`, or None for the exact
+    /// incremental sweep. Engages only above the (settable) observation
+    /// threshold — far past the windowed-search regime the factor cache
+    /// serves — and never under [`LowRankPolicy::Off`].
+    fn lowrank_nll_limit(&self, n: usize) -> Option<usize> {
+        if n <= self.nll_lowrank_min_obs {
+            return None;
+        }
+        match self.lowrank_policy {
+            LowRankPolicy::Off => None,
+            LowRankPolicy::Force { max_inducing } => Some(max_inducing.clamp(1, n)),
+            LowRankPolicy::Auto => Some(DEFAULT_MAX_INDUCING),
         }
     }
 
@@ -266,11 +500,11 @@ impl NativeBackend {
 
     /// Bring the [`FactorCache`] slot for `hyp` up to date with the
     /// current `n` observations (distance matrix already refreshed by
-    /// [`Self::update_d2`]). `row_key`/`gram_key` memoize the (ls, var)
-    /// of `row_scratch`/`kern_scratch` across the grid — the 4 noise
-    /// levels per lengthscale share one cross-row (extend path) or one
-    /// Gram build (cold path). Returns the slot index, or None when the
-    /// Gram is not SPD even from a cold refactorization.
+    /// [`Self::update_d2`]) — the single-slot form `decide` uses,
+    /// delegating to the same [`update_task`] body as the grid sweep.
+    /// `row_key`/`gram_key` memoize the (ls, var) of
+    /// `row_scratch`/`kern_scratch`. Returns the slot index, or None
+    /// when the Gram is not SPD even from a cold refactorization.
     fn ensure_factor(
         &mut self,
         hyp: [f64; 3],
@@ -282,38 +516,67 @@ impl NativeBackend {
         if self.incremental_off && plan != FitPlan::Cold {
             plan = FitPlan::Cold;
         }
-        let key = (hyp[0], hyp[1]);
-        let extended = match plan {
-            FitPlan::Reuse => {
-                self.factors.note_reuse();
-                return Some(idx);
-            }
-            FitPlan::Extend | FitPlan::Slide => {
-                if *row_key != key {
-                    // Cross-kernel of the newest observation against the
-                    // current first n-1 rows: the last d2 row.
-                    let last = n - 1;
-                    self.row_scratch.clear();
-                    for j in 0..last {
-                        self.row_scratch
-                            .push(matern52_from_d2(self.d2[last * n + j], hyp[0], hyp[1]));
-                    }
-                    *row_key = key;
+        let mut task = self.factors.task(idx, plan);
+        let ok = update_task(
+            &mut task,
+            &self.d2,
+            n,
+            &mut self.row_scratch,
+            &mut self.kern_scratch,
+            row_key,
+            gram_key,
+        );
+        let stats = task.stats();
+        drop(task);
+        self.factors.absorb_stats(stats);
+        ok.then_some(idx)
+    }
+
+    /// Per-grid-point DTC marginal likelihood ([`LowRankGp::nll`],
+    /// Woodbury form): O(H·(n·u² + n·u·d)) total and no n×n
+    /// intermediates — the path that keeps hyperparameter selection
+    /// feasible past a few thousand observations. Grid points are
+    /// independent pure computations writing to fixed slots, so the
+    /// worker-pool fan-out is bit-identical to the serial loop.
+    fn nll_grid_lowrank(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        grid: &[[f64; 3]],
+        max_inducing: usize,
+    ) -> Vec<f64> {
+        let mut out = vec![f64::INFINITY; grid.len()];
+        // Farthest-point selection depends only on the rows, not the
+        // hyperparameters: select once and share the set across the
+        // whole grid (and across the worker lanes).
+        let inducing = farthest_point_sample(x, n, d, max_inducing.max(1));
+        let ind = &inducing[..];
+        let workers = self.gp_threads.min(grid.len()).max(1);
+        if workers <= 1 {
+            for (gi, &hyp) in grid.iter().enumerate() {
+                if self.lowrank.fit_with_inducing(x, y, n, d, hyp, ind) {
+                    out[gi] = self.lowrank.nll(y);
                 }
-                self.factors.extend(idx, &self.row_scratch, plan == FitPlan::Slide)
             }
-            FitPlan::Cold => false,
-        };
-        if !extended {
-            if *gram_key != key {
-                matern52_gram_from_d2(&self.d2, n, hyp[0], hyp[1], &mut self.kern_scratch);
-                *gram_key = key;
-            }
-            if !self.factors.cold(idx, &self.kern_scratch, n) {
-                return None;
-            }
+        } else {
+            self.decide_stats.parallel_nll_sweeps += 1;
+            let groups: Vec<Vec<(usize, &mut f64)>> = out
+                .iter_mut()
+                .enumerate()
+                .map(|(gi, slot)| vec![(gi, slot)])
+                .collect();
+            fan_out_groups(groups, workers, |lane| {
+                let mut lr = LowRankGp::new();
+                for (gi, slot) in lane {
+                    if lr.fit_with_inducing(x, y, n, d, grid[gi], ind) {
+                        *slot = lr.nll(y);
+                    }
+                }
+            });
         }
-        Some(idx)
+        out
     }
 }
 
@@ -359,29 +622,86 @@ impl GpBackend for NativeBackend {
         let idx = self
             .ensure_factor(hyp, n, &mut row_key, &mut gram_key)
             .ok_or_else(|| anyhow::anyhow!("gram matrix not SPD"))?;
-        self.gp.fit_from_factor(x, y, n, d, self.factors.factor(idx), hyp);
         self.decide_stats.exact += 1;
-        let mut mu = Vec::with_capacity(m);
-        let mut var = Vec::with_capacity(m);
-        // Batched solves over the candidate columns, streamed in
-        // DECIDE_TILE-wide chunks: the n x tile cross-kernel block stays
-        // a fixed size however large the space is, and per-column
-        // arithmetic is identical to one m-wide call. No candidate mask
-        // is passed: the Decision contract exposes mu/var for *every*
-        // candidate (the XLA-parity tests and the search's exploration
-        // fallback read them) — only the EI respects `cmask`.
-        for start in (0..m).step_by(DECIDE_TILE) {
-            let w = DECIDE_TILE.min(m - start);
-            self.gp.predict_batch(
-                &xc[start * d..(start + w) * d],
-                w,
-                None,
-                &mut self.mu_tile,
-                &mut self.var_tile,
-            );
-            mu.extend_from_slice(&self.mu_tile);
-            var.extend_from_slice(&self.var_tile);
+
+        // Borrow the cached packed factor — no clone into a GP: the
+        // decide weights alpha = (L Lᵀ)⁻¹ y are solved against it in
+        // place, then candidates stream through `predict_into` in
+        // DECIDE_TILE-wide chunks. No candidate mask is passed: the
+        // Decision contract exposes mu/var for *every* candidate (the
+        // XLA-parity tests and the search's exploration fallback read
+        // them) — only the EI respects `cmask`.
+        let mut alpha = std::mem::take(&mut self.alpha_scratch);
+        let factor = self.factors.factor(idx);
+        factor.solve_into(y, &mut alpha);
+
+        let mut mu = vec![0.0; m];
+        let mut var = vec![0.0; m];
+        let tiles = m.div_ceil(DECIDE_TILE);
+        let workers = self.gp_threads.min(tiles);
+        if workers > 1 {
+            self.decide_stats.parallel_decide_fanouts += 1;
+            // Tiles are dealt round-robin to the worker lanes; each tile
+            // writes its own fixed, disjoint output range and per-column
+            // arithmetic is independent of the tiling, so the fan-out is
+            // bit-identical to the serial tile loop for every worker
+            // count (module docs).
+            let alpha_ref = &alpha[..];
+            let groups: Vec<Vec<(usize, &mut [f64], &mut [f64])>> = mu
+                .chunks_mut(DECIDE_TILE)
+                .zip(var.chunks_mut(DECIDE_TILE))
+                .enumerate()
+                .map(|(t, (mu_c, var_c))| vec![(t, mu_c, var_c)])
+                .collect();
+            fan_out_groups(groups, workers, |lane| {
+                let (mut ks, mut acc) = (Vec::new(), Vec::new());
+                for (t, mu_c, var_c) in lane {
+                    let start = t * DECIDE_TILE;
+                    let w = mu_c.len();
+                    predict_into(
+                        factor,
+                        alpha_ref,
+                        x,
+                        n,
+                        d,
+                        hyp,
+                        &xc[start * d..(start + w) * d],
+                        w,
+                        mu_c,
+                        var_c,
+                        &mut ks,
+                        &mut acc,
+                    );
+                }
+            });
+        } else {
+            let mut ks = std::mem::take(&mut self.ks_scratch);
+            let mut acc = std::mem::take(&mut self.acc_scratch);
+            for (t, (mu_c, var_c)) in
+                mu.chunks_mut(DECIDE_TILE).zip(var.chunks_mut(DECIDE_TILE)).enumerate()
+            {
+                let start = t * DECIDE_TILE;
+                let w = mu_c.len();
+                predict_into(
+                    factor,
+                    &alpha,
+                    x,
+                    n,
+                    d,
+                    hyp,
+                    &xc[start * d..(start + w) * d],
+                    w,
+                    mu_c,
+                    var_c,
+                    &mut ks,
+                    &mut acc,
+                );
+            }
+            self.ks_scratch = ks;
+            self.acc_scratch = acc;
         }
+        self.alpha_scratch = alpha;
+
         let ei = (0..m)
             .map(|i| if cmask[i] { expected_improvement(mu[i], var[i], best) } else { 0.0 })
             .collect();
@@ -396,27 +716,101 @@ impl GpBackend for NativeBackend {
         d: usize,
         grid: &[[f64; 3]],
     ) -> Result<Vec<f64>> {
-        // Reuse across the grid and across iterations (§Perf): the
-        // distance matrix is hyperparameter-independent (cached across
-        // BO iterations, see update_d2); each grid point keeps its
-        // Cholesky factor alive across iterations and rank-1 extends it
-        // (O(n²)) instead of refactorizing (O(n³)); and on the cold path
-        // grid entries sharing (lengthscale, variance) — the 4 noise
-        // levels per lengthscale — reuse one cross-row / Gram build.
+        // Large-history path: Woodbury low-rank marginal per grid point.
+        // The distance matrix and factor cache are deliberately left
+        // untouched — they still describe the last exact-path window, so
+        // a later exact call computes its delta against the right state.
+        if let Some(max_inducing) = self.lowrank_nll_limit(n) {
+            self.decide_stats.nll_lowrank += 1;
+            return Ok(self.nll_grid_lowrank(x, y, n, d, grid, max_inducing));
+        }
+        self.decide_stats.nll_exact += 1;
+
+        // Exact incremental sweep. Reuse across the grid and across
+        // iterations (§Perf): the distance matrix is hyperparameter-
+        // independent (cached across BO iterations, see update_d2); each
+        // grid point keeps its Cholesky factor alive across iterations
+        // and rank-1 extends it (O(n²)) instead of refactorizing
+        // (O(n³)); and on the cold path grid entries sharing
+        // (lengthscale, variance) — the 4 noise levels per lengthscale —
+        // reuse one cross-row / Gram build. The slots are independent
+        // units of work ([`FactorCache::plan_grid`]), swept serially or
+        // across the worker pool with bit-identical results.
         let delta = self.update_d2(x, n, d);
         self.factors.note_delta(delta);
-        let mut out = vec![f64::INFINITY; grid.len()];
-        let mut order: Vec<usize> = (0..grid.len()).collect();
-        order.sort_by(|&a, &b| {
-            (grid[a][0], grid[a][1]).partial_cmp(&(grid[b][0], grid[b][1])).unwrap()
-        });
-        let (mut row_key, mut gram_key) = ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
-        for &gi in &order {
-            if let Some(idx) = self.ensure_factor(grid[gi], n, &mut row_key, &mut gram_key) {
-                out[gi] = self.factors.nll(idx, y);
+        let (mut tasks, map) = self.factors.plan_grid(grid, n);
+        if self.incremental_off {
+            for t in tasks.iter_mut() {
+                t.force_cold();
             }
         }
-        Ok(out)
+        let mut nlls = vec![f64::INFINITY; tasks.len()];
+        let workers = self.gp_threads.min(tasks.len()).max(1);
+        if workers <= 1 {
+            // Serial sweep in (lengthscale, variance) order so the 4
+            // noise levels per lengthscale share one cross-row / Gram
+            // build through the backend's persistent scratch.
+            let mut order: Vec<usize> = (0..tasks.len()).collect();
+            order.sort_by_key(|&t| hyp_group_key(tasks[t].hyp()));
+            let (mut row_key, mut gram_key) = ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
+            for &ti in &order {
+                nlls[ti] = sweep_task(
+                    &mut tasks[ti],
+                    &self.d2,
+                    y,
+                    n,
+                    &mut self.row_scratch,
+                    &mut self.kern_scratch,
+                    &mut row_key,
+                    &mut gram_key,
+                );
+            }
+        } else {
+            self.decide_stats.parallel_nll_sweeps += 1;
+            // Whole (lengthscale, variance) groups are the fan-out unit:
+            // tasks sharing a cross-row / Gram build stay on one lane,
+            // and every task writes its nll to a fixed slot — no
+            // reduction whose order could vary (see the deterministic-
+            // reduction contract in chol's module docs).
+            let mut items: Vec<(&mut SlotTask<'_>, &mut f64)> =
+                tasks.iter_mut().zip(nlls.iter_mut()).collect();
+            items.sort_by_key(|(t, _)| hyp_group_key(t.hyp()));
+            let mut groups: Vec<Vec<(&mut SlotTask<'_>, &mut f64)>> = Vec::new();
+            let mut last_key = None;
+            for item in items {
+                let key = hyp_group_key(item.0.hyp());
+                if last_key != Some(key) {
+                    groups.push(Vec::new());
+                    last_key = Some(key);
+                }
+                groups.last_mut().expect("group pushed above").push(item);
+            }
+            let d2 = &self.d2;
+            fan_out_groups(groups, workers, |lane| {
+                let (mut row, mut gram) = (Vec::new(), Vec::new());
+                let (mut row_key, mut gram_key) =
+                    ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
+                for (task, out) in lane {
+                    *out = sweep_task(
+                        task,
+                        d2,
+                        y,
+                        n,
+                        &mut row,
+                        &mut gram,
+                        &mut row_key,
+                        &mut gram_key,
+                    );
+                }
+            });
+        }
+        let mut swept = FactorCacheStats::default();
+        for t in &tasks {
+            swept.merge(t.stats());
+        }
+        drop(tasks);
+        self.factors.absorb_stats(swept);
+        Ok(map.into_iter().map(|t| nlls[t]).collect())
     }
 
     fn name(&self) -> &'static str {
@@ -511,17 +905,32 @@ pub fn backend_by_name(name: &str) -> Result<Box<dyn GpBackend>> {
 }
 
 /// Backend *factory* selection by name — the parallel experiment engine
-/// instantiates one backend per worker thread from this. Name validation
-/// is shared with [`backend_by_name`] through [`BackendKind::parse`];
-/// the xla arm additionally probes the artifacts so an obviously bad
-/// configuration fails at startup, while the expensive PJRT client
-/// creation + artifact compilation happens once per worker, inside the
-/// worker.
+/// instantiates one backend per worker thread from this. Equivalent to
+/// [`backend_factory_with_parallelism`] with a serial GP worker pool.
 pub fn backend_factory_by_name(name: &str) -> Result<BackendFactory> {
+    backend_factory_with_parallelism(name, 1)
+}
+
+/// Backend factory with an explicit GP worker-pool width (CLI
+/// `--gp-threads`): every native backend the factory produces has
+/// [`NativeBackend::set_parallelism`] applied, so each evaluation
+/// worker's backend fans its grid sweep and decide tiles across its own
+/// pool. The XLA backend has no tunable internal parallelism — the knob
+/// is ignored there. Name validation is shared with [`backend_by_name`]
+/// through [`BackendKind::parse`]; the xla arm additionally probes the
+/// artifacts so an obviously bad configuration fails at startup, while
+/// the expensive PJRT client creation + artifact compilation happens
+/// once per worker, inside the worker.
+pub fn backend_factory_with_parallelism(
+    name: &str,
+    gp_threads: usize,
+) -> Result<BackendFactory> {
     match BackendKind::parse(name)? {
-        BackendKind::Native => {
-            Ok(Box::new(|| -> Result<Box<dyn GpBackend>> { Ok(Box::new(NativeBackend::new())) }))
-        }
+        BackendKind::Native => Ok(Box::new(move || -> Result<Box<dyn GpBackend>> {
+            let mut b = NativeBackend::new();
+            b.set_parallelism(gp_threads);
+            Ok(Box::new(b))
+        })),
         BackendKind::Xla => {
             anyhow::ensure!(
                 XlaRuntime::artifacts_available(),
@@ -574,12 +983,15 @@ mod tests {
         let factory = backend_factory_by_name("tpu").unwrap_err().to_string();
         assert_eq!(direct, factory, "name validation diverged between the two paths");
         assert!(direct.contains("expected native|xla"));
+        let with_pool = backend_factory_with_parallelism("tpu", 4).unwrap_err().to_string();
+        assert_eq!(direct, with_pool);
     }
 
     #[test]
     fn default_impls_are_usable() {
         assert_eq!(NativeBackend::default().name(), "native");
-        assert_eq!(NativeGp::default().n_obs(), 0);
+        assert_eq!(NativeBackend::default().parallelism(), 1);
+        assert_eq!(crate::bayesopt::gp::NativeGp::default().n_obs(), 0);
     }
 
     #[test]
@@ -620,6 +1032,28 @@ mod tests {
         let factory = backend_factory_by_name("native").unwrap();
         assert_eq!(factory().unwrap().name(), "native");
         assert!(backend_factory_by_name("tpu").is_err());
+    }
+
+    #[test]
+    fn factory_applies_gp_parallelism() {
+        // The factory is the CLI's `--gp-threads` conduit: backends it
+        // produces must carry the pool width (observable through the
+        // parallel-sweep counter once a grid sweep runs).
+        let factory = backend_factory_with_parallelism("native", 4).unwrap();
+        let mut b = factory().unwrap();
+        let d = 2;
+        let x = [0.1, 0.2, 0.8, 0.9, 0.4, 0.6];
+        let y = [1.0, 2.0, 1.5];
+        let grid = crate::bayesopt::hyperparameter_grid();
+        b.nll_grid(&x, &y, 3, d, &grid).unwrap();
+        // The trait object hides NativeBackend; rebuild one directly to
+        // check the counter wiring end to end.
+        let mut nb = NativeBackend::new();
+        nb.set_parallelism(4);
+        nb.nll_grid(&x, &y, 3, d, &grid).unwrap();
+        assert_eq!(nb.parallelism(), 4);
+        assert_eq!(nb.decide_stats().parallel_nll_sweeps, 1);
+        assert_eq!(nb.decide_stats().nll_exact, 1);
     }
 
     #[test]
@@ -732,6 +1166,64 @@ mod tests {
             assert!((dec.mu[j] - mu).abs() <= 1e-12, "mu[{j}]");
             assert!((dec.var[j] - var).abs() <= 1e-12, "var[{j}]");
         }
+    }
+
+    #[test]
+    fn threaded_decide_tiles_match_serial_bits() {
+        // The tile fan-out across the worker pool must be bit-identical
+        // to the serial tile loop — and must actually engage.
+        let d = 3;
+        let n = 8;
+        let m = DECIDE_TILE * 3 + 11;
+        let (x, y, xc) = synth(n, m, d);
+        let cmask: Vec<bool> = (0..m).map(|i| i % 7 != 0).collect();
+        let hyp = [0.6, 1.0, 1e-3];
+        let mut serial = NativeBackend::new();
+        serial.set_lowrank_policy(LowRankPolicy::Off);
+        let mut par = NativeBackend::new();
+        par.set_lowrank_policy(LowRankPolicy::Off);
+        par.set_parallelism(4);
+        let ds = serial.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+        let dp = par.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+        assert_eq!(par.decide_stats().parallel_decide_fanouts, 1, "fan-out never engaged");
+        assert_eq!(serial.decide_stats().parallel_decide_fanouts, 0);
+        for j in 0..m {
+            assert_eq!(ds.mu[j].to_bits(), dp.mu[j].to_bits(), "mu[{j}]");
+            assert_eq!(ds.var[j].to_bits(), dp.var[j].to_bits(), "var[{j}]");
+            assert_eq!(ds.ei[j].to_bits(), dp.ei[j].to_bits(), "ei[{j}]");
+        }
+    }
+
+    #[test]
+    fn lowrank_nll_routing_follows_threshold() {
+        // Above the (lowered) observation threshold nll_grid must route
+        // to the Woodbury marginal; at or below it, stay exact.
+        let d = 3;
+        let n = 24;
+        let (x, y, _) = synth(n, 4, d);
+        let grid = [[0.6, 1.0, 1e-2], [1.2, 1.0, 1e-2]];
+        let mut routed = NativeBackend::new();
+        routed.set_lowrank_nll_threshold(16);
+        let a = routed.nll_grid(&x, &y, n, d, &grid).unwrap();
+        assert_eq!(routed.decide_stats().nll_lowrank, 1);
+        assert_eq!(routed.decide_stats().nll_exact, 0);
+        let mut exact = NativeBackend::new();
+        let b = exact.nll_grid(&x, &y, n, d, &grid).unwrap();
+        assert_eq!(exact.decide_stats().nll_exact, 1);
+        // n <= DEFAULT_MAX_INDUCING, so FPS selects every observation
+        // and the DTC marginal reduces to the exact one (Z = X).
+        for (g, (va, vb)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (va - vb).abs() <= 1e-4 * va.abs().max(vb.abs()).max(1.0),
+                "nll[{g}]: lowrank {va} vs exact {vb}"
+            );
+        }
+        // Off policy never routes, whatever the threshold.
+        let mut off = NativeBackend::new();
+        off.set_lowrank_nll_threshold(16);
+        off.set_lowrank_policy(LowRankPolicy::Off);
+        off.nll_grid(&x, &y, n, d, &grid).unwrap();
+        assert_eq!(off.decide_stats().nll_lowrank, 0);
     }
 
     #[test]

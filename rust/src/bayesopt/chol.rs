@@ -7,6 +7,26 @@
 //! every step costs O(H·n³); this module keeps one Cholesky factor per
 //! grid point alive across iterations and updates it in O(n²) instead.
 //!
+//! # Packed lower-triangular storage
+//!
+//! [`CholFactor`] stores `L` *packed*: row `i` holds exactly its `i + 1`
+//! meaningful entries, starting at offset `i·(i+1)/2` (so `L[i][j]` lives
+//! at `i·(i+1)/2 + j`, `j <= i`, and the whole factor occupies
+//! `n·(n+1)/2` slots with no strict-upper-triangle padding). Two
+//! consequences drive the layout:
+//!
+//! * a rank-1 **append is a pure push**: the new row `[zᵀ, √pivot]` goes
+//!   exactly at the end of the buffer — no O(n²) re-striding of the
+//!   existing rows (the dense row-major layout paid a full row shift per
+//!   append);
+//! * a **drop-first downdate stays contiguous**: dropping column 0 turns
+//!   old row `i`'s entries `1..=i` into new row `i-1`, which are already
+//!   adjacent in packed form — one `copy_within` per row, front to back.
+//!
+//! All triangular solves and the blocked TRSM in
+//! [`gp::predict_into`](super::gp::predict_into) index the packed form
+//! directly via [`packed_row_start`].
+//!
 //! # Update math
 //!
 //! **Rank-1 append.** Given `K = L Lᵀ` over `n` observations and a new
@@ -49,19 +69,88 @@
 //!   changes in any way other than the append/slide the search performs
 //!   (or when hyperparameters change shape), so a factor can never drift
 //!   across an unrelated data set.
+//!
+//! # Deterministic-reduction contract
+//!
+//! The 32 grid slots are independent extend+solve work, and
+//! `NativeBackend::nll_grid` sweeps them across a worker pool
+//! (`--gp-threads`). [`FactorCache::plan_grid`] supports that by handing
+//! out one disjoint [`SlotTask`] per distinct hyperparameter triple: a
+//! task owns exclusive access to its slot, builds its cross-row / Gram
+//! from the shared read-only distance matrix with the *same* arithmetic
+//! in the *same* order as the serial sweep, and writes its nll to a
+//! fixed output position. No accumulation ever crosses slots, so the
+//! swept results are **bit-identical for every worker count** — the
+//! contract `testkit::assert_parallel_parity` pins. Worker-local path
+//! counters are merged back with [`FactorCache::absorb_stats`] (a plain
+//! sum, also order-independent).
 
-use super::gp::{
-    cholesky_in_place, solve_lower_in_place, solve_upper_t_in_place, JITTER,
-};
+// `kernel::dot` is shared with the dense solves in `gp`, so packed and
+// dense arithmetic agree bit-for-bit by construction.
+use super::gp::JITTER;
+use super::kernel::dot;
 
 /// Relative pivot floor for the rank-1 append: pivots below
 /// `APPEND_PIVOT_RTOL * diag` trigger the cold-refactorization fallback.
 pub const APPEND_PIVOT_RTOL: f64 = 1e-12;
 
-/// A dense lower-triangular Cholesky factor with O(n²) rank-1 append and
-/// drop-first downdate. Storage is row-major `n x n` with the strict
-/// upper triangle zeroed — directly usable by the triangular solves in
-/// [`gp`](super::gp).
+/// Offset of packed lower-triangular row `i`: its `i + 1` entries occupy
+/// `packed_row_start(i) ..= packed_row_start(i) + i`.
+#[inline]
+pub fn packed_row_start(i: usize) -> usize {
+    i * (i + 1) / 2
+}
+
+/// Packed in-place Cholesky factorization (see the module docs for the
+/// layout). Column-by-column identical arithmetic to the dense
+/// [`gp::cholesky_in_place`](super::gp::cholesky_in_place) — only the
+/// addressing differs — so a packed cold fit produces the same bits as
+/// the dense scratch path it replaced. Returns false if not SPD.
+fn cholesky_packed_in_place(l: &mut [f64], n: usize) -> bool {
+    for j in 0..n {
+        // Split so row j (read+write) and rows i>j (write) borrow cleanly:
+        // packed row j ends exactly at packed_row_start(j + 1).
+        let (head, tail) = l.split_at_mut(packed_row_start(j + 1));
+        let row_j = &mut head[packed_row_start(j)..];
+        let d = row_j[j] - dot(&row_j[..j], &row_j[..j]);
+        if d <= 0.0 {
+            return false;
+        }
+        let d = d.sqrt();
+        row_j[j] = d;
+        let base = packed_row_start(j + 1);
+        for i in (j + 1)..n {
+            let off = packed_row_start(i) - base;
+            let row_i = &mut tail[off..off + i + 1];
+            row_i[j] = (row_i[j] - dot(&row_i[..j], &row_j[..j])) / d;
+        }
+    }
+    true
+}
+
+/// Solve `L z = b` (forward substitution) over a packed factor, in place.
+pub fn solve_lower_packed(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in 0..n {
+        let rs = packed_row_start(i);
+        let s = b[i] - dot(&l[rs..rs + i], &b[..i]);
+        b[i] = s / l[rs + i];
+    }
+}
+
+/// Solve `Lᵀ x = b` (backward substitution) over a packed factor, in place.
+pub fn solve_upper_t_packed(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= l[packed_row_start(k) + i] * b[k];
+        }
+        b[i] = s / l[packed_row_start(i) + i];
+    }
+}
+
+/// A packed lower-triangular Cholesky factor with O(n) rank-1 append
+/// (plus the O(n²) forward solve that computes the new row) and O(n²)
+/// drop-first downdate. See the module docs for the storage scheme.
 #[derive(Debug, Clone, Default)]
 pub struct CholFactor {
     n: usize,
@@ -78,9 +167,29 @@ impl CholFactor {
         self.n
     }
 
-    /// The factor as a row-major `n x n` lower-triangular slice.
-    pub fn l(&self) -> &[f64] {
-        &self.l[..self.n * self.n]
+    /// The factor in packed lower-triangular form (`n·(n+1)/2` entries;
+    /// row `i` starts at [`packed_row_start`]`(i)`).
+    pub fn packed(&self) -> &[f64] {
+        &self.l[..packed_row_start(self.n)]
+    }
+
+    /// Entry `L[i][j]` (requires `j <= i < n`).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j <= i && i < self.n);
+        self.l[packed_row_start(i) + j]
+    }
+
+    /// Expand into a dense row-major `n x n` lower triangle (strict upper
+    /// triangle zeroed) — the debug/test bridge to dense references.
+    pub fn to_dense(&self, out: &mut Vec<f64>) {
+        let n = self.n;
+        out.clear();
+        out.resize(n * n, 0.0);
+        for i in 0..n {
+            let rs = packed_row_start(i);
+            out[i * n..i * n + i + 1].copy_from_slice(&self.l[rs..rs + i + 1]);
+        }
     }
 
     /// Cold path: factorize `gram + diag_add * I` from scratch (the
@@ -89,20 +198,23 @@ impl CholFactor {
     pub fn refactorize(&mut self, gram: &[f64], n: usize, diag_add: f64) -> bool {
         assert_eq!(gram.len(), n * n);
         self.l.clear();
-        self.l.extend_from_slice(gram);
+        self.l.reserve(packed_row_start(n + 1));
         for i in 0..n {
-            self.l[i * n + i] += diag_add;
+            self.l.extend_from_slice(&gram[i * n..i * n + i]);
+            self.l.push(gram[i * n + i] + diag_add);
         }
         self.n = n;
-        cholesky_in_place(&mut self.l, n)
+        cholesky_packed_in_place(&mut self.l, n)
     }
 
     /// Rank-1 append: extend the factor by one observation with noiseless
     /// cross-kernel `row` (length `n`) and diagonal `diag` (kernel
-    /// self-covariance plus noise and jitter). O(n²). Returns false —
-    /// leaving the factor untouched — when the pivot drops below
-    /// [`APPEND_PIVOT_RTOL`]` * diag` (loss of positive definiteness);
-    /// the caller must then fall back to [`Self::refactorize`].
+    /// self-covariance plus noise and jitter). The forward solve for the
+    /// new row is O(n²); placing it is a pure push (the packed layout's
+    /// point). Returns false — leaving the factor untouched — when the
+    /// pivot drops below [`APPEND_PIVOT_RTOL`]` * diag` (loss of positive
+    /// definiteness); the caller must then fall back to
+    /// [`Self::refactorize`].
     pub fn append(&mut self, row: &[f64], diag: f64) -> bool {
         let n = self.n;
         assert_eq!(row.len(), n);
@@ -119,35 +231,23 @@ impl CholFactor {
         let mut z = std::mem::take(&mut self.scratch);
         z.clear();
         z.extend_from_slice(row);
-        solve_lower_in_place(&self.l, n, &mut z);
+        solve_lower_packed(&self.l, n, &mut z);
         let pivot = diag - z.iter().map(|v| v * v).sum::<f64>();
         if pivot <= APPEND_PIVOT_RTOL * diag {
             self.scratch = z;
             return false;
         }
-        // Grow the storage from stride n to stride n+1 in place, moving
-        // rows back to front (row i keeps its i+1 meaningful entries).
-        let m = n + 1;
-        self.l.resize(m * m, 0.0);
-        for i in (1..n).rev() {
-            self.l.copy_within(i * n..i * n + i + 1, i * m);
-        }
-        // Zero the (stale) strict upper triangle of every moved row.
-        for i in 0..n {
-            for j in (i + 1)..m {
-                self.l[i * m + j] = 0.0;
-            }
-        }
-        self.l[n * m..n * m + n].copy_from_slice(&z);
-        self.l[n * m + n] = pivot.sqrt();
-        self.n = m;
+        // The new packed row [z, sqrt(pivot)] lands exactly at the end.
+        self.l.extend_from_slice(&z);
+        self.l.push(pivot.sqrt());
+        self.n = n + 1;
         self.scratch = z;
         true
     }
 
     /// Drop the first (oldest) observation: the trailing block becomes
     /// `cholupdate(L22, l21)`, a rank-1 Givens update that always
-    /// succeeds. O(n²).
+    /// succeeds. O(n²); the row shifts are contiguous in packed form.
     pub fn drop_first(&mut self) {
         let n = self.n;
         if n <= 1 {
@@ -156,22 +256,19 @@ impl CholFactor {
             return;
         }
         let m = n - 1;
-        // w = first column below the diagonal; sub = trailing factor block.
+        // w = first column below the diagonal (each row's entry 0).
         let mut w = std::mem::take(&mut self.scratch);
         w.clear();
         for i in 1..n {
-            w.push(self.l[i * n]);
+            w.push(self.l[packed_row_start(i)]);
         }
-        for i in 0..m {
-            self.l.copy_within((i + 1) * n + 1..(i + 1) * n + 1 + (i + 1), i * m);
+        // Old row i entries 1..=i become new row i-1 (already adjacent).
+        for i in 1..n {
+            let rs = packed_row_start(i);
+            self.l.copy_within(rs + 1..rs + i + 1, packed_row_start(i - 1));
         }
-        self.l.truncate(m * m);
-        for i in 0..m {
-            for j in (i + 1)..m {
-                self.l[i * m + j] = 0.0;
-            }
-        }
-        chol_rank1_update(&mut self.l, m, &mut w);
+        self.l.truncate(packed_row_start(m));
+        chol_rank1_update_packed(&mut self.l, m, &mut w);
         self.n = m;
         self.scratch = w;
     }
@@ -179,8 +276,14 @@ impl CholFactor {
     /// `sum_i ln L[i,i]` — half the log-determinant of the factored
     /// matrix, the same convention `NativeGp::nll` folds in.
     pub fn sum_log_diag(&self) -> f64 {
-        let n = self.n;
-        (0..n).map(|i| self.l[i * n + i].ln()).sum()
+        (0..self.n).map(|i| self.l[packed_row_start(i) + i].ln()).sum()
+    }
+
+    /// Solve `L z = b` in place against this factor (the forward half of
+    /// a posterior-variance computation).
+    pub fn forward_solve(&self, b: &mut [f64]) {
+        assert_eq!(b.len(), self.n);
+        solve_lower_packed(&self.l, self.n, b);
     }
 
     /// alpha = (L Lᵀ)⁻¹ y via forward + backward substitution.
@@ -188,24 +291,28 @@ impl CholFactor {
         assert_eq!(y.len(), self.n);
         alpha.clear();
         alpha.extend_from_slice(y);
-        solve_lower_in_place(&self.l, self.n, alpha);
-        solve_upper_t_in_place(&self.l, self.n, alpha);
+        solve_lower_packed(&self.l, self.n, alpha);
+        solve_upper_t_packed(&self.l, self.n, alpha);
     }
 }
 
-/// LINPACK-style rank-1 Cholesky *update*: on return `L L^T == old L L^T
-/// + w w^T`. Always succeeds for finite inputs with a positive diagonal.
-fn chol_rank1_update(l: &mut [f64], n: usize, w: &mut [f64]) {
+/// LINPACK-style rank-1 Cholesky *update* over the packed layout: on
+/// return `L L^T == old L L^T + w w^T`. Always succeeds for finite
+/// inputs with a positive diagonal. Same rotation order as the dense
+/// predecessor, so the downdate's bits are unchanged by the layout.
+fn chol_rank1_update_packed(l: &mut [f64], n: usize, w: &mut [f64]) {
     debug_assert!(w.len() >= n);
     for k in 0..n {
-        let lkk = l[k * n + k];
+        let dk = packed_row_start(k) + k;
+        let lkk = l[dk];
         let r = lkk.hypot(w[k]);
         let c = r / lkk;
         let s = w[k] / lkk;
-        l[k * n + k] = r;
+        l[dk] = r;
         for i in (k + 1)..n {
-            l[i * n + k] = (l[i * n + k] + s * w[i]) / c;
-            w[i] = c * w[i] - s * l[i * n + k];
+            let idx = packed_row_start(i) + k;
+            l[idx] = (l[idx] + s * w[i]) / c;
+            w[i] = c * w[i] - s * l[idx];
         }
     }
 }
@@ -250,6 +357,19 @@ pub struct FactorCacheStats {
     pub fallbacks: u64,
 }
 
+impl FactorCacheStats {
+    /// Fold another counter set into this one (worker-local counters of
+    /// the parallel sweep merge back through here — a plain sum, so the
+    /// totals are independent of worker count and completion order).
+    pub fn merge(&mut self, o: FactorCacheStats) {
+        self.cold_fits += o.cold_fits;
+        self.appends += o.appends;
+        self.slides += o.slides;
+        self.reuses += o.reuses;
+        self.fallbacks += o.fallbacks;
+    }
+}
+
 #[derive(Debug, Clone)]
 struct Slot {
     hyp: [f64; 3],
@@ -266,10 +386,12 @@ struct Slot {
 /// The owner reports how the observation set changed via
 /// [`Self::note_delta`]; [`Self::plan`] then tells it, per
 /// hyperparameter triple, whether the cached factor can be reused,
-/// extended by a rank-1 append / slide, or must be refactorized cold.
-/// Slots are keyed by exact hyperparameter bits (the selection grid is
-/// deterministic), and invalidated whenever the window changes shape or
-/// the data is replaced wholesale.
+/// extended by a rank-1 append / slide, or must be refactorized cold —
+/// or [`Self::plan_grid`] does so for a whole grid at once, handing out
+/// disjoint [`SlotTask`]s for the worker-pool sweep. Slots are keyed by
+/// exact hyperparameter bits (the selection grid is deterministic), and
+/// invalidated whenever the window changes shape or the data is replaced
+/// wholesale.
 #[derive(Debug, Clone, Default)]
 pub struct FactorCache {
     slots: Vec<Slot>,
@@ -295,17 +417,13 @@ impl FactorCache {
         }
     }
 
-    /// Slot index + required action for `hyp` over `n` observations.
-    /// Creates the slot on first sight of a hyperparameter triple.
-    pub fn plan(&mut self, hyp: [f64; 3], n: usize) -> (usize, FitPlan) {
+    /// Slot index + required action for `hyp` over `n` observations,
+    /// without the capacity valve (callers that batch-plan run the valve
+    /// once up front so indices stay stable across the batch).
+    fn plan_slot(&mut self, hyp: [f64; 3], n: usize) -> (usize, FitPlan) {
         let idx = match self.slots.iter().position(|s| s.hyp == hyp) {
             Some(i) => i,
             None => {
-                // Safety valve against unbounded growth under adversarial
-                // (non-grid) usage; the selection grid has 32 entries.
-                if self.slots.len() >= 128 {
-                    self.slots.clear();
-                }
                 self.slots.push(Slot {
                     hyp,
                     factor: CholFactor::new(),
@@ -331,6 +449,89 @@ impl FactorCache {
         (idx, plan)
     }
 
+    /// Slot index + required action for `hyp` over `n` observations.
+    /// Creates the slot on first sight of a hyperparameter triple.
+    pub fn plan(&mut self, hyp: [f64; 3], n: usize) -> (usize, FitPlan) {
+        // Safety valve against unbounded growth under adversarial
+        // (non-grid) usage; the selection grid has 32 entries.
+        if self.slots.len() >= 128 && !self.slots.iter().any(|s| s.hyp == hyp) {
+            self.slots.clear();
+        }
+        self.plan_slot(hyp, n)
+    }
+
+    /// Plan a whole hyperparameter grid at once: one disjoint
+    /// [`SlotTask`] per *distinct* triple (duplicate grid entries share
+    /// the first occurrence's task), plus a map from grid index to task
+    /// index. The tasks borrow non-overlapping slots, so a worker pool
+    /// can update them concurrently; afterwards fold each task's
+    /// [`SlotTask::stats`] back via [`Self::absorb_stats`].
+    pub fn plan_grid<'a>(
+        &'a mut self,
+        grid: &[[f64; 3]],
+        n: usize,
+    ) -> (Vec<SlotTask<'a>>, Vec<usize>) {
+        // Run the capacity valve once up front: plan() clearing slots
+        // mid-batch would invalidate indices planned earlier in the loop.
+        // Like plan(), only *distinct unseen* triples count toward the
+        // cap, so a backend alternating between a few known grids keeps
+        // its warm factors instead of clearing on every call.
+        let mut unseen: Vec<&[f64; 3]> = Vec::new();
+        for h in grid {
+            if !self.slots.iter().any(|s| s.hyp == *h) && !unseen.contains(&h) {
+                unseen.push(h);
+            }
+        }
+        if !unseen.is_empty() && self.slots.len() + unseen.len() >= 128 {
+            self.slots.clear();
+        }
+        let mut map = Vec::with_capacity(grid.len());
+        let mut planned: Vec<(usize, FitPlan)> = Vec::new();
+        for hyp in grid {
+            if let Some(t) =
+                planned.iter().position(|&(si, _)| self.slots[si].hyp == *hyp)
+            {
+                map.push(t);
+                continue;
+            }
+            let (idx, plan) = self.plan_slot(*hyp, n);
+            map.push(planned.len());
+            planned.push((idx, plan));
+        }
+        let gen = self.gen;
+        let mut refs: Vec<Option<&mut Slot>> = self.slots.iter_mut().map(Some).collect();
+        let tasks = planned
+            .into_iter()
+            .map(|(idx, plan)| SlotTask {
+                slot: refs[idx].take().expect("grid plan mapped two triples to one slot"),
+                plan,
+                gen,
+                stats: FactorCacheStats::default(),
+            })
+            .collect();
+        (tasks, map)
+    }
+
+    /// A [`SlotTask`] view of one already-planned slot — the single-slot
+    /// companion of [`Self::plan_grid`] (`NativeBackend::decide` plans
+    /// one triple via [`Self::plan`], then updates it through the same
+    /// task body the grid sweep uses, so the two paths cannot drift).
+    /// Fold the task's stats back via [`Self::absorb_stats`].
+    pub fn task(&mut self, idx: usize, plan: FitPlan) -> SlotTask<'_> {
+        SlotTask {
+            gen: self.gen,
+            slot: &mut self.slots[idx],
+            plan,
+            stats: FactorCacheStats::default(),
+        }
+    }
+
+    /// Merge worker-local counters back into the cache (see
+    /// [`FactorCacheStats::merge`]).
+    pub fn absorb_stats(&mut self, s: FactorCacheStats) {
+        self.stats.merge(s);
+    }
+
     /// Record that a planned [`FitPlan::Reuse`] was actually taken (the
     /// owner may override a plan — e.g. the scratch baseline forces
     /// cold — so the counter is driven by the action, not the plan).
@@ -343,36 +544,15 @@ impl FactorCache {
     /// drop-first downdate runs first). Returns false on loss of positive
     /// definiteness; the slot is then invalid until [`Self::cold`].
     pub fn extend(&mut self, idx: usize, row: &[f64], slide: bool) -> bool {
-        let s = &mut self.slots[idx];
-        let diag = s.hyp[1] + s.hyp[2] + JITTER;
-        if slide {
-            s.factor.drop_first();
-        }
-        if s.factor.append(row, diag) {
-            s.gen = self.gen;
-            s.valid = true;
-            if slide {
-                self.stats.slides += 1;
-            } else {
-                self.stats.appends += 1;
-            }
-            true
-        } else {
-            s.valid = false;
-            self.stats.fallbacks += 1;
-            false
-        }
+        let gen = self.gen;
+        extend_slot(&mut self.slots[idx], gen, &mut self.stats, row, slide)
     }
 
     /// Cold refactorization of slot `idx` from the noiseless `gram`
     /// (noise + jitter added internally). Returns false if not SPD.
     pub fn cold(&mut self, idx: usize, gram: &[f64], n: usize) -> bool {
-        let s = &mut self.slots[idx];
-        let ok = s.factor.refactorize(gram, n, s.hyp[2] + JITTER);
-        s.valid = ok;
-        s.gen = self.gen;
-        self.stats.cold_fits += 1;
-        ok
+        let gen = self.gen;
+        cold_slot(&mut self.slots[idx], gen, &mut self.stats, gram, n)
     }
 
     /// The (valid) factor of slot `idx`.
@@ -385,13 +565,119 @@ impl FactorCache {
     /// (recomputes the slot's alpha; the fold order matches
     /// `NativeGp::nll` exactly).
     pub fn nll(&mut self, idx: usize, y: &[f64]) -> f64 {
-        let s = &mut self.slots[idx];
-        debug_assert!(s.valid);
-        let n = y.len();
-        debug_assert_eq!(n, s.factor.n());
-        s.factor.solve_into(y, &mut s.alpha);
-        let quad: f64 = y.iter().zip(&s.alpha).map(|(a, b)| a * b).sum::<f64>() * 0.5;
-        quad + s.factor.sum_log_diag() + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+        slot_nll(&mut self.slots[idx], y)
+    }
+}
+
+/// Shared slot-update bodies: [`FactorCache`] (serial, by index) and
+/// [`SlotTask`] (detached, by exclusive borrow) both run exactly this
+/// code, so the two paths cannot drift apart.
+fn extend_slot(
+    s: &mut Slot,
+    gen: u64,
+    stats: &mut FactorCacheStats,
+    row: &[f64],
+    slide: bool,
+) -> bool {
+    let diag = s.hyp[1] + s.hyp[2] + JITTER;
+    if slide {
+        s.factor.drop_first();
+    }
+    if s.factor.append(row, diag) {
+        s.gen = gen;
+        s.valid = true;
+        if slide {
+            stats.slides += 1;
+        } else {
+            stats.appends += 1;
+        }
+        true
+    } else {
+        s.valid = false;
+        stats.fallbacks += 1;
+        false
+    }
+}
+
+fn cold_slot(
+    s: &mut Slot,
+    gen: u64,
+    stats: &mut FactorCacheStats,
+    gram: &[f64],
+    n: usize,
+) -> bool {
+    let ok = s.factor.refactorize(gram, n, s.hyp[2] + JITTER);
+    s.valid = ok;
+    s.gen = gen;
+    stats.cold_fits += 1;
+    ok
+}
+
+fn slot_nll(s: &mut Slot, y: &[f64]) -> f64 {
+    debug_assert!(s.valid);
+    let n = y.len();
+    debug_assert_eq!(n, s.factor.n());
+    s.factor.solve_into(y, &mut s.alpha);
+    let quad: f64 = y.iter().zip(&s.alpha).map(|(a, b)| a * b).sum::<f64>() * 0.5;
+    quad + s.factor.sum_log_diag() + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+}
+
+/// One planned unit of the grid-parallel nll sweep: exclusive access to
+/// a single cache slot plus the action required to bring it up to date
+/// (see the module docs' deterministic-reduction contract). Obtained
+/// from [`FactorCache::plan_grid`]; safe to move to a worker thread.
+/// Path counters accumulate locally in [`Self::stats`] and are merged
+/// back through [`FactorCache::absorb_stats`] after the sweep.
+pub struct SlotTask<'a> {
+    slot: &'a mut Slot,
+    plan: FitPlan,
+    gen: u64,
+    stats: FactorCacheStats,
+}
+
+impl SlotTask<'_> {
+    /// The slot's hyperparameter triple (lengthscale, variance, noise).
+    pub fn hyp(&self) -> [f64; 3] {
+        self.slot.hyp
+    }
+
+    /// The planned action for this slot.
+    pub fn plan(&self) -> FitPlan {
+        self.plan
+    }
+
+    /// Override the plan to a cold refactorization (the scratch-baseline
+    /// switch of `NativeBackend::set_incremental(false)`).
+    pub fn force_cold(&mut self) {
+        self.plan = FitPlan::Cold;
+    }
+
+    /// Record a taken [`FitPlan::Reuse`].
+    pub fn note_reuse(&mut self) {
+        self.stats.reuses += 1;
+    }
+
+    /// Rank-1 extend with the noiseless cross-kernel `row` (drop-first
+    /// downdate first when `slide`). Returns false on loss of positive
+    /// definiteness; the slot is then invalid until [`Self::cold`].
+    pub fn extend(&mut self, row: &[f64], slide: bool) -> bool {
+        extend_slot(self.slot, self.gen, &mut self.stats, row, slide)
+    }
+
+    /// Cold refactorization from the noiseless `gram` (noise + jitter
+    /// added internally). Returns false if not SPD.
+    pub fn cold(&mut self, gram: &[f64], n: usize) -> bool {
+        cold_slot(self.slot, self.gen, &mut self.stats, gram, n)
+    }
+
+    /// Negative log marginal likelihood of `y` under this slot's factor.
+    pub fn nll(&mut self, y: &[f64]) -> f64 {
+        slot_nll(self.slot, y)
+    }
+
+    /// The worker-local path counters accumulated by this task.
+    pub fn stats(&self) -> FactorCacheStats {
+        self.stats
     }
 }
 
@@ -420,7 +706,7 @@ mod tests {
         let n = a.n();
         for i in 0..n {
             for j in 0..=i {
-                let (x, y) = (a.l()[i * n + j], b.l()[i * n + j]);
+                let (x, y) = (a.at(i, j), b.at(i, j));
                 let scale = x.abs().max(y.abs()).max(1.0);
                 assert!((x - y).abs() <= tol * scale, "L[{i},{j}]: {x} vs {y}");
             }
@@ -478,10 +764,10 @@ mod tests {
         // the bordered matrix indefinite.
         let mut f = CholFactor::new();
         assert!(f.refactorize(&[1.0, 0.0, 0.0, 1.0], 2, 0.0));
-        let before = f.l().to_vec();
+        let before = f.packed().to_vec();
         assert!(!f.append(&[10.0, 0.0], 1.0), "indefinite append must fail");
         assert_eq!(f.n(), 2, "failed append must leave the factor untouched");
-        assert_eq!(f.l(), &before[..]);
+        assert_eq!(f.packed(), &before[..]);
         // ... and the factor is still extendable with a sane row.
         assert!(f.append(&[0.1, 0.1], 1.0));
         assert_eq!(f.n(), 3);
@@ -492,8 +778,32 @@ mod tests {
         let mut f = CholFactor::new();
         assert!(f.append(&[], 4.0));
         assert_eq!(f.n(), 1);
-        assert!((f.l()[0] - 2.0).abs() < 1e-15);
+        assert!((f.packed()[0] - 2.0).abs() < 1e-15);
         assert!(!CholFactor::new().append(&[], 0.0));
+    }
+
+    #[test]
+    fn packed_layout_round_trips_through_dense() {
+        // at(), packed() and to_dense() describe the same factor: the
+        // dense expansion carries exactly the packed entries below the
+        // diagonal and zeros above it.
+        let d = 2;
+        let n = 7;
+        let x = points(n, d);
+        let mut f = CholFactor::new();
+        assert!(f.refactorize(&gram(&x, n, d, 0.6, 1.0), n, 1e-3));
+        assert_eq!(f.packed().len(), n * (n + 1) / 2);
+        let mut dense = Vec::new();
+        f.to_dense(&mut dense);
+        for i in 0..n {
+            for j in 0..n {
+                if j <= i {
+                    assert_eq!(dense[i * n + j].to_bits(), f.at(i, j).to_bits(), "({i},{j})");
+                } else {
+                    assert_eq!(dense[i * n + j], 0.0, "upper triangle ({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]
@@ -501,22 +811,20 @@ mod tests {
         // L = chol(A); after update with w, L L^T == A + w w^T.
         let n = 4;
         let x = points(n, 2);
-        let mut a = gram(&x, n, 2, 0.7, 1.0);
-        for i in 0..n {
-            a[i * n + i] += 0.1;
-        }
-        let orig = a.clone();
-        assert!(cholesky_in_place(&mut a, n));
+        let a = gram(&x, n, 2, 0.7, 1.0);
+        let mut f = CholFactor::new();
+        assert!(f.refactorize(&a, n, 0.1));
         let mut w = vec![0.3, -0.2, 0.5, 0.1];
         let w0 = w.clone();
-        chol_rank1_update(&mut a, n, &mut w);
+        chol_rank1_update_packed(&mut f.l, n, &mut w);
         for i in 0..n {
             for j in 0..n {
                 let mut s = 0.0;
-                for k in 0..n {
-                    s += a[i * n + k] * a[j * n + k];
+                for k in 0..=i.min(j) {
+                    s += f.at(i, k) * f.at(j, k);
                 }
-                let want = orig[i * n + j] + w0[i] * w0[j];
+                let diag = if i == j { 0.1 } else { 0.0 };
+                let want = a[i * n + j] + diag + w0[i] * w0[j];
                 assert!((s - want).abs() < 1e-12, "({i},{j}): {s} vs {want}");
             }
         }
@@ -558,5 +866,32 @@ mod tests {
         assert_eq!(c.stats().fallbacks, 1);
         // The slot is invalid until a cold fit rebuilds it.
         assert_eq!(c.plan(hyp, 3).1, FitPlan::Cold);
+    }
+
+    #[test]
+    fn plan_grid_hands_out_disjoint_tasks_and_maps_duplicates() {
+        let d = 2;
+        let n = 3;
+        let x = points(n, d);
+        let grid = [[0.5, 1.0, 1e-3], [0.5, 1.0, 1e-2], [0.5, 1.0, 1e-3]];
+        let mut c = FactorCache::new();
+        c.note_delta(ObsDelta::Replaced);
+        let (mut tasks, map) = c.plan_grid(&grid, n);
+        assert_eq!(tasks.len(), 2, "duplicate triples must share a task");
+        assert_eq!(map, vec![0, 1, 0]);
+        let mut merged = FactorCacheStats::default();
+        for t in tasks.iter_mut() {
+            assert_eq!(t.plan(), FitPlan::Cold);
+            let g = gram(&x, n, d, t.hyp()[0], t.hyp()[1]);
+            assert!(t.cold(&g, n));
+            assert!(t.nll(&[0.1, -0.2, 0.3]).is_finite());
+            merged.merge(t.stats());
+        }
+        drop(tasks);
+        c.absorb_stats(merged);
+        assert_eq!(c.stats().cold_fits, 2);
+        // Both slots are now current: the next batch plans pure reuse.
+        let (tasks, _) = c.plan_grid(&grid, n);
+        assert!(tasks.iter().all(|t| t.plan() == FitPlan::Reuse));
     }
 }

@@ -24,17 +24,11 @@ pub const VAR_FLOOR: f64 = 0.0;
 /// switches to the exact certain-improvement formula.
 pub const EI_SIGMA_FLOOR: f64 = 1e-12;
 
-/// Slice dot product written so LLVM auto-vectorizes it (the hot inner
-/// kernel of the factorization and the solves — see EXPERIMENTS.md §Perf).
-#[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
-    }
-    acc
-}
+// The shared slice dot product (the hot inner kernel of the
+// factorization and the solves — see EXPERIMENTS.md §Perf) lives in
+// `kernel` so the dense path here and the packed path in `chol` run the
+// exact same accumulation order.
+use super::kernel::dot;
 
 /// Dense lower-triangular Cholesky factorization in place.
 /// Returns false if the matrix is not (numerically) SPD.
@@ -126,10 +120,12 @@ pub fn expected_improvement(mu: f64, var: f64, best: f64) -> f64 {
 /// * **cold fits** ([`fit`](Self::fit) / [`fit_from_sqdist`](Self::fit_from_sqdist)
 ///   / [`fit_from_kernel`](Self::fit_from_kernel)) factorize the full
 ///   Gram from scratch, O(n³);
-/// * **extend paths** ([`extend`](Self::extend) / [`slide`](Self::slide)
-///   / [`fit_from_factor`](Self::fit_from_factor)) update the existing
-///   [`CholFactor`] by one observation in O(n²) — the per-BO-iteration
-///   hot path (see [`super::chol`] for the math and fallback rules).
+/// * **extend paths** ([`extend`](Self::extend) / [`slide`](Self::slide))
+///   update the existing [`CholFactor`] by one observation in O(n²) —
+///   the per-BO-iteration hot path (see [`super::chol`] for the math
+///   and fallback rules). The backend's decide path goes further and
+///   never owns a GP at all: it borrows its cached factor straight into
+///   the free [`predict_into`].
 ///
 /// Scratch buffers are reused across refits (`fit` clears and refills),
 /// which keeps the per-search-iteration hot path allocation-free after
@@ -216,30 +212,6 @@ impl NativeGp {
         true
     }
 
-    /// Adopt an externally maintained factor (the backend's
-    /// [`FactorCache`](super::chol::FactorCache) hot path): copies `L`
-    /// and recomputes alpha — O(n²), no factorization.
-    pub fn fit_from_factor(
-        &mut self,
-        x: &[f64],
-        y: &[f64],
-        n: usize,
-        d: usize,
-        factor: &CholFactor,
-        hyp: [f64; 3],
-    ) {
-        assert_eq!(x.len(), n * d);
-        assert_eq!(y.len(), n);
-        assert_eq!(factor.n(), n);
-        self.n = n;
-        self.d = d;
-        self.hyp = hyp;
-        self.x.clear();
-        self.x.extend_from_slice(x);
-        self.factor.clone_from(factor);
-        self.refresh_alpha(y);
-    }
-
     /// Rank-1 extend path: append one observation (features `x_new`,
     /// full target vector `y` of length `n+1`) to the fitted posterior
     /// in O(n²) instead of refitting. Returns false — leaving the fit
@@ -297,7 +269,8 @@ impl NativeGp {
         }
         let mu: f64 = self.ks_row.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
         // v = L^-1 ks; var = k(x,x) - |v|^2
-        solve_lower_in_place(self.factor.l(), n, &mut self.ks_row);
+        debug_assert_eq!(self.ks_row.len(), n);
+        self.factor.forward_solve(&mut self.ks_row);
         let v2: f64 = self.ks_row.iter().map(|v| v * v).sum();
         (mu, (var - v2).max(VAR_FLOOR))
     }
@@ -307,9 +280,13 @@ impl NativeGp {
     /// Builds the full `n x m` cross-kernel block once and runs a single
     /// blocked forward-solve over every candidate column instead of `m`
     /// independent [`predict`](Self::predict) calls with per-call
-    /// `ks_row` refills — the batched §Perf hot path behind
-    /// `NativeBackend::decide`. Per column the accumulation order matches
-    /// `predict` exactly, so the two paths agree bit-for-bit.
+    /// `ks_row` refills — the batched §Perf hot path. The heavy lifting
+    /// lives in the free [`predict_into`], which takes the factor *by
+    /// reference*; `NativeBackend::decide` calls it directly against the
+    /// cached factor (and fans tiles of it across worker threads)
+    /// without ever cloning the factor into a GP. Per column the
+    /// accumulation order matches `predict` exactly, so every path
+    /// agrees bit-for-bit.
     ///
     /// `mask`: when given, only columns with `mask[j] == true` are
     /// computed; masked columns skip all kernel and solve work and
@@ -324,8 +301,7 @@ impl NativeGp {
         mu_out: &mut Vec<f64>,
         var_out: &mut Vec<f64>,
     ) {
-        let (ls, var, _) = (self.hyp[0], self.hyp[1], self.hyp[2]);
-        let n = self.n;
+        let var = self.hyp[1];
         let d = self.d;
         assert_eq!(xc.len(), m * d);
         if let Some(ma) = mask {
@@ -335,107 +311,67 @@ impl NativeGp {
         mu_out.resize(m, 0.0);
         var_out.clear();
         var_out.resize(m, var);
-        if n == 0 {
+        if self.n == 0 {
             return;
         }
-        let active: Vec<usize> = match mask {
-            None => (0..m).collect(),
-            Some(ma) => (0..m).filter(|&j| ma[j]).collect(),
-        };
-        let w = active.len();
-        if w == 0 {
-            return;
-        }
-
-        // Row-block width of the blocked TRSM below.
-        const TB: usize = 32;
         let mut ks = std::mem::take(&mut self.ks_mat);
         let mut acc = std::mem::take(&mut self.col_acc);
-        ks.clear();
-        ks.resize(n * w, 0.0);
-        acc.clear();
-        acc.resize(TB.min(n) * w, 0.0);
-
-        // Cross-kernel block: row i = k(x_i, active candidates).
-        for i in 0..n {
-            let xi = &self.x[i * d..(i + 1) * d];
-            let row = &mut ks[i * w..(i + 1) * w];
-            for (c, &j) in active.iter().enumerate() {
-                row[c] = matern52(&xc[j * d..(j + 1) * d], xi, ls, var);
+        match mask {
+            None => {
+                predict_into(
+                    &self.factor,
+                    &self.alpha,
+                    &self.x,
+                    self.n,
+                    d,
+                    self.hyp,
+                    xc,
+                    m,
+                    mu_out,
+                    var_out,
+                    &mut ks,
+                    &mut acc,
+                );
             }
-        }
-
-        // mu = Ks^T alpha, accumulated in ascending observation order
-        // (the same order `predict` sums its dot product in).
-        for i in 0..n {
-            let a = self.alpha[i];
-            let row = &ks[i * w..(i + 1) * w];
-            for (c, &j) in active.iter().enumerate() {
-                mu_out[j] += row[c] * a;
-            }
-        }
-
-        // Blocked TRSM: Z = L^-1 Ks, all columns at once, rows in blocks
-        // of TB. Row i: z_i = (ks_i - sum_{k<i} L[i,k] z_k) / L[i,i].
-        // For each block the contribution of all *prior* blocks is
-        // accumulated first (streaming each finished z_k row across the
-        // whole block — the cache-friendly GEMM-shaped part), then the
-        // small triangular block is solved in place. Per (row, column)
-        // the inner sum still visits k in ascending order, so the
-        // arithmetic is bit-identical to the per-column
-        // `solve_lower_in_place` that `predict` performs.
-        let lmat = self.factor.l();
-        for rb in (0..n).step_by(TB) {
-            let re = (rb + TB).min(n);
-            for v in acc[..(re - rb) * w].iter_mut() {
-                *v = 0.0;
-            }
-            let (done, rest) = ks.split_at_mut(rb * w);
-            // GEMM part: acc[i - rb] += L[i, k] z_k for all k < rb.
-            for k in 0..rb {
-                let zk = &done[k * w..(k + 1) * w];
-                for i in rb..re {
-                    let l = lmat[i * n + k];
-                    let a = &mut acc[(i - rb) * w..(i - rb + 1) * w];
-                    for c in 0..w {
-                        a[c] += l * zk[c];
-                    }
+            Some(ma) => {
+                // Compact the active candidates, predict the dense
+                // block, scatter back. The per-column arithmetic sees
+                // exactly the active rows in their original order, so
+                // results match the unmasked path bit-for-bit; masked
+                // columns keep the prior `(0, var)` defaults.
+                let active: Vec<usize> = (0..m).filter(|&j| ma[j]).collect();
+                let w = active.len();
+                if w == 0 {
+                    self.ks_mat = ks;
+                    self.col_acc = acc;
+                    return;
                 }
-            }
-            // Triangular part: rows rb..re against freshly solved rows.
-            for i in rb..re {
-                let off = (i - rb) * w;
-                let (prior, cur) = rest.split_at_mut(off);
-                let row_i = &mut cur[..w];
-                let a = &mut acc[off..off + w];
-                for k in rb..i {
-                    let l = lmat[i * n + k];
-                    let zk = &prior[(k - rb) * w..(k - rb + 1) * w];
-                    for c in 0..w {
-                        a[c] += l * zk[c];
-                    }
+                let mut xa = Vec::with_capacity(w * d);
+                for &j in &active {
+                    xa.extend_from_slice(&xc[j * d..(j + 1) * d]);
                 }
-                let diag = lmat[i * n + i];
-                for c in 0..w {
-                    row_i[c] = (row_i[c] - a[c]) / diag;
+                let mut mu_a = vec![0.0; w];
+                let mut var_a = vec![0.0; w];
+                predict_into(
+                    &self.factor,
+                    &self.alpha,
+                    &self.x,
+                    self.n,
+                    d,
+                    self.hyp,
+                    &xa,
+                    w,
+                    &mut mu_a,
+                    &mut var_a,
+                    &mut ks,
+                    &mut acc,
+                );
+                for (c, &j) in active.iter().enumerate() {
+                    mu_out[j] = mu_a[c];
+                    var_out[j] = var_a[c];
                 }
             }
         }
-
-        // var = k(x,x) - |z|^2 per column, ascending observation order.
-        for v in acc[..w].iter_mut() {
-            *v = 0.0;
-        }
-        for i in 0..n {
-            let zi = &ks[i * w..(i + 1) * w];
-            for c in 0..w {
-                acc[c] += zi[c] * zi[c];
-            }
-        }
-        for (c, &j) in active.iter().enumerate() {
-            var_out[j] = (var - acc[c]).max(VAR_FLOOR);
-        }
-
         self.ks_mat = ks;
         self.col_acc = acc;
     }
@@ -445,6 +381,145 @@ impl NativeGp {
         let n = self.n;
         let quad: f64 = y.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>() * 0.5;
         quad + self.factor.sum_log_diag() + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+    }
+}
+
+/// Batched posterior prediction against a *borrowed* packed factor —
+/// the zero-copy core shared by [`NativeGp::predict_batch`] and
+/// `NativeBackend::decide`'s tile fan-out (each worker thread runs this
+/// on its own tile with its own scratch; the factor, weights and
+/// observations are shared read-only).
+///
+/// Writes mean/variance for the `w` candidate rows of `xc` into
+/// `mu_out[..w]` / `var_out[..w]` (fully overwritten). `alpha` must be
+/// the factor-consistent weights `(L Lᵀ)⁻¹ y`. `ks` / `acc` are caller
+/// scratch, cleared and resized here so steady-state callers allocate
+/// nothing.
+///
+/// Per column the accumulation order (cross-kernel build in ascending
+/// observation order, blocked TRSM visiting `k` ascending within each
+/// row, squared-norm fold ascending) matches [`NativeGp::predict`]
+/// exactly, so every caller — per-row, one m-wide call, serial tiles,
+/// or tiles fanned across threads — produces the same bits.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_into(
+    factor: &CholFactor,
+    alpha: &[f64],
+    x: &[f64],
+    n: usize,
+    d: usize,
+    hyp: [f64; 3],
+    xc: &[f64],
+    w: usize,
+    mu_out: &mut [f64],
+    var_out: &mut [f64],
+    ks: &mut Vec<f64>,
+    acc: &mut Vec<f64>,
+) {
+    let (ls, var, _) = (hyp[0], hyp[1], hyp[2]);
+    assert_eq!(xc.len(), w * d);
+    assert_eq!(mu_out.len(), w);
+    assert_eq!(var_out.len(), w);
+    for v in mu_out.iter_mut() {
+        *v = 0.0;
+    }
+    for v in var_out.iter_mut() {
+        *v = var;
+    }
+    if n == 0 || w == 0 {
+        return;
+    }
+    debug_assert_eq!(factor.n(), n);
+    debug_assert_eq!(alpha.len(), n);
+    debug_assert_eq!(x.len(), n * d);
+
+    // Row-block width of the blocked TRSM below.
+    const TB: usize = 32;
+    ks.clear();
+    ks.resize(n * w, 0.0);
+    acc.clear();
+    acc.resize(TB.min(n) * w, 0.0);
+
+    // Cross-kernel block: row i = k(x_i, candidates).
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let row = &mut ks[i * w..(i + 1) * w];
+        for (c, slot) in row.iter_mut().enumerate() {
+            *slot = matern52(&xc[c * d..(c + 1) * d], xi, ls, var);
+        }
+    }
+
+    // mu = Ks^T alpha, accumulated in ascending observation order
+    // (the same order `predict` sums its dot product in).
+    for i in 0..n {
+        let a = alpha[i];
+        let row = &ks[i * w..(i + 1) * w];
+        for c in 0..w {
+            mu_out[c] += row[c] * a;
+        }
+    }
+
+    // Blocked TRSM: Z = L^-1 Ks, all columns at once, rows in blocks
+    // of TB. Row i: z_i = (ks_i - sum_{k<i} L[i,k] z_k) / L[i,i].
+    // For each block the contribution of all *prior* blocks is
+    // accumulated first (streaming each finished z_k row across the
+    // whole block — the cache-friendly GEMM-shaped part), then the
+    // small triangular block is solved in place. Per (row, column)
+    // the inner sum still visits k in ascending order, so the
+    // arithmetic is bit-identical to the per-column forward solve that
+    // `predict` performs. `L` is indexed in its packed layout (row i at
+    // offset i·(i+1)/2 — see `chol`'s module docs).
+    let lmat = factor.packed();
+    let rs = super::chol::packed_row_start;
+    for rb in (0..n).step_by(TB) {
+        let re = (rb + TB).min(n);
+        for v in acc[..(re - rb) * w].iter_mut() {
+            *v = 0.0;
+        }
+        let (done, rest) = ks.split_at_mut(rb * w);
+        // GEMM part: acc[i - rb] += L[i, k] z_k for all k < rb.
+        for k in 0..rb {
+            let zk = &done[k * w..(k + 1) * w];
+            for i in rb..re {
+                let l = lmat[rs(i) + k];
+                let a = &mut acc[(i - rb) * w..(i - rb + 1) * w];
+                for c in 0..w {
+                    a[c] += l * zk[c];
+                }
+            }
+        }
+        // Triangular part: rows rb..re against freshly solved rows.
+        for i in rb..re {
+            let off = (i - rb) * w;
+            let (prior, cur) = rest.split_at_mut(off);
+            let row_i = &mut cur[..w];
+            let a = &mut acc[off..off + w];
+            for k in rb..i {
+                let l = lmat[rs(i) + k];
+                let zk = &prior[(k - rb) * w..(k - rb + 1) * w];
+                for c in 0..w {
+                    a[c] += l * zk[c];
+                }
+            }
+            let diag = lmat[rs(i) + i];
+            for c in 0..w {
+                row_i[c] = (row_i[c] - a[c]) / diag;
+            }
+        }
+    }
+
+    // var = k(x,x) - |z|^2 per column, ascending observation order.
+    for v in acc[..w].iter_mut() {
+        *v = 0.0;
+    }
+    for i in 0..n {
+        let zi = &ks[i * w..(i + 1) * w];
+        for c in 0..w {
+            acc[c] += zi[c] * zi[c];
+        }
+    }
+    for c in 0..w {
+        var_out[c] = (var - acc[c]).max(VAR_FLOOR);
     }
 }
 

@@ -7,6 +7,21 @@
 
 pub const SQRT5: f64 = 2.23606797749979;
 
+/// Slice dot product written so LLVM auto-vectorizes it — the hot inner
+/// kernel of every factorization and triangular solve. Lives here (not
+/// per consumer) because the packed ([`super::chol`]) and dense
+/// ([`super::gp`]) linear algebra must share one accumulation order for
+/// their bit-parity contract to hold by construction.
+#[inline]
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
 /// Matérn-5/2 covariance from a squared distance.
 #[inline]
 pub fn matern52_from_d2(d2: f64, lengthscale: f64, variance: f64) -> f64 {

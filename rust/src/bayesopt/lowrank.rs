@@ -47,9 +47,14 @@
 //!   tolerance on small spaces (the only residual difference is the
 //!   jitter placement on `Kuu`).
 //!
-//! Open follow-ups live in ROADMAP.md: refreshing the inducing set
-//! incrementally across BO iterations instead of re-sampling per fit,
-//! and fanning tiles of the batched acquisition across worker threads.
+//! Besides the posterior, [`LowRankGp::nll`] evaluates the DTC
+//! *marginal likelihood* in Woodbury form (O(n·u), no n×n objects), so
+//! `NativeBackend::nll_grid` can select hyperparameters past a few
+//! thousand observations without the exact sweep's O(n²) distance cache
+//! or O(n³) cold refits.
+//!
+//! Open follow-up in ROADMAP.md: refreshing the inducing set
+//! incrementally across BO iterations instead of re-sampling per fit.
 
 use super::gp::{solve_lower_in_place, JITTER, VAR_FLOOR};
 use super::kernel::matern52_cross;
@@ -158,6 +163,8 @@ pub fn farthest_point_sample(x: &[f64], n: usize, d: usize, k: usize) -> Vec<usi
 pub struct LowRankGp {
     d: usize,
     u: usize,
+    /// Observation count of the current fit (the width of `B`).
+    n: usize,
     hyp: [f64; 3],
     sigma2: f64,
     /// Inducing rows, row-major u x d.
@@ -233,20 +240,43 @@ impl LowRankGp {
         hyp: [f64; 3],
         max_inducing: usize,
     ) -> bool {
+        let inducing = farthest_point_sample(x, n, d, max_inducing.max(1));
+        self.fit_with_inducing(x, y, n, d, hyp, &inducing)
+    }
+
+    /// [`Self::fit`] with a caller-selected inducing set (row indices
+    /// into `x`). Farthest-point selection depends only on the rows —
+    /// not the hyperparameters — so a marginal-likelihood sweep
+    /// (`NativeBackend::nll_grid`'s low-rank path) selects once and
+    /// reuses the set across the whole grid instead of re-sweeping the
+    /// full data per grid point.
+    pub fn fit_with_inducing(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        hyp: [f64; 3],
+        inducing: &[usize],
+    ) -> bool {
         assert_eq!(x.len(), n * d);
         assert_eq!(y.len(), n);
         assert!(n > 0, "low-rank fit needs at least one observation");
+        // u <= n keeps the marginal's (n - u) log-det factor well-formed
+        // (FPS never selects duplicates; external callers must not either).
+        assert!(inducing.len() <= n, "more inducing indices than observations");
         let (ls, var, noise) = (hyp[0], hyp[1], hyp[2]);
         let sigma2 = noise + JITTER;
 
-        let inducing = farthest_point_sample(x, n, d, max_inducing.max(1));
         let u = inducing.len();
         self.z.clear();
-        for &i in &inducing {
+        for &i in inducing {
+            assert!(i < n, "inducing index {i} out of bounds (n = {n})");
             self.z.extend_from_slice(&x[i * d..(i + 1) * d]);
         }
         self.d = d;
         self.u = u;
+        self.n = n;
         self.hyp = hyp;
         self.sigma2 = sigma2;
 
@@ -393,6 +423,47 @@ impl LowRankGp {
     /// bound the property tests pin).
     pub fn prior_variance(&self) -> f64 {
         self.hyp[1]
+    }
+
+    /// DTC marginal negative log likelihood of the fitted data, in
+    /// Woodbury form — the low-rank counterpart of `NativeGp::nll` that
+    /// `NativeBackend::nll_grid` uses past its observation threshold.
+    ///
+    /// Under the DTC model `y ~ N(0, Qff + σ²I)` with `Qff = Bᵀ B`
+    /// (`B = Lu⁻¹ Kuf` from the fit). With `t = Lm⁻¹ (B y)`:
+    ///
+    /// ```text
+    /// yᵀ (Qff + σ²I)⁻¹ y = (yᵀy − |t|²) / σ²
+    /// ln det(Qff + σ²I)  = (n − u) ln σ² + 2 Σᵢ ln Lm[i,i]
+    /// ```
+    ///
+    /// (both are the standard Woodbury/determinant-lemma identities
+    /// through the fit's `Lm Lmᵀ = σ²I + B Bᵀ` factor). Cost O(n·u):
+    /// independent of any n×n object. The `0.5·n·ln 2π` fold constant
+    /// matches `NativeGp::nll`, and at `Z = X` (`u = n`) the value
+    /// reduces to the exact marginal up to [`INDUCING_JITTER`] — the pin
+    /// `tests/prop_lowrank.rs` enforces.
+    pub fn nll(&self, y: &[f64]) -> f64 {
+        let (u, n) = (self.u, self.n);
+        assert!(u > 0, "nll on an unfitted low-rank posterior");
+        assert_eq!(y.len(), n);
+        let b = &self.b_mat;
+        // t = Lm^-1 (B y).
+        let mut t = vec![0.0; u];
+        for (i, ti) in t.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for c in 0..n {
+                s += b[i * n + c] * y[c];
+            }
+            *ti = s;
+        }
+        solve_lower_in_place(&self.lm, u, &mut t);
+        let yty: f64 = y.iter().map(|v| v * v).sum();
+        let t2: f64 = t.iter().map(|v| v * v).sum();
+        let quad = 0.5 * (yty - t2) / self.sigma2;
+        let half_logdet = 0.5 * (n - u) as f64 * self.sigma2.ln()
+            + (0..u).map(|i| self.lm[i * u + i].ln()).sum::<f64>();
+        quad + half_logdet + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
     }
 }
 

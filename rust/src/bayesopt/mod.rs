@@ -11,9 +11,10 @@ pub mod lowrank;
 pub mod search;
 
 pub use backend::{
-    backend_by_name, backend_factory_by_name, BackendFactory, BackendKind, DecideStats,
-    Decision, GpBackend, LowRankPolicy, NativeBackend, XlaBackend,
-    LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS,
+    backend_by_name, backend_factory_by_name, backend_factory_with_parallelism,
+    BackendFactory, BackendKind, DecideStats, Decision, GpBackend, LowRankPolicy,
+    NativeBackend, XlaBackend, DECIDE_TILE, LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS,
+    LOWRANK_NLL_OBS_THRESHOLD,
 };
 pub use chol::{CholFactor, FactorCache, FactorCacheStats};
 pub use lowrank::{farthest_point_sample, LowRankGp, DEFAULT_MAX_INDUCING};

@@ -14,6 +14,13 @@
 //! capacity-limited backend) and calls `nll_grid` then `decide` with the
 //! *same* window, so per-iteration grid refits are rank-1 updates
 //! (O(H·n²)) instead of scratch refactorizations (O(H·n³)).
+//!
+//! The loop itself is oblivious to the backend's worker pool
+//! (`--gp-threads`): the swept nll grid, the decision vectors and the
+//! EI argmax are bit-identical for any pool width (the backend's
+//! deterministic-parallelism contract), so a seeded search produces the
+//! same iteration trace serial or threaded —
+//! `tests/parallel_gp.rs` pins exactly that.
 
 use super::backend::GpBackend;
 use crate::util::rng::Pcg64;

@@ -24,11 +24,13 @@
 //! `--seed <u64>`, `--reps <N>` (default 200 as in the paper),
 //! `--threads <N>` (worker threads; `table2` shards jobs x methods x
 //! repetitions as one flat task list, other commands shard repetitions —
-//! results are bit-identical for any value), `--out <dir>` (export
-//! .dat/.json/.md files).
+//! results are bit-identical for any value), `--gp-threads <N>` (each
+//! backend's internal worker pool: the hyperparameter-grid nll sweep and
+//! the decide tile fan-out — also bit-identical for any value), `--out
+//! <dir>` (export .dat/.json/.md files).
 
 use anyhow::{bail, Context, Result};
-use ruya::bayesopt::backend_factory_by_name;
+use ruya::bayesopt::backend_factory_with_parallelism;
 use ruya::coordinator::{ExperimentConfig, ExperimentRunner, SearchPlan};
 use ruya::report;
 use ruya::searchspace::SearchSpace;
@@ -64,7 +66,7 @@ fn run(args: &Args) -> Result<()> {
     }
 
     let backend_name = args.opt_or("backend", "native");
-    let factory = backend_factory_by_name(&backend_name)
+    let factory = backend_factory_with_parallelism(&backend_name, args.opt_gp_threads())
         .with_context(|| format!("initializing backend {backend_name}"))?;
     let seed = args.opt_u64("seed", 0xC0FFEE);
     let space_spec = args.opt_or("space", "scout");
@@ -458,6 +460,11 @@ OPTIONS
   --threads N            worker threads (default 1; table2 shards jobs x
                          methods x repetitions, other commands shard
                          repetitions; results bit-identical for any value)
+  --gp-threads N         GP-internal worker pool (default 1): each backend
+                         fans its 32-point nll sweep and its 1024-wide
+                         decide tiles across N threads; results are
+                         bit-identical for any value and multiply with
+                         --threads (total ~= threads * gp-threads)
   --seed S               experiment seed (default 0xC0FFEE)
   --out DIR              also write tables/figures to DIR
   --curve-len N          length of fig4/fig5 series (default 48)

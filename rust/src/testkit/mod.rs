@@ -288,6 +288,106 @@ pub fn assert_backend_parity(
     report
 }
 
+/// Drive serial-vs-threaded [`NativeBackend`](crate::bayesopt::NativeBackend)s
+/// through the same observation script and assert **bit-identical**
+/// outputs — the deterministic-parallelism contract of the worker-pool
+/// nll sweep and the decide tile fan-out (`--gp-threads`).
+///
+/// `make` builds a fresh, identically-configured backend per lane (set
+/// policy/thresholds there; leave the parallelism to the harness). The
+/// serial lane (`set_parallelism(1)`) records the reference trace; then
+/// for every entry of `threads` a new backend replays the script and
+/// every hyperparameter-grid NLL, posterior mean/variance, EI score and
+/// the chosen EI argmax must match the reference *to the bit*
+/// (`f64::to_bits` equality — no tolerance). The decide hyperparameters
+/// are the grid argmin of the lane's own NLL, as in the search loop, so
+/// a bit-divergent grid would also surface as a diverged decision.
+pub fn assert_parallel_parity(
+    make: &dyn Fn() -> crate::bayesopt::NativeBackend,
+    threads: &[usize],
+    script: &ParityScript,
+    xc: &[f64],
+    m: usize,
+    grid: &[[f64; 3]],
+) {
+    use crate::bayesopt::GpBackend;
+    assert!(!grid.is_empty(), "empty hyperparameter grid");
+    assert_eq!(xc.len(), m * script.d, "candidate matrix shape mismatch");
+    let d = script.d;
+    let cmask = vec![true; m];
+    let argmin = |xs: &[f64]| {
+        let mut best = 0usize;
+        for (i, v) in xs.iter().enumerate() {
+            if *v < xs[best] {
+                best = i;
+            }
+        }
+        best
+    };
+    let argmax = |xs: &[f64]| {
+        let mut best = 0usize;
+        for (i, v) in xs.iter().enumerate() {
+            if *v > xs[best] {
+                best = i;
+            }
+        }
+        best
+    };
+
+    // Reference lane: fully serial.
+    let mut reference: Vec<(Vec<f64>, crate::bayesopt::Decision, usize)> = Vec::new();
+    let mut serial = make();
+    serial.set_parallelism(1);
+    for &(start, n) in script.steps() {
+        let x = &script.rows[start * d..(start + n) * d];
+        let y = &script.ys[start..start + n];
+        let nll = serial.nll_grid(x, y, n, d, grid).expect("serial nll_grid");
+        let hyp = grid[argmin(&nll)];
+        let dec = serial.decide(x, y, n, d, xc, &cmask, m, hyp).expect("serial decide");
+        let pick = argmax(&dec.ei);
+        reference.push((nll, dec, pick));
+    }
+
+    for &t in threads {
+        let mut b = make();
+        b.set_parallelism(t);
+        for (step, &(start, n)) in script.steps().iter().enumerate() {
+            let x = &script.rows[start * d..(start + n) * d];
+            let y = &script.ys[start..start + n];
+            let nll = b.nll_grid(x, y, n, d, grid).expect("threaded nll_grid");
+            let (rnll, rdec, rpick) = &reference[step];
+            for (g, (va, vb)) in rnll.iter().zip(&nll).enumerate() {
+                assert!(
+                    va.to_bits() == vb.to_bits(),
+                    "gp-threads {t}: nll[{g}] not bit-identical at step {step} \
+                     (n={n}): {va:?} vs {vb:?}"
+                );
+            }
+            let hyp = grid[argmin(&nll)];
+            let dec = b.decide(x, y, n, d, xc, &cmask, m, hyp).expect("threaded decide");
+            for j in 0..m {
+                assert!(
+                    rdec.mu[j].to_bits() == dec.mu[j].to_bits(),
+                    "gp-threads {t}: mu[{j}] not bit-identical at step {step} (n={n})"
+                );
+                assert!(
+                    rdec.var[j].to_bits() == dec.var[j].to_bits(),
+                    "gp-threads {t}: var[{j}] not bit-identical at step {step} (n={n})"
+                );
+                assert!(
+                    rdec.ei[j].to_bits() == dec.ei[j].to_bits(),
+                    "gp-threads {t}: ei[{j}] not bit-identical at step {step} (n={n})"
+                );
+            }
+            assert_eq!(
+                argmax(&dec.ei),
+                *rpick,
+                "gp-threads {t}: chosen argmax diverged at step {step} (n={n})"
+            );
+        }
+    }
+}
+
 /// A [`GpBackend`](crate::bayesopt::GpBackend) wrapper with an
 /// artificially small conditioning capacity: reproduces the
 /// windowed-history regime the AOT artifacts (`max_obs`) put the search

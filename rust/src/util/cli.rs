@@ -79,6 +79,15 @@ impl Args {
     pub fn opt_threads(&self) -> usize {
         self.opt_usize("threads", 1).max(1)
     }
+
+    /// GP-internal worker-pool width (`--gp-threads N`, default 1,
+    /// floored at 1): each backend fans its hyperparameter-grid nll
+    /// sweep and its decide tiles across this many threads, with
+    /// bit-identical results for any value. Multiplies with
+    /// [`Self::opt_threads`] — total threads ≈ `threads * gp_threads`.
+    pub fn opt_gp_threads(&self) -> usize {
+        self.opt_usize("gp-threads", 1).max(1)
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +137,16 @@ mod tests {
         assert_eq!(parse(&["table2", "--threads", "8"], &[]).opt_threads(), 8);
         assert_eq!(parse(&["table2", "--threads", "0"], &[]).opt_threads(), 1);
         assert_eq!(parse(&["table2"], &[]).opt_threads(), 1);
+    }
+
+    #[test]
+    fn gp_threads_option_floors_at_one() {
+        assert_eq!(parse(&["table2", "--gp-threads", "4"], &[]).opt_gp_threads(), 4);
+        assert_eq!(parse(&["table2", "--gp-threads", "0"], &[]).opt_gp_threads(), 1);
+        assert_eq!(parse(&["table2"], &[]).opt_gp_threads(), 1);
+        // The two knobs parse independently.
+        let a = parse(&["table2", "--threads", "2", "--gp-threads", "8"], &[]);
+        assert_eq!((a.opt_threads(), a.opt_gp_threads()), (2, 8));
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Concurrency parity suite for the GP worker pool (`--gp-threads`):
+//! serial-vs-threaded backends must be **bit-identical** — nll grids,
+//! posteriors, EI scores and the chosen argmax — across the append,
+//! slide and replace deltas of the factor cache, across the decide tile
+//! fan-out, and across the low-rank nll routing; and a seeded search at
+//! 8 GP threads must be perfectly repeatable run after run (the
+//! loom-free determinism stress test that catches nondeterministic
+//! reductions in CI).
+
+use ruya::bayesopt::{
+    hyperparameter_grid, run_search, BoParams, GpBackend, LowRankPolicy, NativeBackend,
+    DECIDE_TILE,
+};
+use ruya::testkit::{assert_parallel_parity, ParityScript};
+use ruya::util::rng::Pcg64;
+
+/// The threaded lanes every parity test compares against the serial one.
+const GP_THREADS: [usize; 3] = [2, 4, 8];
+
+fn synth_rows(n: usize, d: usize, salt: usize) -> Vec<f64> {
+    (0..n * d).map(|i| ((i * 29 + salt) % 97) as f64 / 97.0).collect()
+}
+
+#[test]
+fn parallel_parity_append_slide_replace() {
+    // Growth (append), window slides, a wholesale window jump (replace)
+    // and a full-pool reload: every FitPlan family of the factor cache
+    // runs under the worker pool and must match the serial bits.
+    let d = 4;
+    let total = 14;
+    let rows = synth_rows(total, d, 7);
+    let ys: Vec<f64> = (0..total).map(|i| 1.0 + (i as f64 * 0.41).sin()).collect();
+    let script = ParityScript::new(rows, ys, d)
+        .growth(9)
+        .slides(9, total - 9)
+        .push_window(2, 7) // replace: arbitrary window jump
+        .push_window(0, total);
+    let m = 24;
+    let xc = synth_rows(m, d, 13);
+    assert_parallel_parity(
+        &NativeBackend::new,
+        &GP_THREADS,
+        &script,
+        &xc,
+        m,
+        &hyperparameter_grid(),
+    );
+}
+
+#[test]
+fn parallel_parity_scratch_baseline() {
+    // The cold-only scratch baseline (set_incremental(false)) sweeps the
+    // same worker pool: every slot refactorizes cold on every step, and
+    // the threaded sweep must still match the serial bits.
+    let d = 3;
+    let total = 8;
+    let rows = synth_rows(total, d, 31);
+    let ys: Vec<f64> = (0..total).map(|i| (i as f64 * 0.53).cos()).collect();
+    let script = ParityScript::new(rows, ys, d).growth(total);
+    let m = 10;
+    let xc = synth_rows(m, d, 17);
+    let make = || {
+        let mut b = NativeBackend::new();
+        b.set_incremental(false);
+        b
+    };
+    assert_parallel_parity(&make, &GP_THREADS, &script, &xc, m, &hyperparameter_grid());
+}
+
+#[test]
+fn parallel_parity_across_decide_tiles() {
+    // A candidate set spanning three DECIDE_TILE chunks so the decide
+    // fan-out genuinely engages (and its tile seams sit inside the
+    // compared range), on top of the threaded nll sweep.
+    let d = 3;
+    let total = 10;
+    let rows = synth_rows(total, d, 3);
+    let ys: Vec<f64> = (0..total).map(|i| 1.0 + (i as f64 * 0.37).sin()).collect();
+    let script = ParityScript::new(rows.clone(), ys.clone(), d).growth(7).slides(7, 3);
+    let m = DECIDE_TILE * 2 + 31;
+    let xc = synth_rows(m, d, 5);
+    let make = || {
+        let mut b = NativeBackend::new();
+        b.set_lowrank_policy(LowRankPolicy::Off);
+        b
+    };
+    assert_parallel_parity(&make, &GP_THREADS, &script, &xc, m, &hyperparameter_grid());
+
+    // The guarded engagement check: at this shape a threaded backend
+    // must actually take both parallel paths.
+    let mut b = make();
+    b.set_parallelism(4);
+    let grid = hyperparameter_grid();
+    let n = 7;
+    let x = &rows[..n * d];
+    let y = &ys[..n];
+    let nll = b.nll_grid(x, y, n, d, &grid).unwrap();
+    let best = (0..grid.len()).min_by(|&a, &c| nll[a].partial_cmp(&nll[c]).unwrap()).unwrap();
+    b.decide(x, y, n, d, &xc, &vec![true; m], m, grid[best]).unwrap();
+    let s = b.decide_stats();
+    assert!(s.parallel_nll_sweeps > 0, "worker-pool nll sweep never engaged: {s:?}");
+    assert!(s.parallel_decide_fanouts > 0, "decide tile fan-out never engaged: {s:?}");
+}
+
+#[test]
+fn parallel_parity_lowrank_nll_routing() {
+    // Past the (lowered) observation threshold nll_grid routes to the
+    // Woodbury low-rank marginal, whose grid points fan across the same
+    // pool — per-point pure computations, so threaded results must match
+    // serial bits exactly, through the routing boundary and beyond.
+    let d = 3;
+    let total = 30;
+    let threshold = 24;
+    let rows = synth_rows(total, d, 41);
+    let ys: Vec<f64> = (0..total).map(|i| 1.0 + (i as f64 * 0.29).sin()).collect();
+    let script = ParityScript::new(rows, ys, d).growth(total); // crosses n = threshold
+    let m = 12;
+    let xc = synth_rows(m, d, 23);
+    let make = move || {
+        let mut b = NativeBackend::new();
+        b.set_lowrank_nll_threshold(threshold);
+        b
+    };
+    assert_parallel_parity(&make, &GP_THREADS, &script, &xc, m, &hyperparameter_grid());
+    // Routing must have actually crossed into the low-rank marginal.
+    let mut b = make();
+    b.set_parallelism(4);
+    let grid = hyperparameter_grid();
+    let rows2 = synth_rows(total, d, 41);
+    let ys2: Vec<f64> = (0..total).map(|i| 1.0 + (i as f64 * 0.29).sin()).collect();
+    b.nll_grid(&rows2, &ys2, total, d, &grid).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.nll_lowrank, 1, "low-rank nll routing never engaged: {s:?}");
+}
+
+/// Smooth synthetic search space in the style of the search-loop tests:
+/// a 1-D bowl embedded in 6 features, optimum near t = 0.62.
+fn toy_space(m: usize) -> (Vec<f64>, Vec<f64>) {
+    let d = 6;
+    let mut features = Vec::with_capacity(m * d);
+    let mut costs = Vec::with_capacity(m);
+    for i in 0..m {
+        let t = i as f64 / (m - 1) as f64;
+        features.extend_from_slice(&[t, 1.0 - t, t * t, 0.5, (3.0 * t).sin() * 0.5 + 0.5, t]);
+        costs.push(1.0 + 8.0 * (t - 0.62) * (t - 0.62));
+    }
+    (features, costs)
+}
+
+#[test]
+fn threaded_search_is_perfectly_repeatable() {
+    // The determinism stress test: the same seeded search 20 times at
+    // --gp-threads 8 over a multi-tile candidate space. Any
+    // nondeterministic reduction in the pool would perturb EI bits and
+    // eventually flip an argmax, forking the iteration trace.
+    let d = 6;
+    let m = DECIDE_TILE + 289; // two decide tiles
+    let (features, costs) = toy_space(m);
+    let phases = vec![(0..m).collect::<Vec<usize>>()];
+    let params = BoParams { max_iters: 24, ..Default::default() };
+    let mut reference: Option<(Vec<usize>, Vec<f64>)> = None;
+    for run in 0..20 {
+        let mut backend = NativeBackend::new();
+        backend.set_parallelism(8);
+        let mut rng = Pcg64::from_seed(0xD15EA5E);
+        let mut oracle = |i: usize| costs[i];
+        let out = run_search(
+            &features,
+            m,
+            d,
+            &phases,
+            &mut oracle,
+            &mut backend,
+            &mut rng,
+            &params,
+        )
+        .expect("threaded search");
+        assert_eq!(out.tried.len(), params.max_iters);
+        let s = backend.decide_stats();
+        assert!(s.parallel_nll_sweeps > 0, "run {run}: nll sweep never threaded: {s:?}");
+        assert!(s.parallel_decide_fanouts > 0, "run {run}: tile fan-out never engaged: {s:?}");
+        match &reference {
+            None => reference = Some((out.tried.clone(), out.costs.clone())),
+            Some((tried, ref_costs)) => {
+                assert_eq!(&out.tried, tried, "iteration trace diverged on run {run}");
+                for (i, (a, b)) in out.costs.iter().zip(ref_costs).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "cost[{i}] bits diverged on run {run}"
+                    );
+                }
+            }
+        }
+    }
+}

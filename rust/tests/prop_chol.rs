@@ -1,0 +1,212 @@
+//! Property tests for the packed lower-triangular `CholFactor` layout:
+//! packed-vs-dense equality of the cold factorization and every solve
+//! (bit-for-bit — the packed code runs the same arithmetic in the same
+//! order, only the addressing differs), tolerance-bounded tracking of
+//! random append/slide sequences against dense scratch refits, and the
+//! `APPEND_PIVOT_RTOL` fallback path resyncing to dense scratch bits.
+
+use ruya::bayesopt::chol::packed_row_start;
+use ruya::bayesopt::gp::{
+    cholesky_in_place, matern52, solve_lower_in_place, solve_upper_t_in_place,
+};
+use ruya::bayesopt::CholFactor;
+use ruya::prop_assert;
+use ruya::testkit::property;
+
+/// Noiseless Matérn-5/2 Gram (unit variance) of `rows[start..end)`.
+fn window_gram(rows: &[f64], d: usize, start: usize, end: usize, ls: f64) -> Vec<f64> {
+    let n = end - start;
+    let mut k = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            k[i * n + j] = matern52(
+                &rows[(start + i) * d..(start + i + 1) * d],
+                &rows[(start + j) * d..(start + j + 1) * d],
+                ls,
+                1.0,
+            );
+        }
+    }
+    k
+}
+
+#[test]
+fn prop_packed_cold_path_matches_dense_bits() {
+    property("packed refactorize/solves == dense cholesky bits", 60, |g| {
+        let n = g.usize_in(1, 24);
+        let d = g.usize_in(1, 6);
+        let rows = g.vec_f64(n * d, 0.0, 1.0);
+        let ls = g.f64_in(0.1, 2.0);
+        let noise = g.f64_in(1e-6, 1e-1);
+        let gram = window_gram(&rows, d, 0, n, ls);
+
+        // Dense reference: gram + noise I through the dense kernel.
+        let mut dense = gram.clone();
+        for i in 0..n {
+            dense[i * n + i] += noise;
+        }
+        prop_assert!(cholesky_in_place(&mut dense, n), "dense factorization failed");
+
+        let mut f = CholFactor::new();
+        prop_assert!(f.refactorize(&gram, n, noise), "packed factorization failed");
+        prop_assert!(
+            f.packed().len() == packed_row_start(n),
+            "packed length {} != n(n+1)/2 = {}",
+            f.packed().len(),
+            n * (n + 1) / 2
+        );
+        for i in 0..n {
+            for j in 0..=i {
+                prop_assert!(
+                    f.at(i, j).to_bits() == dense[i * n + j].to_bits(),
+                    "L[{i},{j}]: packed {} vs dense {}",
+                    f.at(i, j),
+                    dense[i * n + j]
+                );
+            }
+        }
+
+        // to_dense round-trips (upper triangle exactly zero).
+        let mut back = Vec::new();
+        f.to_dense(&mut back);
+        for i in 0..n {
+            for j in 0..n {
+                prop_assert!(
+                    back[i * n + j].to_bits() == dense[i * n + j].to_bits(),
+                    "to_dense[{i},{j}] diverged"
+                );
+            }
+        }
+
+        // Forward solve, full solve and the log-det fold all agree to
+        // the bit with their dense counterparts.
+        let y = g.vec_f64(n, -2.0, 2.0);
+        let mut z_p = y.clone();
+        f.forward_solve(&mut z_p);
+        let mut z_d = y.clone();
+        solve_lower_in_place(&dense, n, &mut z_d);
+        for i in 0..n {
+            prop_assert!(z_p[i].to_bits() == z_d[i].to_bits(), "forward_solve[{i}] diverged");
+        }
+        let mut a_p = Vec::new();
+        f.solve_into(&y, &mut a_p);
+        let mut a_d = y.clone();
+        solve_lower_in_place(&dense, n, &mut a_d);
+        solve_upper_t_in_place(&dense, n, &mut a_d);
+        for i in 0..n {
+            prop_assert!(a_p[i].to_bits() == a_d[i].to_bits(), "solve_into[{i}] diverged");
+        }
+        let sld_dense: f64 = (0..n).map(|i| dense[i * n + i].ln()).sum();
+        prop_assert!(
+            f.sum_log_diag().to_bits() == sld_dense.to_bits(),
+            "sum_log_diag diverged: {} vs {}",
+            f.sum_log_diag(),
+            sld_dense
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_sequences_track_dense_scratch() {
+    property("append/slide sequences track dense scratch refits", 25, |g| {
+        let d = g.usize_in(1, 5);
+        let total = g.usize_in(4, 20);
+        let rows = g.vec_f64(total * d, 0.0, 1.0);
+        let ls = g.f64_in(0.2, 1.5);
+        let noise = g.f64_in(1e-6, 1e-2);
+        let diag = 1.0 + noise; // unit signal variance + noise
+
+        let mut f = CholFactor::new();
+        prop_assert!(f.append(&[], diag), "seed append failed");
+        let (mut start, mut end) = (0usize, 1usize);
+        while end < total {
+            let slide = end - start > 1 && g.bool();
+            if slide {
+                f.drop_first();
+                start += 1;
+            }
+            let new = end;
+            let row: Vec<f64> = (start..new)
+                .map(|j| {
+                    matern52(
+                        &rows[new * d..(new + 1) * d],
+                        &rows[j * d..(j + 1) * d],
+                        ls,
+                        1.0,
+                    )
+                })
+                .collect();
+            prop_assert!(
+                f.append(&row, diag),
+                "append failed at window [{start},{}] (well-conditioned Gram)",
+                new + 1
+            );
+            end += 1;
+
+            // Dense scratch reference over the same window.
+            let n = end - start;
+            let mut dense = window_gram(&rows, d, start, end, ls);
+            for i in 0..n {
+                dense[i * n + i] += noise;
+            }
+            prop_assert!(cholesky_in_place(&mut dense, n), "dense scratch failed");
+            for i in 0..n {
+                for j in 0..=i {
+                    let (a, b) = (f.at(i, j), dense[i * n + j]);
+                    prop_assert!(
+                        (a - b).abs() <= 1e-8 * a.abs().max(b.abs()).max(1.0),
+                        "L[{i},{j}] diverged at window [{start},{end}): {a} vs {b}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_fallback_resyncs_to_dense_bits() {
+    // An exactly duplicated row with zero noise drives the append pivot
+    // to ~0 — below APPEND_PIVOT_RTOL * diag — so the append must refuse
+    // (leaving the factor untouched), and the documented cold
+    // refactorization must then land on exactly the dense scratch bits.
+    let d = 2;
+    let ls = 0.7;
+    let rows = [0.2, 0.4, 0.9, 0.1, 0.2, 0.4]; // row 2 duplicates row 0
+    let mut f = CholFactor::new();
+    assert!(f.append(&[], 1.0));
+    let r1 = [matern52(&rows[2..4], &rows[0..2], ls, 1.0)];
+    assert!(f.append(&r1, 1.0));
+    let before = f.packed().to_vec();
+    let r2: Vec<f64> = (0..2)
+        .map(|j| matern52(&rows[4..6], &rows[j * d..(j + 1) * d], ls, 1.0))
+        .collect();
+    assert!(
+        !f.append(&r2, 1.0),
+        "duplicate row with zero noise must trip the pivot guard"
+    );
+    assert_eq!(f.n(), 2, "failed append must leave the factor untouched");
+    assert_eq!(f.packed(), &before[..]);
+
+    // Cold resync with a jitter that makes the bordered Gram SPD: the
+    // packed factorization must equal the dense one bit-for-bit.
+    let n = 3;
+    let jit = 1e-6;
+    let gram = window_gram(&rows, d, 0, n, ls);
+    assert!(f.refactorize(&gram, n, jit), "cold fallback failed");
+    let mut dense = gram;
+    for i in 0..n {
+        dense[i * n + i] += jit;
+    }
+    assert!(cholesky_in_place(&mut dense, n));
+    for i in 0..n {
+        for j in 0..=i {
+            assert_eq!(
+                f.at(i, j).to_bits(),
+                dense[i * n + j].to_bits(),
+                "fallback L[{i},{j}] not bit-identical to dense scratch"
+            );
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! low-rank-vs-exact on both the `inducing = full set` and the
 //! tolerance-bounded large-space case.
 
+use ruya::bayesopt::gp::NativeGp;
 use ruya::bayesopt::{
     farthest_point_sample, hyperparameter_grid, LowRankGp, LowRankPolicy, NativeBackend,
 };
@@ -205,4 +206,61 @@ fn parity_lowrank_large_space_within_tolerance() {
     assert_eq!(lowrank.decide_stats().lowrank, 3);
     // The mean must be far tighter than the conservative variance bound.
     assert!(report.max_mu_err <= 0.2, "mean drifted: {report:?}");
+}
+
+/// Exact-equality pin for the Woodbury *marginal likelihood*: at
+/// `Z = X` (`u = n`) the DTC log-det and quadratic form reduce
+/// algebraically to the exact ones (`lowrank::nll` module docs), so
+/// `LowRankGp::nll` must match `NativeGp::nll` up to the
+/// `INDUCING_JITTER` perturbation — across lengthscales and the grid's
+/// noise range.
+#[test]
+fn lowrank_nll_full_inducing_matches_exact() {
+    let space = SearchSpace::generated(11, 200);
+    let d = N_FEATURES;
+    let n = 16;
+    let idx: Vec<usize> = (0..n).collect();
+    let (x, y) = obs_from_space(&space, &idx);
+    for hyp in [[0.5, 1.0, 1e-3], [1.0, 1.0, 1e-2], [2.0, 1.0, 1e-1]] {
+        let mut exact = NativeGp::new();
+        assert!(exact.fit(&x, &y, n, d, hyp), "exact fit failed for {hyp:?}");
+        let nll_e = exact.nll(&y);
+        let mut lr = LowRankGp::new();
+        assert!(lr.fit(&x, &y, n, d, hyp, n), "low-rank fit failed for {hyp:?}");
+        assert_eq!(lr.inducing_count(), n, "FPS must select the full set");
+        let nll_l = lr.nll(&y);
+        assert!(
+            (nll_l - nll_e).abs() <= 1e-4 * nll_e.abs().max(1.0),
+            "hyp {hyp:?}: lowrank nll {nll_l} vs exact {nll_e}"
+        );
+    }
+}
+
+/// Tolerance-bounded pin of the low-rank marginal in its genuine
+/// approximation regime — the observation scale `nll_grid`'s low-rank
+/// routing exists for: 1500 observations against 64 inducing points,
+/// smooth targets, smooth lengthscale. The DTC marginal is a surrogate,
+/// not the exact value, so the bound is loose; hyperparameter selection
+/// only compares it across grid points.
+#[test]
+fn lowrank_nll_tolerance_bounded_at_1500_obs() {
+    let space = SearchSpace::generated(19, 1500);
+    let d = N_FEATURES;
+    let n = 1500;
+    let idx: Vec<usize> = (0..n).collect();
+    let (x, y) = obs_from_space(&space, &idx);
+    let hyp = [1.5, 1.0, 1e-1];
+    let mut exact = NativeGp::new();
+    assert!(exact.fit(&x, &y, n, d, hyp), "exact dense fit failed at n=1500");
+    let nll_e = exact.nll(&y);
+    let mut lr = LowRankGp::new();
+    assert!(lr.fit(&x, &y, n, d, hyp, 64), "low-rank fit failed at n=1500");
+    assert!(lr.inducing_count() <= 64);
+    let nll_l = lr.nll(&y);
+    assert!(nll_e.is_finite() && nll_l.is_finite(), "{nll_l} vs {nll_e}");
+    let rel = (nll_l - nll_e).abs() / nll_e.abs().max(nll_l.abs()).max(1.0);
+    assert!(
+        rel <= 0.5,
+        "lowrank marginal drifted at n=1500: {nll_l} vs exact {nll_e} (rel {rel:.3})"
+    );
 }
