@@ -5,15 +5,25 @@
 //! rank-1 Cholesky factor cache.
 //!
 //! `--smoke` (the CI mode) runs tiny sizes only and *asserts* that the
-//! incremental factor paths engage (appends/slides/reuses > 0), so the
-//! hot path cannot silently regress to scratch-fit behavior.
+//! incremental factor paths engage (appends/slides/reuses > 0), that the
+//! persistent worker pool spawns once and is reused across consecutive
+//! `nll_grid`+`decide` calls (serial below the work-size floor,
+//! bit-identical above it — including over randomized fuzz scripts),
+//! that the stage-split low-rank sweep does its `Kuu`/`B` builds once
+//! per (lengthscale, variance) group (8 for the 32-slot grid, not 32),
+//! and that the adaptive `--gp-threads` default engages on multicore
+//! hosts — so the hot path cannot silently regress on any axis.
 
 #[path = "harness.rs"]
 mod harness;
 
-use ruya::bayesopt::{backend_by_name, hyperparameter_grid, GpBackend, NativeBackend};
+use ruya::bayesopt::{
+    adaptive_gp_threads, backend_by_name, hyperparameter_grid, GpBackend, NativeBackend,
+    DECIDE_TILE, GP_POOL_MIN_OBS,
+};
 use ruya::runtime::XlaRuntime;
 use ruya::searchspace::SearchSpace;
+use ruya::testkit::{assert_parallel_parity, random_scripts};
 use ruya::util::rng::Pcg64;
 
 fn bench_backend(backend: &mut dyn GpBackend, space: &SearchSpace) {
@@ -71,12 +81,17 @@ fn incremental_sweep(space: &SearchSpace, sizes: &[usize]) {
         y.push(1.0 + rng.next_f64());
     }
     for &n in sizes {
+        // Serial on purpose: this cell isolates the algorithmic
+        // incremental-vs-scratch effect from the (adaptive-default)
+        // pool's scaling, which thread_sweep measures separately.
         let inc = harness::bench_fn(&format!("incremental grid growth (n=1..={n:2})"), || {
             let mut b = NativeBackend::new();
+            b.set_parallelism(1);
             grid_growth(&mut b, &x, &y, n, d);
         });
         let scr = harness::bench_fn(&format!("scratch     grid growth (n=1..={n:2})"), || {
             let mut b = NativeBackend::new();
+            b.set_parallelism(1);
             b.set_incremental(false);
             grid_growth(&mut b, &x, &y, n, d);
         });
@@ -125,20 +140,28 @@ fn thread_sweep(space: &SearchSpace, n: usize) {
 }
 
 /// Functional guard (always run; part of the `--smoke` contract): the
-/// worker-pool nll sweep must engage at gp-threads 8 and stay
-/// bit-identical to the serial sweep over a whole growth sequence.
+/// worker-pool nll sweep must engage at gp-threads 8 once the growth
+/// clears the serial floor, stay serial below it, and remain
+/// bit-identical to the serial sweep over the whole sequence — with the
+/// persistent pool spawned exactly once and reused by every later
+/// engaging call (nll_grid *and* a multi-tile decide).
 fn assert_parallel_sweep_engages(space: &SearchSpace) {
     let d = ruya::searchspace::N_FEATURES;
     let grid = hyperparameter_grid();
     let mut rng = Pcg64::from_seed(5);
-    let n_max = 10usize;
+    let n_max = GP_POOL_MIN_OBS + 8; // crosses the serial floor mid-growth
     let mut x = Vec::new();
     let mut y = Vec::new();
     for i in 0..n_max {
-        x.extend(space.features(i));
+        x.extend(space.features(i % space.len()));
         y.push(1.0 + rng.next_f64());
     }
+    // A three-tile candidate set so the decide fan-out engages too.
+    let m = DECIDE_TILE * 2 + 17;
+    let xc: Vec<f64> = (0..m * d).map(|i| ((i * 31 + 7) % 97) as f64 / 97.0).collect();
+    let cmask = vec![true; m];
     let mut serial = NativeBackend::new();
+    serial.set_parallelism(1);
     let mut par = NativeBackend::new();
     par.set_parallelism(8);
     for n in 1..=n_max {
@@ -150,11 +173,128 @@ fn assert_parallel_sweep_engages(space: &SearchSpace) {
                 "threaded nll[{g}] not bit-identical at n={n}: {va} vs {vb}"
             );
         }
+        if n <= GP_POOL_MIN_OBS {
+            let s = par.decide_stats();
+            assert_eq!(
+                s.parallel_nll_sweeps, 0,
+                "serial floor breached at n={n}: {s:?}"
+            );
+        }
+        let da = serial.decide(&x[..n * d], &y[..n], n, d, &xc, &cmask, m, grid[5]).unwrap();
+        let db = par.decide(&x[..n * d], &y[..n], n, d, &xc, &cmask, m, grid[5]).unwrap();
+        for j in [0usize, DECIDE_TILE - 1, DECIDE_TILE, m - 1] {
+            assert!(
+                da.ei[j].to_bits() == db.ei[j].to_bits(),
+                "threaded ei[{j}] not bit-identical at n={n}"
+            );
+        }
     }
     let s = par.decide_stats();
     assert!(s.parallel_nll_sweeps > 0, "worker-pool nll sweep never engaged: {s:?}");
+    assert!(s.parallel_decide_fanouts > 0, "decide tile fan-out never engaged: {s:?}");
+    assert!(s.serial_floor_bypasses > 0, "serial floor never applied: {s:?}");
+    assert_eq!(s.pool_creates, 1, "persistent pool must spawn exactly once: {s:?}");
+    assert!(
+        s.pool_reuses >= s.parallel_nll_sweeps + s.parallel_decide_fanouts - 1,
+        "pool not reused across consecutive nll_grid+decide calls: {s:?}"
+    );
     assert_eq!(serial.decide_stats().parallel_nll_sweeps, 0, "serial backend took the pool");
-    println!("parallel nll-sweep guard: OK ({s:?})");
+    println!("parallel nll-sweep + persistent-pool guard: OK ({s:?})");
+}
+
+/// Functional guard (always run in `--smoke`): the stage-split low-rank
+/// `nll_grid` must do its `Kuu`/`B` builds once per (lengthscale,
+/// variance) group — 8 builds for the 32-slot grid, not 32 — with one
+/// noise stage per slot, and the inducing refresh must go incremental on
+/// the appended follow-up sweep.
+fn assert_stage_split_engages(space: &SearchSpace) {
+    let d = ruya::searchspace::N_FEATURES;
+    let grid = hyperparameter_grid();
+    assert_eq!(grid.len(), 32, "the guard assumes the 32-slot grid");
+    let mut rng = Pcg64::from_seed(9);
+    let n = 24;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..=n {
+        x.extend(space.features(i % space.len()));
+        y.push(1.0 + rng.next_f64());
+    }
+    let mut b = NativeBackend::new();
+    b.set_lowrank_nll_threshold(16); // route these sweeps low-rank
+    b.nll_grid(&x[..n * d], &y[..n], n, d, &grid).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.nll_lowrank, 1, "sweep not routed low-rank: {s:?}");
+    assert_eq!(
+        s.lowrank_hyp_stage_builds, 8,
+        "stage split must build Kuu/B once per (ls, var) group (8 for the 32-slot grid): {s:?}"
+    );
+    assert_eq!(s.lowrank_noise_stage_builds, 32, "one noise stage per slot: {s:?}");
+    assert_eq!(s.fps_full_refreshes, 1, "first sweep selects inducing in full: {s:?}");
+    // One appended observation: the refresh must stay incremental.
+    b.nll_grid(&x, &y, n + 1, d, &grid).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.fps_full_refreshes, 1, "append re-ran full FPS: {s:?}");
+    assert_eq!(s.fps_incremental_refreshes, 1, "append not served incrementally: {s:?}");
+    assert_eq!(s.lowrank_hyp_stage_builds, 16, "second sweep re-uses the grouping: {s:?}");
+    println!("stage-split + incremental-inducing guard: OK ({s:?})");
+}
+
+/// Functional guard (always run in `--smoke`, and CI's dedicated
+/// `--default-threads-smoke` step): without `--gp-threads` anywhere the
+/// adaptive default must engage the pool on multicore hosts — and the
+/// serial floor must keep n <= GP_POOL_MIN_OBS sweeps poolless even
+/// then.
+fn assert_adaptive_default_and_floor(space: &SearchSpace) {
+    let d = ruya::searchspace::N_FEATURES;
+    let grid = hyperparameter_grid();
+    let mut rng = Pcg64::from_seed(13);
+    let n_big = GP_POOL_MIN_OBS + 8;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..n_big {
+        x.extend(space.features(i % space.len()));
+        y.push(1.0 + rng.next_f64());
+    }
+    let mut b = NativeBackend::new(); // no set_parallelism: the adaptive default
+    assert_eq!(b.parallelism(), adaptive_gp_threads());
+    // Below the floor: poolless, whatever the adaptive width.
+    let n_small = GP_POOL_MIN_OBS.min(n_big);
+    b.nll_grid(&x[..n_small * d], &y[..n_small], n_small, d, &grid).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.pool_creates, 0, "n <= {GP_POOL_MIN_OBS} must stay poolless: {s:?}");
+    assert_eq!(s.parallel_nll_sweeps, 0, "floored sweep went parallel: {s:?}");
+    // Past the floor: the adaptive default engages (on multicore hosts).
+    b.nll_grid(&x, &y, n_big, d, &grid).unwrap();
+    let s = b.decide_stats();
+    if adaptive_gp_threads() > 1 {
+        assert!(s.parallel_nll_sweeps > 0, "adaptive default never engaged: {s:?}");
+        assert_eq!(s.pool_creates, 1, "adaptive pool not spawned: {s:?}");
+        println!("adaptive-default guard: OK at {} lanes ({s:?})", adaptive_gp_threads());
+    } else {
+        println!("adaptive-default guard: single-core host, pool stays serial (OK)");
+    }
+}
+
+/// Functional guard (always run in `--smoke`): randomized-script fuzz —
+/// serial vs pooled must be bit-identical at 1/2/4/8 threads (the
+/// reference lane inside the harness is the 1 case) over generated
+/// append/slide/replace programs. The full 32-script corpus runs in
+/// `tests/fuzz_parity.rs`; this is the bench-smoke slice of it.
+fn assert_fuzz_parity_smoke() {
+    let grid = hyperparameter_grid();
+    for (i, script) in random_scripts(0xB1_5EED, 3).iter().enumerate() {
+        let dd = script.dim();
+        let m = 8;
+        let xc: Vec<f64> =
+            (0..m * dd).map(|j| ((j * 29 + i * 13 + 7) % 97) as f64 / 97.0).collect();
+        let make = || {
+            let mut b = NativeBackend::new();
+            b.set_pool_min_obs(0);
+            b
+        };
+        assert_parallel_parity(&make, &[2, 4, 8], script, &xc, m, &grid);
+    }
+    println!("randomized-script parity fuzz (bench smoke): OK");
 }
 
 /// Functional guard (always run; the whole point of `--smoke`): drive a
@@ -197,6 +337,13 @@ fn assert_incremental_engages(space: &SearchSpace) {
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    // CI's dedicated default-threads step: only the adaptive-default /
+    // serial-floor guard (no --gp-threads anywhere in it), fast enough
+    // to run on every push in both debug and release.
+    if std::env::args().any(|a| a == "--default-threads-smoke") {
+        assert_adaptive_default_and_floor(&SearchSpace::scout());
+        return;
+    }
     let space = SearchSpace::scout();
 
     if !smoke {
@@ -215,9 +362,13 @@ fn main() {
 
     let sizes: &[usize] = if smoke { &[8, 16] } else { &[8, 16, 24, 32, 48, 64] };
     incremental_sweep(&space, sizes);
-    thread_sweep(&space, if smoke { 16 } else { 48 });
+    // 24 > GP_POOL_MIN_OBS even in smoke mode, so the pool axis is real.
+    thread_sweep(&space, if smoke { 24 } else { 48 });
     assert_incremental_engages(&space);
     assert_parallel_sweep_engages(&space);
+    assert_stage_split_engages(&space);
+    assert_adaptive_default_and_floor(&space);
+    assert_fuzz_parity_smoke();
 
     if smoke {
         println!("\nsmoke mode: skipping the full decision-path sections");

@@ -9,11 +9,12 @@
 //!
 //! Regime note: each cell repeats `decide` on a *fixed* history, so the
 //! exact path's factor/d2 caches are warm (a cache-hit refit plus
-//! scoring) while the low-rank path re-fits from scratch every call
-//! (FPS + two u x u factorizations — it has no incremental refresh yet,
-//! see ROADMAP). This favors the exact path: in the real search loop the
-//! history grows every iteration, so the printed exact/auto speedups are
-//! a *lower bound* on the low-rank advantage.
+//! scoring) and the low-rank path's inducing cache serves every repeat
+//! from its first full selection (an Unchanged delta — the incremental
+//! refresh at its cheapest); the low-rank fit itself (two u x u
+//! factorizations) still reruns per call. In the real search loop the
+//! history grows every iteration, where the refresh's append path
+//! replaces what used to be a full O(n·u·d) re-selection per fit.
 //!
 //! `--smoke` (the CI mode) runs tiny sizes only and *asserts* the
 //! documented policy thresholds: the Nyström path engages above
@@ -199,7 +200,7 @@ fn assert_policy_thresholds() {
 fn assert_parallel_decide_engages() {
     let d = ruya::searchspace::N_FEATURES;
     let space = SearchSpace::generated(5, DECIDE_TILE + 300); // two tiles
-    let n = 12;
+    let n = 24; // past GP_POOL_MIN_OBS, so the fan-out clears the floor
     let m = space.len();
     let features = space.feature_matrix();
     let cmask = vec![true; m];
@@ -207,6 +208,7 @@ fn assert_parallel_decide_engages() {
     let hyp = [0.5, 1.0, 1e-3];
     let mut serial = NativeBackend::new();
     serial.set_lowrank_policy(LowRankPolicy::Off);
+    serial.set_parallelism(1);
     let mut par = NativeBackend::new();
     par.set_lowrank_policy(LowRankPolicy::Off);
     par.set_parallelism(4);

@@ -3,26 +3,56 @@
 //! (the deployed path). The search loop is backend-agnostic; integration
 //! tests assert both backends propose the same configurations.
 //!
-//! # Deterministic parallelism
+//! # Deterministic parallelism — on by default
 //!
-//! [`NativeBackend`] owns an optional worker pool
-//! ([`NativeBackend::set_parallelism`], CLI `--gp-threads`): the
-//! hyperparameter-grid nll sweep fans its independent [`FactorCache`]
-//! slots across `std::thread::scope` workers, and a single exact decide
-//! fans its [`DECIDE_TILE`] candidate chunks the same way. Every unit of
-//! work writes to a fixed, disjoint output slot and no floating-point
-//! reduction ever crosses units, so **results are bit-identical for any
-//! worker count** — `testkit::assert_parallel_parity` and the CI
-//! determinism stress test pin nll grids, posteriors, EI and the chosen
-//! argmax across `--gp-threads` 1/2/4/8. [`DecideStats`] counters
-//! (`parallel_nll_sweeps`, `parallel_decide_fanouts`, `nll_exact`,
-//! `nll_lowrank`) make the routing observable.
+//! [`NativeBackend`] owns a lazily-created **persistent** worker pool
+//! ([`super::pool::WorkerPool`]): the hyperparameter-grid nll sweep fans
+//! its independent [`FactorCache`] slots (or, past the low-rank routing
+//! threshold, its (lengthscale, variance) stage groups) across the pool
+//! lanes, and a single exact decide fans its [`DECIDE_TILE`] candidate
+//! chunks the same way. Every unit of work writes to a fixed, disjoint
+//! output slot and no floating-point reduction ever crosses units, so
+//! **results are bit-identical for any worker count** —
+//! `testkit::assert_parallel_parity`, the CI determinism stress test and
+//! the randomized script fuzz (`tests/fuzz_parity.rs`) pin nll grids,
+//! posteriors, EI and the chosen argmax across `--gp-threads` 1/2/4/8.
+//!
+//! # Pool lifecycle
+//!
+//! * **Width**: `--gp-threads N` / [`NativeBackend::set_parallelism`];
+//!   `0` (the CLI default) resolves to [`adaptive_gp_threads`] — the
+//!   machine's `available_parallelism` capped at
+//!   [`MAX_ADAPTIVE_GP_THREADS`] (the grid sweep has only 8 fan-out
+//!   groups, so wider pools cannot help it). The parallel sweep is
+//!   therefore **on by default** on multicore hosts.
+//! * **Creation**: lazy — the pool spawns on the first fan-out whose
+//!   work clears the serial floor, then persists across calls (and BO
+//!   iterations) with reusable per-lane scratch
+//!   ([`super::pool::LaneScratch`]). Changing the width drops and
+//!   lazily respawns it; dropping the backend joins the workers.
+//! * **Serial floor**: grid sweeps over `n <=` [`GP_POOL_MIN_OBS`]
+//!   observations stay serial — at that size the per-call handoff
+//!   overhead exceeds the O(n²) slot work, so tiny scout-scale runs
+//!   never regress; decide fan-outs use the column-scaled equivalent
+//!   (`n·m` against a floor-sized tile), since their work grows with
+//!   the candidate count (override via
+//!   [`NativeBackend::set_pool_min_obs`]).
+//!
+//! [`DecideStats`] counters make all of it observable: routing
+//! (`nll_exact`/`nll_lowrank`), fan-outs (`parallel_nll_sweeps`,
+//! `parallel_decide_fanouts`), pool lifecycle (`pool_creates`,
+//! `pool_reuses`, `serial_floor_bypasses`), inducing refreshes
+//! (`fps_full_refreshes`/`fps_incremental_refreshes`) and the low-rank
+//! stage split (`lowrank_hyp_stage_builds`/`lowrank_noise_stage_builds`).
 
 use super::chol::{FactorCache, FactorCacheStats, FitPlan, ObsDelta, SlotTask};
 use super::gp::{
     expected_improvement, matern52_from_d2, matern52_gram_from_d2, predict_into,
 };
-use super::lowrank::{farthest_point_sample, LowRankGp, DEFAULT_MAX_INDUCING};
+use super::lowrank::{
+    InducingCache, LowRankGp, LowRankStats, DEFAULT_MAX_INDUCING,
+};
+use super::pool::WorkerPool;
 use crate::runtime::{GpExecutor, XlaRuntime};
 use anyhow::Result;
 
@@ -62,6 +92,34 @@ pub const LOWRANK_NLL_OBS_THRESHOLD: usize = 2048;
 /// threads (each tile owns a fixed disjoint output range).
 pub const DECIDE_TILE: usize = 1024;
 
+/// Observation count at or below which a grid nll sweep stays serial
+/// even with a multi-lane pool configured (the work-size floor of the
+/// module docs): a 32-slot sweep at n = 16 is ~32·256 flops of slot
+/// work — comfortably below the per-call pool handoff cost — while the
+/// floor still admits every window the paper's searches actually reach.
+/// `decide`, whose work scales with the candidate count, uses the
+/// column-scaled equivalent (`n·m <= GP_POOL_MIN_OBS · DECIDE_TILE`),
+/// so a huge catalog fans out even over a short history. Override per
+/// backend via [`NativeBackend::set_pool_min_obs`].
+pub const GP_POOL_MIN_OBS: usize = 16;
+
+/// Cap on the adaptive `--gp-threads` default: the grid nll sweep fans
+/// whole (lengthscale, variance) groups and the selection grid has 8 of
+/// them, so lanes beyond 8 can never receive exact-sweep work.
+pub const MAX_ADAPTIVE_GP_THREADS: usize = 8;
+
+/// The adaptive GP worker-pool width: `std::thread::available_parallelism`
+/// capped at [`MAX_ADAPTIVE_GP_THREADS`] (1 when the host count is
+/// unavailable). This is what `--gp-threads 0` — the CLI default — and
+/// [`NativeBackend::set_parallelism`]`(0)` resolve to, making the
+/// parallel sweep on by default without oversubscribing small hosts.
+pub fn adaptive_gp_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_ADAPTIVE_GP_THREADS)
+}
+
 /// How [`NativeBackend`] chooses between the exact and the Nyström
 /// low-rank posterior when scoring candidates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -99,6 +157,32 @@ pub struct DecideStats {
     pub parallel_nll_sweeps: u64,
     /// Decides whose tiles fanned out across the worker pool.
     pub parallel_decide_fanouts: u64,
+    /// Persistent pools spawned (lazy creation or width change).
+    pub pool_creates: u64,
+    /// Fan-outs served by an already-running pool — the persistence win.
+    pub pool_reuses: u64,
+    /// Fan-outs that stayed serial under the work-size floor
+    /// ([`GP_POOL_MIN_OBS`]) despite a multi-lane pool being configured.
+    pub serial_floor_bypasses: u64,
+    /// Full farthest-point inducing re-selections (first sight,
+    /// wholesale replace, cap change, or the drift bound).
+    pub fps_full_refreshes: u64,
+    /// Incremental inducing refreshes (append/slide/unchanged served
+    /// from the cached selection).
+    pub fps_incremental_refreshes: u64,
+    /// Low-rank hyperparameter-stage builds (`Kuu`/`B`/`BBᵀ` work) —
+    /// one per (lengthscale, variance) group under the stage split.
+    pub lowrank_hyp_stage_builds: u64,
+    /// Low-rank noise-stage builds (`Lm`/weights) — one per grid point.
+    pub lowrank_noise_stage_builds: u64,
+}
+
+impl DecideStats {
+    /// Fold a [`LowRankGp`]'s stage counters into the backend totals.
+    fn absorb_lowrank(&mut self, s: LowRankStats) {
+        self.lowrank_hyp_stage_builds += s.hyp_builds;
+        self.lowrank_noise_stage_builds += s.noise_builds;
+    }
 }
 
 /// Posterior + acquisition over all candidates for one search iteration.
@@ -162,32 +246,37 @@ fn hyp_group_key(hyp: [f64; 3]) -> (u64, u64) {
     (hyp[0].to_bits(), hyp[1].to_bits())
 }
 
-/// Deal whole work groups round-robin across `workers` scoped threads —
-/// the single fan-out scaffold behind the exact nll sweep, the low-rank
-/// nll sweep and the decide tile fan-out. Group `g` lands in lane
-/// `g % workers`, in order, so the assignment is a pure function of the
-/// group list and the worker count; every item writes only its own
-/// caller-disjoint outputs. Those two properties are the whole
-/// bit-identical-for-any-worker-count contract, kept in one place so a
-/// future change cannot drift between the three call sites.
-fn fan_out_groups<T: Send, F>(groups: Vec<Vec<T>>, workers: usize, work: F)
-where
-    F: Fn(Vec<T>) + Sync,
-{
-    // Never spawn more lanes than there are groups: an empty lane still
-    // costs a thread spawn (the exact sweep has only 8 (ls,var) groups
-    // however wide the pool is).
-    let workers = workers.min(groups.len()).max(1);
-    let mut lanes: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
-    for (g, group) in groups.into_iter().enumerate() {
-        lanes[g % workers].extend(group);
-    }
-    let work = &work;
-    std::thread::scope(|scope| {
-        for lane in lanes {
-            scope.spawn(move || work(lane));
+/// Grid indices grouped by [`hyp_group_key`], groups in ascending key
+/// order — THE grouping of the stage-shared sweeps (the fan-out unit
+/// count for pool engagement, the low-rank stage-split groups, and the
+/// contract the exact pooled sweep's task sort mirrors on its
+/// [`SlotTask`]s). One definition so the engagement unit count can
+/// never drift from the groups actually fanned out.
+fn group_grid_indices(grid: &[[f64; 3]]) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..grid.len()).collect();
+    order.sort_by_key(|&g| hyp_group_key(grid[g]));
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut last_key = None;
+    for g in order {
+        let key = hyp_group_key(grid[g]);
+        if last_key != Some(key) {
+            groups.push(Vec::new());
+            last_key = Some(key);
         }
-    });
+        groups.last_mut().expect("group pushed above").push(g);
+    }
+    groups
+}
+
+/// [`group_grid_indices`]'s count-only twin for the per-iteration exact
+/// sweep: one flat sort+dedup, no nested group materialization (the
+/// exact path only needs the unit count for pool engagement — its
+/// fan-out groups the planned [`SlotTask`]s by the same key).
+fn distinct_group_count(grid: &[[f64; 3]]) -> usize {
+    let mut keys: Vec<(u64, u64)> = grid.iter().map(|&h| hyp_group_key(h)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys.len()
 }
 
 /// Bring one planned slot up to date from the shared distance matrix,
@@ -315,8 +404,17 @@ pub struct NativeBackend {
     ks_scratch: Vec<f64>,
     acc_scratch: Vec<f64>,
     /// Worker-pool width for the grid nll sweep and the decide tile
-    /// fan-out; 1 = fully serial.
+    /// fan-out; 1 = fully serial. Defaults to [`adaptive_gp_threads`].
     gp_threads: usize,
+    /// The lazily-created persistent worker pool (None until the first
+    /// fan-out clears the serial floor; dropped on width change).
+    pool: Option<WorkerPool>,
+    /// Observation floor below which fan-outs stay serial
+    /// ([`GP_POOL_MIN_OBS`]; settable for tests and benches).
+    pool_min_obs: usize,
+    /// The inducing-set selection kept alive across BO iterations —
+    /// shared by the low-rank decide and nll paths.
+    inducing: InducingCache,
     /// `nll_grid` switches to the low-rank marginal above this many
     /// observations (default [`LOWRANK_NLL_OBS_THRESHOLD`]).
     nll_lowrank_min_obs: usize,
@@ -340,7 +438,10 @@ impl Default for NativeBackend {
             alpha_scratch: Vec::new(),
             ks_scratch: Vec::new(),
             acc_scratch: Vec::new(),
-            gp_threads: 1,
+            gp_threads: adaptive_gp_threads(),
+            pool: None,
+            pool_min_obs: GP_POOL_MIN_OBS,
+            inducing: InducingCache::new(),
             nll_lowrank_min_obs: LOWRANK_NLL_OBS_THRESHOLD,
         }
     }
@@ -363,20 +464,64 @@ impl NativeBackend {
     }
 
     /// Worker-pool width for the grid nll sweep and the decide tile
-    /// fan-out (CLI `--gp-threads`; default 1 = serial, floored at 1).
-    /// Outputs are bit-identical for every value — the module docs'
-    /// deterministic-parallelism contract. Workers are scoped threads
-    /// spawned per call (~tens of µs), so the knob pays off on large
-    /// windows and multi-tile candidate sets; on tiny scout-scale
-    /// sweeps the spawn overhead can exceed the O(n²) slot work (a
-    /// persistent pool / work-size floor is a ROADMAP item).
+    /// fan-out (CLI `--gp-threads`; default [`adaptive_gp_threads`],
+    /// which `0` also resolves to). Outputs are bit-identical for every
+    /// value — the module docs' deterministic-parallelism contract.
+    /// Workers live in a lazily-created persistent pool (see the module
+    /// docs' *Pool lifecycle*); changing the width drops the running
+    /// pool so the next engaging fan-out respawns it at the new width.
     pub fn set_parallelism(&mut self, threads: usize) {
-        self.gp_threads = threads.max(1);
+        let threads = if threads == 0 { adaptive_gp_threads() } else { threads };
+        if threads != self.gp_threads {
+            self.pool = None;
+        }
+        self.gp_threads = threads;
     }
 
     /// The configured worker-pool width.
     pub fn parallelism(&self) -> usize {
         self.gp_threads
+    }
+
+    /// Observation floor below which fan-outs stay serial (default
+    /// [`GP_POOL_MIN_OBS`]; parity tests and benches lower it to 0 to
+    /// exercise the pool at tiny sizes).
+    pub fn set_pool_min_obs(&mut self, n: usize) {
+        self.pool_min_obs = n;
+    }
+
+    /// Decide whether a fan-out of `units` work groups over `n`
+    /// observations runs on the pool, creating or reusing it as needed
+    /// (and counting every outcome in [`DecideStats`]). True means
+    /// `self.pool` is `Some` and sized to the configured width. The
+    /// grid sweeps gate on the observation floor directly; `decide`
+    /// gates on its column-scaled equivalent ([`Self::engage_pool_gated`]).
+    fn engage_pool(&mut self, units: usize, n: usize) -> bool {
+        let below_floor = n <= self.pool_min_obs;
+        self.engage_pool_gated(units, below_floor)
+    }
+
+    /// The shared pool-engagement body: `below_floor` is the caller's
+    /// work-size judgement (counted as a bypass when it blocks an
+    /// otherwise-eligible fan-out).
+    fn engage_pool_gated(&mut self, units: usize, below_floor: bool) -> bool {
+        if self.gp_threads <= 1 || units <= 1 {
+            return false;
+        }
+        if below_floor {
+            self.decide_stats.serial_floor_bypasses += 1;
+            return false;
+        }
+        match &self.pool {
+            Some(p) if p.width() == self.gp_threads => {
+                self.decide_stats.pool_reuses += 1;
+            }
+            _ => {
+                self.pool = Some(WorkerPool::new(self.gp_threads));
+                self.decide_stats.pool_creates += 1;
+            }
+        }
+        true
     }
 
     /// Observation count above which `nll_grid` uses the Woodbury
@@ -427,9 +572,25 @@ impl NativeBackend {
         }
         match self.lowrank_policy {
             LowRankPolicy::Off => None,
-            LowRankPolicy::Force { max_inducing } => Some(max_inducing.clamp(1, n)),
+            // No n-clamp here: the inducing cache keys on the *requested*
+            // cap (selection clamps internally), so decide and nll_grid
+            // asking for the same cap share one cached selection.
+            LowRankPolicy::Force { max_inducing } => Some(max_inducing.max(1)),
             LowRankPolicy::Auto => Some(DEFAULT_MAX_INDUCING),
         }
+    }
+
+    /// Refresh the shared inducing-set cache for the current rows and
+    /// cap, counting the outcome, and return the selection (cloned: the
+    /// callers immediately hand it to fits that borrow `self` again).
+    fn refresh_inducing(&mut self, x: &[f64], n: usize, d: usize, cap: usize) -> Vec<usize> {
+        let (sel, full) = self.inducing.refresh(x, n, d, cap.max(1));
+        if full {
+            self.decide_stats.fps_full_refreshes += 1;
+        } else {
+            self.decide_stats.fps_incremental_refreshes += 1;
+        }
+        sel.to_vec()
     }
 
     /// Ensure `self.d2` holds the pairwise squared distances of `x`, and
@@ -445,52 +606,48 @@ impl NativeBackend {
     /// [`ObsDelta`] drives the [`FactorCache`] plans.
     fn update_d2(&mut self, x: &[f64], n: usize, d: usize) -> ObsDelta {
         debug_assert_eq!(x.len(), n * d);
-        let (pn, pd) = (self.cache_n, self.cache_d);
-        let appended_one = pd == d && n == pn + 1 && x[..pn * d] == self.cache_x[..];
-        let slid_one =
-            pd == d && n == pn && n > 0 && x[..(n - 1) * d] == self.cache_x[d..];
-        if pd == d && pn == n && self.cache_x.as_slice() == x {
-            return ObsDelta::Unchanged; // exact hit (e.g. `decide` right after `nll_grid`)
-        } else if appended_one || slid_one {
-            let old = n - 1; // rows of the previous matrix that survive
-            // Build into the swap buffer (reads come from the old d2),
-            // keeping the steady-state iteration allocation-free.
-            let mut d2 = std::mem::take(&mut self.d2_swap);
-            d2.clear();
-            d2.resize(n * n, 0.0);
-            if appended_one {
-                for i in 0..old {
-                    d2[i * n..i * n + old].copy_from_slice(&self.d2[i * pn..i * pn + old]);
-                }
-            } else {
-                for i in 0..old {
-                    for j in 0..old {
-                        d2[i * n + j] = self.d2[(i + 1) * n + (j + 1)];
+        // The shared delta detector — the same classification the
+        // inducing-set cache keys on (see `ObsDelta::classify`).
+        let delta =
+            ObsDelta::classify(&self.cache_x, self.cache_n, self.cache_d, x, n, d);
+        match delta {
+            // Exact hit (e.g. `decide` right after `nll_grid`).
+            ObsDelta::Unchanged => return ObsDelta::Unchanged,
+            ObsDelta::Appended | ObsDelta::Slid => {
+                let pn = self.cache_n;
+                let old = n - 1; // rows of the previous matrix that survive
+                // Build into the swap buffer (reads come from the old d2),
+                // keeping the steady-state iteration allocation-free.
+                let mut d2 = std::mem::take(&mut self.d2_swap);
+                d2.clear();
+                d2.resize(n * n, 0.0);
+                if delta == ObsDelta::Appended {
+                    for i in 0..old {
+                        d2[i * n..i * n + old]
+                            .copy_from_slice(&self.d2[i * pn..i * pn + old]);
+                    }
+                } else {
+                    for i in 0..old {
+                        for j in 0..old {
+                            d2[i * n + j] = self.d2[(i + 1) * n + (j + 1)];
+                        }
                     }
                 }
-            }
-            let i = n - 1;
-            for j in 0..i {
-                let mut s = 0.0;
-                for k in 0..d {
-                    let diff = x[i * d + k] - x[j * d + k];
-                    s += diff * diff;
+                let i = n - 1;
+                for j in 0..i {
+                    let mut s = 0.0;
+                    for k in 0..d {
+                        let diff = x[i * d + k] - x[j * d + k];
+                        s += diff * diff;
+                    }
+                    d2[i * n + j] = s;
+                    d2[j * n + i] = s;
                 }
-                d2[i * n + j] = s;
-                d2[j * n + i] = s;
+                std::mem::swap(&mut self.d2, &mut d2);
+                self.d2_swap = d2;
             }
-            std::mem::swap(&mut self.d2, &mut d2);
-            self.d2_swap = d2;
-        } else {
-            super::gp::pairwise_sqdist(x, n, d, &mut self.d2);
+            ObsDelta::Replaced => super::gp::pairwise_sqdist(x, n, d, &mut self.d2),
         }
-        let delta = if appended_one {
-            ObsDelta::Appended
-        } else if slid_one {
-            ObsDelta::Slid
-        } else {
-            ObsDelta::Replaced
-        };
         self.cache_x.clear();
         self.cache_x.extend_from_slice(x);
         self.cache_n = n;
@@ -533,11 +690,17 @@ impl NativeBackend {
     }
 
     /// Per-grid-point DTC marginal likelihood ([`LowRankGp::nll`],
-    /// Woodbury form): O(H·(n·u² + n·u·d)) total and no n×n
-    /// intermediates — the path that keeps hyperparameter selection
-    /// feasible past a few thousand observations. Grid points are
-    /// independent pure computations writing to fixed slots, so the
-    /// worker-pool fan-out is bit-identical to the serial loop.
+    /// Woodbury form) under the stage split: grid points sharing a
+    /// (lengthscale, variance) pair run one [`LowRankGp::fit_hyp_stage`]
+    /// (all the kernel/GEMM work) and per-σ² [`LowRankGp::fit_noise_stage`]s
+    /// — O(G·(n·u² + n·u·d) + H·u³) total instead of O(H·(n·u² + n·u·d))
+    /// for G groups of H grid points, and no n×n intermediates. The
+    /// inducing set comes from the incremental [`InducingCache`] instead
+    /// of a per-call farthest-point re-selection. Groups are independent
+    /// pure computations writing to fixed slots, so the worker-pool
+    /// fan-out is bit-identical to the serial loop — and both are
+    /// bit-identical to an unsplit per-point evaluation
+    /// (`tests/prop_lowrank.rs`).
     fn nll_grid_lowrank(
         &mut self,
         x: &[f64],
@@ -548,33 +711,70 @@ impl NativeBackend {
         max_inducing: usize,
     ) -> Vec<f64> {
         let mut out = vec![f64::INFINITY; grid.len()];
-        // Farthest-point selection depends only on the rows, not the
-        // hyperparameters: select once and share the set across the
+        // Inducing selection depends only on the rows, not the
+        // hyperparameters: refresh once and share the set across the
         // whole grid (and across the worker lanes).
-        let inducing = farthest_point_sample(x, n, d, max_inducing.max(1));
+        let inducing = self.refresh_inducing(x, n, d, max_inducing);
         let ind = &inducing[..];
-        let workers = self.gp_threads.min(grid.len()).max(1);
-        if workers <= 1 {
-            for (gi, &hyp) in grid.iter().enumerate() {
-                if self.lowrank.fit_with_inducing(x, y, n, d, hyp, ind) {
-                    out[gi] = self.lowrank.nll(y);
+
+        // Group grid indices by (lengthscale, variance) — the stage-
+        // split fan-out unit (the shared grouping definition).
+        let groups_idx = group_grid_indices(grid);
+
+        if !self.engage_pool(groups_idx.len(), n) {
+            for group in &groups_idx {
+                let head = grid[group[0]];
+                if !self.lowrank.fit_hyp_stage(x, y, n, d, head[0], head[1], ind) {
+                    continue;
                 }
-            }
-        } else {
-            self.decide_stats.parallel_nll_sweeps += 1;
-            let groups: Vec<Vec<(usize, &mut f64)>> = out
-                .iter_mut()
-                .enumerate()
-                .map(|(gi, slot)| vec![(gi, slot)])
-                .collect();
-            fan_out_groups(groups, workers, |lane| {
-                let mut lr = LowRankGp::new();
-                for (gi, slot) in lane {
-                    if lr.fit_with_inducing(x, y, n, d, grid[gi], ind) {
-                        *slot = lr.nll(y);
+                for &gi in group {
+                    if self.lowrank.fit_noise_stage(grid[gi][2]) {
+                        out[gi] = self.lowrank.nll(y);
                     }
                 }
+            }
+            let stats = self.lowrank.take_stats();
+            self.decide_stats.absorb_lowrank(stats);
+        } else {
+            self.decide_stats.parallel_nll_sweeps += 1;
+            // One fan-out unit per (ls, var) group, each carrying its
+            // out-slots and a group-local stage-counter slot; lanes run
+            // the identical two-stage body against their persistent
+            // LaneScratch LowRankGp.
+            let mut group_stats = vec![LowRankStats::default(); groups_idx.len()];
+            let mut slot_refs: Vec<Option<&mut f64>> = out.iter_mut().map(Some).collect();
+            let units: Vec<Vec<(Vec<(usize, &mut f64)>, &mut LowRankStats)>> = groups_idx
+                .iter()
+                .zip(group_stats.iter_mut())
+                .map(|(group, gs)| {
+                    let items: Vec<(usize, &mut f64)> = group
+                        .iter()
+                        .map(|&gi| {
+                            (gi, slot_refs[gi].take().expect("grid index grouped twice"))
+                        })
+                        .collect();
+                    vec![(items, gs)]
+                })
+                .collect();
+            let pool = self.pool.as_ref().expect("engage_pool ensured the pool");
+            pool.run_groups(units, |lane, scratch| {
+                for (items, gs) in lane {
+                    let lr = &mut scratch.lowrank;
+                    lr.take_stats(); // group-local counting
+                    let head = grid[items[0].0];
+                    if lr.fit_hyp_stage(x, y, n, d, head[0], head[1], ind) {
+                        for (gi, slot) in items {
+                            if lr.fit_noise_stage(grid[gi][2]) {
+                                *slot = lr.nll(y);
+                            }
+                        }
+                    }
+                    *gs = lr.take_stats();
+                }
             });
+            for gs in group_stats {
+                self.decide_stats.absorb_lowrank(gs);
+            }
         }
         out
     }
@@ -596,11 +796,17 @@ impl GpBackend for NativeBackend {
 
         // Large-space path: Nyström low-rank posterior, per-candidate
         // cost independent of n (see LOWRANK_CANDIDATE_THRESHOLD /
-        // LowRankPolicy). The factor cache is untouched — nll_grid keeps
-        // maintaining it, and its own update_d2 call still sees the
-        // append/slide deltas of the search loop.
+        // LowRankPolicy). The inducing set comes from the shared
+        // incremental cache (a decide right after nll_grid reuses the
+        // identical selection). The factor cache is untouched — nll_grid
+        // keeps maintaining it, and its own update_d2 call still sees
+        // the append/slide deltas of the search loop.
         if let Some(max_inducing) = self.lowrank_limit(n, m) {
-            if self.lowrank.fit(x, y, n, d, hyp, max_inducing) {
+            let inducing = self.refresh_inducing(x, n, d, max_inducing);
+            let fitted = self.lowrank.fit_with_inducing(x, y, n, d, hyp, &inducing);
+            let stats = self.lowrank.take_stats();
+            self.decide_stats.absorb_lowrank(stats);
+            if fitted {
                 self.decide_stats.lowrank += 1;
                 let mut mu = Vec::with_capacity(m);
                 let mut var = Vec::with_capacity(m);
@@ -624,6 +830,21 @@ impl GpBackend for NativeBackend {
             .ok_or_else(|| anyhow::anyhow!("gram matrix not SPD"))?;
         self.decide_stats.exact += 1;
 
+        // Engagement is decided before the factor borrow below: the
+        // pool (a disjoint field) is created/reused here, so the fan-out
+        // branch only needs immutable access to it and to the factor.
+        // Decide work scales with the candidate count, not just the
+        // observation count, so the floor is column-scaled: a fan-out is
+        // "tiny" only when the whole n x m cross block is no bigger than
+        // a floor-sized history against one tile — a 100k-candidate
+        // catalog fans out even during the earliest iterations.
+        let tiles = m.div_ceil(DECIDE_TILE);
+        let below_floor = n * m <= self.pool_min_obs * DECIDE_TILE;
+        let pooled = self.engage_pool_gated(tiles, below_floor);
+        if pooled {
+            self.decide_stats.parallel_decide_fanouts += 1;
+        }
+
         // Borrow the cached packed factor — no clone into a GP: the
         // decide weights alpha = (L Lᵀ)⁻¹ y are solved against it in
         // place, then candidates stream through `predict_into` in
@@ -637,15 +858,15 @@ impl GpBackend for NativeBackend {
 
         let mut mu = vec![0.0; m];
         let mut var = vec![0.0; m];
-        let tiles = m.div_ceil(DECIDE_TILE);
-        let workers = self.gp_threads.min(tiles);
-        if workers > 1 {
-            self.decide_stats.parallel_decide_fanouts += 1;
-            // Tiles are dealt round-robin to the worker lanes; each tile
+        if pooled {
+            // Tiles are dealt round-robin to the pool lanes; each tile
             // writes its own fixed, disjoint output range and per-column
             // arithmetic is independent of the tiling, so the fan-out is
             // bit-identical to the serial tile loop for every worker
-            // count (module docs).
+            // count (module docs). Lanes predict through their
+            // persistent LaneScratch buffers (fully overwritten per
+            // tile).
+            let pool = self.pool.as_ref().expect("engage_pool ensured the pool");
             let alpha_ref = &alpha[..];
             let groups: Vec<Vec<(usize, &mut [f64], &mut [f64])>> = mu
                 .chunks_mut(DECIDE_TILE)
@@ -653,8 +874,7 @@ impl GpBackend for NativeBackend {
                 .enumerate()
                 .map(|(t, (mu_c, var_c))| vec![(t, mu_c, var_c)])
                 .collect();
-            fan_out_groups(groups, workers, |lane| {
-                let (mut ks, mut acc) = (Vec::new(), Vec::new());
+            pool.run_groups(groups, |lane, scratch| {
                 for (t, mu_c, var_c) in lane {
                     let start = t * DECIDE_TILE;
                     let w = mu_c.len();
@@ -669,8 +889,8 @@ impl GpBackend for NativeBackend {
                         w,
                         mu_c,
                         var_c,
-                        &mut ks,
-                        &mut acc,
+                        &mut scratch.ks,
+                        &mut scratch.acc,
                     );
                 }
             });
@@ -738,6 +958,11 @@ impl GpBackend for NativeBackend {
         // across the worker pool with bit-identical results.
         let delta = self.update_d2(x, n, d);
         self.factors.note_delta(delta);
+        // Fan-out units are whole (lengthscale, variance) groups; their
+        // count is a pure function of the grid (the shared grouping
+        // definition), so the pool decision happens before the
+        // factor-cache borrow below.
+        let pooled = self.engage_pool(distinct_group_count(grid), n);
         let (mut tasks, map) = self.factors.plan_grid(grid, n);
         if self.incremental_off {
             for t in tasks.iter_mut() {
@@ -745,8 +970,7 @@ impl GpBackend for NativeBackend {
             }
         }
         let mut nlls = vec![f64::INFINITY; tasks.len()];
-        let workers = self.gp_threads.min(tasks.len()).max(1);
-        if workers <= 1 {
+        if !pooled {
             // Serial sweep in (lengthscale, variance) order so the 4
             // noise levels per lengthscale share one cross-row / Gram
             // build through the backend's persistent scratch.
@@ -771,7 +995,10 @@ impl GpBackend for NativeBackend {
             // tasks sharing a cross-row / Gram build stay on one lane,
             // and every task writes its nll to a fixed slot — no
             // reduction whose order could vary (see the deterministic-
-            // reduction contract in chol's module docs).
+            // reduction contract in chol's module docs). The sort below
+            // mirrors `group_grid_indices` on the planned SlotTasks
+            // (same `hyp_group_key`), so the group count used for pool
+            // engagement above matches the groups formed here.
             let mut items: Vec<(&mut SlotTask<'_>, &mut f64)> =
                 tasks.iter_mut().zip(nlls.iter_mut()).collect();
             items.sort_by_key(|(t, _)| hyp_group_key(t.hyp()));
@@ -786,8 +1013,11 @@ impl GpBackend for NativeBackend {
                 groups.last_mut().expect("group pushed above").push(item);
             }
             let d2 = &self.d2;
-            fan_out_groups(groups, workers, |lane| {
-                let (mut row, mut gram) = (Vec::new(), Vec::new());
+            let pool = self.pool.as_ref().expect("engage_pool ensured the pool");
+            pool.run_groups(groups, |lane, scratch| {
+                // Memo keys are re-seeded per fan-out — the persistent
+                // lane buffers are only trusted when the keys match, so
+                // scratch from a previous call can never leak in.
                 let (mut row_key, mut gram_key) =
                     ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
                 for (task, out) in lane {
@@ -796,8 +1026,8 @@ impl GpBackend for NativeBackend {
                         d2,
                         y,
                         n,
-                        &mut row,
-                        &mut gram,
+                        &mut scratch.row,
+                        &mut scratch.gram,
                         &mut row_key,
                         &mut gram_key,
                     );
@@ -906,21 +1136,24 @@ pub fn backend_by_name(name: &str) -> Result<Box<dyn GpBackend>> {
 
 /// Backend *factory* selection by name — the parallel experiment engine
 /// instantiates one backend per worker thread from this. Equivalent to
-/// [`backend_factory_with_parallelism`] with a serial GP worker pool.
+/// [`backend_factory_with_parallelism`] with a serial GP worker pool
+/// (deliberately: the engine multiplies backends by `--threads` workers,
+/// so per-backend pools are opted into explicitly, not defaulted).
 pub fn backend_factory_by_name(name: &str) -> Result<BackendFactory> {
     backend_factory_with_parallelism(name, 1)
 }
 
 /// Backend factory with an explicit GP worker-pool width (CLI
-/// `--gp-threads`): every native backend the factory produces has
+/// `--gp-threads`; `0` resolves to [`adaptive_gp_threads`], the CLI
+/// default): every native backend the factory produces has
 /// [`NativeBackend::set_parallelism`] applied, so each evaluation
 /// worker's backend fans its grid sweep and decide tiles across its own
-/// pool. The XLA backend has no tunable internal parallelism — the knob
-/// is ignored there. Name validation is shared with [`backend_by_name`]
-/// through [`BackendKind::parse`]; the xla arm additionally probes the
-/// artifacts so an obviously bad configuration fails at startup, while
-/// the expensive PJRT client creation + artifact compilation happens
-/// once per worker, inside the worker.
+/// persistent pool. The XLA backend has no tunable internal parallelism
+/// — the knob is ignored there. Name validation is shared with
+/// [`backend_by_name`] through [`BackendKind::parse`]; the xla arm
+/// additionally probes the artifacts so an obviously bad configuration
+/// fails at startup, while the expensive PJRT client creation +
+/// artifact compilation happens once per worker, inside the worker.
 pub fn backend_factory_with_parallelism(
     name: &str,
     gp_threads: usize,
@@ -990,7 +1223,16 @@ mod tests {
     #[test]
     fn default_impls_are_usable() {
         assert_eq!(NativeBackend::default().name(), "native");
-        assert_eq!(NativeBackend::default().parallelism(), 1);
+        // The default pool width is adaptive (available_parallelism
+        // capped at MAX_ADAPTIVE_GP_THREADS), never zero.
+        assert_eq!(NativeBackend::default().parallelism(), adaptive_gp_threads());
+        assert!(NativeBackend::default().parallelism() >= 1);
+        assert!(adaptive_gp_threads() <= MAX_ADAPTIVE_GP_THREADS);
+        // set_parallelism(0) re-resolves to the adaptive width.
+        let mut b = NativeBackend::default();
+        b.set_parallelism(3);
+        b.set_parallelism(0);
+        assert_eq!(b.parallelism(), adaptive_gp_threads());
         assert_eq!(crate::bayesopt::gp::NativeGp::default().n_obs(), 0);
     }
 
@@ -1047,13 +1289,113 @@ mod tests {
         let grid = crate::bayesopt::hyperparameter_grid();
         b.nll_grid(&x, &y, 3, d, &grid).unwrap();
         // The trait object hides NativeBackend; rebuild one directly to
-        // check the counter wiring end to end.
+        // check the counter wiring end to end (floor lowered so the
+        // 3-observation sweep engages the pool).
         let mut nb = NativeBackend::new();
         nb.set_parallelism(4);
+        nb.set_pool_min_obs(0);
         nb.nll_grid(&x, &y, 3, d, &grid).unwrap();
         assert_eq!(nb.parallelism(), 4);
         assert_eq!(nb.decide_stats().parallel_nll_sweeps, 1);
         assert_eq!(nb.decide_stats().nll_exact, 1);
+        assert_eq!(nb.decide_stats().pool_creates, 1);
+    }
+
+    #[test]
+    fn pool_persists_and_follows_width_changes() {
+        // The persistent pool spawns once, is reused across consecutive
+        // nll_grid + decide calls, and is dropped/respawned on a width
+        // change — all observable through the lifecycle counters.
+        let d = 3;
+        let n = GP_POOL_MIN_OBS + 8; // clears the serial floor
+        let (x, y, _) = synth(n, 4, d);
+        let m = DECIDE_TILE * 2 + 9; // three tiles: the decide fans too
+        let (_, _, xc) = synth(n, m, d);
+        let cmask = vec![true; m];
+        let grid = crate::bayesopt::hyperparameter_grid();
+        let mut b = NativeBackend::new();
+        b.set_lowrank_policy(LowRankPolicy::Off);
+        b.set_parallelism(4);
+        b.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s = b.decide_stats();
+        assert_eq!(s.pool_creates, 1, "first engaging sweep must spawn the pool: {s:?}");
+        assert_eq!(s.pool_reuses, 0);
+        b.decide(&x, &y, n, d, &xc, &cmask, m, grid[5]).unwrap();
+        b.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s = b.decide_stats();
+        assert_eq!(s.pool_creates, 1, "later fan-outs must reuse the pool: {s:?}");
+        assert_eq!(s.pool_reuses, 2, "decide + second sweep both reuse: {s:?}");
+        assert_eq!(s.parallel_nll_sweeps, 2);
+        assert_eq!(s.parallel_decide_fanouts, 1);
+        // Width change: the old pool is dropped, the next fan-out
+        // respawns at the new width.
+        b.set_parallelism(2);
+        b.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s = b.decide_stats();
+        assert_eq!(s.pool_creates, 2, "width change must respawn the pool: {s:?}");
+    }
+
+    #[test]
+    fn serial_floor_keeps_small_sweeps_poolless() {
+        let d = 3;
+        let grid = crate::bayesopt::hyperparameter_grid();
+        let n = GP_POOL_MIN_OBS; // at the floor: must stay serial
+        let (x, y, _) = synth(n, 4, d);
+        let mut b = NativeBackend::new();
+        b.set_parallelism(8);
+        b.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s = b.decide_stats();
+        assert_eq!(s.parallel_nll_sweeps, 0, "floor breached: {s:?}");
+        assert_eq!(s.pool_creates, 0, "floored sweep must not spawn a pool: {s:?}");
+        assert_eq!(s.serial_floor_bypasses, 1, "bypass not counted: {s:?}");
+        // Lowering the floor lets the same shape engage.
+        b.set_pool_min_obs(0);
+        b.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s = b.decide_stats();
+        assert_eq!(s.parallel_nll_sweeps, 1);
+        assert_eq!(s.pool_creates, 1);
+        // A single-lane backend never counts bypasses (nothing to skip).
+        let mut serial = NativeBackend::new();
+        serial.set_parallelism(1);
+        serial.nll_grid(&x, &y, n, d, &grid).unwrap();
+        assert_eq!(serial.decide_stats().serial_floor_bypasses, 0);
+    }
+
+    #[test]
+    fn fps_refresh_counters_follow_deltas() {
+        // The shared inducing cache: a first low-rank call re-selects in
+        // full; appended-by-one follow-ups (and a decide right after an
+        // nll_grid over the same rows) refresh incrementally.
+        let d = 3;
+        let grid = [[0.6, 1.0, 1e-2], [1.2, 1.0, 1e-2]];
+        let total = 14;
+        let rows: Vec<f64> =
+            (0..total * d).map(|i| ((i * 29 + 7) % 83) as f64 / 83.0).collect();
+        let ys: Vec<f64> = (0..total).map(|i| 1.0 + (i as f64 * 0.43).sin()).collect();
+        let mut b = NativeBackend::new();
+        b.set_lowrank_nll_threshold(8);
+        for n in 10..=13usize {
+            b.nll_grid(&rows[..n * d], &ys[..n], n, d, &grid).unwrap();
+        }
+        let s = b.decide_stats();
+        assert_eq!(s.nll_lowrank, 4);
+        assert_eq!(s.fps_full_refreshes, 1, "only the first call re-selects: {s:?}");
+        assert_eq!(s.fps_incremental_refreshes, 3, "appends must stay incremental: {s:?}");
+        // Stage split: one hyp build per (ls, var) group per sweep, one
+        // noise build per grid point per sweep.
+        assert_eq!(s.lowrank_hyp_stage_builds, 4 * 2);
+        assert_eq!(s.lowrank_noise_stage_builds, 4 * 2);
+        // Unchanged rows (decide after nll_grid under a forced policy)
+        // also count as incremental reuse.
+        let mut f = NativeBackend::new();
+        f.set_lowrank_policy(LowRankPolicy::Force { max_inducing: 6 });
+        let xc: Vec<f64> = (0..4 * d).map(|i| ((i * 31 + 11) % 97) as f64 / 97.0).collect();
+        let cmask = vec![true; 4];
+        f.decide(&rows[..10 * d], &ys[..10], 10, d, &xc, &cmask, 4, grid[0]).unwrap();
+        f.decide(&rows[..10 * d], &ys[..10], 10, d, &xc, &cmask, 4, grid[0]).unwrap();
+        let s = f.decide_stats();
+        assert_eq!(s.fps_full_refreshes, 1, "{s:?}");
+        assert_eq!(s.fps_incremental_refreshes, 1, "{s:?}");
     }
 
     #[test]
@@ -1096,21 +1438,23 @@ mod tests {
         let d = 3;
         let hyp = [0.7, 1.0, 1e-3];
         let engaged = LOWRANK_MIN_OBS + 1; // smallest history the Auto policy approximates
+        let routing = |s: DecideStats| (s.exact, s.lowrank);
         let mut b = NativeBackend::new();
         // Below the candidate threshold: exact, regardless of n.
         let (x, y, xc) = synth(engaged, 16, d);
         b.decide(&x, &y, engaged, d, &xc, &vec![true; 16], 16, hyp).unwrap();
-        assert_eq!(b.decide_stats(), DecideStats { exact: 1, ..Default::default() });
+        assert_eq!(routing(b.decide_stats()), (1, 0), "{:?}", b.decide_stats());
         // Above the candidate threshold with enough observations: lowrank.
         let m = LOWRANK_CANDIDATE_THRESHOLD + 1;
         let (x, y, xc) = synth(engaged, m, d);
         b.decide(&x, &y, engaged, d, &xc, &vec![true; m], m, hyp).unwrap();
-        assert_eq!(b.decide_stats(), DecideStats { exact: 1, lowrank: 1, ..Default::default() });
+        assert_eq!(routing(b.decide_stats()), (1, 1), "{:?}", b.decide_stats());
         // Large space but history within the inducing cap (the low-rank
         // posterior would be exact math at extra cost): exact again.
         let (x, y, xc) = synth(LOWRANK_MIN_OBS, m, d);
         b.decide(&x, &y, LOWRANK_MIN_OBS, d, &xc, &vec![true; m], m, hyp).unwrap();
-        assert_eq!(b.decide_stats(), DecideStats { exact: 2, lowrank: 1, ..Default::default() });
+        assert_eq!(routing(b.decide_stats()), (2, 1), "{:?}", b.decide_stats());
+        assert_eq!(b.decide_stats().lowrank_fallbacks, 0);
         // Policy Off never takes the low-rank path.
         let mut off = NativeBackend::new();
         off.set_lowrank_policy(LowRankPolicy::Off);
@@ -1180,9 +1524,11 @@ mod tests {
         let hyp = [0.6, 1.0, 1e-3];
         let mut serial = NativeBackend::new();
         serial.set_lowrank_policy(LowRankPolicy::Off);
+        serial.set_parallelism(1);
         let mut par = NativeBackend::new();
         par.set_lowrank_policy(LowRankPolicy::Off);
         par.set_parallelism(4);
+        par.set_pool_min_obs(0); // n = 8 sits under the default floor
         let ds = serial.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
         let dp = par.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
         assert_eq!(par.decide_stats().parallel_decide_fanouts, 1, "fan-out never engaged");

@@ -331,6 +331,44 @@ pub enum ObsDelta {
     Replaced,
 }
 
+impl ObsDelta {
+    /// Classify how the row set `x` (`n` rows, `d` columns) relates to
+    /// the previously seen set `prev` (`prev_n` rows, `prev_d` columns):
+    /// identical rows → [`Unchanged`](Self::Unchanged); the previous
+    /// rows plus one appended at the end → [`Appended`](Self::Appended);
+    /// the previous rows shifted forward by one with one appended →
+    /// [`Slid`](Self::Slid); anything else (including a dimension
+    /// change) → [`Replaced`](Self::Replaced). `Unchanged` wins over
+    /// `Slid` when both match (degenerate constant rows).
+    ///
+    /// This is THE delta detector of the incremental caches: the
+    /// backend's pairwise-distance cache (`NativeBackend::update_d2`)
+    /// and the low-rank inducing-set cache
+    /// ([`InducingCache`](super::lowrank::InducingCache)) both key their
+    /// incremental updates on exactly this comparison, so the two caches
+    /// can never disagree about what the search loop did.
+    pub fn classify(
+        prev: &[f64],
+        prev_n: usize,
+        prev_d: usize,
+        x: &[f64],
+        n: usize,
+        d: usize,
+    ) -> ObsDelta {
+        debug_assert_eq!(prev.len(), prev_n * prev_d);
+        debug_assert_eq!(x.len(), n * d);
+        if prev_d == d && prev_n == n && prev == x {
+            ObsDelta::Unchanged
+        } else if prev_d == d && n == prev_n + 1 && x[..prev_n * d] == *prev {
+            ObsDelta::Appended
+        } else if prev_d == d && n == prev_n && n > 0 && x[..(n - 1) * d] == prev[d..] {
+            ObsDelta::Slid
+        } else {
+            ObsDelta::Replaced
+        }
+    }
+}
+
 /// What a slot must do to serve the current observation set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FitPlan {
@@ -828,6 +866,36 @@ mod tests {
                 assert!((s - want).abs() < 1e-12, "({i},{j}): {s} vs {want}");
             }
         }
+    }
+
+    #[test]
+    fn classify_detects_every_delta_family() {
+        let d = 2;
+        let rows: Vec<f64> = (0..6 * d).map(|i| i as f64 * 0.5).collect();
+        let prev = &rows[..4 * d];
+        // Same rows: unchanged.
+        assert_eq!(ObsDelta::classify(prev, 4, d, prev, 4, d), ObsDelta::Unchanged);
+        // Previous rows plus one at the end: appended.
+        assert_eq!(
+            ObsDelta::classify(prev, 4, d, &rows[..5 * d], 5, d),
+            ObsDelta::Appended
+        );
+        // Shifted forward by one, one appended: slid.
+        assert_eq!(
+            ObsDelta::classify(prev, 4, d, &rows[d..5 * d], 4, d),
+            ObsDelta::Slid
+        );
+        // Arbitrary jump or dimension change: replaced.
+        assert_eq!(
+            ObsDelta::classify(prev, 4, d, &rows[2 * d..6 * d], 4, d),
+            ObsDelta::Replaced
+        );
+        assert_eq!(ObsDelta::classify(prev, 4, d, &rows[..8], 8, 1), ObsDelta::Replaced);
+        // Empty previous set (fresh cache): replaced, never appended.
+        assert_eq!(ObsDelta::classify(&[], 0, 0, prev, 4, d), ObsDelta::Replaced);
+        // Constant rows match both Unchanged and Slid: Unchanged wins.
+        let flat = vec![1.0; 4 * d];
+        assert_eq!(ObsDelta::classify(&flat, 4, d, &flat, 4, d), ObsDelta::Unchanged);
     }
 
     #[test]

@@ -386,9 +386,10 @@ impl NativeGp {
 
 /// Batched posterior prediction against a *borrowed* packed factor —
 /// the zero-copy core shared by [`NativeGp::predict_batch`] and
-/// `NativeBackend::decide`'s tile fan-out (each worker thread runs this
-/// on its own tile with its own scratch; the factor, weights and
-/// observations are shared read-only).
+/// `NativeBackend::decide`'s tile fan-out (each persistent pool lane
+/// runs this on its own tile against its own reusable
+/// [`LaneScratch`](super::pool::LaneScratch) buffers; the factor,
+/// weights and observations are shared read-only).
 ///
 /// Writes mean/variance for the `w` candidate rows of `xc` into
 /// `mu_out[..w]` / `var_out[..w]` (fully overwritten). `alpha` must be

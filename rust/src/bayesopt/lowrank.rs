@@ -53,9 +53,52 @@
 //! thousand observations without the exact sweep's O(n²) distance cache
 //! or O(n³) cold refits.
 //!
-//! Open follow-up in ROADMAP.md: refreshing the inducing set
-//! incrementally across BO iterations instead of re-sampling per fit.
+//! # Stage-split fitting
+//!
+//! Of everything a fit computes, only `Lm = chol(σ²I + BBᵀ)`, the mean
+//! weights `w` and the marginal's quadratic/log-det depend on the noise
+//! σ²; `Kuu`, `Lu = chol(Kuu + εI)`, `B = Lu⁻¹Kuf`, the Gram `BBᵀ`, the
+//! projection `By` and `yᵀy` depend only on (lengthscale, variance).
+//! [`LowRankGp::fit_hyp_stage`] computes the latter group once;
+//! [`LowRankGp::fit_noise_stage`] completes the fit for one σ² in
+//! O(u³ + u²) — no kernel or O(n·u) work at all. The 32-slot
+//! hyperparameter grid has 8 (lengthscale, variance) groups of 4 noise
+//! levels, so a grid sweep does the dominant kernel/GEMM work 8 times
+//! instead of 32 (the low-rank mirror of the exact sweep's cross-row /
+//! Gram memo). [`LowRankGp::fit_with_inducing`] is exactly the two
+//! stages back to back, so the split is bit-identical to the unsplit
+//! per-point evaluation — pinned by `tests/prop_lowrank.rs`.
+//!
+//! # Incremental inducing refresh
+//!
+//! Re-selecting the inducing set by farthest-point sampling on every fit
+//! costs O(n·u·d) per BO iteration — the last per-iteration O(n·u) term
+//! on the generated-catalog path. [`InducingCache`] keeps the selection
+//! (plus FPS's min-distance field) alive across iterations, keyed on the
+//! same [`ObsDelta`](super::chol::ObsDelta) classification the factor
+//! cache uses:
+//!
+//! * **Appended**: the new row competes only against the cached
+//!   min-distance vector (O(u·d)); it is selected only while the set is
+//!   under its cap, via the same argmax-with-lex-tiebreak step FPS runs.
+//! * **Slid**: the departed oldest row is evicted *lazily* — it leaves
+//!   the selection, but the min-distance field it shaped is not
+//!   recomputed (the cached distances remain valid lower bounds, which
+//!   can only make later continuation picks more conservative). Then the
+//!   appended row is handled as above.
+//! * **Replaced** (or a changed inducing cap): full FPS re-selection.
+//!
+//! **Drift bound**: after [`INDUCING_DRIFT_LIMIT`] consecutive
+//! incremental (append/slide) refreshes, the next refresh forces a full
+//! FPS re-selection, so the cached set is never more than
+//! `INDUCING_DRIFT_LIMIT` single-row deltas away from an exact
+//! farthest-point selection — and is *exactly* the scratch FPS result at
+//! every resync point. `tests/prop_lowrank.rs` pins both halves.
+//! Determinism is unaffected: the refreshed set is a pure function of
+//! the observation-row history, so serial and pooled backends replaying
+//! the same script stay bit-identical.
 
+use super::chol::ObsDelta;
 use super::gp::{solve_lower_in_place, JITTER, VAR_FLOOR};
 use super::kernel::matern52_cross;
 
@@ -77,45 +120,101 @@ pub const DEFAULT_MAX_INDUCING: usize = 64;
 /// back to the exact path.
 pub const INDUCING_JITTER: f64 = 1e-12;
 
+/// Lexicographic row comparison — FPS's deterministic tiebreak (a pure
+/// order-statistic: no floating-point accumulation whose rounding could
+/// depend on candidate order).
+fn lex_lt(a: &[f64], b: &[f64]) -> bool {
+    for (va, vb) in a.iter().zip(b) {
+        if va < vb {
+            return true;
+        }
+        if va > vb {
+            return false;
+        }
+    }
+    false
+}
+
+/// Squared Euclidean distance between two rows.
+fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (va, vb) in a.iter().zip(b) {
+        let diff = va - vb;
+        s += diff * diff;
+    }
+    s
+}
+
+/// One farthest-point selection step over an existing min-distance
+/// field: pick the row maximizing `min_d2` (lex-smaller row wins ties),
+/// append it to `selected` and fold its distances into `min_d2`.
+/// Returns false when only exact duplicates of selected rows remain
+/// (`max min_d2 <= 0`). Shared verbatim by [`farthest_point_sample`]'s
+/// main loop and [`InducingCache`]'s incremental continuation, so the
+/// two cannot drift.
+fn fps_step(
+    x: &[f64],
+    n: usize,
+    d: usize,
+    selected: &mut Vec<usize>,
+    min_d2: &mut [f64],
+) -> bool {
+    let row = |i: usize| &x[i * d..(i + 1) * d];
+    let mut pick = None;
+    let mut pick_d2 = 0.0;
+    for i in 0..n {
+        if min_d2[i] > pick_d2
+            || (min_d2[i] == pick_d2
+                && min_d2[i] > 0.0
+                && pick.is_some_and(|p: usize| lex_lt(row(i), row(p))))
+        {
+            pick = Some(i);
+            pick_d2 = min_d2[i];
+        }
+    }
+    let Some(p) = pick.filter(|_| pick_d2 > 0.0) else {
+        return false; // only duplicates of selected rows remain
+    };
+    selected.push(p);
+    for i in 0..n {
+        let d2 = sqdist(row(i), row(p));
+        if d2 < min_d2[i] {
+            min_d2[i] = d2;
+        }
+    }
+    true
+}
+
 /// Deterministic farthest-point sampling of up to `k` row indices from
 /// `n` row-major `d`-dimensional rows.
 ///
-/// The seed point is the lexicographically smallest row (a pure
-/// order-statistic — unlike a centroid it involves no floating-point
-/// accumulation whose rounding could depend on candidate order); each
-/// further point maximizes the minimum squared distance to the
-/// already-selected set. All ties break toward the lexicographically
-/// smaller feature row, which makes the selected *row set* a pure
-/// function of the row multiset: deterministic across processes and
-/// invariant to candidate order. Selection stops early when only exact
-/// duplicates of already-selected rows remain, so the result never
-/// contains two identical rows.
+/// The seed point is the lexicographically smallest row; each further
+/// point maximizes the minimum squared distance to the already-selected
+/// set. All ties break toward the lexicographically smaller feature row,
+/// which makes the selected *row set* a pure function of the row
+/// multiset: deterministic across processes and invariant to candidate
+/// order. Selection stops early when only exact duplicates of
+/// already-selected rows remain, so the result never contains two
+/// identical rows.
 pub fn farthest_point_sample(x: &[f64], n: usize, d: usize, k: usize) -> Vec<usize> {
+    farthest_point_sample_with_state(x, n, d, k).0
+}
+
+/// [`farthest_point_sample`] returning the final min-distance field as
+/// well (`min_d2[i]` = squared distance of row `i` to the selected set)
+/// — the state [`InducingCache`] keeps alive across BO iterations.
+fn farthest_point_sample_with_state(
+    x: &[f64],
+    n: usize,
+    d: usize,
+    k: usize,
+) -> (Vec<usize>, Vec<f64>) {
     assert_eq!(x.len(), n * d);
     let k = k.min(n);
     if k == 0 || n == 0 {
-        return Vec::new();
+        return (Vec::new(), Vec::new());
     }
     let row = |i: usize| &x[i * d..(i + 1) * d];
-    let lex_lt = |a: &[f64], b: &[f64]| -> bool {
-        for (va, vb) in a.iter().zip(b) {
-            if va < vb {
-                return true;
-            }
-            if va > vb {
-                return false;
-            }
-        }
-        false
-    };
-    let sqdist = |a: &[f64], b: &[f64]| -> f64 {
-        let mut s = 0.0;
-        for (va, vb) in a.iter().zip(b) {
-            let diff = va - vb;
-            s += diff * diff;
-        }
-        s
-    };
 
     // Seed: the lexicographically smallest row.
     let mut first = 0usize;
@@ -130,35 +229,183 @@ pub fn farthest_point_sample(x: &[f64], n: usize, d: usize, k: usize) -> Vec<usi
     // min_d2[i] = distance of row i to the selected set.
     let mut min_d2: Vec<f64> = (0..n).map(|i| sqdist(row(i), row(first))).collect();
     while selected.len() < k {
-        let mut pick = None;
-        let mut pick_d2 = 0.0;
-        for i in 0..n {
-            if min_d2[i] > pick_d2
-                || (min_d2[i] == pick_d2
-                    && min_d2[i] > 0.0
-                    && pick.is_some_and(|p: usize| lex_lt(row(i), row(p))))
-            {
-                pick = Some(i);
-                pick_d2 = min_d2[i];
-            }
+        if !fps_step(x, n, d, &mut selected, &mut min_d2) {
+            break;
         }
-        let Some(p) = pick.filter(|_| pick_d2 > 0.0) else {
-            break; // only duplicates of selected rows remain
-        };
-        selected.push(p);
-        for i in 0..n {
-            let d2 = sqdist(row(i), row(p));
-            if d2 < min_d2[i] {
-                min_d2[i] = d2;
+    }
+    (selected, min_d2)
+}
+
+/// Maximum consecutive incremental (append/slide) refreshes
+/// [`InducingCache`] serves before forcing a full farthest-point
+/// re-selection — the documented drift bound of the module docs. 32
+/// deltas = half the default inducing cap: far enough to amortize the
+/// O(n·u·d) re-selection across a whole search phase, close enough that
+/// a sliding window can never carry a mostly-departed selection.
+pub const INDUCING_DRIFT_LIMIT: usize = 32;
+
+/// The inducing-set selection kept alive across BO iterations (see the
+/// module docs' *Incremental inducing refresh*). Owned by
+/// `NativeBackend` next to its distance/factor caches; both its
+/// low-rank paths (`decide` and the Woodbury `nll_grid`) refresh
+/// through here instead of re-running farthest-point sampling per fit.
+#[derive(Debug, Clone, Default)]
+pub struct InducingCache {
+    /// The observation rows of the last refresh (the delta baseline).
+    last_x: Vec<f64>,
+    n: usize,
+    d: usize,
+    /// Requested cap of the cached selection (pre-clamp, so a constant
+    /// caller-side cap stays stable while `n` grows past it).
+    k: usize,
+    selected: Vec<usize>,
+    /// FPS min-distance field over the current `n` rows. After a lazy
+    /// slide eviction the entries are lower bounds (module docs).
+    min_d2: Vec<f64>,
+    /// Incremental refreshes since the last full re-selection.
+    drift: usize,
+}
+
+impl InducingCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Incremental refreshes since the last full re-selection.
+    pub fn drift(&self) -> usize {
+        self.drift
+    }
+
+    /// The cached selection (row indices into the last-refreshed `x`).
+    pub fn selected(&self) -> &[usize] {
+        &self.selected
+    }
+
+    /// Bring the selection up to date with the current observation rows
+    /// and cap; returns the selected indices plus whether a **full**
+    /// FPS re-selection ran (false = incremental reuse). The decision is
+    /// driven by [`ObsDelta::classify`] against the previously seen rows
+    /// and the drift bound [`INDUCING_DRIFT_LIMIT`].
+    pub fn refresh(&mut self, x: &[f64], n: usize, d: usize, k: usize) -> (&[usize], bool) {
+        assert_eq!(x.len(), n * d);
+        assert!(n > 0 && k > 0, "inducing refresh needs rows and a positive cap");
+        let delta = ObsDelta::classify(&self.last_x, self.n, self.d, x, n, d);
+        let mut full = self.selected.is_empty()
+            || self.k != k
+            || delta == ObsDelta::Replaced
+            || (delta != ObsDelta::Unchanged && self.drift >= INDUCING_DRIFT_LIMIT);
+        if !full {
+            match delta {
+                ObsDelta::Unchanged => {}
+                ObsDelta::Appended => {
+                    self.apply_append(x, n, d, k);
+                    self.drift += 1;
+                }
+                ObsDelta::Slid => {
+                    self.apply_slide(x, n, d, k);
+                    self.drift += 1;
+                }
+                ObsDelta::Replaced => unreachable!("full reselect handles Replaced"),
+            }
+            // A slide can evict the only selected point (k = 1): fall
+            // back to a full re-selection rather than serve an empty set.
+            full = self.selected.is_empty();
+        }
+        if full {
+            let (sel, min_d2) = farthest_point_sample_with_state(x, n, d, k);
+            self.selected = sel;
+            self.min_d2 = min_d2;
+            self.drift = 0;
+        }
+        self.k = k;
+        self.n = n;
+        self.d = d;
+        self.last_x.clear();
+        self.last_x.extend_from_slice(x);
+        (&self.selected, full)
+    }
+
+    /// Append handling: the new last row enters the min-distance field
+    /// in O(u·d) and is selected only if the set is under its cap (via
+    /// the shared [`fps_step`] continuation).
+    fn apply_append(&mut self, x: &[f64], n: usize, d: usize, k: usize) {
+        let new = &x[(n - 1) * d..n * d];
+        let nd2 = self
+            .selected
+            .iter()
+            .map(|&s| sqdist(new, &x[s * d..(s + 1) * d]))
+            .fold(f64::INFINITY, f64::min);
+        self.min_d2.push(nd2);
+        self.fill_to_cap(x, n, d, k);
+    }
+
+    /// Slide handling: evict the departed oldest row lazily, shift the
+    /// surviving indices/field, then treat the appended row as above.
+    fn apply_slide(&mut self, x: &[f64], n: usize, d: usize, k: usize) {
+        // The oldest row (index 0) left the window; its field entry goes
+        // with it. If it was selected, it simply leaves the set — the
+        // min-distance entries it shaped are NOT recomputed (they stay
+        // valid lower bounds; see the module docs' drift-bound note).
+        self.min_d2.remove(0);
+        if let Some(pos) = self.selected.iter().position(|&s| s == 0) {
+            self.selected.remove(pos);
+        }
+        if self.selected.is_empty() {
+            // The eviction emptied the set (k = 1): the field has no
+            // anchor left — let the caller re-select from scratch.
+            self.min_d2.clear();
+            return;
+        }
+        for s in self.selected.iter_mut() {
+            *s -= 1;
+        }
+        let new = &x[(n - 1) * d..n * d];
+        let nd2 = self
+            .selected
+            .iter()
+            .map(|&s| sqdist(new, &x[s * d..(s + 1) * d]))
+            .fold(f64::INFINITY, f64::min);
+        self.min_d2.push(nd2);
+        self.fill_to_cap(x, n, d, k);
+    }
+
+    /// FPS continuation: grow the selection toward its cap with the
+    /// exact per-step logic of [`farthest_point_sample`], against the
+    /// cached min-distance field.
+    fn fill_to_cap(&mut self, x: &[f64], n: usize, d: usize, k: usize) {
+        let cap = k.min(n);
+        while self.selected.len() < cap {
+            if !fps_step(x, n, d, &mut self.selected, &mut self.min_d2) {
+                break;
             }
         }
     }
-    selected
+}
+
+/// Counters of the stage-split fit paths taken ([`LowRankGp::stats`]) —
+/// how `NativeBackend`'s `DecideStats` observes that a low-rank grid
+/// sweep really did the kernel/GEMM work once per (lengthscale,
+/// variance) group rather than once per grid point.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LowRankStats {
+    /// [`LowRankGp::fit_hyp_stage`] executions (`Kuu`/`B`/`BBᵀ` builds).
+    pub hyp_builds: u64,
+    /// [`LowRankGp::fit_noise_stage`] executions (`Lm`/weights per σ²).
+    pub noise_builds: u64,
+}
+
+impl LowRankStats {
+    /// Fold another counter set into this one (order-independent sum).
+    pub fn merge(&mut self, o: LowRankStats) {
+        self.hyp_builds += o.hyp_builds;
+        self.noise_builds += o.noise_builds;
+    }
 }
 
 /// A fitted Nyström/DTC low-rank posterior (see the module docs for the
-/// math). Scratch buffers are reused across refits, mirroring
-/// [`NativeGp`](super::gp::NativeGp)'s allocation discipline.
+/// math and the stage-split fitting scheme). Scratch buffers are reused
+/// across refits, mirroring [`NativeGp`](super::gp::NativeGp)'s
+/// allocation discipline.
 #[derive(Debug, Clone, Default)]
 pub struct LowRankGp {
     d: usize,
@@ -175,11 +422,23 @@ pub struct LowRankGp {
     lm: Vec<f64>,
     /// w = M⁻¹ Kuf y — the mean weights (length u).
     w: Vec<f64>,
+    // --- hyperparameter-stage products (noise-independent) ---
+    /// B Bᵀ (u x u), *without* the σ² diagonal — the noise stage adds it.
+    bbt: Vec<f64>,
+    /// B y (length u).
+    by: Vec<f64>,
+    /// yᵀ y of the fitted targets.
+    yty: f64,
+    /// The hyperparameter stage succeeded (Lu/B/BBᵀ/By are current).
+    hyp_ok: bool,
+    /// A noise stage completed on top of it (Lm/w/σ² are current).
+    fit_ok: bool,
     // scratch
     b_mat: Vec<f64>,
     m_mat: Vec<f64>,
     kt_mat: Vec<f64>,
     col_acc: Vec<f64>,
+    stats: LowRankStats,
 }
 
 /// Forward-solve `L X = B` for a row-major `u x w` right-hand side in
@@ -249,7 +508,10 @@ impl LowRankGp {
     /// not the hyperparameters — so a marginal-likelihood sweep
     /// (`NativeBackend::nll_grid`'s low-rank path) selects once and
     /// reuses the set across the whole grid instead of re-sweeping the
-    /// full data per grid point.
+    /// full data per grid point. Exactly [`Self::fit_hyp_stage`]
+    /// followed by [`Self::fit_noise_stage`], so a grouped grid sweep
+    /// that shares the hyperparameter stage across noise levels is
+    /// bit-identical to calling this per grid point.
     pub fn fit_with_inducing(
         &mut self,
         x: &[f64],
@@ -259,14 +521,36 @@ impl LowRankGp {
         hyp: [f64; 3],
         inducing: &[usize],
     ) -> bool {
+        self.fit_hyp_stage(x, y, n, d, hyp[0], hyp[1], inducing)
+            && self.fit_noise_stage(hyp[2])
+    }
+
+    /// The (lengthscale, variance) stage of the stage-split fit (module
+    /// docs): gather the inducing rows, factor `Lu = chol(Kuu + εI)`,
+    /// build `B = Lu⁻¹Kuf`, the Gram `BBᵀ`, the projection `By` and
+    /// `yᵀy` — everything the noise level does NOT touch, and all of the
+    /// O(n·u·d + n·u²) work. Returns false (leaving the fit unusable)
+    /// if the inducing Gram loses positive definiteness; the caller
+    /// falls back to the exact path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit_hyp_stage(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        ls: f64,
+        var: f64,
+        inducing: &[usize],
+    ) -> bool {
         assert_eq!(x.len(), n * d);
         assert_eq!(y.len(), n);
         assert!(n > 0, "low-rank fit needs at least one observation");
         // u <= n keeps the marginal's (n - u) log-det factor well-formed
         // (FPS never selects duplicates; external callers must not either).
         assert!(inducing.len() <= n, "more inducing indices than observations");
-        let (ls, var, noise) = (hyp[0], hyp[1], hyp[2]);
-        let sigma2 = noise + JITTER;
+        self.hyp_ok = false;
+        self.fit_ok = false;
 
         let u = inducing.len();
         self.z.clear();
@@ -277,8 +561,9 @@ impl LowRankGp {
         self.d = d;
         self.u = u;
         self.n = n;
-        self.hyp = hyp;
-        self.sigma2 = sigma2;
+        // The noise slot stays unset until a noise stage completes.
+        self.hyp = [ls, var, f64::NAN];
+        self.stats.hyp_builds += 1;
 
         // Lu = chol(Kuu + inducing-jitter I).
         let mut kuu = std::mem::take(&mut self.lu);
@@ -298,48 +583,91 @@ impl LowRankGp {
         matern52_cross(&self.z, u, x, n, d, ls, var, &mut b);
         solve_lower_multi(&self.lu, u, &mut b, n);
 
-        // Lm = chol(sigma² I + B Bᵀ).
-        let mut m = std::mem::take(&mut self.m_mat);
-        m.clear();
-        m.resize(u * u, 0.0);
+        // BBᵀ (no σ² yet — the noise stage adds its diagonal).
+        self.bbt.clear();
+        self.bbt.resize(u * u, 0.0);
         for i in 0..u {
             for j in 0..=i {
                 let mut s = 0.0;
                 for c in 0..n {
                     s += b[i * n + c] * b[j * n + c];
                 }
-                m[i * u + j] = s;
-                m[j * u + i] = s;
+                self.bbt[i * u + j] = s;
+                self.bbt[j * u + i] = s;
             }
-            m[i * u + i] += sigma2;
         }
-        let ok = cholesky(&mut m, u);
-        if !ok {
-            self.b_mat = b;
-            self.m_mat = m;
-            self.u = 0;
-            return false;
-        }
-        // `m` now holds Lm; swap it into place and recycle the old Lm
-        // buffer as next fit's scratch (no per-fit allocation).
-        std::mem::swap(&mut self.lm, &mut m);
-        self.m_mat = m;
 
-        // w = M⁻¹ Kuf y = Lu⁻ᵀ Lm⁻ᵀ Lm⁻¹ (B y).
-        self.w.clear();
-        self.w.resize(u, 0.0);
+        // By and yᵀy — the y-projections every noise level shares.
+        self.by.clear();
+        self.by.resize(u, 0.0);
         for i in 0..u {
             let mut s = 0.0;
             for c in 0..n {
                 s += b[i * n + c] * y[c];
             }
-            self.w[i] = s;
+            self.by[i] = s;
         }
+        self.yty = y.iter().map(|v| v * v).sum();
         self.b_mat = b;
+        self.hyp_ok = true;
+        true
+    }
+
+    /// The σ² stage of the stage-split fit: `Lm = chol(σ²I + BBᵀ)` and
+    /// the mean weights `w = Lu⁻ᵀ Lm⁻ᵀ Lm⁻¹ (By)` — O(u³ + u²), no
+    /// kernel or O(n) work. Requires a successful
+    /// [`Self::fit_hyp_stage`]; may be called repeatedly with different
+    /// noise levels against the same stage (the grid sweep's 4 noise
+    /// levels per group). Returns false if the Woodbury inner matrix
+    /// loses positive definiteness.
+    pub fn fit_noise_stage(&mut self, noise: f64) -> bool {
+        assert!(
+            self.hyp_ok && self.u > 0,
+            "noise stage before a successful hyperparameter stage"
+        );
+        let u = self.u;
+        let sigma2 = noise + JITTER;
+        self.hyp[2] = noise;
+        self.sigma2 = sigma2;
+        self.fit_ok = false;
+        self.stats.noise_builds += 1;
+
+        // Lm = chol(sigma² I + B Bᵀ).
+        let mut m = std::mem::take(&mut self.m_mat);
+        m.clear();
+        m.extend_from_slice(&self.bbt);
+        for i in 0..u {
+            m[i * u + i] += sigma2;
+        }
+        if !cholesky(&mut m, u) {
+            self.m_mat = m;
+            return false;
+        }
+        // `m` now holds Lm; swap it into place and recycle the old Lm
+        // buffer as the next stage's scratch (no per-fit allocation).
+        std::mem::swap(&mut self.lm, &mut m);
+        self.m_mat = m;
+
+        // w = M⁻¹ Kuf y = Lu⁻ᵀ Lm⁻ᵀ Lm⁻¹ (B y).
+        self.w.clear();
+        self.w.extend_from_slice(&self.by);
         solve_lower_in_place(&self.lm, u, &mut self.w);
         super::gp::solve_upper_t_in_place(&self.lm, u, &mut self.w);
         super::gp::solve_upper_t_in_place(&self.lu, u, &mut self.w);
+        self.fit_ok = true;
         true
+    }
+
+    /// Stage-execution counters accumulated since construction or the
+    /// last [`Self::take_stats`].
+    pub fn stats(&self) -> LowRankStats {
+        self.stats
+    }
+
+    /// Return and reset the stage-execution counters (how worker lanes
+    /// hand their group-local counts back to the backend).
+    pub fn take_stats(&mut self) -> LowRankStats {
+        std::mem::take(&mut self.stats)
     }
 
     /// Posterior (mean, variance) for all `m` candidates, streamed in
@@ -354,7 +682,10 @@ impl LowRankGp {
     ) {
         // One tiling policy for both candidate-scoring paths.
         const TILE: usize = super::backend::DECIDE_TILE;
-        assert!(self.u > 0, "predict on an unfitted low-rank posterior");
+        assert!(
+            self.fit_ok && self.u > 0,
+            "predict on an unfitted low-rank posterior (both fit stages must succeed)"
+        );
         let (ls, var, _) = (self.hyp[0], self.hyp[1], self.hyp[2]);
         let (u, d) = (self.u, self.d);
         assert_eq!(xc.len(), m * d);
@@ -438,29 +769,33 @@ impl LowRankGp {
     /// ```
     ///
     /// (both are the standard Woodbury/determinant-lemma identities
-    /// through the fit's `Lm Lmᵀ = σ²I + B Bᵀ` factor). Cost O(n·u):
-    /// independent of any n×n object. The `0.5·n·ln 2π` fold constant
-    /// matches `NativeGp::nll`, and at `Z = X` (`u = n`) the value
-    /// reduces to the exact marginal up to [`INDUCING_JITTER`] — the pin
-    /// `tests/prop_lowrank.rs` enforces.
+    /// through the fit's `Lm Lmᵀ = σ²I + B Bᵀ` factor). The projections
+    /// `B y` and `yᵀy` come straight from the hyperparameter stage's
+    /// cache, so per noise level only the O(u²) solve and O(u) folds
+    /// remain. Cost O(u²): independent of any n×n (or even n-length)
+    /// object. The `0.5·n·ln 2π` fold constant matches `NativeGp::nll`,
+    /// and at `Z = X` (`u = n`) the value reduces to the exact marginal
+    /// up to [`INDUCING_JITTER`] — the pin `tests/prop_lowrank.rs`
+    /// enforces.
+    ///
+    /// `y` must be the targets the posterior was fitted on (the cached
+    /// projections are of that vector). Debug builds verify that by
+    /// recomputing `yᵀy` against the cached fold bit-for-bit — a
+    /// different same-length target vector fails loudly instead of
+    /// silently returning the fitted targets' likelihood.
     pub fn nll(&self, y: &[f64]) -> f64 {
         let (u, n) = (self.u, self.n);
-        assert!(u > 0, "nll on an unfitted low-rank posterior");
+        assert!(self.fit_ok && u > 0, "nll on an unfitted low-rank posterior");
         assert_eq!(y.len(), n);
-        let b = &self.b_mat;
-        // t = Lm^-1 (B y).
-        let mut t = vec![0.0; u];
-        for (i, ti) in t.iter_mut().enumerate() {
-            let mut s = 0.0;
-            for c in 0..n {
-                s += b[i * n + c] * y[c];
-            }
-            *ti = s;
-        }
+        debug_assert!(
+            y.iter().map(|v| v * v).sum::<f64>().to_bits() == self.yty.to_bits(),
+            "nll called with targets that differ from the fitted ones"
+        );
+        // t = Lm^-1 (B y), from the hyperparameter stage's cached By.
+        let mut t = self.by.clone();
         solve_lower_in_place(&self.lm, u, &mut t);
-        let yty: f64 = y.iter().map(|v| v * v).sum();
         let t2: f64 = t.iter().map(|v| v * v).sum();
-        let quad = 0.5 * (yty - t2) / self.sigma2;
+        let quad = 0.5 * (self.yty - t2) / self.sigma2;
         let half_logdet = 0.5 * (n - u) as f64 * self.sigma2.ln()
             + (0..u).map(|i| self.lm[i * u + i].ln()).sum::<f64>();
         quad + half_logdet + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
@@ -556,6 +891,115 @@ mod tests {
             assert!(var[j] >= 0.0, "negative variance {}", var[j]);
             assert!(var[j] <= hyp[1] + 1e-9, "variance {} above prior {}", var[j], hyp[1]);
         }
+    }
+
+    #[test]
+    fn noise_stage_reuse_is_bit_identical_to_fresh_fits() {
+        // One hyperparameter stage + several noise stages must produce
+        // exactly the bits of a full fit per noise level — the stage-
+        // split contract the grouped grid sweep relies on.
+        let n = 24;
+        let d = 3;
+        let x = grid_x(n, d);
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.53).sin()).collect();
+        let (ls, var) = (0.7, 1.3);
+        let inducing = farthest_point_sample(&x, n, d, 10);
+        let m = 9;
+        let xc: Vec<f64> = (0..m * d).map(|i| ((i * 19 + 5) % 67) as f64 / 67.0).collect();
+
+        let mut staged = LowRankGp::new();
+        assert!(staged.fit_hyp_stage(&x, &y, n, d, ls, var, &inducing));
+        for noise in [1e-4, 1e-3, 1e-2, 1e-1] {
+            assert!(staged.fit_noise_stage(noise));
+            let mut fresh = LowRankGp::new();
+            assert!(fresh.fit_with_inducing(&x, &y, n, d, [ls, var, noise], &inducing));
+            assert_eq!(
+                staged.nll(&y).to_bits(),
+                fresh.nll(&y).to_bits(),
+                "nll bits diverged at noise {noise}"
+            );
+            let (mut mu_s, mut var_s) = (Vec::new(), Vec::new());
+            let (mut mu_f, mut var_f) = (Vec::new(), Vec::new());
+            staged.predict_batch(&xc, m, &mut mu_s, &mut var_s);
+            fresh.predict_batch(&xc, m, &mut mu_f, &mut var_f);
+            for j in 0..m {
+                assert_eq!(mu_s[j].to_bits(), mu_f[j].to_bits(), "mu[{j}] at {noise}");
+                assert_eq!(var_s[j].to_bits(), var_f[j].to_bits(), "var[{j}] at {noise}");
+            }
+        }
+        let s = staged.stats();
+        assert_eq!((s.hyp_builds, s.noise_builds), (1, 4), "stage counters: {s:?}");
+    }
+
+    #[test]
+    fn inducing_cache_tracks_append_slide_and_reuse() {
+        let d = 2;
+        let total = 30;
+        let x = grid_x(total, d);
+        let k = 5;
+        let mut cache = InducingCache::new();
+        // First sight: full FPS, equal to scratch.
+        let n0 = 12;
+        let (sel, full) = cache.refresh(&x[..n0 * d], n0, d, k);
+        assert!(full);
+        assert_eq!(sel, &farthest_point_sample(&x[..n0 * d], n0, d, k)[..]);
+        // Same rows again: incremental reuse of the identical set.
+        let before = cache.selected().to_vec();
+        let (sel, full) = cache.refresh(&x[..n0 * d], n0, d, k);
+        assert!(!full);
+        assert_eq!(sel, &before[..]);
+        assert_eq!(cache.drift(), 0, "unchanged rows must not count as drift");
+        // Appends: incremental, still a valid distinct selection.
+        for n in (n0 + 1)..=(n0 + 4) {
+            let (sel, full) = cache.refresh(&x[..n * d], n, d, k);
+            assert!(!full, "append at n={n} forced a full re-select");
+            assert!(sel.len() <= k && sel.iter().all(|&i| i < n));
+            let mut uniq = sel.to_vec();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), sel.len(), "duplicate inducing index");
+        }
+        assert_eq!(cache.drift(), 4);
+        // A slide: departed index evicted lazily, survivors shifted.
+        let n = n0 + 4;
+        let (sel, full) = cache.refresh(&x[d..(n + 1) * d], n, d, k);
+        assert!(!full);
+        assert!(sel.iter().all(|&i| i < n));
+        // A wholesale jump: full re-select, equal to scratch again.
+        let (sel, full) = cache.refresh(&x[10 * d..(10 + n0) * d], n0, d, k);
+        assert!(full);
+        assert_eq!(
+            sel,
+            &farthest_point_sample(&x[10 * d..(10 + n0) * d], n0, d, k)[..]
+        );
+        assert_eq!(cache.drift(), 0, "full re-select must reset drift");
+        // A changed cap also forces a re-select.
+        let (_, full) = cache.refresh(&x[10 * d..(10 + n0) * d], n0, d, k + 2);
+        assert!(full, "cap change must force a full re-select");
+    }
+
+    #[test]
+    fn inducing_cache_drift_bound_forces_reselect() {
+        let d = 2;
+        let total = INDUCING_DRIFT_LIMIT + 20;
+        let x = grid_x(total, d);
+        let k = 4;
+        let mut cache = InducingCache::new();
+        let n0 = 10;
+        let (_, full) = cache.refresh(&x[..n0 * d], n0, d, k);
+        assert!(full);
+        // Exactly INDUCING_DRIFT_LIMIT appends stay incremental ...
+        for step in 1..=INDUCING_DRIFT_LIMIT {
+            let n = n0 + step;
+            let (_, full) = cache.refresh(&x[..n * d], n, d, k);
+            assert!(!full, "append {step} within the bound re-selected");
+        }
+        // ... and the next delta resyncs to scratch FPS exactly.
+        let n = n0 + INDUCING_DRIFT_LIMIT + 1;
+        let (sel, full) = cache.refresh(&x[..n * d], n, d, k);
+        assert!(full, "drift bound never forced a re-select");
+        assert_eq!(sel, &farthest_point_sample(&x[..n * d], n, d, k)[..]);
+        assert_eq!(cache.drift(), 0);
     }
 
     #[test]

@@ -8,14 +8,20 @@ pub mod chol;
 pub mod gp;
 pub mod kernel;
 pub mod lowrank;
+pub mod pool;
 pub mod search;
 
 pub use backend::{
-    backend_by_name, backend_factory_by_name, backend_factory_with_parallelism,
-    BackendFactory, BackendKind, DecideStats, Decision, GpBackend, LowRankPolicy,
-    NativeBackend, XlaBackend, DECIDE_TILE, LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS,
-    LOWRANK_NLL_OBS_THRESHOLD,
+    adaptive_gp_threads, backend_by_name, backend_factory_by_name,
+    backend_factory_with_parallelism, BackendFactory, BackendKind, DecideStats, Decision,
+    GpBackend, LowRankPolicy, NativeBackend, XlaBackend, DECIDE_TILE, GP_POOL_MIN_OBS,
+    LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS, LOWRANK_NLL_OBS_THRESHOLD,
+    MAX_ADAPTIVE_GP_THREADS,
 };
-pub use chol::{CholFactor, FactorCache, FactorCacheStats};
-pub use lowrank::{farthest_point_sample, LowRankGp, DEFAULT_MAX_INDUCING};
+pub use chol::{CholFactor, FactorCache, FactorCacheStats, ObsDelta};
+pub use lowrank::{
+    farthest_point_sample, InducingCache, LowRankGp, LowRankStats, DEFAULT_MAX_INDUCING,
+    INDUCING_DRIFT_LIMIT,
+};
+pub use pool::{LaneScratch, WorkerPool};
 pub use search::{hyperparameter_grid, run_search, BoParams, SearchOutcome};

@@ -1,0 +1,298 @@
+//! The persistent GP worker pool — the always-on execution engine behind
+//! `NativeBackend`'s parallel paths (the hyperparameter-grid nll sweep,
+//! its low-rank counterpart, and the decide tile fan-out).
+//!
+//! # Why persistent
+//!
+//! The previous design spawned `std::thread::scope` workers per call:
+//! correct, but the spawn/join overhead (~tens of µs) recurs every BO
+//! iteration — twice per iteration (`nll_grid` + `decide`), thousands of
+//! iterations per experiment. [`WorkerPool`] spawns its lanes once
+//! (lazily, on the first fan-out that clears the backend's work-size
+//! floor) and keeps them parked on a channel; a fan-out is then two
+//! channel sends and a completion wait per lane.
+//!
+//! # Per-lane scratch
+//!
+//! Each worker owns a [`LaneScratch`] that survives across fan-outs: the
+//! cross-row/Gram buffers of the exact sweep, the prediction buffers of
+//! the decide tiles, and a whole [`LowRankGp`] (with all its internal
+//! fit scratch) for the low-rank sweep. Steady-state fan-outs therefore
+//! allocate nothing per call — the pool analog of the backend's serial
+//! scratch fields. Every consumer fully overwrites the buffers it reads
+//! (and re-seeds its memo keys per fan-out), so stale scratch can never
+//! leak into results: bit-determinism is preserved by construction.
+//!
+//! # Determinism contract
+//!
+//! [`WorkerPool::run_groups`] deals whole work groups round-robin across
+//! its lanes exactly as the former per-call scaffold did: group `g` of
+//! `G` goes to lane `g % min(width, G)`, in order. Every item writes
+//! only its own caller-disjoint outputs and no floating-point reduction
+//! crosses items, so results are **bit-identical for any pool width** —
+//! the same contract `testkit::assert_parallel_parity` pins (now also
+//! under the randomized script fuzz).
+//!
+//! # Panic behavior
+//!
+//! A panic inside a work closure is caught on the worker, reported back
+//! over the completion channel, and re-raised on the caller after every
+//! submitted lane has drained — workers stay alive (the scratch and the
+//! lanes survive), and a failing `assert!` inside swept code surfaces in
+//! the test that caused it, just as it did under scoped threads.
+
+use super::lowrank::LowRankGp;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// Reusable per-lane buffers, owned by one worker thread for its
+/// lifetime. One field per consumer:
+///
+/// * `row` / `gram` — the exact nll sweep's (lengthscale, variance)
+///   memoized cross-row and Gram builds;
+/// * `ks` / `acc` — `gp::predict_into`'s cross-kernel block and
+///   accumulator for the decide tile fan-out;
+/// * `lowrank` — a full low-rank posterior (with its own internal
+///   scratch) for the Woodbury nll sweep's per-lane fits.
+#[derive(Debug, Default)]
+pub struct LaneScratch {
+    pub row: Vec<f64>,
+    pub gram: Vec<f64>,
+    pub ks: Vec<f64>,
+    pub acc: Vec<f64>,
+    pub lowrank: LowRankGp,
+}
+
+/// A unit of submitted work: runs once on a worker against that lane's
+/// persistent scratch. Tasks are type-erased to `'static` inside
+/// [`WorkerPool::run_groups`], which blocks until every task has
+/// acknowledged completion — see the SAFETY note there.
+type Task = Box<dyn FnOnce(&mut LaneScratch) + Send + 'static>;
+
+/// A fixed-width pool of parked worker threads (see the module docs).
+/// Owned by `NativeBackend`; created lazily and dropped (threads joined)
+/// when the backend is dropped or its width changes.
+pub struct WorkerPool {
+    /// One submission channel per worker: lane → worker pinning is
+    /// 1:1 and stable, so each lane's scratch stays with its lane.
+    txs: Vec<Sender<Task>>,
+    /// Completion acknowledgements (one per submitted task; `Err`
+    /// carries a captured panic payload).
+    done_rx: Receiver<std::thread::Result<()>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("width", &self.txs.len()).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `width` parked workers (floored at 1), each owning a fresh
+    /// [`LaneScratch`].
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let (done_tx, done_rx) = channel();
+        let mut txs = Vec::with_capacity(width);
+        let mut handles = Vec::with_capacity(width);
+        for lane in 0..width {
+            let (tx, rx) = channel::<Task>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("gp-pool-{lane}"))
+                .spawn(move || {
+                    let mut scratch = LaneScratch::default();
+                    while let Ok(task) = rx.recv() {
+                        // The task (and every borrow it captured) is
+                        // consumed — dropped — before the ack is sent.
+                        let result = catch_unwind(AssertUnwindSafe(|| task(&mut scratch)));
+                        if done.send(result).is_err() {
+                            break; // owner dropped mid-shutdown
+                        }
+                    }
+                })
+                .expect("spawning a GP pool worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Self { txs, done_rx, handles }
+    }
+
+    /// The number of worker lanes.
+    pub fn width(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Deal `groups` round-robin across the lanes (group `g` → lane
+    /// `g % min(width, groups)`, in order — the deterministic dealing of
+    /// the module docs) and run `work` once per used lane over that
+    /// lane's items, against the lane's persistent [`LaneScratch`].
+    /// Blocks until every lane has finished; re-raises the first caught
+    /// panic after all lanes have drained.
+    pub fn run_groups<T, F>(&self, groups: Vec<Vec<T>>, work: F)
+    where
+        T: Send,
+        F: Fn(Vec<T>, &mut LaneScratch) + Sync,
+    {
+        if groups.is_empty() {
+            return;
+        }
+        let used = self.width().min(groups.len());
+        let mut lanes: Vec<Vec<T>> = (0..used).map(|_| Vec::new()).collect();
+        for (g, group) in groups.into_iter().enumerate() {
+            lanes[g % used].extend(group);
+        }
+        let work_ref = &work;
+        for (lane_idx, lane) in lanes.into_iter().enumerate() {
+            let task: Box<dyn FnOnce(&mut LaneScratch) + Send + '_> =
+                Box::new(move |scratch: &mut LaneScratch| work_ref(lane, scratch));
+            // SAFETY: the task borrows `work` and whatever `lane`'s items
+            // borrow from the caller's frame. We erase those lifetimes to
+            // ship the task to a persistent thread, which is sound
+            // because this function does not return until the completion
+            // loop below has received one ack per submitted task, and a
+            // worker sends its ack only after the task has run *and been
+            // dropped* — no borrow outlives this call, even on panic
+            // (the payload is re-raised only after all lanes drained).
+            let task: Task = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce(&mut LaneScratch) + Send + '_>,
+                    Box<dyn FnOnce(&mut LaneScratch) + Send + 'static>,
+                >(task)
+            };
+            // A send can only fail if a worker exited its recv loop,
+            // which cannot happen while the pool owns the channels — but
+            // if that invariant is ever broken, unwinding here would
+            // free the caller frame while already-submitted tasks still
+            // borrow it. Abort instead: the SAFETY contract must hold on
+            // every path, not just the expected one.
+            if self.txs[lane_idx].send(task).is_err() {
+                eprintln!("fatal: GP pool worker died with tasks in flight");
+                std::process::abort();
+            }
+        }
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..used {
+            let ack = self.done_rx.recv().unwrap_or_else(|_| {
+                // Same reasoning as the send above: returning (or
+                // unwinding) before every ack arrives would dangle the
+                // erased borrows of any still-running task.
+                eprintln!("fatal: GP pool worker died before acknowledging");
+                std::process::abort();
+            });
+            match ack {
+                Ok(()) => {}
+                // Keep the first payload received (the contract above);
+                // later ones are dropped after their lanes drained.
+                Err(payload) => {
+                    if panic.is_none() {
+                        panic = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the submission channels ends each worker's recv loop.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_runs_borrowed_work_to_disjoint_slots() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.width(), 4);
+        let mut out = vec![0.0f64; 10];
+        let inputs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        {
+            let groups: Vec<Vec<(usize, &mut f64)>> =
+                out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
+            let inputs = &inputs;
+            pool.run_groups(groups, |lane, _scratch| {
+                for (i, slot) in lane {
+                    *slot = inputs[i] * 2.0;
+                }
+            });
+        }
+        assert_eq!(out, (0..10).map(|i| i as f64 * 2.0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_survives_repeated_runs_and_reuses_scratch() {
+        let pool = WorkerPool::new(2);
+        for round in 0..5 {
+            let mut out = vec![0usize; 6];
+            let groups: Vec<Vec<(usize, &mut usize)>> =
+                out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
+            pool.run_groups(groups, |lane, scratch| {
+                // Persistent scratch: grow a marker buffer across runs.
+                scratch.row.push(round as f64);
+                for (i, slot) in lane {
+                    *slot = i + round;
+                }
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i + round, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_uses_at_most_one_lane_per_group() {
+        // 3 groups over 8 lanes: only 3 lanes are used, in order.
+        let pool = WorkerPool::new(8);
+        let mut out = vec![String::new(), String::new(), String::new()];
+        let groups: Vec<Vec<(usize, &mut String)>> =
+            out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
+        pool.run_groups(groups, |lane, _| {
+            let name = std::thread::current().name().unwrap_or("?").to_string();
+            for (_, slot) in lane {
+                *slot = name.clone();
+            }
+        });
+        // Deterministic dealing: group g lands on lane g % 3... of the
+        // first min(width, groups) lanes only.
+        for (g, name) in out.iter().enumerate() {
+            assert_eq!(name, &format!("gp-pool-{g}"), "group {g} on the wrong lane");
+        }
+    }
+
+    #[test]
+    fn pool_propagates_worker_panics_after_draining() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let groups: Vec<Vec<usize>> = vec![vec![0], vec![1]];
+            pool.run_groups(groups, |lane, _| {
+                if lane.contains(&1) {
+                    panic!("lane boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must propagate to the caller");
+        // The pool stays usable after a propagated panic.
+        let mut out = vec![0usize; 2];
+        let groups: Vec<Vec<(usize, &mut usize)>> =
+            out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
+        pool.run_groups(groups, |lane, _| {
+            for (i, slot) in lane {
+                *slot = i + 7;
+            }
+        });
+        assert_eq!(out, vec![7, 8]);
+    }
+}

@@ -144,10 +144,16 @@ impl ExperimentRunner {
     }
 
     /// Runner over the pure-rust backend — the common case in tests,
-    /// benches and examples.
+    /// benches and examples. The per-backend GP worker pool is kept
+    /// serial, matching `backend_factory_by_name`: the engine multiplies
+    /// backends by its own worker count, so per-backend pools (threads ~=
+    /// engine workers x pool lanes) are opted into explicitly via
+    /// `backend_factory_with_parallelism`, never defaulted here.
     pub fn native() -> Self {
         Self::new(Box::new(|| -> Result<Box<dyn GpBackend>> {
-            Ok(Box::new(NativeBackend::new()))
+            let mut b = NativeBackend::new();
+            b.set_parallelism(1);
+            Ok(Box::new(b))
         }))
     }
 

@@ -25,9 +25,11 @@
 //! `--threads <N>` (worker threads; `table2` shards jobs x methods x
 //! repetitions as one flat task list, other commands shard repetitions —
 //! results are bit-identical for any value), `--gp-threads <N>` (each
-//! backend's internal worker pool: the hyperparameter-grid nll sweep and
-//! the decide tile fan-out — also bit-identical for any value), `--out
-//! <dir>` (export .dat/.json/.md files).
+//! backend's internal persistent worker pool: the hyperparameter-grid
+//! nll sweep and the decide tile fan-out — also bit-identical for any
+//! value; default 0 = adaptive from `available_parallelism`, with a
+//! work-size floor keeping tiny windows serial), `--out <dir>` (export
+//! .dat/.json/.md files).
 
 use anyhow::{bail, Context, Result};
 use ruya::bayesopt::backend_factory_with_parallelism;
@@ -66,7 +68,16 @@ fn run(args: &Args) -> Result<()> {
     }
 
     let backend_name = args.opt_or("backend", "native");
-    let factory = backend_factory_with_parallelism(&backend_name, args.opt_gp_threads())
+    // Resolve the adaptive `--gp-threads 0` sentinel with the engine
+    // width in view: a parallel engine (`--threads N`) already uses the
+    // machine, so per-worker GP pools stay serial unless the user sizes
+    // them explicitly — total threads ~= threads x gp-threads must be an
+    // explicit choice, never an adaptive^2 default.
+    let gp_threads = match args.opt_gp_threads() {
+        0 if args.opt_threads() > 1 => 1,
+        t => t,
+    };
+    let factory = backend_factory_with_parallelism(&backend_name, gp_threads)
         .with_context(|| format!("initializing backend {backend_name}"))?;
     let seed = args.opt_u64("seed", 0xC0FFEE);
     let space_spec = args.opt_or("space", "scout");
@@ -460,11 +471,17 @@ OPTIONS
   --threads N            worker threads (default 1; table2 shards jobs x
                          methods x repetitions, other commands shard
                          repetitions; results bit-identical for any value)
-  --gp-threads N         GP-internal worker pool (default 1): each backend
-                         fans its 32-point nll sweep and its 1024-wide
-                         decide tiles across N threads; results are
-                         bit-identical for any value and multiply with
-                         --threads (total ~= threads * gp-threads)
+  --gp-threads N         GP-internal worker pool: each backend fans its
+                         32-point nll sweep and its 1024-wide decide
+                         tiles across a persistent N-lane pool; results
+                         are bit-identical for any value and multiply
+                         with --threads (total ~= threads * gp-threads).
+                         Default 0 = adaptive (available_parallelism,
+                         capped at 8) when --threads is 1, serial when
+                         the engine is parallel (threads x gp-threads
+                         stays an explicit choice); 1 forces serial;
+                         windows of <= 16 observations always run serial
+                         (work-size floor)
   --seed S               experiment seed (default 0xC0FFEE)
   --out DIR              also write tables/figures to DIR
   --curve-len N          length of fig4/fig5 series (default 48)

@@ -358,4 +358,20 @@ mod tests {
             assert!(seen.insert(cfg), "duplicate grid entry {cfg:?}");
         }
     }
+
+    #[test]
+    fn generated_grid_serves_exactly_the_cap() {
+        // The documented bound is reachable, not just a rejection line.
+        let grid = generated_grid(max_generated_len());
+        assert_eq!(grid.len(), max_generated_len());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the")]
+    fn generated_grid_panics_past_the_cap() {
+        // `SearchSpace::parse_spec` validates first and reports a clean
+        // error; the grid builder itself enforces the cap with a panic
+        // (an internal-contract violation, not a user-reachable path).
+        let _ = generated_grid(max_generated_len() + 1);
+    }
 }

@@ -522,6 +522,32 @@ mod tests {
     }
 
     #[test]
+    fn parse_spec_errors_name_the_problem() {
+        // Each error path must tell the operator what was wrong and what
+        // would be accepted — these messages are the CLI's only feedback
+        // for a bad `--space` value.
+        let err = SearchSpace::parse_spec("generated:abc", 0).unwrap_err().to_string();
+        assert!(err.contains("bad generated-space size"), "{err}");
+        assert!(err.contains("abc"), "must echo the bad size: {err}");
+        let err = SearchSpace::parse_spec("generated:", 0).unwrap_err().to_string();
+        assert!(err.contains("bad generated-space size"), "empty size: {err}");
+        let err = SearchSpace::parse_spec("generated:0", 0).unwrap_err().to_string();
+        assert!(err.contains("non-empty"), "{err}");
+        let err = SearchSpace::parse_spec("galaxy", 0).unwrap_err().to_string();
+        assert!(err.contains("galaxy"), "must echo the unknown spec: {err}");
+        assert!(err.contains("expected scout|generated:<n>"), "{err}");
+        // The cap error names the actual bound so the user can back off.
+        let cap = SearchSpace::max_generated_len();
+        let err = SearchSpace::parse_spec(&format!("generated:{}", cap + 1), 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(&cap.to_string()), "cap value missing: {err}");
+        assert!(err.contains(&(cap + 1).to_string()), "request missing: {err}");
+        // The boundary itself parses (exactly the full grid).
+        assert_eq!(SearchSpace::parse_spec(&format!("generated:{cap}"), 0).unwrap().len(), cap);
+    }
+
+    #[test]
     fn generated_features_are_normalized_and_distinct_machines_resolve() {
         let s = SearchSpace::generated(5, 800);
         assert_eq!(s.feature_matrix().len(), 800 * N_FEATURES);

@@ -166,6 +166,58 @@ impl ParityScript {
     pub fn steps(&self) -> &[(usize, usize)] {
         &self.steps
     }
+
+    /// Feature dimension of the pooled rows (candidate matrices handed
+    /// to the parity harnesses must use the same width).
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+/// Seeded random [`ParityScript`] programs for the parity **fuzz**
+/// suites (`tests/fuzz_parity.rs`, the bench smoke guards): each script
+/// draws its own dimension, row pool and an op sequence biased toward
+/// the search loop's append/slide deltas, with occasional wholesale
+/// window jumps (replace) and repeated windows (unchanged). Fully
+/// deterministic in `(seed, count)` — a failing script is reproduced by
+/// its reported seed and index alone.
+pub fn random_scripts(seed: u64, count: usize) -> Vec<ParityScript> {
+    (0..count)
+        .map(|i| {
+            // One independent, seedable stream per script, so script i
+            // reproduces without generating its predecessors.
+            let mut r = Pcg64::new(seed, 0x5C21_F0ED ^ (i as u64).wrapping_mul(0x9E37));
+            random_script(&mut r)
+        })
+        .collect()
+}
+
+fn random_script(r: &mut Pcg64) -> ParityScript {
+    let d = 2 + r.next_below(4); // 2..=5 features
+    let pool = 8 + r.next_below(9); // 8..=16 rows
+    let rows: Vec<f64> = (0..pool * d).map(|_| r.uniform(0.0, 1.0)).collect();
+    let ys: Vec<f64> = (0..pool).map(|_| r.uniform(0.5, 2.0)).collect();
+    // A short growth prefix seeds the append path; the op loop then
+    // mixes appends (biased — the search loop's common delta), slides
+    // and replaces.
+    let start_n = 1 + r.next_below(3); // 1..=3
+    let mut script = ParityScript::new(rows, ys, d).growth(start_n);
+    let (mut start, mut n) = (0usize, start_n);
+    let ops = 6 + r.next_below(10); // 6..=15 further windows
+    for _ in 0..ops {
+        match r.next_below(4) {
+            0 | 1 if start + n < pool => n += 1,  // append
+            2 if start + n < pool => start += 1,  // slide
+            _ => {
+                // Replace: an arbitrary window jump (can also land on
+                // the current window — an Unchanged delta).
+                n = 1 + r.next_below(pool);
+                start = r.next_below(pool - n + 1);
+            }
+        }
+        script = script.push_window(start, n);
+    }
+    script
 }
 
 /// Largest parity error per compared quantity, over a whole script.
@@ -490,6 +542,44 @@ mod tests {
             script.steps(),
             &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 5), (2, 5), (3, 5), (0, 12)]
         );
+    }
+
+    #[test]
+    fn random_scripts_are_deterministic_and_well_formed() {
+        let a = random_scripts(0xFEED, 16);
+        let b = random_scripts(0xFEED, 16);
+        assert_eq!(a.len(), 16);
+        for (i, (sa, sb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(sa.steps(), sb.steps(), "script {i} not deterministic");
+            assert_eq!(sa.dim(), sb.dim(), "script {i} dim not deterministic");
+            assert!(sa.steps().len() >= 7, "script {i} too short: {:?}", sa.steps());
+            for &(start, n) in sa.steps() {
+                assert!(n > 0 && start + n <= sa.pool_len(), "script {i} window oob");
+            }
+        }
+        // Different seeds draw different programs (overwhelmingly).
+        let c = random_scripts(0xBEEF, 16);
+        assert!(
+            a.iter().zip(&c).any(|(sa, sc)| sa.steps() != sc.steps()),
+            "two seeds produced identical fuzz corpora"
+        );
+        // The corpus must exercise all three delta families somewhere:
+        // appends (n grows), slides (start grows at fixed n), replaces
+        // (any other transition).
+        let (mut appends, mut slides, mut replaces) = (0usize, 0usize, 0usize);
+        for s in &a {
+            for w in s.steps().windows(2) {
+                let ((s0, n0), (s1, n1)) = (w[0], w[1]);
+                if s1 == s0 && n1 == n0 + 1 {
+                    appends += 1;
+                } else if s1 == s0 + 1 && n1 == n0 {
+                    slides += 1;
+                } else if (s1, n1) != (s0, n0) {
+                    replaces += 1;
+                }
+            }
+        }
+        assert!(appends > 0 && slides > 0 && replaces > 0, "{appends}/{slides}/{replaces}");
     }
 
     #[test]

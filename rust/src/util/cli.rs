@@ -80,13 +80,17 @@ impl Args {
         self.opt_usize("threads", 1).max(1)
     }
 
-    /// GP-internal worker-pool width (`--gp-threads N`, default 1,
-    /// floored at 1): each backend fans its hyperparameter-grid nll
-    /// sweep and its decide tiles across this many threads, with
-    /// bit-identical results for any value. Multiplies with
-    /// [`Self::opt_threads`] — total threads ≈ `threads * gp_threads`.
+    /// GP-internal worker-pool width (`--gp-threads N`): each backend
+    /// fans its hyperparameter-grid nll sweep and its decide tiles
+    /// across a persistent pool of this many threads, with bit-identical
+    /// results for any value. The default `0` is the **adaptive**
+    /// sentinel — the backend resolves it to
+    /// `bayesopt::adaptive_gp_threads()` (available_parallelism, capped),
+    /// so the parallel sweep is on by default; `--gp-threads 1` forces
+    /// fully serial. Multiplies with [`Self::opt_threads`] — total
+    /// threads ≈ `threads * gp_threads`.
     pub fn opt_gp_threads(&self) -> usize {
-        self.opt_usize("gp-threads", 1).max(1)
+        self.opt_usize("gp-threads", 0)
     }
 }
 
@@ -140,10 +144,13 @@ mod tests {
     }
 
     #[test]
-    fn gp_threads_option_floors_at_one() {
+    fn gp_threads_option_defaults_to_adaptive_sentinel() {
         assert_eq!(parse(&["table2", "--gp-threads", "4"], &[]).opt_gp_threads(), 4);
-        assert_eq!(parse(&["table2", "--gp-threads", "0"], &[]).opt_gp_threads(), 1);
-        assert_eq!(parse(&["table2"], &[]).opt_gp_threads(), 1);
+        // 0 is the adaptive sentinel (resolved by the backend), both as
+        // the default and when passed explicitly.
+        assert_eq!(parse(&["table2", "--gp-threads", "0"], &[]).opt_gp_threads(), 0);
+        assert_eq!(parse(&["table2"], &[]).opt_gp_threads(), 0);
+        assert_eq!(parse(&["table2", "--gp-threads", "1"], &[]).opt_gp_threads(), 1);
         // The two knobs parse independently.
         let a = parse(&["table2", "--threads", "2", "--gp-threads", "8"], &[]);
         assert_eq!((a.opt_threads(), a.opt_gp_threads()), (2, 8));

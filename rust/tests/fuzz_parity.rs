@@ -1,0 +1,111 @@
+//! Randomized parity fuzz: `testkit::random_scripts` generates seeded
+//! append/slide/replace observation programs and drives them through the
+//! two parity harnesses — replacing the hand-written-scripts-only
+//! coverage that used to pin the incremental caches and the worker pool.
+//!
+//! * `assert_backend_parity` pins the incremental factor cache against a
+//!   forced-cold scratch backend within 1e-9 over every generated
+//!   program;
+//! * `assert_parallel_parity` pins serial-vs-pooled **bit identity** at
+//!   `--gp-threads` 2/4/8 over every program, both on the exact sweep
+//!   and with the low-rank nll routing forced to engage (stage-split
+//!   marginal + incremental inducing refresh under the pool).
+//!
+//! Scripts are deterministic in `(RUYA_FUZZ_SEED, index)`; a failure
+//! re-panics with both, so any run reproduces with
+//! `RUYA_FUZZ_SEED=<seed> cargo test --test fuzz_parity`.
+
+use ruya::bayesopt::{hyperparameter_grid, NativeBackend};
+use ruya::testkit::{
+    assert_backend_parity, assert_parallel_parity, random_scripts, ParityScript,
+};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Scripts per fuzz run (the ISSUE floor is 32).
+const FUZZ_SCRIPTS: usize = 32;
+
+fn fuzz_seed() -> u64 {
+    std::env::var("RUYA_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA11C_E5EE_D5EEDu64)
+}
+
+/// Deterministic candidate matrix matching a script's feature width.
+fn candidates(script: &ParityScript, salt: usize) -> (Vec<f64>, usize) {
+    let d = script.dim();
+    let m = 6 + (salt % 7); // 6..=12 candidates
+    let xc = (0..m * d)
+        .map(|i| ((i * 29 + salt * 13 + 7) % 97) as f64 / 97.0)
+        .collect();
+    (xc, m)
+}
+
+/// Run `body` over every generated script, re-panicking with the seed
+/// and script index so failures reproduce from the log line alone.
+fn for_each_script(body: impl Fn(usize, &ParityScript, &[f64], usize)) {
+    let seed = fuzz_seed();
+    let scripts = random_scripts(seed, FUZZ_SCRIPTS);
+    assert_eq!(scripts.len(), FUZZ_SCRIPTS);
+    for (i, script) in scripts.iter().enumerate() {
+        let (xc, m) = candidates(script, i);
+        let result = catch_unwind(AssertUnwindSafe(|| body(i, script, &xc, m)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "fuzz script {i}/{FUZZ_SCRIPTS} (RUYA_FUZZ_SEED={seed:#x}, steps \
+                 {:?}) failed:\n  {msg}",
+                script.steps()
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_incremental_matches_scratch_over_random_programs() {
+    let grid = hyperparameter_grid();
+    for_each_script(|_, script, xc, m| {
+        let mut inc = NativeBackend::new();
+        let mut scr = NativeBackend::new();
+        scr.set_incremental(false);
+        let report = assert_backend_parity(&mut inc, &mut scr, script, xc, m, &grid, 1e-9);
+        assert_eq!(report.steps, script.steps().len());
+    });
+}
+
+#[test]
+fn fuzz_parallel_parity_bit_identical_over_random_programs() {
+    let grid = hyperparameter_grid();
+    for_each_script(|_, script, xc, m| {
+        // Exact path under the pool (floor lowered so the tiny fuzz
+        // windows fan out at all).
+        let make = || {
+            let mut b = NativeBackend::new();
+            b.set_pool_min_obs(0);
+            b
+        };
+        assert_parallel_parity(&make, &[2, 4, 8], script, xc, m, &grid);
+    });
+}
+
+#[test]
+fn fuzz_parallel_parity_lowrank_routing_bit_identical() {
+    let grid = hyperparameter_grid();
+    for_each_script(|_, script, xc, m| {
+        // Low-rank nll routing forced on (threshold below every fuzz
+        // window): the stage-split Woodbury sweep plus the incremental
+        // inducing refresh must stay bit-identical under the pool across
+        // every append/slide/replace program.
+        let make = || {
+            let mut b = NativeBackend::new();
+            b.set_pool_min_obs(0);
+            b.set_lowrank_nll_threshold(4);
+            b
+        };
+        assert_parallel_parity(&make, &[2, 4, 8], script, xc, m, &grid);
+    });
+}

@@ -37,14 +37,14 @@ fn parallel_parity_append_slide_replace() {
         .push_window(0, total);
     let m = 24;
     let xc = synth_rows(m, d, 13);
-    assert_parallel_parity(
-        &NativeBackend::new,
-        &GP_THREADS,
-        &script,
-        &xc,
-        m,
-        &hyperparameter_grid(),
-    );
+    // Floor lowered so the persistent pool engages on these scout-scale
+    // windows (the default GP_POOL_MIN_OBS would keep them serial).
+    let make = || {
+        let mut b = NativeBackend::new();
+        b.set_pool_min_obs(0);
+        b
+    };
+    assert_parallel_parity(&make, &GP_THREADS, &script, &xc, m, &hyperparameter_grid());
 }
 
 #[test]
@@ -62,6 +62,7 @@ fn parallel_parity_scratch_baseline() {
     let make = || {
         let mut b = NativeBackend::new();
         b.set_incremental(false);
+        b.set_pool_min_obs(0);
         b
     };
     assert_parallel_parity(&make, &GP_THREADS, &script, &xc, m, &hyperparameter_grid());
@@ -82,6 +83,7 @@ fn parallel_parity_across_decide_tiles() {
     let make = || {
         let mut b = NativeBackend::new();
         b.set_lowrank_policy(LowRankPolicy::Off);
+        b.set_pool_min_obs(0); // these 7..10-observation windows sit under the floor
         b
     };
     assert_parallel_parity(&make, &GP_THREADS, &script, &xc, m, &hyperparameter_grid());
@@ -119,6 +121,7 @@ fn parallel_parity_lowrank_nll_routing() {
     let make = move || {
         let mut b = NativeBackend::new();
         b.set_lowrank_nll_threshold(threshold);
+        b.set_pool_min_obs(0); // pool engages on both sides of the routing boundary
         b
     };
     assert_parallel_parity(&make, &GP_THREADS, &script, &xc, m, &hyperparameter_grid());
@@ -177,8 +180,19 @@ fn threaded_search_is_perfectly_repeatable() {
         .expect("threaded search");
         assert_eq!(out.tried.len(), params.max_iters);
         let s = backend.decide_stats();
+        // The search grows its history past GP_POOL_MIN_OBS, so both
+        // fan-outs must engage under the default serial floor — and the
+        // persistent pool must have been spawned exactly once and
+        // reused for every later fan-out.
         assert!(s.parallel_nll_sweeps > 0, "run {run}: nll sweep never threaded: {s:?}");
         assert!(s.parallel_decide_fanouts > 0, "run {run}: tile fan-out never engaged: {s:?}");
+        assert_eq!(s.pool_creates, 1, "run {run}: pool respawned mid-search: {s:?}");
+        assert_eq!(
+            s.pool_reuses + 1,
+            s.parallel_nll_sweeps + s.parallel_decide_fanouts,
+            "run {run}: some fan-out skipped the persistent pool: {s:?}"
+        );
+        assert!(s.serial_floor_bypasses > 0, "run {run}: small-n floor never applied: {s:?}");
         match &reference {
             None => reference = Some((out.tried.clone(), out.costs.clone())),
             Some((tried, ref_costs)) => {

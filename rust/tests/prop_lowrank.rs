@@ -7,7 +7,8 @@
 
 use ruya::bayesopt::gp::NativeGp;
 use ruya::bayesopt::{
-    farthest_point_sample, hyperparameter_grid, LowRankGp, LowRankPolicy, NativeBackend,
+    farthest_point_sample, hyperparameter_grid, InducingCache, LowRankGp, LowRankPolicy,
+    NativeBackend, DEFAULT_MAX_INDUCING, INDUCING_DRIFT_LIMIT,
 };
 use ruya::prop_assert;
 use ruya::searchspace::{SearchSpace, N_FEATURES};
@@ -206,6 +207,129 @@ fn parity_lowrank_large_space_within_tolerance() {
     assert_eq!(lowrank.decide_stats().lowrank, 3);
     // The mean must be far tighter than the conservative variance bound.
     assert!(report.max_mu_err <= 0.2, "mean drifted: {report:?}");
+}
+
+/// Stage-split pin: the backend's grouped low-rank `nll_grid` (one
+/// hyperparameter stage per (lengthscale, variance) group, one noise
+/// stage per grid point) must be **bit-identical** to the unsplit
+/// per-point evaluation (`fit_with_inducing` + `nll` per grid slot)
+/// across the full 32-slot grid — and the stage counters must show the
+/// ~4x kernel/GEMM saving actually happened (8 hyperparameter builds,
+/// not 32).
+#[test]
+fn stage_split_nll_grid_bit_identical_to_per_point() {
+    let space = SearchSpace::generated(23, 200);
+    let d = N_FEATURES;
+    let n = 40;
+    let idx: Vec<usize> = (0..n).collect();
+    let (x, y) = obs_from_space(&space, &idx);
+    let grid = hyperparameter_grid();
+    assert_eq!(grid.len(), 32, "the pin assumes the 32-slot selection grid");
+
+    let mut b = NativeBackend::new();
+    b.set_lowrank_nll_threshold(16); // route the 40-observation sweep low-rank
+    let nll = b.nll_grid(&x, &y, n, d, &grid).unwrap();
+    let s = b.decide_stats();
+    assert_eq!(s.nll_lowrank, 1, "sweep not routed low-rank: {s:?}");
+    assert_eq!(
+        s.lowrank_hyp_stage_builds, 8,
+        "stage split must build Kuu/B once per (ls, var) group: {s:?}"
+    );
+    assert_eq!(s.lowrank_noise_stage_builds, 32, "one noise stage per slot: {s:?}");
+    assert_eq!(s.fps_full_refreshes, 1, "first sweep selects inducing in full: {s:?}");
+
+    // Unsplit baseline over the identical inducing set (the first
+    // refresh is exactly scratch FPS at the backend's cap).
+    let inducing = farthest_point_sample(&x, n, d, DEFAULT_MAX_INDUCING);
+    let mut lr = LowRankGp::new();
+    for (g, &hyp) in grid.iter().enumerate() {
+        assert!(
+            lr.fit_with_inducing(&x, &y, n, d, hyp, &inducing),
+            "baseline fit failed at grid point {g}"
+        );
+        assert_eq!(
+            nll[g].to_bits(),
+            lr.nll(&y).to_bits(),
+            "nll[{g}] bits diverged from the per-point evaluation: {} vs {}",
+            nll[g],
+            lr.nll(&y)
+        );
+    }
+}
+
+/// Incremental-FPS pin at the backend level: across an append sequence
+/// the cached selection refreshes incrementally (counted), stays a valid
+/// distinct subset, and — immediately after any full re-selection —
+/// equals scratch FPS on the current window exactly. The drift bound
+/// [`INDUCING_DRIFT_LIMIT`] is pinned separately in `lowrank`'s unit
+/// tests; this covers the property over random append/slide/replace
+/// programs against catalog-shaped rows.
+#[test]
+fn prop_incremental_inducing_refresh_stays_valid_and_resyncs() {
+    property("incremental inducing refresh: valid between, scratch at resync", 15, |g| {
+        let d = N_FEATURES;
+        let n_cfg = g.usize_in(80, 200);
+        let space = SearchSpace::generated(g.rng().next_u64(), n_cfg);
+        let feats = space.feature_matrix();
+        let pool = g.usize_in(30, 60).min(n_cfg);
+        let k = g.usize_in(2, 16);
+        let mut cache = InducingCache::new();
+        let (mut start, mut n) = (0usize, g.usize_in(3, 8));
+        let mut incrementals = 0usize;
+        let mut incremental_deltas = 0usize;
+        let mut first = true;
+        for _ in 0..g.usize_in(8, 20) {
+            // Random walk over append / slide / replace windows.
+            let prev = (start, n);
+            match g.usize_in(0, 3) {
+                0 | 1 if start + n < pool => n += 1,
+                2 if start + n < pool => start += 1,
+                _ => {
+                    n = g.usize_in(1, pool);
+                    start = g.usize_in(0, pool - n);
+                }
+            }
+            let is_incremental_shape = !first
+                && ((start, n) == prev                      // unchanged
+                    || (start == prev.0 && n == prev.1 + 1) // append
+                    || (start == prev.0 + 1 && n == prev.1)); // slide
+            if is_incremental_shape {
+                incremental_deltas += 1;
+            }
+            first = false;
+            let x = &feats[start * d..(start + n) * d];
+            let (sel, full) = cache.refresh(x, n, d, k);
+            prop_assert!(sel.len() <= k.min(n), "selection above cap: {} > {}", sel.len(), k);
+            prop_assert!(!sel.is_empty(), "empty selection at n={n}");
+            prop_assert!(sel.iter().all(|&i| i < n), "index out of window: {sel:?}");
+            let mut uniq = sel.to_vec();
+            uniq.sort_unstable();
+            uniq.dedup();
+            prop_assert!(uniq.len() == sel.len(), "duplicate inducing index: {sel:?}");
+            if full {
+                let scratch = farthest_point_sample(x, n, d, k);
+                prop_assert!(
+                    sel == &scratch[..],
+                    "full refresh diverged from scratch FPS: {sel:?} vs {scratch:?}"
+                );
+            } else {
+                incrementals += 1;
+            }
+            prop_assert!(
+                cache.drift() <= INDUCING_DRIFT_LIMIT,
+                "drift {} past the documented bound",
+                cache.drift()
+            );
+        }
+        // Every append/slide/unchanged transition within the drift bound
+        // must have been served incrementally (the walk stays far under
+        // INDUCING_DRIFT_LIMIT, so none may fall back to a re-select).
+        prop_assert!(
+            incrementals == incremental_deltas,
+            "incremental refreshes {incrementals} != incremental deltas {incremental_deltas}"
+        );
+        Ok(())
+    });
 }
 
 /// Exact-equality pin for the Woodbury *marginal likelihood*: at
