@@ -1,0 +1,159 @@
+//! §Perf bench: the resident session engine — sessions/sec and p50/p99
+//! step latency at 1k/10k/100k concurrent sessions multiplexed over one
+//! shared scoring pool.
+//!
+//! `--smoke` (the CI mode) runs 64 concurrent sessions and *asserts*
+//! (via `SessionStats`) that the admission layer batches concurrent
+//! same-catalog decisions into shared fan-outs, that sessions share the
+//! engine's one worker pool (zero per-session pool creations), and that
+//! a suspend -> serialize -> deserialize -> resume round-trip performed
+//! inside the bench rejoins the uninterrupted trace bit for bit — so
+//! the optimizer-as-a-service layer cannot silently regress in CI.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::BoParams;
+use ruya::coordinator::{SessionEngine, SessionState};
+use ruya::searchspace::SearchSpace;
+use std::time::Instant;
+
+fn synthetic_costs(space: &SearchSpace) -> Vec<f64> {
+    (0..space.len()).map(|i| 0.5 + ((i * 37) % 101) as f64 / 101.0).collect()
+}
+
+fn two_phase(space: &SearchSpace) -> Vec<Vec<usize>> {
+    let priority = space.lowest_memory_configs(10);
+    let rest: Vec<usize> = (0..space.len()).filter(|i| !priority.contains(i)).collect();
+    vec![priority, rest]
+}
+
+/// An engine over the scout catalog with `count` open sessions (seeds
+/// deterministic per slot, so two engines built alike run alike).
+fn engine_with_sessions(count: usize, width: usize, params: BoParams) -> SessionEngine {
+    let space = SearchSpace::scout();
+    let mut engine = SessionEngine::new(width);
+    let job = engine
+        .register_job("bench", &space, synthetic_costs(&space), two_phase(&space))
+        .expect("register");
+    for s in 0..count {
+        engine.open(job, 0xBE7C ^ s as u64, params).expect("open");
+    }
+    engine
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let pos = q * (sorted.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+fn run_scale(count: usize) {
+    let params = BoParams { max_iters: 6, ..Default::default() };
+    let mut engine = engine_with_sessions(count, 0, params);
+    let t0 = Instant::now();
+    // Per-round per-step latency samples: every step_all round advances
+    // each live session once, so elapsed/stepped is the per-session step
+    // cost of that round (execute rounds cheap, decide rounds pooled).
+    let mut lat: Vec<f64> = Vec::new();
+    loop {
+        let t = Instant::now();
+        let n = engine.step_all().expect("step");
+        if n == 0 {
+            break;
+        }
+        lat.push(t.elapsed().as_nanos() as f64 / n as f64);
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = engine.stats();
+    assert_eq!(stats.sessions_finished as usize, count);
+    println!(
+        "{count:>7} sessions: {:>10.0} sessions/s  {:>11.0} steps/s  \
+         step p50 {:>10}  p99 {:>10}  ({} rounds, {} batched decides)",
+        count as f64 / secs,
+        stats.steps as f64 / secs,
+        harness::fmt_ns(percentile(&lat, 0.50)),
+        harness::fmt_ns(percentile(&lat, 0.99)),
+        lat.len(),
+        stats.batched_decides
+    );
+}
+
+fn smoke() {
+    harness::section("session engine smoke (CI guard)");
+    let params = BoParams { max_iters: 10, ..Default::default() };
+
+    // Reference: the same 64 sessions run uninterrupted.
+    let mut reference = engine_with_sessions(64, 2, params);
+    reference.run_all().expect("reference run");
+
+    let t0 = Instant::now();
+    let mut engine = engine_with_sessions(64, 2, params);
+    for _ in 0..4 {
+        engine.step_all().expect("step");
+    }
+    // Suspend / serialize / deserialize / resume one session mid-flight.
+    let victim = engine.session_ids()[10];
+    let state = engine.suspend(victim).expect("suspend");
+    let resumed = engine
+        .resume(&SessionState::decode(&state.encode()).expect("decode"))
+        .expect("resume");
+    engine.run_all().expect("run");
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let stats = engine.stats();
+    assert!(
+        stats.batched_decides > 0,
+        "concurrent same-catalog decides never batched: {stats:?}"
+    );
+    assert_eq!(
+        engine.session_backend_pool_creates(),
+        0,
+        "a session created its own worker pool instead of sharing the engine's"
+    );
+    assert_eq!((stats.suspends, stats.resumes), (1, 1), "round-trip not performed: {stats:?}");
+    assert_eq!(stats.sessions_finished, 64);
+    assert_eq!(stats.sessions_active, 0);
+
+    // The round-trip rejoined the uninterrupted trace bit for bit.
+    let a = engine.outcome(resumed).expect("resumed outcome");
+    let b = reference.outcome(victim).expect("reference outcome");
+    assert_eq!(a.tried, b.tried, "resumed picks diverged from the uninterrupted run");
+    assert_eq!(
+        a.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+        b.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+        "resumed cost bits diverged from the uninterrupted run"
+    );
+
+    println!(
+        "smoke ok: 64 sessions at {:.0} sessions/s, {} decides batched over {} fan-out \
+         rounds, suspend/resume round-trip exact",
+        64.0 / secs,
+        stats.batched_decides,
+        stats.fanout_rounds
+    );
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
+
+    harness::section("single-session reference (open + run, scout catalog, 6 iters)");
+    let params = BoParams { max_iters: 6, ..Default::default() };
+    harness::bench_fn("engine open+run (1 session)", || {
+        let mut e = engine_with_sessions(1, 1, params);
+        while e.step_all().expect("step") > 0 {}
+    });
+
+    harness::section("session engine throughput (shared pool, batched decides)");
+    for &count in &[1_000usize, 10_000, 100_000] {
+        run_scale(count);
+    }
+}

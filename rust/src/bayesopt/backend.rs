@@ -45,7 +45,7 @@
 //! (`fps_full_refreshes`/`fps_incremental_refreshes`) and the low-rank
 //! stage split (`lowrank_hyp_stage_builds`/`lowrank_noise_stage_builds`).
 
-use super::chol::{FactorCache, FactorCacheStats, FitPlan, ObsDelta, SlotTask};
+use super::chol::{CholFactor, FactorCache, FactorCacheStats, FitPlan, ObsDelta, SlotTask};
 use super::gp::{
     expected_improvement, matern52_from_d2, matern52_gram_from_d2, predict_into,
 };
@@ -191,6 +191,24 @@ pub struct Decision {
     pub ei: Vec<f64>,
     pub mu: Vec<f64>,
     pub var: Vec<f64>,
+}
+
+/// The fitted-model half of a [`NativeBackend::decide`], produced by
+/// [`NativeBackend::prepare_decide`]: which posterior path the routing
+/// chose and (on the exact path) which [`FactorCache`] slot carries the
+/// up-to-date Cholesky factor. The session engine runs the fit phase of
+/// many sessions serially through this, then fans the pure
+/// candidate-scoring phase of *all* of them across one shared worker
+/// pool ([`NativeBackend::exact_score_view`] /
+/// [`NativeBackend::lowrank_mut`]) — the cross-session batched decide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreparedDecide {
+    /// Exact posterior: score through [`predict_into`] against the
+    /// borrowed factor + weights of [`NativeBackend::exact_score_view`].
+    Exact { slot: usize },
+    /// Nyström low-rank posterior: score through
+    /// [`LowRankGp::predict_batch`] on [`NativeBackend::lowrank_mut`].
+    LowRank,
 }
 
 /// One GP evaluation service. `x`/`xc` are row-major with `d` columns.
@@ -777,6 +795,66 @@ impl NativeBackend {
             }
         }
         out
+    }
+
+    /// The fit half of [`GpBackend::decide`], split out for the session
+    /// engine's cross-session batched fan-out: identical routing,
+    /// inducing refresh, distance-cache delta, factor update and weight
+    /// solve as `decide` — arithmetic in the same order, counted in the
+    /// same [`DecideStats`] — but stopping before candidate scoring.
+    /// The caller then scores any candidate block through
+    /// [`Self::exact_score_view`] + [`predict_into`] (exact) or
+    /// [`Self::lowrank_mut`] + [`LowRankGp::predict_batch`] (low-rank);
+    /// per-column arithmetic is independent of the tiling, so the split
+    /// reproduces `decide`'s mu/var/EI bit for bit
+    /// (`prepared_decide_scoring_matches_decide` pins this).
+    pub fn prepare_decide(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        n: usize,
+        d: usize,
+        m: usize,
+        hyp: [f64; 3],
+    ) -> Result<PreparedDecide> {
+        if let Some(max_inducing) = self.lowrank_limit(n, m) {
+            let inducing = self.refresh_inducing(x, n, d, max_inducing);
+            let fitted = self.lowrank.fit_with_inducing(x, y, n, d, hyp, &inducing);
+            let stats = self.lowrank.take_stats();
+            self.decide_stats.absorb_lowrank(stats);
+            if fitted {
+                self.decide_stats.lowrank += 1;
+                return Ok(PreparedDecide::LowRank);
+            }
+            self.decide_stats.lowrank_fallbacks += 1;
+        }
+        let delta = self.update_d2(x, n, d);
+        self.factors.note_delta(delta);
+        let (mut row_key, mut gram_key) = ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
+        let idx = self
+            .ensure_factor(hyp, n, &mut row_key, &mut gram_key)
+            .ok_or_else(|| anyhow::anyhow!("gram matrix not SPD"))?;
+        self.decide_stats.exact += 1;
+        let mut alpha = std::mem::take(&mut self.alpha_scratch);
+        self.factors.factor(idx).solve_into(y, &mut alpha);
+        self.alpha_scratch = alpha;
+        Ok(PreparedDecide::Exact { slot: idx })
+    }
+
+    /// The borrowed factor and weights of the last
+    /// [`Self::prepare_decide`] that returned
+    /// [`PreparedDecide::Exact`] — everything a pure scoring pass needs
+    /// to hand to [`predict_into`]. Immutable, so many sessions' views
+    /// can be collected before one shared pool fans them all out.
+    pub fn exact_score_view(&self, slot: usize) -> (&CholFactor, &[f64]) {
+        (self.factors.factor(slot), &self.alpha_scratch)
+    }
+
+    /// The low-rank posterior fitted by the last [`Self::prepare_decide`]
+    /// that returned [`PreparedDecide::LowRank`] (predict_batch needs
+    /// `&mut` for its internal scratch; the posterior itself is fixed).
+    pub fn lowrank_mut(&mut self) -> &mut LowRankGp {
+        &mut self.lowrank
     }
 }
 
@@ -1570,6 +1648,74 @@ mod tests {
         off.set_lowrank_policy(LowRankPolicy::Off);
         off.nll_grid(&x, &y, n, d, &grid).unwrap();
         assert_eq!(off.decide_stats().nll_lowrank, 0);
+    }
+
+    #[test]
+    fn prepared_decide_scoring_matches_decide() {
+        // The session engine's fit/score split must reproduce decide()
+        // bit for bit on both routing paths.
+        let d = 3;
+        let hyp = [0.6, 1.0, 1e-3];
+        // Exact path (small space, short history).
+        let (n, m) = (8, DECIDE_TILE + 13); // two tiles, last ragged
+        let (x, y, xc) = synth(n, m, d);
+        let cmask: Vec<bool> = (0..m).map(|i| i % 5 != 0).collect();
+        let mut whole = NativeBackend::new();
+        let dec = whole.decide(&x, &y, n, d, &xc, &cmask, m, hyp).unwrap();
+        let mut split = NativeBackend::new();
+        let prep = split.prepare_decide(&x, &y, n, d, m, hyp).unwrap();
+        let PreparedDecide::Exact { slot } = prep else {
+            panic!("small space must stay exact, got {prep:?}");
+        };
+        let best = y.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut mu = vec![0.0; m];
+        let mut var = vec![0.0; m];
+        let (factor, alpha) = split.exact_score_view(slot);
+        let (mut ks, mut acc) = (Vec::new(), Vec::new());
+        for (t, (mu_c, var_c)) in
+            mu.chunks_mut(DECIDE_TILE).zip(var.chunks_mut(DECIDE_TILE)).enumerate()
+        {
+            let start = t * DECIDE_TILE;
+            let w = mu_c.len();
+            predict_into(
+                factor,
+                alpha,
+                &x,
+                n,
+                d,
+                hyp,
+                &xc[start * d..(start + w) * d],
+                w,
+                mu_c,
+                var_c,
+                &mut ks,
+                &mut acc,
+            );
+        }
+        for j in 0..m {
+            assert_eq!(dec.mu[j].to_bits(), mu[j].to_bits(), "mu[{j}]");
+            assert_eq!(dec.var[j].to_bits(), var[j].to_bits(), "var[{j}]");
+            let ei = if cmask[j] { expected_improvement(mu[j], var[j], best) } else { 0.0 };
+            assert_eq!(dec.ei[j].to_bits(), ei.to_bits(), "ei[{j}]");
+        }
+        assert_eq!(whole.decide_stats().exact, split.decide_stats().exact);
+
+        // Low-rank path (forced policy, same selection via the caches).
+        let (n, m) = (12, 20);
+        let (x, y, xc) = synth(n, m, d);
+        let mut whole = NativeBackend::new();
+        whole.set_lowrank_policy(LowRankPolicy::Force { max_inducing: 6 });
+        let dec = whole.decide(&x, &y, n, d, &xc, &vec![true; m], m, hyp).unwrap();
+        let mut split = NativeBackend::new();
+        split.set_lowrank_policy(LowRankPolicy::Force { max_inducing: 6 });
+        let prep = split.prepare_decide(&x, &y, n, d, m, hyp).unwrap();
+        assert_eq!(prep, PreparedDecide::LowRank);
+        let (mut mu, mut var) = (Vec::new(), Vec::new());
+        split.lowrank_mut().predict_batch(&xc, m, &mut mu, &mut var);
+        for j in 0..m {
+            assert_eq!(dec.mu[j].to_bits(), mu[j].to_bits(), "lowrank mu[{j}]");
+            assert_eq!(dec.var[j].to_bits(), var[j].to_bits(), "lowrank var[{j}]");
+        }
     }
 
     #[test]

@@ -14,9 +14,9 @@ pub mod search;
 pub use backend::{
     adaptive_gp_threads, backend_by_name, backend_factory_by_name,
     backend_factory_with_parallelism, BackendFactory, BackendKind, DecideStats, Decision,
-    GpBackend, LowRankPolicy, NativeBackend, XlaBackend, DECIDE_TILE, GP_POOL_MIN_OBS,
-    LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS, LOWRANK_NLL_OBS_THRESHOLD,
-    MAX_ADAPTIVE_GP_THREADS,
+    GpBackend, LowRankPolicy, NativeBackend, PreparedDecide, XlaBackend, DECIDE_TILE,
+    GP_POOL_MIN_OBS, LOWRANK_CANDIDATE_THRESHOLD, LOWRANK_MIN_OBS,
+    LOWRANK_NLL_OBS_THRESHOLD, MAX_ADAPTIVE_GP_THREADS,
 };
 pub use chol::{CholFactor, FactorCache, FactorCacheStats, ObsDelta};
 pub use lowrank::{
@@ -24,4 +24,7 @@ pub use lowrank::{
     INDUCING_DRIFT_LIMIT,
 };
 pub use pool::{LaneScratch, WorkerPool};
-pub use search::{hyperparameter_grid, run_search, BoParams, SearchOutcome};
+pub use search::{
+    hyperparameter_grid, run_search, BoParams, CursorSnapshot, SearchCursor, SearchOutcome,
+    SearchStep,
+};

@@ -21,10 +21,26 @@
 //! deterministic-parallelism contract), so a seeded search produces the
 //! same iteration trace serial or threaded —
 //! `tests/parallel_gp.rs` pins exactly that.
+//!
+//! # The cursor step machine
+//!
+//! The loop is implemented as a resumable step machine,
+//! [`SearchCursor`]: `advance()` surfaces the next action (execute a
+//! pending pick, or ask for a GP decision over the current window) and
+//! `record()` feeds an observed cost back in. [`run_search`] is a thin
+//! wrapper driving the cursor to completion against an oracle — the
+//! classic entry point and the step machine produce identical traces by
+//! construction. The cursor's cross-iteration state (tried/costs, phase
+//! cursor, pending init picks, RNG position, stopping-criterion state)
+//! is plain data, exposed via [`SearchCursor::snapshot`] so the session
+//! layer (`coordinator::session`) can serialize a search mid-flight and
+//! resume it bit-identically.
 
 use super::backend::GpBackend;
 use crate::util::rng::Pcg64;
 use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Search hyperparameters; defaults follow CherryPick (§III-E).
 #[derive(Debug, Clone, Copy)]
@@ -97,6 +113,361 @@ impl SearchOutcome {
     }
 }
 
+/// The next action a [`SearchCursor`] needs from its driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchStep {
+    /// The search is over (phases exhausted, `max_iters` reached, or an
+    /// enforced stop fired).
+    Done,
+    /// Execute configuration `i` next (a random init pick or the
+    /// degenerate-phase fallback) and feed its cost to
+    /// [`SearchCursor::record`].
+    Execute(usize),
+    /// A GP decision over the current window is required: either call
+    /// [`SearchCursor::decide_with_backend`], or run the
+    /// nll-grid/decide sequence externally (the session engine's batched
+    /// fan-out) and close it with [`SearchCursor::finish_decision`].
+    NeedsDecision,
+}
+
+/// The plain-data core of a mid-flight search — everything the cursor
+/// carries across iterations that cannot be re-derived from its inputs.
+/// `x_obs`/`tried_flag`/`cmask` are deliberately absent (recomputed from
+/// `tried` and the feature matrix), keeping the snapshot compact. The
+/// session layer serializes exactly these fields and uses snapshot
+/// equality as the resume integrity check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CursorSnapshot {
+    pub tried: Vec<usize>,
+    pub costs: Vec<f64>,
+    pub stop_after: Option<usize>,
+    pub phase_starts: Vec<usize>,
+    pub phase_idx: usize,
+    pub phase_entered: bool,
+    pub pending: Vec<usize>,
+    pub pending_gate: bool,
+    pub done: bool,
+    pub rng_state: u128,
+    pub rng_inc: u128,
+}
+
+/// Resumable form of the phased BO search loop: the control flow of
+/// [`run_search`] unrolled into an explicit step machine (see the module
+/// docs). One `advance()`/`record()` round-trip corresponds to exactly
+/// one `observe()` of the classic loop, so the iteration trace — and
+/// every RNG draw — is bit-identical to the recursive-descent original.
+pub struct SearchCursor {
+    /// Disjoint index sets explored in order (shared across sessions:
+    /// thousands of engine sessions on one catalog hold one allocation).
+    plan: Arc<Vec<Vec<usize>>>,
+    m: usize,
+    d: usize,
+    rng: Pcg64,
+    params: BoParams,
+    grid: Vec<[f64; 3]>,
+    tried: Vec<usize>,
+    costs: Vec<f64>,
+    x_obs: Vec<f64>,
+    tried_flag: Vec<bool>,
+    // Candidate-eligibility mask, refilled in place each iteration: on a
+    // generated 5k-config catalog an m-wide allocation per iteration
+    // would dominate the small-n steps.
+    cmask: Vec<bool>,
+    stop_after: Option<usize>,
+    phase_starts: Vec<usize>,
+    /// Index of the phase currently being explored.
+    phase_idx: usize,
+    /// Whether `phase_starts` has been recorded (and init picks drawn)
+    /// for `phase_idx` yet.
+    phase_entered: bool,
+    /// Queued random picks awaiting execution (init or degenerate draw).
+    pending: VecDeque<usize>,
+    /// True when each pending pick must re-check `max_iters` before
+    /// executing (the top-of-phase init loop does; the degenerate
+    /// empty-history draw does not — it defers to the main loop's gate).
+    pending_gate: bool,
+    done: bool,
+}
+
+impl SearchCursor {
+    /// Start a search over `m` candidates of dimension `d` following
+    /// `plan`'s phases. The RNG is consumed from its current position
+    /// (pass a fresh `Pcg64::from_seed` for a reproducible session).
+    pub fn new(plan: Arc<Vec<Vec<usize>>>, m: usize, d: usize, rng: Pcg64, params: BoParams) -> Self {
+        for phase in plan.iter() {
+            for &i in phase {
+                assert!(i < m, "phase index {i} out of bounds (space size {m})");
+            }
+        }
+        Self {
+            plan,
+            m,
+            d,
+            rng,
+            params,
+            grid: hyperparameter_grid(),
+            tried: Vec::new(),
+            costs: Vec::new(),
+            x_obs: Vec::new(),
+            tried_flag: vec![false; m],
+            cmask: vec![false; m],
+            stop_after: None,
+            phase_starts: Vec::new(),
+            phase_idx: 0,
+            phase_entered: false,
+            pending: VecDeque::new(),
+            pending_gate: false,
+            done: false,
+        }
+    }
+
+    /// Surface the next action. Idempotent: calling `advance` again
+    /// before `record`/`finish_decision` returns the same step (pending
+    /// picks persist until recorded, and the eligibility mask rebuild is
+    /// a pure function of `tried`).
+    pub fn advance(&mut self) -> SearchStep {
+        loop {
+            // Queued random picks drain first.
+            if let Some(&next) = self.pending.front() {
+                if self.pending_gate && self.tried.len() >= self.params.max_iters {
+                    // Mirrors the init loop's per-pick gate: reaching the
+                    // cap mid-inits ends the whole search.
+                    self.pending.clear();
+                    self.done = true;
+                    return SearchStep::Done;
+                }
+                return SearchStep::Execute(next);
+            }
+            if self.done {
+                return SearchStep::Done;
+            }
+            let Some(phase) = self.plan.get(self.phase_idx) else {
+                self.done = true;
+                return SearchStep::Done;
+            };
+
+            if !self.phase_entered {
+                self.phase_entered = true;
+                self.phase_starts.push(self.tried.len());
+                // Random initialization (first phase only, drawn inside it).
+                if self.tried.is_empty() {
+                    let k = self.params.n_init.min(phase.len());
+                    let picks = self.rng.sample_distinct(phase.len(), k);
+                    self.pending = picks.into_iter().map(|p| phase[p]).collect();
+                    self.pending_gate = true;
+                    continue;
+                }
+            }
+
+            // Main per-iteration loop body.
+            if self.tried.len() >= self.params.max_iters {
+                self.done = true;
+                return SearchStep::Done;
+            }
+            // Eligible = this phase's untried configurations.
+            for v in self.cmask.iter_mut() {
+                *v = false;
+            }
+            let mut any_eligible = false;
+            for &i in phase.iter() {
+                if !self.tried_flag[i] {
+                    self.cmask[i] = true;
+                    any_eligible = true;
+                }
+            }
+            if !any_eligible {
+                // Phase exhausted -> next phase.
+                self.phase_idx += 1;
+                self.phase_entered = false;
+                continue;
+            }
+            if self.tried.is_empty() {
+                // Degenerate: empty first phases meant no inits ran yet.
+                let k = self.params.n_init.min(phase.len());
+                let untried: Vec<usize> =
+                    phase.iter().copied().filter(|&i| !self.tried_flag[i]).collect();
+                let picks = self.rng.sample_distinct(untried.len(), k.min(untried.len()));
+                self.pending = picks.into_iter().map(|p| untried[p]).collect();
+                self.pending_gate = false;
+                continue;
+            }
+            return SearchStep::NeedsDecision;
+        }
+    }
+
+    /// Feed the observed cost of configuration `i` back in. `i` must be
+    /// the pick `advance`/`finish_decision` surfaced; `features` is the
+    /// same row-major `m x d` matrix every call sees.
+    pub fn record(&mut self, i: usize, cost: f64, features: &[f64]) {
+        debug_assert_eq!(features.len(), self.m * self.d);
+        if let Some(&front) = self.pending.front() {
+            assert_eq!(front, i, "recorded config {i} but pick {front} was pending");
+            self.pending.pop_front();
+        }
+        debug_assert!(!self.tried_flag[i], "config {i} executed twice");
+        self.tried_flag[i] = true;
+        self.tried.push(i);
+        self.costs.push(cost);
+        self.x_obs.extend_from_slice(&features[i * self.d..(i + 1) * self.d]);
+    }
+
+    /// The conditioning window for the pending decision under a backend
+    /// holding at most `max_obs` observations: `(skip, n)` with
+    /// `n = min(executions, max_obs)` — the windowed-history contract of
+    /// the classic loop.
+    pub fn window(&self, max_obs: usize) -> (usize, usize) {
+        let win = self.tried.len().min(max_obs);
+        (self.tried.len() - win, win)
+    }
+
+    /// Observed feature rows from `skip` on (pair with [`Self::window`]).
+    pub fn x_window(&self, skip: usize) -> &[f64] {
+        &self.x_obs[skip * self.d..]
+    }
+
+    /// Observed costs from `skip` on.
+    pub fn y_window(&self, skip: usize) -> &[f64] {
+        &self.costs[skip..]
+    }
+
+    /// The candidate-eligibility mask of the pending decision (valid
+    /// after `advance` returned [`SearchStep::NeedsDecision`]).
+    pub fn cmask(&self) -> &[bool] {
+        &self.cmask
+    }
+
+    /// The hyperparameter-selection grid this cursor sweeps.
+    pub fn grid(&self) -> &[[f64; 3]] {
+        &self.grid
+    }
+
+    /// Close a decision whose EI/variance vectors were computed
+    /// externally (the session engine's batched fan-out): applies the
+    /// stopping criterion and returns the configuration to execute, or
+    /// `None` when an enforced stop ended the search. `y_scale` is the
+    /// standardization scale of the decision's window.
+    pub fn finish_decision(&mut self, ei: &[f64], var: &[f64], y_scale: f64) -> Option<usize> {
+        let (best_idx, ei_max_std) = argmax_masked(ei, &self.cmask);
+
+        // Stopping criterion on the raw cost scale (CherryPick: stop
+        // once expected savings drop below 10% of the best seen).
+        // Both the gate and the recorded stopping point count
+        // *executions performed* (`tried.len()`), not the windowed
+        // conditioning count `n`: under a capacity-limited backend
+        // (`max_obs`) the two diverge — the old code under-reported
+        // the stop index consumed by the Fig. 5 curves, and could
+        // never fire at all when `max_obs < min_obs_for_stop`.
+        let best_cost = self.costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ei_max_raw = ei_max_std * y_scale;
+        if self.stop_after.is_none()
+            && self.tried.len() >= self.params.min_obs_for_stop
+            && ei_max_raw < self.params.ei_stop_rel * best_cost
+        {
+            self.stop_after = Some(self.tried.len());
+            if self.params.enforce_stop {
+                self.done = true;
+                return None;
+            }
+        }
+
+        // All-zero EI (e.g. fully dominated region): explore the most
+        // uncertain eligible candidate instead of an arbitrary one.
+        Some(if ei_max_std > 0.0 { best_idx } else { argmax_masked(var, &self.cmask).0 })
+    }
+
+    /// Run one full decision against a backend — window, standardize,
+    /// marginal-likelihood grid, EI acquisition, stopping criterion —
+    /// and return the pick (`None` = enforced stop). The one decision
+    /// body shared by [`run_search`], the session engine's serial path
+    /// and the resume replay.
+    pub fn decide_with_backend(
+        &mut self,
+        features: &[f64],
+        backend: &mut dyn GpBackend,
+    ) -> Result<Option<usize>> {
+        // Window the history to the backend's conditioning capacity
+        // (AOT artifacts have a frozen maximum observation count; by
+        // the time the window saturates — 64 of 69 configs tried —
+        // the optimum has long been recorded in `costs`).
+        let (skip, n) = self.window(backend.max_obs());
+        let (y_std, _, y_scale) = super::gp::standardize(&self.costs[skip..]);
+        let x_win = &self.x_obs[skip * self.d..];
+
+        // Hyperparameter selection by marginal likelihood.
+        let nll = backend.nll_grid(x_win, &y_std, n, self.d, &self.grid)?;
+        let hyp = self.grid[argmin(&nll)];
+
+        // Acquisition over the eligible candidates.
+        let decision =
+            backend.decide(x_win, &y_std, n, self.d, features, &self.cmask, self.m, hyp)?;
+        Ok(self.finish_decision(&decision.ei, &decision.var, y_scale))
+    }
+
+    /// Executions performed so far.
+    pub fn executions(&self) -> usize {
+        self.tried.len()
+    }
+
+    /// Configuration indices in execution order.
+    pub fn tried(&self) -> &[usize] {
+        &self.tried
+    }
+
+    /// Observed costs in execution order.
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// True once the search has ended.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Candidate-space size this cursor searches over.
+    pub fn space_len(&self) -> usize {
+        self.m
+    }
+
+    /// Feature dimension of the candidate space.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// The serializable cross-iteration state (see [`CursorSnapshot`]).
+    pub fn snapshot(&self) -> CursorSnapshot {
+        let (rng_state, rng_inc) = self.rng.to_parts();
+        CursorSnapshot {
+            tried: self.tried.clone(),
+            costs: self.costs.clone(),
+            stop_after: self.stop_after,
+            phase_starts: self.phase_starts.clone(),
+            phase_idx: self.phase_idx,
+            phase_entered: self.phase_entered,
+            pending: self.pending.iter().copied().collect(),
+            pending_gate: self.pending_gate,
+            done: self.done,
+            rng_state,
+            rng_inc,
+        }
+    }
+
+    /// The finished (or so-far) trace in [`SearchOutcome`] form.
+    pub fn outcome(&self) -> SearchOutcome {
+        SearchOutcome {
+            tried: self.tried.clone(),
+            costs: self.costs.clone(),
+            stop_after: self.stop_after,
+            phase_starts: self.phase_starts.clone(),
+        }
+    }
+
+    /// The RNG at its current position (callers that passed a shared
+    /// generator into [`run_search`] get its advanced position back).
+    pub fn rng(&self) -> &Pcg64 {
+        &self.rng
+    }
+}
+
 /// Run a phased Bayesian-optimization search.
 ///
 /// * `features`: row-major `m x d` candidate features (the whole space).
@@ -104,6 +475,10 @@ impl SearchOutcome {
 ///   exhausted before the next opens (§III-D/E). Their union need not
 ///   cover the space (uncovered configs are never tried).
 /// * `oracle`: runs configuration `i` and returns its cost.
+///
+/// A thin driver over [`SearchCursor`]: one `advance`/`record`
+/// round-trip per execution, so the trace is identical to the session
+/// engine stepping the same cursor.
 pub fn run_search(
     features: &[f64],
     m: usize,
@@ -115,134 +490,26 @@ pub fn run_search(
     params: &BoParams,
 ) -> Result<SearchOutcome> {
     assert_eq!(features.len(), m * d);
-    for phase in phases {
-        for &i in phase {
-            assert!(i < m, "phase index {i} out of bounds (space size {m})");
+    let mut cursor = SearchCursor::new(Arc::new(phases.to_vec()), m, d, rng.clone(), *params);
+    loop {
+        match cursor.advance() {
+            SearchStep::Done => break,
+            SearchStep::Execute(i) => {
+                let cost = oracle(i);
+                cursor.record(i, cost, features);
+            }
+            SearchStep::NeedsDecision => {
+                if let Some(pick) = cursor.decide_with_backend(features, backend)? {
+                    let cost = oracle(pick);
+                    cursor.record(pick, cost, features);
+                }
+            }
         }
     }
-
-    let grid = hyperparameter_grid();
-    let mut tried_flag = vec![false; m];
-    // Candidate-eligibility mask, refilled in place each iteration: on a
-    // generated 5k-config catalog an m-wide allocation per iteration
-    // would dominate the small-n steps.
-    let mut cmask = vec![false; m];
-    let mut tried = Vec::new();
-    let mut costs = Vec::new();
-    let mut x_obs: Vec<f64> = Vec::new();
-    let mut stop_after: Option<usize> = None;
-    let mut phase_starts = Vec::new();
-
-    let observe = |i: usize,
-                       tried: &mut Vec<usize>,
-                       costs: &mut Vec<f64>,
-                       x_obs: &mut Vec<f64>,
-                       tried_flag: &mut Vec<bool>,
-                       oracle: &mut dyn FnMut(usize) -> f64| {
-        debug_assert!(!tried_flag[i], "config {i} executed twice");
-        tried_flag[i] = true;
-        tried.push(i);
-        costs.push(oracle(i));
-        x_obs.extend_from_slice(&features[i * d..(i + 1) * d]);
-    };
-
-    'phases: for phase in phases {
-        phase_starts.push(tried.len());
-
-        // Random initialization (first phase only, drawn inside it).
-        if tried.is_empty() {
-            let k = params.n_init.min(phase.len());
-            let picks = rng.sample_distinct(phase.len(), k);
-            for p in picks {
-                if tried.len() >= params.max_iters {
-                    break 'phases;
-                }
-                observe(phase[p], &mut tried, &mut costs, &mut x_obs, &mut tried_flag, oracle);
-            }
-        }
-
-        loop {
-            if tried.len() >= params.max_iters {
-                break 'phases;
-            }
-            // Eligible = this phase's untried configurations.
-            for v in cmask.iter_mut() {
-                *v = false;
-            }
-            let mut any_eligible = false;
-            for &i in phase {
-                if !tried_flag[i] {
-                    cmask[i] = true;
-                    any_eligible = true;
-                }
-            }
-            if !any_eligible {
-                break; // phase exhausted -> next phase
-            }
-            if tried.is_empty() {
-                // Degenerate: empty first phases meant no inits ran yet.
-                let k = params.n_init.min(phase.len());
-                let untried: Vec<usize> =
-                    phase.iter().copied().filter(|&i| !tried_flag[i]).collect();
-                let picks = rng.sample_distinct(untried.len(), k.min(untried.len()));
-                for p in picks {
-                    observe(untried[p], &mut tried, &mut costs, &mut x_obs, &mut tried_flag, oracle);
-                }
-                continue;
-            }
-
-            // Window the history to the backend's conditioning capacity
-            // (AOT artifacts have a frozen maximum observation count; by
-            // the time the window saturates — 64 of 69 configs tried —
-            // the optimum has long been recorded in `costs`).
-            let win = tried.len().min(backend.max_obs());
-            let skip = tried.len() - win;
-            let y_win = &costs[skip..];
-            let x_win = &x_obs[skip * d..];
-            let n = win;
-            let (y_std, _, y_scale) = super::gp::standardize(y_win);
-
-            // Hyperparameter selection by marginal likelihood.
-            let nll = backend.nll_grid(x_win, &y_std, n, d, &grid)?;
-            let hyp = grid[argmin(&nll)];
-
-            // Acquisition over the eligible candidates.
-            let decision = backend.decide(x_win, &y_std, n, d, features, &cmask, m, hyp)?;
-            let (best_idx, ei_max_std) = argmax_masked(&decision.ei, &cmask);
-
-            // Stopping criterion on the raw cost scale (CherryPick: stop
-            // once expected savings drop below 10% of the best seen).
-            // Both the gate and the recorded stopping point count
-            // *executions performed* (`tried.len()`), not the windowed
-            // conditioning count `n`: under a capacity-limited backend
-            // (`max_obs`) the two diverge — the old code under-reported
-            // the stop index consumed by the Fig. 5 curves, and could
-            // never fire at all when `max_obs < min_obs_for_stop`.
-            let best_cost = costs.iter().cloned().fold(f64::INFINITY, f64::min);
-            let ei_max_raw = ei_max_std * y_scale;
-            if stop_after.is_none()
-                && tried.len() >= params.min_obs_for_stop
-                && ei_max_raw < params.ei_stop_rel * best_cost
-            {
-                stop_after = Some(tried.len());
-                if params.enforce_stop {
-                    break 'phases;
-                }
-            }
-
-            // All-zero EI (e.g. fully dominated region): explore the most
-            // uncertain eligible candidate instead of an arbitrary one.
-            let pick = if ei_max_std > 0.0 {
-                best_idx
-            } else {
-                let (i, _) = argmax_masked(&decision.var, &cmask);
-                i
-            };
-            observe(pick, &mut tried, &mut costs, &mut x_obs, &mut tried_flag, oracle);
-        }
-    }
-
-    Ok(SearchOutcome { tried, costs, stop_after, phase_starts })
+    // Hand the advanced RNG position back to the caller (the classic
+    // loop consumed draws from the caller's generator directly).
+    *rng = cursor.rng().clone();
+    Ok(cursor.outcome())
 }
 
 fn argmin(xs: &[f64]) -> usize {
@@ -498,5 +765,74 @@ mod tests {
     #[test]
     fn grid_has_aot_size() {
         assert_eq!(hyperparameter_grid().len(), 32);
+    }
+
+    #[test]
+    fn cursor_stepping_matches_run_search() {
+        // The wrapper and a hand-driven cursor must produce identical
+        // traces and identical final snapshots — the step machine IS the
+        // loop, not an approximation of it.
+        let m = 40;
+        let (features, costs) = toy_space(m);
+        let phases: Vec<Vec<usize>> = vec![(5..25).collect(), (0..40).filter(|i| !(5..25).contains(i)).collect()];
+        let params = BoParams::default();
+
+        let mut backend = NativeBackend::new();
+        let mut rng = Pcg64::from_seed(23);
+        let mut oracle = |i: usize| costs[i];
+        let reference =
+            run_search(&features, m, 6, &phases, &mut oracle, &mut backend, &mut rng, &params)
+                .expect("search");
+
+        let mut backend = NativeBackend::new();
+        let mut cursor =
+            SearchCursor::new(Arc::new(phases.clone()), m, 6, Pcg64::from_seed(23), params);
+        loop {
+            match cursor.advance() {
+                SearchStep::Done => break,
+                SearchStep::Execute(i) => cursor.record(i, costs[i], &features),
+                SearchStep::NeedsDecision => {
+                    let pick = cursor
+                        .decide_with_backend(&features, &mut backend)
+                        .expect("decision");
+                    if let Some(pick) = pick {
+                        cursor.record(pick, costs[pick], &features);
+                    }
+                }
+            }
+        }
+        let out = cursor.outcome();
+        assert_eq!(out.tried, reference.tried);
+        assert_eq!(
+            out.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+            reference.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(out.stop_after, reference.stop_after);
+        assert_eq!(out.phase_starts, reference.phase_starts);
+        // The wrapper also hands back the advanced RNG position.
+        assert_eq!(rng.to_parts(), cursor.rng().to_parts());
+    }
+
+    #[test]
+    fn advance_is_idempotent() {
+        let m = 40;
+        let (features, costs) = toy_space(m);
+        let phases: Vec<Vec<usize>> = vec![(0..m).collect()];
+        let mut cursor = SearchCursor::new(
+            Arc::new(phases),
+            m,
+            6,
+            Pcg64::from_seed(3),
+            BoParams::default(),
+        );
+        for _ in 0..8 {
+            let a = cursor.advance();
+            let b = cursor.advance();
+            assert_eq!(a, b, "advance must not consume state without a record");
+            match a {
+                SearchStep::Execute(i) => cursor.record(i, costs[i], &features),
+                _ => break,
+            }
+        }
     }
 }

@@ -24,6 +24,7 @@
 //! the pairs in job order, keeping every aggregate bit-identical.
 
 use super::planner::{RuyaPlanner, SearchPlan};
+use super::session::SessionEngine;
 use crate::bayesopt::{
     run_search, BackendFactory, BoParams, GpBackend, NativeBackend, SearchOutcome,
 };
@@ -283,6 +284,24 @@ impl ExperimentRunner {
             cherrypick,
             ruya,
         })
+    }
+
+    /// Register `job` with a resident [`SessionEngine`]: build its
+    /// (simulated) cost table, profile it, derive its memory-aware
+    /// search plan and hand the bundle over as shared immutable job
+    /// state. Returns the engine's job handle — any number of sessions
+    /// can then be opened against it (`ruya serve` does exactly this on
+    /// first reference to a job label).
+    pub fn register_job_with_engine(
+        &self,
+        engine: &mut SessionEngine,
+        job: &JobInstance,
+        seed: u64,
+    ) -> Result<usize> {
+        let table = JobCostTable::build(&self.sim, job, &self.space);
+        let profile = self.profile_job(job, seed);
+        let plan = self.planner.plan(&profile.model, job.input_gb, &self.space);
+        engine.register_job(&job.label(), &self.space, table.normalized, plan.phases)
     }
 
     /// Run `reps` seeded searches for every `(table, plan, seed_base)`

@@ -2,10 +2,35 @@
 //! profiling orchestration, memory-aware search-space splitting
 //! ([`planner`]) and the evaluation harness ([`experiment`]) that drives
 //! the Bayesian-optimized search over the simulated cluster substrate.
+//!
+//! # Session architecture (optimizer-as-a-service)
+//!
+//! The one-shot harness ([`ExperimentRunner`]) runs a search to
+//! completion and exits; the resident layer ([`session`]) keeps
+//! thousands of searches in flight at once. State ownership is split
+//! deliberately:
+//!
+//! * **Shared, immutable** (one copy per engine): each registered job's
+//!   catalog feature matrix, cost table and `Arc`-shared phase plan,
+//!   plus one engine-wide worker pool that serves the batched
+//!   candidate-scoring fan-out of *every* session.
+//! * **Per-session, mutable** (one copy per in-flight search): a
+//!   `SearchCursor` (tried/costs, phase cursor, RNG position, stopping
+//!   state) and a small strictly-serial `NativeBackend` whose
+//!   incremental caches (distance matrix, Cholesky factors, inducing
+//!   set) are derived state — rebuilt by trace replay on resume, never
+//!   serialized.
+//!
+//! [`SessionState`] is the wire form of the per-session half:
+//! suspending at any step and resuming is bit-identical to the
+//! uninterrupted run (pinned by `tests/session.rs` and the
+//! `fuzz_parity` seeded runner). [`SessionStats`] exposes the batching
+//! and lifecycle counters the `bench_sessions` smoke asserts on.
 
 mod crispy;
 mod experiment;
 mod planner;
+mod session;
 
 pub use crispy::{CrispyChoice, CrispySelector};
 pub use experiment::{
@@ -13,3 +38,6 @@ pub use experiment::{
     ProfileSummary, StopQuality, THRESHOLDS,
 };
 pub use planner::{RuyaPlanner, SearchPlan};
+pub use session::{
+    replay_cursor, SessionEngine, SessionState, SessionStats, SESSION_STATE_VERSION,
+};

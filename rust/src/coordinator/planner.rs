@@ -40,9 +40,16 @@ pub struct RuyaPlanner {
     /// Safety margin on the extrapolated requirement (§III-D "leeway to
     /// account for slight miscalculations").
     pub leeway: f64,
-    /// Priority-group size for flat jobs (§IV-C: "the ten configurations
-    /// with the lowest total memory", ~1/7 of the space).
+    /// Priority-group size *floor* for flat jobs (§IV-C: "the ten
+    /// configurations with the lowest total memory").
     pub flat_group_size: usize,
+    /// Priority-group size as a fraction of the space for flat jobs.
+    /// The paper's absolute 10 is ~1/7 of the 69-config scout catalog
+    /// but would starve the priority phase on generated full catalogs
+    /// (10 of 10000 is 0.1%), so the group scales as
+    /// `max(flat_group_size, round(len * flat_group_fraction))` —
+    /// exactly 10 on the scout space, ~1/7 everywhere else.
+    pub flat_group_fraction: f64,
     /// Fraction of the space taken from EACH memory extreme when a linear
     /// requirement exceeds every configuration (§III-D: "very high or
     /// very low total cluster memory").
@@ -51,7 +58,12 @@ pub struct RuyaPlanner {
 
 impl Default for RuyaPlanner {
     fn default() -> Self {
-        Self { leeway: 0.02, flat_group_size: 10, extremes_fraction: 0.12 }
+        Self {
+            leeway: 0.02,
+            flat_group_size: 10,
+            flat_group_fraction: 1.0 / 7.0,
+            extremes_fraction: 0.12,
+        }
     }
 }
 
@@ -64,7 +76,7 @@ impl RuyaPlanner {
             MemCategory::Flat => {
                 // Extra memory only adds cost: prioritize the cheapest-
                 // memory corner of the space.
-                let k = self.flat_group_size.min(space.len());
+                let k = self.flat_priority_len(space.len());
                 let priority = space.lowest_memory_configs(k);
                 self.two_phase(MemCategory::Flat, None, priority, space)
             }
@@ -83,6 +95,14 @@ impl RuyaPlanner {
                 }
             }
         }
+    }
+
+    /// Flat-job priority-group size for a catalog of `len` configs:
+    /// the floor `flat_group_size` or `flat_group_fraction` of the
+    /// space, whichever is larger (capped at the space itself).
+    pub fn flat_priority_len(&self, len: usize) -> usize {
+        let scaled = (len as f64 * self.flat_group_fraction).round() as usize;
+        self.flat_group_size.max(scaled).min(len)
     }
 
     fn two_phase(
@@ -208,6 +228,44 @@ mod tests {
             let expect: Vec<usize> = (0..space.len()).collect();
             assert_eq!(all, expect, "phases must partition the space exactly");
         }
+    }
+
+    #[test]
+    fn phases_partition_catalogs_at_scale() {
+        // The fraction knob must keep plans valid partitions from the
+        // 69-config scout space up to full generated catalogs.
+        for n in [69usize, 1000, 10_000] {
+            let space = if n == 69 {
+                SearchSpace::scout()
+            } else {
+                SearchSpace::generated(0xCA7A_106 ^ n as u64, n)
+            };
+            assert_eq!(space.len(), n);
+            for model in [flat_model(), linear_model(2.5), unclear_model()] {
+                let plan = RuyaPlanner::default().plan(&model, 150.0, &space);
+                let mut all: Vec<usize> = plan.phases.concat();
+                all.sort_unstable();
+                let expect: Vec<usize> = (0..n).collect();
+                assert_eq!(all, expect, "phases must partition a {n}-config space");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_priority_scales_with_the_catalog() {
+        let planner = RuyaPlanner::default();
+        // The scout space keeps the paper's exact 10 (floor == fraction).
+        assert_eq!(planner.flat_priority_len(69), 10);
+        // Tiny spaces are capped at the space, not padded to the floor.
+        assert_eq!(planner.flat_priority_len(4), 4);
+        // Catalog scale follows the ~1/7 fraction instead of starving
+        // at an absolute 10.
+        assert_eq!(planner.flat_priority_len(1000), 143);
+        assert_eq!(planner.flat_priority_len(10_000), 1429);
+        let space = SearchSpace::generated(0xF1A7, 1000);
+        let plan = planner.plan(&flat_model(), 150.0, &space);
+        assert_eq!(plan.phases[0].len(), 143);
+        assert!((plan.priority_fraction - 143.0 / 1000.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,1120 @@
+//! Optimizer-as-a-service: the resident session layer.
+//!
+//! [`SessionEngine`] multiplexes many concurrent BO searches ("sessions")
+//! over shared immutable job state. Each session owns only what is truly
+//! per-search — a [`SearchCursor`] (tried/costs, phase cursor, RNG
+//! position, stopping state) and a small serial [`NativeBackend`] whose
+//! incremental caches (distance matrix, Cholesky factors, inducing set)
+//! are rewarmed from the cursor trace on resume. Everything else is
+//! shared: the catalog's feature matrix and cost table live once per
+//! job (`Arc`-shared phases), and *one* engine-wide [`WorkerPool`]
+//! serves the candidate-scoring fan-out of every session.
+//!
+//! # Batched decide
+//!
+//! `step_all` advances every live session by one search step in three
+//! sub-phases. (A) serial prep: each session advances its cursor;
+//! executes record immediately, decisions run their nll-grid sweep and
+//! [`NativeBackend::prepare_decide`] fit on the session's own backend.
+//! (B) one pooled fan-out: the pure scoring passes of *all* pending
+//! decisions — borrowed factor views or fitted low-rank posteriors —
+//! are dealt round-robin across the shared pool in a single
+//! [`WorkerPool::run_groups`] call, instead of N serial decides.
+//! (C) serial finish: EI + stopping criterion close each decision via
+//! [`SearchCursor::finish_decision`]. Per session the arithmetic is the
+//! call-for-call sequence of [`SearchCursor::decide_with_backend`], and
+//! the scoring tiles are bit-identical under any pool width (the
+//! backend's deterministic-parallelism contract), so an engine-stepped
+//! session reproduces `run_search`'s trace exactly.
+//!
+//! # Suspend / resume
+//!
+//! [`SessionState`] is the compact serializable form of a mid-flight
+//! session: the [`CursorSnapshot`] plus the job binding and search
+//! parameters, encoded dependency-free via `util/json.rs`. Floats and
+//! RNG positions are hex bit-patterns (an `f64` text round-trip is not
+//! bit-exact; the 128-bit RNG words do not fit an `f64` at all).
+//! Resume does not deserialize backend caches: [`replay_cursor`]
+//! re-executes the recorded trace against a fresh backend — the same
+//! append-one calling pattern the live search used — which rewarms
+//! every incremental cache to the identical state, then verifies the
+//! rebuilt cursor's snapshot equals the suspended one bit for bit.
+
+use crate::bayesopt::gp::{expected_improvement, predict_into, standardize};
+use crate::bayesopt::{
+    adaptive_gp_threads, BoParams, CholFactor, CursorSnapshot, GpBackend, LowRankGp,
+    NativeBackend, PreparedDecide, SearchCursor, SearchOutcome, SearchStep, WorkerPool,
+    DECIDE_TILE,
+};
+use crate::searchspace::SearchSpace;
+use crate::util::json::{JsonValue, JsonWriter};
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::Arc;
+
+/// Version tag of the [`SessionState`] encoding; bumped on any schema
+/// change so stale states fail loudly instead of resuming wrongly.
+pub const SESSION_STATE_VERSION: u64 = 1;
+
+/// Everything a suspended search needs to resume bit-identically:
+/// the job binding (by label — the catalog itself is shared engine
+/// state, not serialized), the search parameters, the phase plan and
+/// the cursor's cross-iteration state.
+#[derive(Debug, Clone)]
+pub struct SessionState {
+    /// Label of the registered job this session searches.
+    pub job_label: String,
+    /// Seed the session's RNG stream was started from.
+    pub seed: u64,
+    /// Candidate-space size the state was captured against.
+    pub m: usize,
+    /// Feature dimension the state was captured against.
+    pub d: usize,
+    /// Search hyperparameters of the suspended session.
+    pub params: BoParams,
+    /// The phase plan (disjoint index sets explored in order).
+    pub phases: Vec<Vec<usize>>,
+    /// The cursor's serializable cross-iteration state.
+    pub snapshot: CursorSnapshot,
+}
+
+fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn hex_u128(v: u128) -> String {
+    format!("{v:032x}")
+}
+
+fn hex_f64(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad u64 hex {s:?}: {e}"))
+}
+
+fn parse_hex_u128(s: &str) -> Result<u128> {
+    u128::from_str_radix(s, 16).map_err(|e| anyhow!("bad u128 hex {s:?}: {e}"))
+}
+
+fn parse_hex_f64(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_hex_u64(s)?))
+}
+
+fn field<'a>(v: &'a JsonValue, key: &str) -> Result<&'a JsonValue> {
+    v.get(key).ok_or_else(|| anyhow!("session state missing field {key:?}"))
+}
+
+fn field_str<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+    field(v, key)?.as_str().ok_or_else(|| anyhow!("field {key:?} is not a string"))
+}
+
+fn as_usize(v: &JsonValue, key: &str) -> Result<usize> {
+    let f = v.as_f64().ok_or_else(|| anyhow!("field {key:?} is not a number"))?;
+    ensure!(
+        f.is_finite() && f >= 0.0 && f.fract() == 0.0 && f <= 2f64.powi(53),
+        "field {key:?} is not an index-sized integer: {f}"
+    );
+    Ok(f as usize)
+}
+
+fn field_usize(v: &JsonValue, key: &str) -> Result<usize> {
+    as_usize(field(v, key)?, key)
+}
+
+fn field_bool(v: &JsonValue, key: &str) -> Result<bool> {
+    match field(v, key)? {
+        JsonValue::Bool(b) => Ok(*b),
+        _ => bail!("field {key:?} is not a boolean"),
+    }
+}
+
+fn field_usize_list(v: &JsonValue, key: &str) -> Result<Vec<usize>> {
+    field(v, key)?
+        .as_array()
+        .ok_or_else(|| anyhow!("field {key:?} is not an array"))?
+        .iter()
+        .map(|item| as_usize(item, key))
+        .collect()
+}
+
+/// `null` decodes to `None` (used for `stop_after` and the
+/// `usize::MAX` sentinel of `max_iters`).
+fn field_opt_usize(v: &JsonValue, key: &str) -> Result<Option<usize>> {
+    match field(v, key)? {
+        JsonValue::Null => Ok(None),
+        other => Ok(Some(as_usize(other, key)?)),
+    }
+}
+
+impl SessionState {
+    /// Capture a suspended session's state.
+    pub fn capture(
+        job_label: &str,
+        seed: u64,
+        params: BoParams,
+        phases: &[Vec<usize>],
+        cursor: &SearchCursor,
+    ) -> Self {
+        Self {
+            job_label: job_label.to_string(),
+            seed,
+            m: cursor.space_len(),
+            d: cursor.dim(),
+            params,
+            phases: phases.to_vec(),
+            snapshot: cursor.snapshot(),
+        }
+    }
+
+    /// Serialize to the versioned JSON form. Costs, `ei_stop_rel` and
+    /// the RNG position are hex bit-patterns so the round-trip is
+    /// bit-exact; `max_iters = usize::MAX` and `stop_after = None`
+    /// encode as `null`.
+    pub fn encode(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("version").number(SESSION_STATE_VERSION as f64);
+        w.key("job").string(&self.job_label);
+        w.key("seed").string(&hex_u64(self.seed));
+        w.key("m").number(self.m as f64);
+        w.key("d").number(self.d as f64);
+        w.key("params").begin_object();
+        w.key("n_init").number(self.params.n_init as f64);
+        w.key("min_obs_for_stop").number(self.params.min_obs_for_stop as f64);
+        w.key("ei_stop_rel").string(&hex_f64(self.params.ei_stop_rel));
+        if self.params.max_iters == usize::MAX {
+            w.key("max_iters").number(f64::NAN);
+        } else {
+            w.key("max_iters").number(self.params.max_iters as f64);
+        }
+        w.key("enforce_stop").boolean(self.params.enforce_stop);
+        w.end_object();
+        w.key("phases").begin_array();
+        for phase in &self.phases {
+            w.begin_array();
+            for &i in phase {
+                w.number(i as f64);
+            }
+            w.end_array();
+        }
+        w.end_array();
+        w.key("trace").begin_object();
+        w.key("tried").begin_array();
+        for &i in &self.snapshot.tried {
+            w.number(i as f64);
+        }
+        w.end_array();
+        w.key("costs").begin_array();
+        for &c in &self.snapshot.costs {
+            w.string(&hex_f64(c));
+        }
+        w.end_array();
+        w.end_object();
+        w.key("cursor").begin_object();
+        match self.snapshot.stop_after {
+            Some(s) => w.key("stop_after").number(s as f64),
+            None => w.key("stop_after").number(f64::NAN),
+        };
+        w.key("phase_starts").begin_array();
+        for &s in &self.snapshot.phase_starts {
+            w.number(s as f64);
+        }
+        w.end_array();
+        w.key("phase_idx").number(self.snapshot.phase_idx as f64);
+        w.key("phase_entered").boolean(self.snapshot.phase_entered);
+        w.key("pending").begin_array();
+        for &p in &self.snapshot.pending {
+            w.number(p as f64);
+        }
+        w.end_array();
+        w.key("pending_gate").boolean(self.snapshot.pending_gate);
+        w.key("done").boolean(self.snapshot.done);
+        w.key("rng_state").string(&hex_u128(self.snapshot.rng_state));
+        w.key("rng_inc").string(&hex_u128(self.snapshot.rng_inc));
+        w.end_object();
+        w.end_object();
+        w.finish()
+    }
+
+    /// Parse a state produced by [`Self::encode`], validating version,
+    /// structure and trace consistency.
+    pub fn decode(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text).map_err(|e| anyhow!("bad session state JSON: {e}"))?;
+        Self::from_value(&v)
+    }
+
+    /// [`Self::decode`] over an already-parsed value (e.g. the `state`
+    /// field of a `ruya serve` resume request).
+    pub fn from_value(v: &JsonValue) -> Result<Self> {
+        let version = field_usize(v, "version")? as u64;
+        ensure!(
+            version == SESSION_STATE_VERSION,
+            "session state version {version} (this build reads {SESSION_STATE_VERSION})"
+        );
+        let job_label = field_str(v, "job")?.to_string();
+        let seed = parse_hex_u64(field_str(v, "seed")?)?;
+        let m = field_usize(v, "m")?;
+        let d = field_usize(v, "d")?;
+
+        let p = field(v, "params")?;
+        let params = BoParams {
+            n_init: field_usize(p, "n_init")?,
+            min_obs_for_stop: field_usize(p, "min_obs_for_stop")?,
+            ei_stop_rel: parse_hex_f64(field_str(p, "ei_stop_rel")?)?,
+            max_iters: field_opt_usize(p, "max_iters")?.unwrap_or(usize::MAX),
+            enforce_stop: field_bool(p, "enforce_stop")?,
+        };
+
+        let phases: Vec<Vec<usize>> = field(v, "phases")?
+            .as_array()
+            .ok_or_else(|| anyhow!("field \"phases\" is not an array"))?
+            .iter()
+            .map(|phase| {
+                phase
+                    .as_array()
+                    .ok_or_else(|| anyhow!("phase entry is not an array"))?
+                    .iter()
+                    .map(|item| as_usize(item, "phases"))
+                    .collect()
+            })
+            .collect::<Result<_>>()?;
+        for phase in &phases {
+            for &i in phase {
+                ensure!(i < m, "phase index {i} out of bounds (space size {m})");
+            }
+        }
+
+        let trace = field(v, "trace")?;
+        let tried = field_usize_list(trace, "tried")?;
+        let costs: Vec<f64> = field(trace, "costs")?
+            .as_array()
+            .ok_or_else(|| anyhow!("field \"costs\" is not an array"))?
+            .iter()
+            .map(|item| {
+                parse_hex_f64(item.as_str().ok_or_else(|| anyhow!("cost is not a hex string"))?)
+            })
+            .collect::<Result<_>>()?;
+        ensure!(
+            tried.len() == costs.len(),
+            "trace records {} picks but {} costs",
+            tried.len(),
+            costs.len()
+        );
+        for &i in &tried {
+            ensure!(i < m, "tried index {i} out of bounds (space size {m})");
+        }
+
+        let c = field(v, "cursor")?;
+        let snapshot = CursorSnapshot {
+            tried,
+            costs,
+            stop_after: field_opt_usize(c, "stop_after")?,
+            phase_starts: field_usize_list(c, "phase_starts")?,
+            phase_idx: field_usize(c, "phase_idx")?,
+            phase_entered: field_bool(c, "phase_entered")?,
+            pending: field_usize_list(c, "pending")?,
+            pending_gate: field_bool(c, "pending_gate")?,
+            done: field_bool(c, "done")?,
+            rng_state: parse_hex_u128(field_str(c, "rng_state")?)?,
+            rng_inc: parse_hex_u128(field_str(c, "rng_inc")?)?,
+        };
+        Ok(Self { job_label, seed, m, d, params, phases, snapshot })
+    }
+}
+
+/// Rebuild a live [`SearchCursor`] from a suspended state by replaying
+/// its recorded trace against `backend`: every random pick is re-drawn
+/// from the seed (and checked against the record), every GP decision is
+/// re-run through the identical nll-grid/decide sequence, and every
+/// observation is re-recorded with its recorded cost. This is exactly
+/// the live search's calling pattern, so the backend's incremental
+/// caches end up in the same state the uninterrupted run would hold —
+/// the resumed search continues bit-identically. The rebuilt cursor's
+/// snapshot must equal the suspended one; any divergence (wrong
+/// features, tampered state, different backend) is an error.
+pub fn replay_cursor(
+    state: &SessionState,
+    features: &[f64],
+    backend: &mut dyn GpBackend,
+) -> Result<SearchCursor> {
+    ensure!(
+        features.len() == state.m * state.d,
+        "feature matrix is {} values, state wants {}x{}",
+        features.len(),
+        state.m,
+        state.d
+    );
+    let snap = &state.snapshot;
+    let mut cursor = SearchCursor::new(
+        Arc::new(state.phases.clone()),
+        state.m,
+        state.d,
+        Pcg64::from_seed(state.seed),
+        state.params,
+    );
+    let k = snap.tried.len();
+    while cursor.executions() < k {
+        let j = cursor.executions();
+        let pick = match cursor.advance() {
+            SearchStep::Done => bail!("replay ended after {j} of {k} recorded executions"),
+            SearchStep::Execute(i) => i,
+            SearchStep::NeedsDecision => cursor
+                .decide_with_backend(features, backend)?
+                .ok_or_else(|| anyhow!("replay stopped at execution {j} of {k}"))?,
+        };
+        ensure!(
+            pick == snap.tried[j],
+            "replay diverged at execution {j}: picked {pick}, recorded {}",
+            snap.tried[j]
+        );
+        cursor.record(pick, snap.costs[j], features);
+    }
+    if snap.done && !cursor.is_done() {
+        // The suspended search ended *after* its last record: either the
+        // plan ran out / max_iters hit (advance reports Done) or an
+        // enforced stop fired on the next decision (which must then
+        // reproduce the recorded None pick).
+        match cursor.advance() {
+            SearchStep::Done => {}
+            SearchStep::NeedsDecision => {
+                let pick = cursor.decide_with_backend(features, backend)?;
+                ensure!(pick.is_none(), "replay did not reproduce the recorded final stop");
+            }
+            SearchStep::Execute(i) => {
+                bail!("replay surfaced execute({i}) past the recorded end of the search")
+            }
+        }
+    }
+    ensure!(
+        cursor.snapshot() == *snap,
+        "resumed cursor diverged from the suspended snapshot"
+    );
+    Ok(cursor)
+}
+
+/// Shared immutable per-job state: registered once, referenced by every
+/// session searching that job.
+struct EngineJob {
+    label: String,
+    features: Vec<f64>,
+    m: usize,
+    d: usize,
+    costs: Vec<f64>,
+    phases: Arc<Vec<Vec<usize>>>,
+}
+
+/// Prep results of one pending decision, carried from the serial prep
+/// sub-phase to the pooled scoring and serial finish sub-phases.
+#[derive(Debug, Clone, Copy)]
+struct PrepInfo {
+    skip: usize,
+    n: usize,
+    y_scale: f64,
+    best_std: f64,
+    hyp: [f64; 3],
+    prepared: PreparedDecide,
+}
+
+/// One in-flight search.
+struct Session {
+    id: u64,
+    job: usize,
+    seed: u64,
+    params: BoParams,
+    cursor: SearchCursor,
+    backend: NativeBackend,
+    mu: Vec<f64>,
+    var: Vec<f64>,
+    ei: Vec<f64>,
+    prep: Option<PrepInfo>,
+    finished: bool,
+}
+
+/// One session's pure scoring pass, fanned out over the shared pool.
+enum ScoreUnit<'a> {
+    /// Exact posterior: tile through [`predict_into`] against the
+    /// session backend's borrowed factor + weights.
+    Exact {
+        factor: &'a CholFactor,
+        alpha: &'a [f64],
+        x: &'a [f64],
+        n: usize,
+        d: usize,
+        hyp: [f64; 3],
+        xc: &'a [f64],
+        mu: &'a mut [f64],
+        var: &'a mut [f64],
+    },
+    /// Nyström low-rank posterior fitted by `prepare_decide`.
+    LowRank {
+        gp: &'a mut LowRankGp,
+        xc: &'a [f64],
+        m: usize,
+        mu: &'a mut Vec<f64>,
+        var: &'a mut Vec<f64>,
+    },
+}
+
+/// Engine observability counters (all monotone except
+/// `sessions_active`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Sessions ever opened via [`SessionEngine::open`].
+    pub sessions_opened: u64,
+    /// Sessions currently live (opened or resumed, not yet finished or
+    /// suspended away).
+    pub sessions_active: u64,
+    /// Sessions that ran to completion inside the engine.
+    pub sessions_finished: u64,
+    /// Search steps performed (executions + decisions).
+    pub steps: u64,
+    /// Random-pick executions recorded.
+    pub executes: u64,
+    /// GP decisions closed.
+    pub decides: u64,
+    /// Decisions that shared a fan-out with >= 1 other same-job decision
+    /// in the same round — the admission/batching win.
+    pub batched_decides: u64,
+    /// Decisions that went through a round's fan-out alone.
+    pub solo_decides: u64,
+    /// Pooled scoring fan-outs issued (one per round with any decision).
+    pub fanout_rounds: u64,
+    /// Sessions suspended into a [`SessionState`].
+    pub suspends: u64,
+    /// Sessions resumed from a [`SessionState`].
+    pub resumes: u64,
+}
+
+/// A resident multi-session optimizer (see the module docs).
+pub struct SessionEngine {
+    jobs: Vec<EngineJob>,
+    sessions: Vec<Session>,
+    next_id: u64,
+    pool: WorkerPool,
+    stats: SessionStats,
+}
+
+/// Per-session backends are strictly serial: all scoring parallelism
+/// belongs to the engine's one shared pool, so thousands of sessions
+/// never spawn a thread each (`pool_creates` stays 0 across sessions —
+/// the bench smoke asserts exactly that).
+fn session_backend() -> NativeBackend {
+    let mut b = NativeBackend::new();
+    b.set_parallelism(1);
+    b
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl SessionEngine {
+    /// An engine whose shared scoring pool has `gp_threads` lanes
+    /// (0 = adaptive, matching `--gp-threads` semantics).
+    pub fn new(gp_threads: usize) -> Self {
+        let width = if gp_threads == 0 { adaptive_gp_threads() } else { gp_threads };
+        Self {
+            jobs: Vec::new(),
+            sessions: Vec::new(),
+            next_id: 1,
+            pool: WorkerPool::new(width),
+            stats: SessionStats::default(),
+        }
+    }
+
+    /// Register a job: its catalog features, (simulated) cost table and
+    /// phase plan become shared immutable state for any number of
+    /// sessions. Returns the job handle for [`Self::open`].
+    pub fn register_job(
+        &mut self,
+        label: &str,
+        space: &SearchSpace,
+        costs: Vec<f64>,
+        phases: Vec<Vec<usize>>,
+    ) -> Result<usize> {
+        ensure!(!space.is_empty(), "cannot register a job over an empty space");
+        ensure!(
+            costs.len() == space.len(),
+            "cost table has {} entries for a {}-config space",
+            costs.len(),
+            space.len()
+        );
+        ensure!(self.job_index(label).is_none(), "job {label:?} is already registered");
+        let m = space.len();
+        for phase in &phases {
+            for &i in phase {
+                ensure!(i < m, "phase index {i} out of bounds (space size {m})");
+            }
+        }
+        self.jobs.push(EngineJob {
+            label: label.to_string(),
+            features: space.feature_matrix(),
+            m,
+            d: crate::searchspace::N_FEATURES,
+            costs,
+            phases: Arc::new(phases),
+        });
+        Ok(self.jobs.len() - 1)
+    }
+
+    /// Handle of a registered job, by label.
+    pub fn job_index(&self, label: &str) -> Option<usize> {
+        self.jobs.iter().position(|j| j.label == label)
+    }
+
+    /// Open a session on a registered job; returns its engine-unique id.
+    pub fn open(&mut self, job: usize, seed: u64, params: BoParams) -> Result<u64> {
+        let j = self.jobs.get(job).ok_or_else(|| anyhow!("no job with handle {job}"))?;
+        let cursor = SearchCursor::new(
+            Arc::clone(&j.phases),
+            j.m,
+            j.d,
+            Pcg64::from_seed(seed),
+            params,
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.push(Session {
+            id,
+            job,
+            seed,
+            params,
+            cursor,
+            backend: session_backend(),
+            mu: Vec::new(),
+            var: Vec::new(),
+            ei: Vec::new(),
+            prep: None,
+            finished: false,
+        });
+        self.stats.sessions_opened += 1;
+        self.stats.sessions_active += 1;
+        Ok(id)
+    }
+
+    /// Advance every live session by one search step, batching all
+    /// pending GP decisions into one pooled scoring fan-out. Returns
+    /// the number of steps performed (0 = every session is finished).
+    pub fn step_all(&mut self) -> Result<usize> {
+        let mut stepped = 0usize;
+        let mut decides_per_job = vec![0u64; self.jobs.len()];
+
+        // (A) serial prep: advance cursors, record executes, fit the
+        // per-session GP for pending decisions.
+        {
+            let jobs = &self.jobs;
+            let stats = &mut self.stats;
+            for sess in self.sessions.iter_mut() {
+                if sess.finished {
+                    continue;
+                }
+                let job = &jobs[sess.job];
+                match sess.cursor.advance() {
+                    SearchStep::Done => {
+                        sess.finished = true;
+                        stats.sessions_finished += 1;
+                        stats.sessions_active -= 1;
+                    }
+                    SearchStep::Execute(i) => {
+                        sess.cursor.record(i, job.costs[i], &job.features);
+                        stats.executes += 1;
+                        stats.steps += 1;
+                        stepped += 1;
+                    }
+                    SearchStep::NeedsDecision => {
+                        // The serial half of decide_with_backend, verbatim:
+                        // window, standardize, nll grid, argmin, fit.
+                        let (skip, n) = sess.cursor.window(sess.backend.max_obs());
+                        let (y_std, _, y_scale) = standardize(sess.cursor.y_window(skip));
+                        let nll = sess.backend.nll_grid(
+                            sess.cursor.x_window(skip),
+                            &y_std,
+                            n,
+                            job.d,
+                            sess.cursor.grid(),
+                        )?;
+                        let hyp = sess.cursor.grid()[argmin(&nll)];
+                        let best_std = y_std.iter().cloned().fold(f64::INFINITY, f64::min);
+                        let prepared = sess.backend.prepare_decide(
+                            sess.cursor.x_window(skip),
+                            &y_std,
+                            n,
+                            job.d,
+                            job.m,
+                            hyp,
+                        )?;
+                        sess.prep = Some(PrepInfo { skip, n, y_scale, best_std, hyp, prepared });
+                        decides_per_job[sess.job] += 1;
+                    }
+                }
+            }
+        }
+
+        let any_decides = decides_per_job.iter().any(|&c| c > 0);
+        for &count in &decides_per_job {
+            if count >= 2 {
+                self.stats.batched_decides += count;
+            } else if count == 1 {
+                self.stats.solo_decides += 1;
+            }
+        }
+
+        // (B) one pooled fan-out over every pending decision's pure
+        // scoring pass. Each session is one unit (its tile loop matches
+        // the serial decide bit for bit); units are dealt round-robin,
+        // write disjoint per-session outputs and share nothing mutable,
+        // so the result is identical for any pool width.
+        if any_decides {
+            self.stats.fanout_rounds += 1;
+            let jobs = &self.jobs;
+            let mut units: Vec<Vec<ScoreUnit>> = Vec::new();
+            for sess in self.sessions.iter_mut() {
+                let Some(info) = sess.prep else { continue };
+                let job = &jobs[sess.job];
+                let Session { cursor, backend, mu, var, .. } = sess;
+                let cursor: &SearchCursor = cursor;
+                let x = cursor.x_window(info.skip);
+                match info.prepared {
+                    PreparedDecide::Exact { slot } => {
+                        // Matches decide()'s freshly zeroed vectors.
+                        mu.clear();
+                        mu.resize(job.m, 0.0);
+                        var.clear();
+                        var.resize(job.m, 0.0);
+                        let backend: &NativeBackend = backend;
+                        let (factor, alpha) = backend.exact_score_view(slot);
+                        units.push(vec![ScoreUnit::Exact {
+                            factor,
+                            alpha,
+                            x,
+                            n: info.n,
+                            d: job.d,
+                            hyp: info.hyp,
+                            xc: &job.features,
+                            mu: &mut mu[..],
+                            var: &mut var[..],
+                        }]);
+                    }
+                    PreparedDecide::LowRank => {
+                        // Matches decide()'s empty vectors into
+                        // predict_batch.
+                        mu.clear();
+                        var.clear();
+                        units.push(vec![ScoreUnit::LowRank {
+                            gp: backend.lowrank_mut(),
+                            xc: &job.features,
+                            m: job.m,
+                            mu,
+                            var,
+                        }]);
+                    }
+                }
+            }
+            self.pool.run_groups(units, |lane, scratch| {
+                for unit in lane {
+                    match unit {
+                        ScoreUnit::Exact { factor, alpha, x, n, d, hyp, xc, mu, var } => {
+                            for (t, (mu_c, var_c)) in mu
+                                .chunks_mut(DECIDE_TILE)
+                                .zip(var.chunks_mut(DECIDE_TILE))
+                                .enumerate()
+                            {
+                                let start = t * DECIDE_TILE;
+                                let w = mu_c.len();
+                                predict_into(
+                                    factor,
+                                    alpha,
+                                    x,
+                                    n,
+                                    d,
+                                    hyp,
+                                    &xc[start * d..(start + w) * d],
+                                    w,
+                                    mu_c,
+                                    var_c,
+                                    &mut scratch.ks,
+                                    &mut scratch.acc,
+                                );
+                            }
+                        }
+                        ScoreUnit::LowRank { gp, xc, m, mu, var } => {
+                            gp.predict_batch(xc, m, mu, var);
+                        }
+                    }
+                }
+            });
+        }
+
+        // (C) serial finish: EI + stopping criterion per decision.
+        {
+            let jobs = &self.jobs;
+            let stats = &mut self.stats;
+            for sess in self.sessions.iter_mut() {
+                let Some(info) = sess.prep.take() else { continue };
+                let job = &jobs[sess.job];
+                let Session { cursor, mu, var, ei, .. } = sess;
+                let cmask = cursor.cmask();
+                ei.clear();
+                ei.extend((0..job.m).map(|i| {
+                    if cmask[i] {
+                        expected_improvement(mu[i], var[i], info.best_std)
+                    } else {
+                        0.0
+                    }
+                }));
+                match cursor.finish_decision(ei, var, info.y_scale) {
+                    Some(pick) => cursor.record(pick, job.costs[pick], &job.features),
+                    None => {
+                        // Enforced stop: the search is over.
+                        sess.finished = true;
+                        stats.sessions_finished += 1;
+                        stats.sessions_active -= 1;
+                    }
+                }
+                stats.decides += 1;
+                stats.steps += 1;
+                stepped += 1;
+            }
+        }
+        Ok(stepped)
+    }
+
+    /// Step every session to completion; returns total steps performed.
+    pub fn run_all(&mut self) -> Result<u64> {
+        let mut total = 0u64;
+        loop {
+            let n = self.step_all()?;
+            if n == 0 {
+                return Ok(total);
+            }
+            total += n as u64;
+        }
+    }
+
+    /// Suspend a session into its serializable state, removing it from
+    /// the engine. Valid between `step_all` rounds (a session's step is
+    /// atomic, so its snapshot is always a consistent post-record one).
+    pub fn suspend(&mut self, id: u64) -> Result<SessionState> {
+        let pos = self
+            .sessions
+            .iter()
+            .position(|s| s.id == id)
+            .ok_or_else(|| anyhow!("no session with id {id}"))?;
+        let sess = self.sessions.swap_remove(pos);
+        self.stats.suspends += 1;
+        if !sess.finished {
+            self.stats.sessions_active -= 1;
+        }
+        let job = &self.jobs[sess.job];
+        Ok(SessionState::capture(
+            &job.label,
+            sess.seed,
+            sess.params,
+            job.phases.as_ref(),
+            &sess.cursor,
+        ))
+    }
+
+    /// Resume a suspended session: bind it back to its registered job,
+    /// replay its trace to rewarm a fresh backend (see
+    /// [`replay_cursor`]) and return the new session id.
+    pub fn resume(&mut self, state: &SessionState) -> Result<u64> {
+        let job_idx = self
+            .job_index(&state.job_label)
+            .ok_or_else(|| anyhow!("job {:?} is not registered", state.job_label))?;
+        let job = &self.jobs[job_idx];
+        ensure!(
+            job.m == state.m && job.d == state.d,
+            "state is for a {}x{} space, job {:?} is {}x{}",
+            state.m,
+            state.d,
+            state.job_label,
+            job.m,
+            job.d
+        );
+        let mut backend = session_backend();
+        let cursor = replay_cursor(state, &job.features, &mut backend)?;
+        let finished = cursor.is_done();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.push(Session {
+            id,
+            job: job_idx,
+            seed: state.seed,
+            params: state.params,
+            cursor,
+            backend,
+            mu: Vec::new(),
+            var: Vec::new(),
+            ei: Vec::new(),
+            prep: None,
+            finished,
+        });
+        self.stats.resumes += 1;
+        if finished {
+            self.stats.sessions_finished += 1;
+        } else {
+            self.stats.sessions_active += 1;
+        }
+        Ok(id)
+    }
+
+    /// Engine counters.
+    pub fn stats(&self) -> SessionStats {
+        self.stats
+    }
+
+    /// The trace of a session (so far, or final once it finished).
+    pub fn outcome(&self, id: u64) -> Option<SearchOutcome> {
+        self.sessions.iter().find(|s| s.id == id).map(|s| s.cursor.outcome())
+    }
+
+    /// Whether a session has finished (None = unknown id).
+    pub fn is_done(&self, id: u64) -> Option<bool> {
+        self.sessions.iter().find(|s| s.id == id).map(|s| s.finished)
+    }
+
+    /// Pool creations across all *session* backends — the shared-pool
+    /// invariant says this stays 0 no matter how many sessions run
+    /// (scoring parallelism lives in the engine's own pool).
+    pub fn session_backend_pool_creates(&self) -> u64 {
+        self.sessions.iter().map(|s| s.backend.decide_stats().pool_creates).sum()
+    }
+
+    /// Lanes in the engine's shared scoring pool.
+    pub fn pool_width(&self) -> usize {
+        self.pool.width()
+    }
+
+    /// Ids of all sessions currently held by the engine.
+    pub fn session_ids(&self) -> Vec<u64> {
+        self.sessions.iter().map(|s| s.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bayesopt::run_search;
+
+    fn scout_costs(space: &SearchSpace, salt: u64) -> Vec<f64> {
+        (0..space.len())
+            .map(|i| 0.5 + ((i as u64 * 37 + salt * 13) % 101) as f64 / 101.0)
+            .collect()
+    }
+
+    fn two_phase(space: &SearchSpace) -> Vec<Vec<usize>> {
+        let priority = space.lowest_memory_configs(10);
+        let rest: Vec<usize> = (0..space.len()).filter(|i| !priority.contains(i)).collect();
+        vec![priority, rest]
+    }
+
+    fn reference_outcome(
+        space: &SearchSpace,
+        costs: &[f64],
+        phases: &[Vec<usize>],
+        seed: u64,
+        params: &BoParams,
+    ) -> SearchOutcome {
+        let features = space.feature_matrix();
+        let mut backend = session_backend();
+        let mut rng = Pcg64::from_seed(seed);
+        let mut oracle = |i: usize| costs[i];
+        run_search(
+            &features,
+            space.len(),
+            crate::searchspace::N_FEATURES,
+            phases,
+            &mut oracle,
+            &mut backend,
+            &mut rng,
+            params,
+        )
+        .expect("reference search")
+    }
+
+    fn assert_trace_eq(a: &SearchOutcome, b: &SearchOutcome) {
+        assert_eq!(a.tried, b.tried);
+        assert_eq!(
+            a.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+            b.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.stop_after, b.stop_after);
+        assert_eq!(a.phase_starts, b.phase_starts);
+    }
+
+    fn small_params() -> BoParams {
+        BoParams { max_iters: 14, ..Default::default() }
+    }
+
+    #[test]
+    fn engine_session_matches_run_search() {
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 1);
+        let phases = two_phase(&space);
+        let params = small_params();
+        let reference = reference_outcome(&space, &costs, &phases, 42, &params);
+
+        let mut engine = SessionEngine::new(2);
+        let job = engine.register_job("j", &space, costs, phases).expect("register");
+        let id = engine.open(job, 42, params).expect("open");
+        engine.run_all().expect("run");
+        assert_eq!(engine.is_done(id), Some(true));
+        assert_trace_eq(&engine.outcome(id).expect("outcome"), &reference);
+    }
+
+    #[test]
+    fn concurrent_sessions_batch_and_stay_bit_identical() {
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 2);
+        let phases = two_phase(&space);
+        let params = small_params();
+
+        let mut engine = SessionEngine::new(3);
+        let job = engine.register_job("j", &space, costs.clone(), phases.clone()).expect("reg");
+        let ids: Vec<u64> =
+            (0..6).map(|s| engine.open(job, 100 + s, params).expect("open")).collect();
+        engine.run_all().expect("run");
+
+        let stats = engine.stats();
+        assert!(stats.batched_decides > 0, "no decide ever batched: {stats:?}");
+        assert!(stats.fanout_rounds > 0);
+        assert_eq!(stats.sessions_finished, 6);
+        assert_eq!(stats.sessions_active, 0);
+        // Scoring parallelism is the engine pool's job, never the
+        // sessions': no per-session pool may ever be created.
+        assert_eq!(engine.session_backend_pool_creates(), 0);
+
+        for (s, id) in ids.iter().enumerate() {
+            let reference = reference_outcome(&space, &costs, &phases, 100 + s as u64, &params);
+            assert_trace_eq(&engine.outcome(*id).expect("outcome"), &reference);
+        }
+    }
+
+    #[test]
+    fn suspend_resume_roundtrip_is_bit_identical() {
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 3);
+        let phases = two_phase(&space);
+        let params = small_params();
+        let reference = reference_outcome(&space, &costs, &phases, 7, &params);
+
+        let mut engine = SessionEngine::new(2);
+        let job = engine.register_job("j", &space, costs, phases).expect("register");
+        let id = engine.open(job, 7, params).expect("open");
+        for _ in 0..5 {
+            engine.step_all().expect("step");
+        }
+        let state = engine.suspend(id).expect("suspend");
+        let text = state.encode();
+        let decoded = SessionState::decode(&text).expect("decode");
+        let resumed = engine.resume(&decoded).expect("resume");
+        engine.run_all().expect("run");
+
+        let stats = engine.stats();
+        assert_eq!(stats.suspends, 1);
+        assert_eq!(stats.resumes, 1);
+        assert_trace_eq(&engine.outcome(resumed).expect("outcome"), &reference);
+    }
+
+    #[test]
+    fn state_json_roundtrip_preserves_every_field() {
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 4);
+        let phases = two_phase(&space);
+        // usize::MAX max_iters exercises the null sentinel.
+        let params = BoParams { enforce_stop: true, ..Default::default() };
+
+        let mut engine = SessionEngine::new(1);
+        let job = engine.register_job("j", &space, costs, phases).expect("register");
+        let id = engine.open(job, 99, params).expect("open");
+        for _ in 0..6 {
+            engine.step_all().expect("step");
+        }
+        let state = engine.suspend(id).expect("suspend");
+        let back = SessionState::decode(&state.encode()).expect("decode");
+        assert_eq!(back.job_label, state.job_label);
+        assert_eq!(back.seed, state.seed);
+        assert_eq!(back.m, state.m);
+        assert_eq!(back.d, state.d);
+        assert_eq!(back.phases, state.phases);
+        // BoParams has no PartialEq: compare field by field, floats by bits.
+        assert_eq!(back.params.n_init, state.params.n_init);
+        assert_eq!(back.params.min_obs_for_stop, state.params.min_obs_for_stop);
+        assert_eq!(back.params.ei_stop_rel.to_bits(), state.params.ei_stop_rel.to_bits());
+        assert_eq!(back.params.max_iters, state.params.max_iters);
+        assert_eq!(back.params.enforce_stop, state.params.enforce_stop);
+        assert_eq!(back.snapshot, state.snapshot);
+        assert!(!state.snapshot.tried.is_empty(), "suspension should be mid-run");
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_state_is_rejected() {
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 5);
+        let phases = two_phase(&space);
+        let mut engine = SessionEngine::new(1);
+        let job = engine.register_job("j", &space, costs, phases).expect("register");
+        let id = engine.open(job, 5, small_params()).expect("open");
+        for _ in 0..4 {
+            engine.step_all().expect("step");
+        }
+        let state = engine.suspend(id).expect("suspend");
+        let text = state.encode();
+
+        // Wrong version.
+        let wrong = text.replacen("\"version\":1", "\"version\":2", 1);
+        assert!(SessionState::decode(&wrong).is_err(), "future version must be rejected");
+
+        // Corrupt cost hex.
+        let mut tampered = state.clone();
+        let corrupted =
+            text.replacen(&super::hex_f64(tampered.snapshot.costs[0]), "zznothex", 1);
+        assert!(SessionState::decode(&corrupted).is_err(), "bad hex must be rejected");
+
+        // A tampered cost replays into a diverged search.
+        tampered.snapshot.costs[0] += 0.25;
+        let mut backend = session_backend();
+        assert!(
+            replay_cursor(&tampered, &space.feature_matrix(), &mut backend).is_err(),
+            "tampered trace must not resume"
+        );
+
+        // Unknown job label on resume.
+        let mut unbound = state.clone();
+        unbound.job_label = "nope".into();
+        assert!(engine.resume(&unbound).is_err());
+    }
+
+    #[test]
+    fn suspend_at_every_round_boundary_resumes_exactly() {
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 6);
+        let phases = two_phase(&space);
+        let params = BoParams { max_iters: 10, ..Default::default() };
+        let reference = reference_outcome(&space, &costs, &phases, 13, &params);
+
+        for cut in 0..12 {
+            let mut engine = SessionEngine::new(2);
+            let job =
+                engine.register_job("j", &space, costs.clone(), phases.clone()).expect("reg");
+            let id = engine.open(job, 13, params).expect("open");
+            for _ in 0..cut {
+                engine.step_all().expect("step");
+            }
+            let state = engine.suspend(id).expect("suspend");
+            let decoded = SessionState::decode(&state.encode()).expect("decode");
+            let resumed = engine.resume(&decoded).expect("resume");
+            engine.run_all().expect("run");
+            assert_trace_eq(&engine.outcome(resumed).expect("outcome"), &reference);
+        }
+    }
+}

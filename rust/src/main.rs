@@ -14,6 +14,8 @@
 //! ruya search --job <label>        # one Ruya search, verbose trace
 //! ruya profile --job <label>       # one profiling phase, verbose
 //! ruya space                       # dump the 69-configuration space
+//! ruya serve [--script F]          # resident multi-session engine
+//! ruya submit --job <label>        # emit a serve `open` request line
 //! ruya all [--reps N]              # everything above, to --out dir
 //! ```
 //!
@@ -31,13 +33,17 @@
 //! work-size floor keeping tiny windows serial), `--out <dir>` (export
 //! .dat/.json/.md files).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use ruya::bayesopt::backend_factory_with_parallelism;
-use ruya::coordinator::{ExperimentConfig, ExperimentRunner, SearchPlan};
+use ruya::coordinator::{
+    ExperimentConfig, ExperimentRunner, SearchPlan, SessionEngine, SessionState,
+};
 use ruya::report;
 use ruya::searchspace::SearchSpace;
 use ruya::util::cli::Args;
+use ruya::util::json::{JsonValue, JsonWriter};
 use ruya::workload::{evaluation_jobs, ClusterSim, JobCostTable, JobInstance};
+use std::io::BufRead;
 use std::path::Path;
 
 fn main() {
@@ -65,6 +71,9 @@ fn run(args: &Args) -> Result<()> {
     }
     if sub == "profile" {
         return profile_one(args, args.opt_u64("seed", 0xC0FFEE));
+    }
+    if sub == "submit" {
+        return submit(args);
     }
 
     let backend_name = args.opt_or("backend", "native");
@@ -99,6 +108,7 @@ fn run(args: &Args) -> Result<()> {
         "table3" => table3(&runner, cfg.seed, out_dir),
         "fig4" | "fig5" => fig45(&runner, &cfg, out_dir),
         "search" => search_one(&runner, args, &cfg),
+        "serve" => serve(&runner, args, &cfg, gp_threads),
         "crispy" => crispy(&runner, args, cfg.seed),
         "stopping" => stopping(&runner, &cfg),
         "all" => {
@@ -305,12 +315,29 @@ fn search_one(runner: &ExperimentRunner, args: &Args, cfg: &ExperimentConfig) ->
         cfg.seed ^ job.job_id,
         &params,
     )?;
-    println!(
-        "\niterations to optimum: ruya {} vs cherrypick {}",
-        out.first_within(1.0 + 1e-9).unwrap_or(0),
-        cp.first_within(1.0 + 1e-9).unwrap_or(0)
-    );
+    let ruya_iters = out.first_within(1.0 + 1e-9);
+    let cp_iters = cp.first_within(1.0 + 1e-9);
+    match iters_to_optimum_line(ruya_iters, cp_iters) {
+        Some(line) => println!("\n{line}"),
+        None => println!("\noptimum not reached by either method within the iteration budget"),
+    }
     Ok(())
+}
+
+/// Closing line of `ruya search`: iterations-to-optimum for each method,
+/// with `None` (capped or criterion-stopped searches that never hit the
+/// optimum) rendered as `not reached` rather than a misleading `0`.
+/// Returns `None` when neither method reached it, so the caller can
+/// replace the comparison with an explanation instead.
+fn iters_to_optimum_line(ruya: Option<usize>, cherrypick: Option<usize>) -> Option<String> {
+    if ruya.is_none() && cherrypick.is_none() {
+        return None;
+    }
+    let fmt = |v: Option<usize>| match v {
+        Some(n) => n.to_string(),
+        None => "not reached".to_string(),
+    };
+    Some(format!("iterations to optimum: ruya {} vs cherrypick {}", fmt(ruya), fmt(cherrypick)))
 }
 
 fn profile_one(args: &Args, seed: u64) -> Result<()> {
@@ -418,6 +445,207 @@ fn dump_space(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ruya submit` — print a ready-made `open` request line for [`serve`].
+/// Validates the job label locally so typos fail here, not inside the
+/// server stream; `--sessions` accepts `k`/`m` suffixes (`10k` = 10000).
+fn submit(args: &Args) -> Result<()> {
+    let label = args
+        .opt("job")
+        .context("--job <label> required, e.g. --job 'K-Means Spark bigdata'")?;
+    let job = job_by_label(label)?;
+    let mut w = JsonWriter::new();
+    w.begin_object().key("op").string("open");
+    w.key("job").string(&job.label());
+    w.key("sessions").number(args.opt_count("sessions", 1) as f64);
+    w.key("seed").number(args.opt_u64("seed", 0xC0FFEE) as f64);
+    if let Some(iters) = args.opt("max-iters") {
+        let iters: usize = iters.parse().context("--max-iters must be an unsigned integer")?;
+        w.key("max_iters").number(iters as f64);
+    }
+    w.end_object();
+    println!("{}", w.finish());
+    Ok(())
+}
+
+/// `ruya serve` — the resident optimizer service. Reads line-delimited
+/// JSON requests (stdin, or `--script FILE`), multiplexes every open
+/// session over one [`SessionEngine`], and answers one line per request.
+/// Blank lines and `#` comments are skipped; a malformed request prints
+/// an `{"error":...}` line and the stream continues.
+///
+/// Ops: `{"op":"open","job":L,"sessions":N,"seed":S,"max_iters":K}`,
+/// `{"op":"step","rounds":N}`, `{"op":"run"}`, `{"op":"suspend","id":I}`
+/// (the response line IS the portable session state),
+/// `{"op":"resume","state":{...}}`, `{"op":"stats"}`, `{"op":"report"}`.
+fn serve(
+    runner: &ExperimentRunner,
+    args: &Args,
+    cfg: &ExperimentConfig,
+    gp_threads: usize,
+) -> Result<()> {
+    let mut engine = SessionEngine::new(gp_threads);
+    let reader: Box<dyn BufRead> = match args.opt("script") {
+        Some(path) => {
+            let f = std::fs::File::open(path).with_context(|| format!("opening --script {path}"))?;
+            Box::new(std::io::BufReader::new(f))
+        }
+        None => Box::new(std::io::BufReader::new(std::io::stdin())),
+    };
+    eprintln!(
+        "ruya serve: engine up ({} scoring lane(s)); one JSON request per line",
+        engine.pool_width()
+    );
+    for line in reader.lines() {
+        let line = line.context("reading request stream")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Err(e) = serve_request(runner, &mut engine, cfg, line) {
+            let mut w = JsonWriter::new();
+            w.begin_object().key("error").string(&format!("{e:#}")).end_object();
+            println!("{}", w.finish());
+        }
+    }
+    Ok(())
+}
+
+fn serve_request(
+    runner: &ExperimentRunner,
+    engine: &mut SessionEngine,
+    cfg: &ExperimentConfig,
+    line: &str,
+) -> Result<()> {
+    let req = JsonValue::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+    let op = req
+        .get("op")
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| anyhow!("request needs an \"op\" string"))?;
+    let get_usize = |key: &str| req.get(key).and_then(JsonValue::as_f64).map(|v| v as usize);
+    match op {
+        "open" => {
+            let label = req
+                .get("job")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow!("open needs a \"job\" label"))?;
+            let job = job_by_label(label)?;
+            // Lazy registration: the first open of a job profiles it,
+            // plans its phases and builds its cost table once; every
+            // later session shares that immutable state.
+            let job_idx = match engine.job_index(&job.label()) {
+                Some(i) => i,
+                None => runner.register_job_with_engine(engine, &job, cfg.seed)?,
+            };
+            let sessions = get_usize("sessions").unwrap_or(1).max(1);
+            let seed = req
+                .get("seed")
+                .and_then(JsonValue::as_f64)
+                .map(|v| v as u64)
+                .unwrap_or(cfg.seed ^ job.job_id);
+            let large = runner.space.len() > ruya::bayesopt::LOWRANK_CANDIDATE_THRESHOLD;
+            let default_iters = if large { 150 } else { runner.space.len() };
+            let params = ruya::bayesopt::BoParams {
+                max_iters: get_usize("max_iters").unwrap_or(default_iters),
+                enforce_stop: true,
+                ..Default::default()
+            };
+            let ids: Vec<u64> = (0..sessions)
+                .map(|s| engine.open(job_idx, seed.wrapping_add(s as u64 * 7919), params))
+                .collect::<Result<_>>()?;
+            let mut w = JsonWriter::new();
+            w.begin_object().key("ok").string("open");
+            w.key("job").string(&job.label());
+            w.key("first_id").number(ids[0] as f64);
+            w.key("sessions").number(ids.len() as f64).end_object();
+            println!("{}", w.finish());
+        }
+        "step" => {
+            let rounds = get_usize("rounds").unwrap_or(1).max(1);
+            let mut stepped = 0usize;
+            for _ in 0..rounds {
+                stepped += engine.step_all()?;
+            }
+            let mut w = JsonWriter::new();
+            w.begin_object().key("ok").string("step");
+            w.key("stepped").number(stepped as f64);
+            w.key("active").number(engine.stats().sessions_active as f64).end_object();
+            println!("{}", w.finish());
+        }
+        "run" => {
+            let steps = engine.run_all()?;
+            let mut w = JsonWriter::new();
+            w.begin_object().key("ok").string("run");
+            w.key("steps").number(steps as f64).end_object();
+            println!("{}", w.finish());
+        }
+        "suspend" => {
+            let id = get_usize("id").ok_or_else(|| anyhow!("suspend needs a session \"id\""))?;
+            // The response line IS the portable state: feed it back as
+            // {"op":"resume","state":<line>} to continue bit-identically.
+            println!("{}", engine.suspend(id as u64)?.encode());
+        }
+        "resume" => {
+            let state = SessionState::from_value(
+                req.get("state").ok_or_else(|| anyhow!("resume needs a \"state\" object"))?,
+            )?;
+            if engine.job_index(&state.job_label).is_none() {
+                let job = job_by_label(&state.job_label)?;
+                runner.register_job_with_engine(engine, &job, cfg.seed)?;
+            }
+            let id = engine.resume(&state)?;
+            let mut w = JsonWriter::new();
+            w.begin_object().key("ok").string("resume");
+            w.key("id").number(id as f64);
+            w.key("executions").number(state.snapshot.tried.len() as f64).end_object();
+            println!("{}", w.finish());
+        }
+        "stats" => {
+            let s = engine.stats();
+            let mut w = JsonWriter::new();
+            w.begin_object().key("ok").string("stats");
+            for (k, v) in [
+                ("sessions_opened", s.sessions_opened),
+                ("sessions_active", s.sessions_active),
+                ("sessions_finished", s.sessions_finished),
+                ("steps", s.steps),
+                ("executes", s.executes),
+                ("decides", s.decides),
+                ("batched_decides", s.batched_decides),
+                ("solo_decides", s.solo_decides),
+                ("fanout_rounds", s.fanout_rounds),
+                ("suspends", s.suspends),
+                ("resumes", s.resumes),
+                ("pool_width", engine.pool_width() as u64),
+                ("pool_creates", engine.session_backend_pool_creates()),
+            ] {
+                w.key(k).number(v as f64);
+            }
+            w.end_object();
+            println!("{}", w.finish());
+        }
+        "report" => {
+            for id in engine.session_ids() {
+                let Some(out) = engine.outcome(id) else { continue };
+                let best = out.costs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let mut w = JsonWriter::new();
+                w.begin_object().key("id").number(id as f64);
+                w.key("executions").number(out.tried.len() as f64);
+                w.key("best").number(best);
+                w.key("done").boolean(engine.is_done(id).unwrap_or(false));
+                match out.stop_after {
+                    // NaN renders as JSON null: "no stop fired".
+                    Some(k) => w.key("stop_after").number(k as f64),
+                    None => w.key("stop_after").number(f64::NAN),
+                };
+                w.end_object();
+                println!("{}", w.finish());
+            }
+        }
+        other => bail!("unknown op {other:?} (open/step/run/suspend/resume/stats/report)"),
+    }
+    Ok(())
+}
+
 fn find_spark_job(name: &str, scale: &str) -> Result<JobInstance> {
     evaluation_jobs()
         .into_iter()
@@ -456,6 +684,13 @@ SUBCOMMANDS
   stopping          enforced-stop search quality (stopping criterion)
   profile --job L   run one profiling phase, print readings + model
   space             dump the search space (respects --space)
+  serve             resident session engine: one JSON request per line on
+                    stdin (or --script FILE); ops open/step/run/suspend/
+                    resume/stats/report — suspend's reply line is the
+                    portable state that a later resume accepts back
+  submit --job L    print a serve `open` request line (validates the job;
+                    --sessions N opens N concurrent sessions, k/m
+                    suffixes allowed: 10k = 10000)
   all               regenerate every table and figure
 
 OPTIONS
@@ -464,9 +699,10 @@ OPTIONS
                          generated:<n> — a seeded synthetic n-config cloud
                          catalog; spaces past 512 candidates are scored
                          by the Nystrom low-rank GP path automatically
-  --max-iters N          cap search executions (search subcommand only;
-                         default: space size, or 150 with the stopping
-                         criterion enforced on spaces > 512 configs)
+  --max-iters N          cap search executions (search, submit and serve
+                         opens; default: space size, or 150 with the
+                         stopping criterion enforced on spaces > 512
+                         configs)
   --reps N               repetitions for table2/fig4/fig5 (default 200)
   --threads N            worker threads (default 1; table2 shards jobs x
                          methods x repetitions, other commands shard
@@ -483,6 +719,40 @@ OPTIONS
                          windows of <= 16 observations always run serial
                          (work-size floor)
   --seed S               experiment seed (default 0xC0FFEE)
+  --script FILE          serve: read requests from FILE instead of stdin
+  --sessions N           submit: sessions per open request (k/m suffixes)
   --out DIR              also write tables/figures to DIR
   --curve-len N          length of fig4/fig5 series (default 48)
 "#;
+
+#[cfg(test)]
+mod tests {
+    use super::iters_to_optimum_line;
+
+    #[test]
+    fn iters_line_reports_both_methods() {
+        assert_eq!(
+            iters_to_optimum_line(Some(7), Some(23)).as_deref(),
+            Some("iterations to optimum: ruya 7 vs cherrypick 23")
+        );
+    }
+
+    #[test]
+    fn iters_line_says_not_reached_instead_of_zero() {
+        // The old formatting printed `.unwrap_or(0)` — a literal 0 that
+        // read as "reached instantly" when the optimum was never found.
+        assert_eq!(
+            iters_to_optimum_line(Some(12), None).as_deref(),
+            Some("iterations to optimum: ruya 12 vs cherrypick not reached")
+        );
+        assert_eq!(
+            iters_to_optimum_line(None, Some(40)).as_deref(),
+            Some("iterations to optimum: ruya not reached vs cherrypick 40")
+        );
+    }
+
+    #[test]
+    fn iters_line_is_skipped_when_neither_method_reached_the_optimum() {
+        assert_eq!(iters_to_optimum_line(None, None), None);
+    }
+}

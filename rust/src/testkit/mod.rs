@@ -167,6 +167,29 @@ impl ParityScript {
         &self.steps
     }
 
+    /// The pooled feature rows (row-major, [`Self::dim`] columns). The
+    /// session suspend/resume harnesses reuse the pool as a candidate
+    /// space, so a fuzz corpus drives both the backend parity suites and
+    /// the resumption pins from one description.
+    pub fn rows(&self) -> &[f64] {
+        &self.rows
+    }
+
+    /// The pooled targets, parallel to [`Self::rows`].
+    pub fn ys(&self) -> &[f64] {
+        &self.ys
+    }
+
+    /// Suspend/resume cut points: every prefix boundary of the script,
+    /// `0..=steps.len()`. The suspend/resume harnesses pause a search
+    /// after each cut (clamping to the search's actual round count),
+    /// serialize, resume, and require the continuation to match the
+    /// uninterrupted run to the bit — cutting at *every* boundary rules
+    /// out "resume only works at phase edges" regressions.
+    pub fn cut_points(&self) -> Vec<usize> {
+        (0..=self.steps.len()).collect()
+    }
+
     /// Feature dimension of the pooled rows (candidate matrices handed
     /// to the parity harnesses must use the same width).
     pub fn dim(&self) -> usize {
@@ -542,6 +565,11 @@ mod tests {
             script.steps(),
             &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (1, 5), (2, 5), (3, 5), (0, 12)]
         );
+        assert_eq!(script.rows().len(), 12 * d);
+        assert_eq!(script.ys().len(), 12);
+        let cuts = script.cut_points();
+        assert_eq!(cuts.len(), script.steps().len() + 1);
+        assert_eq!((cuts[0], *cuts.last().unwrap()), (0, script.steps().len()));
     }
 
     #[test]

@@ -92,6 +92,26 @@ impl Args {
     pub fn opt_gp_threads(&self) -> usize {
         self.opt_usize("gp-threads", 0)
     }
+
+    /// A count option accepting `k`/`m` suffixes (see [`parse_count`]):
+    /// `--sessions 10k` reads as 10_000.
+    pub fn opt_count(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(parse_count).unwrap_or(default)
+    }
+}
+
+/// Parse a count with an optional case-insensitive magnitude suffix:
+/// `"64"` -> 64, `"10k"` -> 10_000, `"2M"` -> 2_000_000. Returns `None`
+/// on malformed input or overflow (the session-scale CLI knobs use this
+/// so `ruya submit --sessions 100k` reads like the bench labels).
+pub fn parse_count(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'k' | b'K' => (&s[..s.len() - 1], 1_000usize),
+        b'm' | b'M' => (&s[..s.len() - 1], 1_000_000usize),
+        _ => (s, 1),
+    };
+    digits.parse::<usize>().ok()?.checked_mul(mult)
 }
 
 #[cfg(test)]
@@ -154,6 +174,22 @@ mod tests {
         // The two knobs parse independently.
         let a = parse(&["table2", "--threads", "2", "--gp-threads", "8"], &[]);
         assert_eq!((a.opt_threads(), a.opt_gp_threads()), (2, 8));
+    }
+
+    #[test]
+    fn count_suffixes_parse() {
+        assert_eq!(parse_count("64"), Some(64));
+        assert_eq!(parse_count("10k"), Some(10_000));
+        assert_eq!(parse_count("1K"), Some(1_000));
+        assert_eq!(parse_count("2M"), Some(2_000_000));
+        assert_eq!(parse_count(" 3m "), Some(3_000_000));
+        assert_eq!(parse_count(""), None);
+        assert_eq!(parse_count("k"), None);
+        assert_eq!(parse_count("10x"), None);
+        assert_eq!(parse_count("999999999999999999999k"), None);
+        let a = parse(&["submit", "--sessions", "10k"], &[]);
+        assert_eq!(a.opt_count("sessions", 1), 10_000);
+        assert_eq!(a.opt_count("missing", 7), 7);
     }
 
     #[test]

@@ -15,11 +15,16 @@
 //! re-panics with both, so any run reproduces with
 //! `RUYA_FUZZ_SEED=<seed> cargo test --test fuzz_parity`.
 
-use ruya::bayesopt::{hyperparameter_grid, NativeBackend};
+use ruya::bayesopt::{
+    hyperparameter_grid, BoParams, NativeBackend, SearchCursor, SearchStep,
+};
+use ruya::coordinator::{replay_cursor, SessionState};
 use ruya::testkit::{
     assert_backend_parity, assert_parallel_parity, random_scripts, ParityScript,
 };
+use ruya::util::rng::Pcg64;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 
 /// Scripts per fuzz run (the ISSUE floor is 32).
 const FUZZ_SCRIPTS: usize = 32;
@@ -89,6 +94,91 @@ fn fuzz_parallel_parity_bit_identical_over_random_programs() {
             b
         };
         assert_parallel_parity(&make, &[2, 4, 8], script, xc, m, &grid);
+    });
+}
+
+/// One search step over the script's own row pool (rows = candidate
+/// space, targets = costs); false once the search is over.
+fn session_step(
+    cursor: &mut SearchCursor,
+    backend: &mut NativeBackend,
+    script: &ParityScript,
+) -> bool {
+    let (features, costs) = (script.rows(), script.ys());
+    match cursor.advance() {
+        SearchStep::Done => false,
+        SearchStep::Execute(i) => {
+            cursor.record(i, costs[i], features);
+            true
+        }
+        SearchStep::NeedsDecision => {
+            match cursor.decide_with_backend(features, backend).expect("decide") {
+                Some(pick) => {
+                    cursor.record(pick, costs[pick], features);
+                    true
+                }
+                None => false,
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_session_resume_bit_identical() {
+    // Suspend/resume over the same randomized corpus the cache and pool
+    // parities fuzz: at every round boundary of every script-driven
+    // search, serialize -> deserialize -> replay must rejoin the
+    // uninterrupted trace to the bit. (tests/session.rs pins the
+    // fixed-seed variant plus the rewarmed-backend nll probes; this is
+    // the RUYA_FUZZ_SEED-reseedable sweep.)
+    for_each_script(|i, script, _xc, _m| {
+        let m = script.pool_len();
+        let d = script.dim();
+        let k = (m / 3).max(1);
+        let phases: Vec<Vec<usize>> = vec![(0..k).collect(), (k..m).collect()];
+        let params = BoParams { max_iters: m.min(9), ..Default::default() };
+        let seed = 0x5E55 ^ (i as u64).wrapping_mul(0x9E37);
+        let fresh = || {
+            let mut b = NativeBackend::new();
+            b.set_parallelism(1);
+            let c = SearchCursor::new(
+                Arc::new(phases.clone()),
+                m,
+                d,
+                Pcg64::from_seed(seed),
+                params,
+            );
+            (c, b)
+        };
+
+        let (mut ref_cursor, mut ref_backend) = fresh();
+        while session_step(&mut ref_cursor, &mut ref_backend, script) {}
+        let reference = ref_cursor.outcome();
+
+        for cut in script.cut_points() {
+            let (mut cursor, mut backend) = fresh();
+            for _ in 0..cut {
+                if !session_step(&mut cursor, &mut backend, script) {
+                    break;
+                }
+            }
+            let state = SessionState::capture("fuzz", seed, params, &phases, &cursor);
+            let decoded = SessionState::decode(&state.encode()).expect("decode");
+            let mut resumed_backend = NativeBackend::new();
+            resumed_backend.set_parallelism(1);
+            let mut resumed = replay_cursor(&decoded, script.rows(), &mut resumed_backend)
+                .unwrap_or_else(|e| panic!("cut {cut}: resume failed: {e:#}"));
+            while session_step(&mut resumed, &mut resumed_backend, script) {}
+            let out = resumed.outcome();
+            assert_eq!(out.tried, reference.tried, "cut {cut}: picks diverged");
+            assert_eq!(
+                out.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+                reference.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+                "cut {cut}: cost bits diverged"
+            );
+            assert_eq!(out.stop_after, reference.stop_after, "cut {cut}");
+            assert_eq!(out.phase_starts, reference.phase_starts, "cut {cut}");
+        }
     });
 }
 

@@ -1,0 +1,182 @@
+//! Suspend/resume bit-identity pins for the session layer.
+//!
+//! The tentpole property: for **every** prefix length of a search driven
+//! by a fuzz script's row pool, suspend -> serialize -> deserialize ->
+//! resume must continue exactly as the uninterrupted run — same tried
+//! indices, same cost bits, same stopping state, and a rewarmed backend
+//! whose nll grids answer bit-identically to the never-suspended one.
+//! Cutting at every round boundary (not just phase edges) is what rules
+//! out "resume only works at nice points" regressions; the same corpus
+//! also runs under the seeded `fuzz_parity` runner.
+
+use ruya::bayesopt::{BoParams, GpBackend, NativeBackend, SearchCursor, SearchStep};
+use ruya::coordinator::{replay_cursor, SessionState};
+use ruya::testkit::random_scripts;
+use ruya::util::rng::Pcg64;
+use std::sync::Arc;
+
+const CORPUS_SEED: u64 = 0x5E55_C0DE;
+
+fn serial_backend() -> NativeBackend {
+    let mut b = NativeBackend::new();
+    b.set_parallelism(1);
+    b
+}
+
+/// A two-phase plan over the script's row pool (priority = the first
+/// third), so resumption crosses a phase boundary in most runs.
+fn split_phases(m: usize) -> Vec<Vec<usize>> {
+    let k = (m / 3).max(1);
+    vec![(0..k).collect(), (k..m).collect()]
+}
+
+fn new_cursor(
+    phases: &[Vec<usize>],
+    m: usize,
+    d: usize,
+    seed: u64,
+    params: BoParams,
+) -> SearchCursor {
+    SearchCursor::new(Arc::new(phases.to_vec()), m, d, Pcg64::from_seed(seed), params)
+}
+
+/// One engine-equivalent search step: a random-pick execution or one
+/// full GP decision. Returns false once the search is over.
+fn step_once(
+    cursor: &mut SearchCursor,
+    backend: &mut NativeBackend,
+    features: &[f64],
+    costs: &[f64],
+) -> bool {
+    match cursor.advance() {
+        SearchStep::Done => false,
+        SearchStep::Execute(i) => {
+            cursor.record(i, costs[i], features);
+            true
+        }
+        SearchStep::NeedsDecision => {
+            match cursor.decide_with_backend(features, backend).expect("decide") {
+                Some(pick) => {
+                    cursor.record(pick, costs[pick], features);
+                    true
+                }
+                None => false, // enforced stop
+            }
+        }
+    }
+}
+
+fn run_to_end(
+    cursor: &mut SearchCursor,
+    backend: &mut NativeBackend,
+    features: &[f64],
+    costs: &[f64],
+) {
+    while step_once(cursor, backend, features, costs) {}
+}
+
+#[test]
+fn every_prefix_suspends_and_resumes_bit_identically() {
+    for (idx, script) in random_scripts(CORPUS_SEED, 6).iter().enumerate() {
+        let m = script.pool_len();
+        let d = script.dim();
+        let features = script.rows();
+        let costs = script.ys();
+        let phases = split_phases(m);
+        let params = BoParams { max_iters: m.min(10), ..Default::default() };
+        let seed = 0xBED5 ^ (idx as u64).wrapping_mul(7919);
+
+        let reference = {
+            let mut cursor = new_cursor(&phases, m, d, seed, params);
+            let mut backend = serial_backend();
+            run_to_end(&mut cursor, &mut backend, features, costs);
+            cursor.outcome()
+        };
+
+        for cut in script.cut_points() {
+            let mut live = new_cursor(&phases, m, d, seed, params);
+            let mut live_backend = serial_backend();
+            for _ in 0..cut {
+                if !step_once(&mut live, &mut live_backend, features, costs) {
+                    break;
+                }
+            }
+
+            let state = SessionState::capture("fuzz", seed, params, &phases, &live);
+            let decoded = SessionState::decode(&state.encode())
+                .unwrap_or_else(|e| panic!("script {idx} cut {cut}: decode failed: {e:#}"));
+            assert_eq!(decoded.snapshot, state.snapshot, "script {idx} cut {cut}: lossy codec");
+
+            let mut resumed_backend = serial_backend();
+            let mut resumed = replay_cursor(&decoded, features, &mut resumed_backend)
+                .unwrap_or_else(|e| panic!("script {idx} cut {cut}: resume failed: {e:#}"));
+            assert_eq!(resumed.snapshot(), live.snapshot(), "script {idx} cut {cut}");
+
+            run_to_end(&mut resumed, &mut resumed_backend, features, costs);
+            run_to_end(&mut live, &mut live_backend, features, costs);
+
+            let out = resumed.outcome();
+            assert_eq!(out.tried, reference.tried, "script {idx} cut {cut}: picks diverged");
+            assert_eq!(
+                out.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+                reference.costs.iter().map(|c| c.to_bits()).collect::<Vec<_>>(),
+                "script {idx} cut {cut}: cost bits diverged"
+            );
+            assert_eq!(out.stop_after, reference.stop_after, "script {idx} cut {cut}");
+            assert_eq!(out.phase_starts, reference.phase_starts, "script {idx} cut {cut}");
+
+            // The replay-rewarmed caches must answer like the live ones:
+            // probe the final window's nll grid on both backends, bit
+            // for bit. (Probing after completion so the probe itself
+            // cannot perturb either run.)
+            let (skip, n) = live.window(live_backend.max_obs());
+            let grid = live.grid();
+            let a = live_backend
+                .nll_grid(live.x_window(skip), live.y_window(skip), n, d, grid)
+                .expect("live nll");
+            let b = resumed_backend
+                .nll_grid(resumed.x_window(skip), resumed.y_window(skip), n, d, grid)
+                .expect("resumed nll");
+            for (g, (va, vb)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "script {idx} cut {cut}: nll[{g}] diverged after resume"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn finished_searches_resume_as_finished() {
+    // Suspending *after* the end (plan exhausted, max_iters, or an
+    // enforced stop) must round-trip too: replay performs the finishing
+    // advance and the resumed cursor reports done with the same trace.
+    for (idx, script) in random_scripts(CORPUS_SEED ^ 0xF00D, 4).iter().enumerate() {
+        let m = script.pool_len();
+        let d = script.dim();
+        let features = script.rows();
+        let costs = script.ys();
+        let phases = split_phases(m);
+        for params in [
+            BoParams { max_iters: m.min(9), ..Default::default() },
+            BoParams { max_iters: m, enforce_stop: true, ..Default::default() },
+        ] {
+            let seed = 0xF14A ^ idx as u64;
+            let mut cursor = new_cursor(&phases, m, d, seed, params);
+            let mut backend = serial_backend();
+            run_to_end(&mut cursor, &mut backend, features, costs);
+            assert!(cursor.is_done(), "script {idx}: run_to_end left the search open");
+
+            let state = SessionState::capture("fuzz", seed, params, &phases, &cursor);
+            let decoded = SessionState::decode(&state.encode()).expect("decode");
+            let mut rb = serial_backend();
+            let resumed = replay_cursor(&decoded, features, &mut rb)
+                .unwrap_or_else(|e| panic!("script {idx}: finished resume failed: {e:#}"));
+            assert_eq!(resumed.is_done(), cursor.is_done(), "script {idx}");
+            assert_eq!(resumed.outcome().tried, cursor.outcome().tried, "script {idx}");
+            assert_eq!(resumed.outcome().stop_after, cursor.outcome().stop_after);
+        }
+    }
+}
