@@ -45,14 +45,15 @@
 //! (`fps_full_refreshes`/`fps_incremental_refreshes`) and the low-rank
 //! stage split (`lowrank_hyp_stage_builds`/`lowrank_noise_stage_builds`).
 
-use super::chol::{CholFactor, FactorCache, FactorCacheStats, FitPlan, ObsDelta, SlotTask};
-use super::gp::{
-    expected_improvement, matern52_from_d2, matern52_gram_from_d2, predict_into,
+use super::chol::{
+    nll_multi, CholFactor, FactorCache, FactorCacheStats, FitPlan, ObsDelta, SlotTask,
 };
+use super::gp::{expected_improvement, matern52_gram_from_d2, predict_into};
 use super::lowrank::{
     InducingCache, LowRankGp, LowRankStats, DEFAULT_MAX_INDUCING,
 };
 use super::pool::WorkerPool;
+use super::simd;
 use crate::runtime::{GpExecutor, XlaRuntime};
 use anyhow::Result;
 
@@ -175,6 +176,13 @@ pub struct DecideStats {
     pub lowrank_hyp_stage_builds: u64,
     /// Low-rank noise-stage builds (`Lm`/weights) — one per grid point.
     pub lowrank_noise_stage_builds: u64,
+    /// Exact nll sweeps' (lengthscale, variance) groups carrying two or
+    /// more noise levels, whose per-slot triangular solves ran as one
+    /// interleaved multi-RHS batch ([`nll_multi`]) instead of
+    /// sequentially. Bit-identical to the per-slot solves by
+    /// construction (each stream replays the scalar accumulation
+    /// order); the bench smoke guard asserts this engages.
+    pub multi_rhs_noise_solves: u64,
 }
 
 impl DecideStats {
@@ -327,12 +335,13 @@ fn update_task(
             let slide = task.plan() == FitPlan::Slide;
             if *row_key != key {
                 // Cross-kernel of the newest observation against the
-                // current first n-1 rows: the last d2 row.
+                // current first n-1 rows: the last d2 row, mapped
+                // through the dispatched Matérn kernel (vector exp
+                // under SIMD — tolerance class, same as the builders).
                 let last = n - 1;
                 row.clear();
-                for j in 0..last {
-                    row.push(matern52_from_d2(d2[last * n + j], hyp[0], hyp[1]));
-                }
+                row.extend_from_slice(&d2[last * n..last * n + last]);
+                simd::matern52_map_from_d2(hyp[0], hyp[1], row);
                 *row_key = key;
             }
             task.extend(&row[..], slide)
@@ -351,11 +360,41 @@ fn update_task(
     true
 }
 
-/// [`update_task`] + the slot's nll over `y` (INFINITY when unusable) —
-/// the per-task body of the grid nll sweep.
+/// Planned [`SlotTask`]s zipped with their output slots, sorted and
+/// split into whole (lengthscale, variance) groups ([`hyp_group_key`],
+/// mirroring [`group_grid_indices`] on the planned tasks) — the fan-out
+/// *and* multi-RHS batching unit of the exact sweep, serial or pooled.
+fn group_sweep_tasks<'s, 'f>(
+    tasks: &'s mut [SlotTask<'f>],
+    nlls: &'s mut [f64],
+) -> Vec<Vec<(&'s mut SlotTask<'f>, &'s mut f64)>> {
+    let mut items: Vec<(&'s mut SlotTask<'f>, &'s mut f64)> =
+        tasks.iter_mut().zip(nlls.iter_mut()).collect();
+    items.sort_by_key(|(t, _)| hyp_group_key(t.hyp()));
+    let mut groups: Vec<Vec<(&'s mut SlotTask<'f>, &'s mut f64)>> = Vec::new();
+    let mut last_key = None;
+    for item in items {
+        let key = hyp_group_key(item.0.hyp());
+        if last_key != Some(key) {
+            groups.push(Vec::new());
+            last_key = Some(key);
+        }
+        groups.last_mut().expect("group pushed above").push(item);
+    }
+    groups
+}
+
+/// [`update_task`] over one whole (lengthscale, variance) group, then
+/// one batched multi-RHS nll for every usable slot ([`nll_multi`]'s
+/// interleaved triangular solves; unusable slots score INFINITY). The
+/// group is the natural batching unit: its noise levels share the
+/// memoized cross-row / Gram build *and* the factor size, and
+/// `nll_multi` is bit-identical to per-slot solves, so this body swept
+/// serially or across pool lanes cannot drift from the legacy
+/// one-task-at-a-time loop.
 #[allow(clippy::too_many_arguments)]
-fn sweep_task(
-    task: &mut SlotTask<'_>,
+fn sweep_group(
+    group: Vec<(&mut SlotTask<'_>, &mut f64)>,
     d2: &[f64],
     y: &[f64],
     n: usize,
@@ -363,11 +402,24 @@ fn sweep_task(
     gram: &mut Vec<f64>,
     row_key: &mut (f64, f64),
     gram_key: &mut (f64, f64),
-) -> f64 {
-    if update_task(task, d2, n, row, gram, row_key, gram_key) {
-        task.nll(y)
-    } else {
-        f64::INFINITY
+) {
+    let mut ready: Vec<(&mut SlotTask<'_>, &mut f64)> = Vec::with_capacity(group.len());
+    for (task, out) in group {
+        if update_task(task, d2, n, row, gram, row_key, gram_key) {
+            ready.push((task, out));
+        } else {
+            *out = f64::INFINITY;
+        }
+    }
+    if ready.is_empty() {
+        return;
+    }
+    let mut refs: Vec<&mut SlotTask<'_>> =
+        ready.iter_mut().map(|(t, _)| &mut **t).collect();
+    let vals = nll_multi(&mut refs, y);
+    drop(refs);
+    for ((_, out), v) in ready.into_iter().zip(vals) {
+        *out = v;
     }
 }
 
@@ -651,15 +703,15 @@ impl NativeBackend {
                         }
                     }
                 }
+                // New last row through the same vectorized squared-
+                // distance kernel as the fresh build (bit-exact class:
+                // one pair per lane in scalar feature order, no FMA),
+                // then mirrored into the last column.
                 let i = n - 1;
+                let (head, last_row) = d2.split_at_mut(i * n);
+                simd::sqdist_row(&x[i * d..(i + 1) * d], &x[..i * d], d, &mut last_row[..i]);
                 for j in 0..i {
-                    let mut s = 0.0;
-                    for k in 0..d {
-                        let diff = x[i * d + k] - x[j * d + k];
-                        s += diff * diff;
-                    }
-                    d2[i * n + j] = s;
-                    d2[j * n + i] = s;
+                    head[j * n + i] = last_row[j];
                 }
                 std::mem::swap(&mut self.d2, &mut d2);
                 self.d2_swap = d2;
@@ -953,6 +1005,7 @@ impl GpBackend for NativeBackend {
                 .map(|(t, (mu_c, var_c))| vec![(t, mu_c, var_c)])
                 .collect();
             pool.run_groups(groups, |lane, scratch| {
+                scratch.reserve_tiles(n, DECIDE_TILE);
                 for (t, mu_c, var_c) in lane {
                     let start = t * DECIDE_TILE;
                     let w = mu_c.len();
@@ -1048,16 +1101,22 @@ impl GpBackend for NativeBackend {
             }
         }
         let mut nlls = vec![f64::INFINITY; tasks.len()];
+        // Whole (lengthscale, variance) groups are the work unit on both
+        // branches: the noise levels of one group share a cross-row /
+        // Gram build and run their nll triangular solves as one
+        // interleaved multi-RHS batch (`sweep_group`). Count the groups
+        // that actually batch (two or more noise levels) before either
+        // branch consumes them.
+        let groups = group_sweep_tasks(&mut tasks, &mut nlls);
+        self.decide_stats.multi_rhs_noise_solves +=
+            groups.iter().filter(|g| g.len() >= 2).count() as u64;
         if !pooled {
-            // Serial sweep in (lengthscale, variance) order so the 4
-            // noise levels per lengthscale share one cross-row / Gram
-            // build through the backend's persistent scratch.
-            let mut order: Vec<usize> = (0..tasks.len()).collect();
-            order.sort_by_key(|&t| hyp_group_key(tasks[t].hyp()));
+            // Serial sweep in (lengthscale, variance) group order
+            // through the backend's persistent scratch.
             let (mut row_key, mut gram_key) = ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
-            for &ti in &order {
-                nlls[ti] = sweep_task(
-                    &mut tasks[ti],
+            for group in groups {
+                sweep_group(
+                    group,
                     &self.d2,
                     y,
                     n,
@@ -1069,38 +1128,30 @@ impl GpBackend for NativeBackend {
             }
         } else {
             self.decide_stats.parallel_nll_sweeps += 1;
-            // Whole (lengthscale, variance) groups are the fan-out unit:
-            // tasks sharing a cross-row / Gram build stay on one lane,
-            // and every task writes its nll to a fixed slot — no
+            // Whole groups are also the fan-out unit: tasks sharing a
+            // cross-row / Gram build (and a multi-RHS batch) stay on one
+            // lane, and every task writes its nll to a fixed slot — no
             // reduction whose order could vary (see the deterministic-
-            // reduction contract in chol's module docs). The sort below
-            // mirrors `group_grid_indices` on the planned SlotTasks
-            // (same `hyp_group_key`), so the group count used for pool
-            // engagement above matches the groups formed here.
-            let mut items: Vec<(&mut SlotTask<'_>, &mut f64)> =
-                tasks.iter_mut().zip(nlls.iter_mut()).collect();
-            items.sort_by_key(|(t, _)| hyp_group_key(t.hyp()));
-            let mut groups: Vec<Vec<(&mut SlotTask<'_>, &mut f64)>> = Vec::new();
-            let mut last_key = None;
-            for item in items {
-                let key = hyp_group_key(item.0.hyp());
-                if last_key != Some(key) {
-                    groups.push(Vec::new());
-                    last_key = Some(key);
-                }
-                groups.last_mut().expect("group pushed above").push(item);
-            }
+            // reduction contract in chol's module docs). Each group
+            // rides as one `Vec` element so the round-robin dealing
+            // cannot split it across lanes, and `group_sweep_tasks`
+            // mirrors `group_grid_indices` (same `hyp_group_key`), so
+            // the group count used for pool engagement above matches
+            // the groups fanned out here.
+            let units: Vec<Vec<Vec<(&mut SlotTask<'_>, &mut f64)>>> =
+                groups.into_iter().map(|g| vec![g]).collect();
             let d2 = &self.d2;
             let pool = self.pool.as_ref().expect("engage_pool ensured the pool");
-            pool.run_groups(groups, |lane, scratch| {
+            pool.run_groups(units, |lane, scratch| {
+                scratch.reserve_sweep(n);
                 // Memo keys are re-seeded per fan-out — the persistent
                 // lane buffers are only trusted when the keys match, so
                 // scratch from a previous call can never leak in.
                 let (mut row_key, mut gram_key) =
                     ((f64::NAN, f64::NAN), (f64::NAN, f64::NAN));
-                for (task, out) in lane {
-                    *out = sweep_task(
-                        task,
+                for group in lane {
+                    sweep_group(
+                        group,
                         d2,
                         y,
                         n,
@@ -1715,6 +1766,39 @@ mod tests {
         for j in 0..m {
             assert_eq!(dec.mu[j].to_bits(), mu[j].to_bits(), "lowrank mu[{j}]");
             assert_eq!(dec.var[j].to_bits(), var[j].to_bits(), "lowrank var[{j}]");
+        }
+    }
+
+    #[test]
+    fn noise_groups_batch_into_multi_rhs_solves() {
+        // Grid points sharing (lengthscale, variance) must run their
+        // nll solves as one multi-RHS batch — counted once per group of
+        // two or more noise levels, identically on the serial and the
+        // pooled sweep (whose results are pinned bit-identical by the
+        // parallel parity suites).
+        let d = 2;
+        let n = 6;
+        let (x, y, _) = synth(n, 2, d);
+        let grid = [
+            [0.5, 1.0, 1e-4],
+            [0.5, 1.0, 1e-2],
+            [1.0, 1.0, 1e-4],
+            [1.0, 1.0, 1e-2],
+            [2.0, 1.0, 1e-3], // singleton: must not count
+        ];
+        let mut b = NativeBackend::new();
+        let serial = b.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s = b.decide_stats();
+        assert_eq!(s.multi_rhs_noise_solves, 2, "{s:?}");
+        let mut p = NativeBackend::new();
+        p.set_parallelism(4);
+        p.set_pool_min_obs(0);
+        let pooled = p.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s = p.decide_stats();
+        assert_eq!(s.multi_rhs_noise_solves, 2, "{s:?}");
+        assert_eq!(s.parallel_nll_sweeps, 1, "{s:?}");
+        for (g, (a, b)) in serial.iter().zip(&pooled).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "nll[{g}]");
         }
     }
 

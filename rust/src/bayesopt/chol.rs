@@ -84,6 +84,33 @@
 //! contract `testkit::assert_parallel_parity` pins. Worker-local path
 //! counters are merged back with [`FactorCache::absorb_stats`] (a plain
 //! sum, also order-independent).
+//!
+//! # Multi-RHS noise batching and the SIMD parity contract
+//!
+//! The 4 noise levels of one (ls, var) grid group share a cross-row /
+//! Gram build but own independent factors; their marginal-likelihood
+//! solves are pure latency chains. [`nll_multi`] batches up to
+//! [`NLL_STREAMS`] of them into one interleaved multi-RHS
+//! forward+backward pass in which **every stream replays the exact
+//! scalar single-solve accumulation order** — so per-slot results are
+//! bit-identical for any batch width (1 stream ≡ the legacy
+//! `solve_into` path on scalar dispatch), and serial and pooled sweeps
+//! agree to the bit whichever way a grid is chunked. The single-slot
+//! [`SlotTask::nll`] / [`FactorCache::nll`] run the same core with one
+//! stream, so batched and unbatched nll can never drift.
+//!
+//! Which paths stay bit-exact under SIMD dispatch (see
+//! [`super::simd`]): the nll solves above always accumulate in scalar
+//! order — their bits do not depend on the dispatch mode at all. The
+//! factorizations themselves ([`cholesky_packed_in_place`], the append
+//! forward solve, and the decide-path `solve_into`) run on the
+//! dispatched `kernel::dot`, which reassociates under SIMD — those
+//! results are pinned to the scalar path within
+//! [`super::simd::SIMD_PARITY_RTOL`] instead, and reproduce today's
+//! bits exactly when SIMD is off (`RUYA_FORCE_SCALAR` /
+//! `set_simd(false)`). Cross-path contracts (serial vs pooled,
+//! incremental vs scratch) hold in either mode because both sides share
+//! the same dispatched kernels.
 
 // `kernel::dot` is shared with the dense solves in `gp`, so packed and
 // dense arithmetic agree bit-for-bit by construction.
@@ -651,13 +678,110 @@ fn cold_slot(
     ok
 }
 
+/// Maximum solve streams interleaved by one [`nll_multi`] pass — the
+/// grid groups 4 noise levels per (ls, var) pair, and 4 independent
+/// chains are enough to saturate the FPU's add latency.
+pub const NLL_STREAMS: usize = 4;
+
 fn slot_nll(s: &mut Slot, y: &[f64]) -> f64 {
-    debug_assert!(s.valid);
+    slots_nll_multi(&mut [s], y)[0]
+}
+
+/// Batched multi-RHS marginal likelihood over one (ls, var) group's
+/// noise slots: up to [`NLL_STREAMS`] independent forward+backward
+/// triangular solves interleave in one pass, hiding each chain's
+/// serial add latency behind the others. Every stream accumulates in
+/// exactly the scalar single-solve order, so per-slot results (and the
+/// slots' refreshed alpha vectors) are **bit-identical for any batch
+/// width** — `nll_multi(&mut [t], y)[0] == t.nll(y)` to the bit, and a
+/// grid sweep may chunk groups however it likes without changing a
+/// single output bit.
+pub fn nll_multi(tasks: &mut [&mut SlotTask<'_>], y: &[f64]) -> Vec<f64> {
+    let mut slots: Vec<&mut Slot> = tasks.iter_mut().map(|t| &mut *t.slot).collect();
+    slots_nll_multi(&mut slots, y)
+}
+
+fn slots_nll_multi(slots: &mut [&mut Slot], y: &[f64]) -> Vec<f64> {
     let n = y.len();
-    debug_assert_eq!(n, s.factor.n());
-    s.factor.solve_into(y, &mut s.alpha);
-    let quad: f64 = y.iter().zip(&s.alpha).map(|(a, b)| a * b).sum::<f64>() * 0.5;
-    quad + s.factor.sum_log_diag() + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+    let mut out = Vec::with_capacity(slots.len());
+    for chunk in slots.chunks_mut(NLL_STREAMS) {
+        {
+            let mut streams: Vec<(&[f64], &mut [f64])> = Vec::with_capacity(chunk.len());
+            for s in chunk.iter_mut() {
+                debug_assert!(s.valid);
+                debug_assert_eq!(n, s.factor.n());
+                s.alpha.clear();
+                s.alpha.extend_from_slice(y);
+                let Slot { factor, alpha, .. } = &mut **s;
+                streams.push((factor.l.as_slice(), alpha.as_mut_slice()));
+            }
+            solve_streams(&mut streams, n);
+        }
+        for s in chunk.iter() {
+            let quad: f64 = y.iter().zip(&s.alpha).map(|(a, b)| a * b).sum::<f64>() * 0.5;
+            out.push(
+                quad + s.factor.sum_log_diag()
+                    + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln(),
+            );
+        }
+    }
+    out
+}
+
+/// Interleave `alpha = (L Lᵀ)⁻¹ y` over up to [`NLL_STREAMS`] packed
+/// factors. Monomorphized per stream count so the per-position
+/// `0..K` loops unroll; each stream's arithmetic order is exactly
+/// [`solve_lower_packed`] / [`solve_upper_t_packed`] with the scalar
+/// dot.
+fn solve_streams(streams: &mut [(&[f64], &mut [f64])], n: usize) {
+    match streams.len() {
+        0 => {}
+        1 => solve_streams_k::<1>(streams, n),
+        2 => solve_streams_k::<2>(streams, n),
+        3 => solve_streams_k::<3>(streams, n),
+        4 => solve_streams_k::<4>(streams, n),
+        _ => unreachable!("nll_multi chunks by NLL_STREAMS"),
+    }
+}
+
+fn solve_streams_k<const K: usize>(streams: &mut [(&[f64], &mut [f64])], n: usize) {
+    debug_assert_eq!(streams.len(), K);
+    // Forward substitution: per stream, b[i] = (b[i] - Σ_k L[i,k]·b[k])
+    // / L[i,i] with the sum accumulated in ascending k — the scalar
+    // solve order — while the K independent chains interleave.
+    for i in 0..n {
+        let rs = packed_row_start(i);
+        let mut acc = [0.0f64; K];
+        for k in 0..i {
+            for (c, a) in acc.iter_mut().enumerate() {
+                let (l, b) = &streams[c];
+                *a += l[rs + k] * b[k];
+            }
+        }
+        for (c, a) in acc.iter().enumerate() {
+            let (l, b) = &mut streams[c];
+            b[i] = (b[i] - a) / l[rs + i];
+        }
+    }
+    // Backward substitution, mirroring solve_upper_t_packed per stream.
+    for i in (0..n).rev() {
+        let mut acc = [0.0f64; K];
+        for (c, a) in acc.iter_mut().enumerate() {
+            *a = streams[c].1[i];
+        }
+        for k in (i + 1)..n {
+            let ks = packed_row_start(k);
+            for (c, a) in acc.iter_mut().enumerate() {
+                let (l, b) = &streams[c];
+                *a -= l[ks + i] * b[k];
+            }
+        }
+        let rs = packed_row_start(i);
+        for (c, a) in acc.iter().enumerate() {
+            let (l, b) = &mut streams[c];
+            b[i] = a / l[rs + i];
+        }
+    }
 }
 
 /// One planned unit of the grid-parallel nll sweep: exclusive access to
@@ -961,5 +1085,54 @@ mod tests {
         // Both slots are now current: the next batch plans pure reuse.
         let (tasks, _) = c.plan_grid(&grid, n);
         assert!(tasks.iter().all(|t| t.plan() == FitPlan::Reuse));
+    }
+
+    #[test]
+    fn nll_multi_is_bit_identical_to_single_solves() {
+        // One (ls, var) pair swept over 5 noise levels — more than
+        // NLL_STREAMS, so the batch exercises both a full interleave
+        // chunk and a remainder chunk. Every stream replays the exact
+        // scalar solve order, so batched and one-at-a-time marginals
+        // must agree to the bit (in either dispatch mode).
+        let d = 2;
+        let n = 9;
+        let x = points(n, d);
+        let y: Vec<f64> = (0..n).map(|i| ((i * 7 + 2) % 13) as f64 / 13.0 - 0.4).collect();
+        let grid: Vec<[f64; 3]> = [1e-4, 1e-3, 1e-2, 1e-1, 0.5]
+            .iter()
+            .map(|&noise| [0.7, 1.2, noise])
+            .collect();
+
+        fn fit<'a>(
+            c: &'a mut FactorCache,
+            grid: &[[f64; 3]],
+            x: &[f64],
+            n: usize,
+            d: usize,
+        ) -> Vec<SlotTask<'a>> {
+            let (mut tasks, _) = c.plan_grid(grid, n);
+            for t in tasks.iter_mut() {
+                let g = gram(x, n, d, t.hyp()[0], t.hyp()[1]);
+                assert!(t.cold(&g, n));
+            }
+            tasks
+        }
+
+        let mut single = FactorCache::new();
+        single.note_delta(ObsDelta::Replaced);
+        let mut tasks = fit(&mut single, &grid, &x, n, d);
+        let want: Vec<f64> = tasks.iter_mut().map(|t| t.nll(&y)).collect();
+
+        let mut batched = FactorCache::new();
+        batched.note_delta(ObsDelta::Replaced);
+        let mut tasks = fit(&mut batched, &grid, &x, n, d);
+        let mut refs: Vec<&mut SlotTask<'_>> = tasks.iter_mut().collect();
+        let got = nll_multi(&mut refs, &y);
+
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(g.is_finite());
+            assert_eq!(g.to_bits(), w.to_bits(), "slot {i}: {g} vs {w}");
+        }
     }
 }

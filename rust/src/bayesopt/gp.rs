@@ -5,6 +5,7 @@
 //! the §Perf comparison.
 
 use super::chol::CholFactor;
+use super::simd;
 use crate::util::stats;
 
 // Kernel math lives in [`super::kernel`] (shared with the low-rank
@@ -384,6 +385,11 @@ impl NativeGp {
     }
 }
 
+/// Row-block width of [`predict_into`]'s blocked TRSM — also the height
+/// of its accumulator scratch, which per-lane buffer sizing
+/// ([`super::pool::LaneScratch`]) mirrors.
+pub(crate) const PREDICT_ROW_BLOCK: usize = 32;
+
 /// Batched posterior prediction against a *borrowed* packed factor —
 /// the zero-copy core shared by [`NativeGp::predict_batch`] and
 /// `NativeBackend::decide`'s tile fan-out (each persistent pool lane
@@ -402,6 +408,12 @@ impl NativeGp {
 /// row, squared-norm fold ascending) matches [`NativeGp::predict`]
 /// exactly, so every caller — per-row, one m-wide call, serial tiles,
 /// or tiles fanned across threads — produces the same bits.
+///
+/// The column loops run on the bit-exact [`simd`] column-lane kernels
+/// (`axpy` / `sub_div` / `sq_accum` — one candidate per vector lane,
+/// no FMA), so SIMD dispatch never changes the solve/fold bits; only
+/// the cross-kernel rows go through the tolerance-class vector exp
+/// (see the parity contract in [`super::kernel`]).
 #[allow(clippy::too_many_arguments)]
 pub fn predict_into(
     factor: &CholFactor,
@@ -435,29 +447,27 @@ pub fn predict_into(
     debug_assert_eq!(x.len(), n * d);
 
     // Row-block width of the blocked TRSM below.
-    const TB: usize = 32;
+    const TB: usize = PREDICT_ROW_BLOCK;
     ks.clear();
     ks.resize(n * w, 0.0);
     acc.clear();
     acc.resize(TB.min(n) * w, 0.0);
 
-    // Cross-kernel block: row i = k(x_i, candidates).
+    // Cross-kernel block: row i = k(x_i, candidates), built as a
+    // vectorized squared-distance row (bit-exact either dispatch arm)
+    // plus an in-place Matérn map (vector exp under SIMD).
     for i in 0..n {
         let xi = &x[i * d..(i + 1) * d];
         let row = &mut ks[i * w..(i + 1) * w];
-        for (c, slot) in row.iter_mut().enumerate() {
-            *slot = matern52(&xc[c * d..(c + 1) * d], xi, ls, var);
-        }
+        simd::sqdist_row(xi, xc, d, row);
+        simd::matern52_map_from_d2(ls, var, row);
     }
 
     // mu = Ks^T alpha, accumulated in ascending observation order
     // (the same order `predict` sums its dot product in).
     for i in 0..n {
-        let a = alpha[i];
         let row = &ks[i * w..(i + 1) * w];
-        for c in 0..w {
-            mu_out[c] += row[c] * a;
-        }
+        simd::axpy(&mut mu_out[..w], alpha[i], row);
     }
 
     // Blocked TRSM: Z = L^-1 Ks, all columns at once, rows in blocks
@@ -483,10 +493,7 @@ pub fn predict_into(
             let zk = &done[k * w..(k + 1) * w];
             for i in rb..re {
                 let l = lmat[rs(i) + k];
-                let a = &mut acc[(i - rb) * w..(i - rb + 1) * w];
-                for c in 0..w {
-                    a[c] += l * zk[c];
-                }
+                simd::axpy(&mut acc[(i - rb) * w..(i - rb + 1) * w], l, zk);
             }
         }
         // Triangular part: rows rb..re against freshly solved rows.
@@ -498,14 +505,10 @@ pub fn predict_into(
             for k in rb..i {
                 let l = lmat[rs(i) + k];
                 let zk = &prior[(k - rb) * w..(k - rb + 1) * w];
-                for c in 0..w {
-                    a[c] += l * zk[c];
-                }
+                simd::axpy(a, l, zk);
             }
             let diag = lmat[rs(i) + i];
-            for c in 0..w {
-                row_i[c] = (row_i[c] - a[c]) / diag;
-            }
+            simd::sub_div(row_i, a, diag);
         }
     }
 
@@ -515,9 +518,7 @@ pub fn predict_into(
     }
     for i in 0..n {
         let zi = &ks[i * w..(i + 1) * w];
-        for c in 0..w {
-            acc[c] += zi[c] * zi[c];
-        }
+        simd::sq_accum(&mut acc[..w], zi);
     }
     for c in 0..w {
         var_out[c] = (var - acc[c]).max(VAR_FLOOR);

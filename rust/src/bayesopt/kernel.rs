@@ -4,22 +4,45 @@
 //! ([`super::lowrank`]). Factored out of `gp.rs` so neither posterior
 //! family owns the kernel math; the same arithmetic (and therefore the
 //! same bits) feeds every path.
+//!
+//! # Parity contract (see [`super::simd`])
+//!
+//! The builders here run on the dispatched micro-kernels of
+//! `bayesopt/simd.rs`, which split into two classes:
+//!
+//! * **Bit-exact regardless of dispatch**: [`pairwise_sqdist`] (and the
+//!   backend's incremental d2 rows) accumulate one pair per vector
+//!   lane in the exact scalar feature order with no FMA, so SIMD-on
+//!   and SIMD-off produce identical bits and exact-equality suites may
+//!   pin them directly.
+//! * **Tolerance-pinned under SIMD**: [`matern52_gram_from_d2`] and
+//!   [`matern52_cross`] map rows through a vector `exp` polynomial
+//!   (~2 ulp vs libm), and [`dot`] reassociates across accumulators —
+//!   with SIMD dispatched these differ from the scalar twins within
+//!   [`super::simd::SIMD_PARITY_RTOL`]. With SIMD off
+//!   (`RUYA_FORCE_SCALAR` / `set_simd(false)`) every path reproduces
+//!   the legacy scalar bits exactly.
+//!
+//! Cross-path comparisons (serial vs pooled, incremental vs fresh,
+//! Gram vs cross) stay bit-stable in either mode because both sides of
+//! each comparison share these builders.
+
+use super::simd;
 
 pub const SQRT5: f64 = 2.23606797749979;
 
-/// Slice dot product written so LLVM auto-vectorizes it — the hot inner
-/// kernel of every factorization and triangular solve. Lives here (not
-/// per consumer) because the packed ([`super::chol`]) and dense
-/// ([`super::gp`]) linear algebra must share one accumulation order for
-/// their bit-parity contract to hold by construction.
+/// Slice dot product — the hot inner kernel of every factorization and
+/// triangular solve. Lives here (not per consumer) because the packed
+/// ([`super::chol`]) and dense ([`super::gp`]) linear algebra must share
+/// one accumulation order for their bit-parity contract to hold by
+/// construction. Dispatches to the multi-accumulator AVX2+FMA kernel
+/// when SIMD is active (tolerance class — reassociates), and to the
+/// legacy serial loop otherwise. Public so the bench harness can
+/// measure its standalone throughput (`bench_gp_hotpath`'s per-kernel
+/// GFLOP/s section).
 #[inline]
-pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
-    }
-    acc
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    simd::dot(a, b)
 }
 
 /// Matérn-5/2 covariance from a squared distance.
@@ -41,31 +64,62 @@ pub fn matern52(a: &[f64], b: &[f64], lengthscale: f64, variance: f64) -> f64 {
     matern52_from_d2(d2, lengthscale, variance)
 }
 
-/// Pairwise squared distances of `n` rows (row-major, `d` columns) into
-/// `out` (resized to n*n). Hyperparameter-independent — computed once per
-/// decision and shared across the whole hyperparameter grid (§Perf).
-pub fn pairwise_sqdist(x: &[f64], n: usize, d: usize, out: &mut Vec<f64>) {
-    out.clear();
-    out.resize(n * n, 0.0);
-    for i in 0..n {
-        for j in 0..i {
-            let mut d2 = 0.0;
-            for k in 0..d {
-                let diff = x[i * d + k] - x[j * d + k];
-                d2 += diff * diff;
+/// Mirror the (strict) lower triangle of an `n x n` row-major matrix
+/// into the upper triangle, in cache-sized blocks. Shared by the
+/// distance and Gram builders so in-loop strided `out[j * n + i]`
+/// stores never land on the hot path.
+fn mirror_lower(out: &mut [f64], n: usize) {
+    const B: usize = 64;
+    for ib in (0..n).step_by(B) {
+        let ie = (ib + B).min(n);
+        for jb in (0..=ib).step_by(B) {
+            let je = (jb + B).min(n);
+            for i in ib..ie {
+                for j in jb..je.min(i) {
+                    out[j * n + i] = out[i * n + j];
+                }
             }
-            out[i * n + j] = d2;
-            out[j * n + i] = d2;
         }
     }
 }
 
+/// Pairwise squared distances of `n` rows (row-major, `d` columns) into
+/// `out` (resized to n*n). Hyperparameter-independent — computed once per
+/// decision and shared across the whole hyperparameter grid (§Perf).
+///
+/// Computes the lower triangle in cache-sized blocks with block-local
+/// row-contiguous stores (one vectorized [`simd::sqdist_row`] segment
+/// per row) and mirrors in a separate pass — same bits as the legacy
+/// in-loop double store, without the strided writes.
+pub fn pairwise_sqdist(x: &[f64], n: usize, d: usize, out: &mut Vec<f64>) {
+    const B: usize = 64;
+    out.clear();
+    out.resize(n * n, 0.0);
+    for ib in (0..n).step_by(B) {
+        let ie = (ib + B).min(n);
+        for jb in (0..=ib).step_by(B) {
+            let je = (jb + B).min(n);
+            for i in ib..ie {
+                let jhi = je.min(i); // strictly below the diagonal
+                if jb >= jhi {
+                    continue;
+                }
+                let seg = i * n + jb..i * n + jhi;
+                simd::sqdist_row(&x[i * d..(i + 1) * d], &x[jb * d..jhi * d], d, &mut out[seg]);
+            }
+        }
+    }
+    mirror_lower(out, n);
+}
+
 /// Tiled Matérn-5/2 Gram build from a precomputed squared-distance
 /// matrix: the lower triangle is computed in cache-sized blocks and
-/// mirrored, halving the transcendental count versus a full pointwise
-/// map and keeping both `d2` reads and `out` writes block-local. Shared
-/// by every cold-fit path (`fit_from_sqdist`, the backend's grid
-/// refactorizations).
+/// mirrored in a separate pass, halving the transcendental count versus
+/// a full pointwise map and keeping both `d2` reads and `out` writes
+/// block-local. Each row segment maps through the dispatched
+/// [`simd::matern52_map_from_d2`] (vector `exp` under SIMD — tolerance
+/// class). Shared by every cold-fit path (`fit_from_sqdist`, the
+/// backend's grid refactorizations).
 pub fn matern52_gram_from_d2(d2: &[f64], n: usize, ls: f64, var: f64, out: &mut Vec<f64>) {
     const B: usize = 64;
     assert_eq!(d2.len(), n * n);
@@ -76,20 +130,29 @@ pub fn matern52_gram_from_d2(d2: &[f64], n: usize, ls: f64, var: f64, out: &mut 
         for jb in (0..=ib).step_by(B) {
             let je = (jb + B).min(n);
             for i in ib..ie {
-                for j in jb..je.min(i + 1) {
-                    let k = matern52_from_d2(d2[i * n + j], ls, var);
-                    out[i * n + j] = k;
-                    out[j * n + i] = k;
+                let jhi = je.min(i + 1); // diagonal inclusive
+                if jb >= jhi {
+                    continue;
                 }
+                let seg = i * n + jb..i * n + jhi;
+                out[seg.clone()].copy_from_slice(&d2[seg.clone()]);
+                simd::matern52_map_from_d2(ls, var, &mut out[seg]);
             }
         }
     }
+    mirror_lower(out, n);
 }
 
 /// Cross-kernel block `K(a, b)` of two row sets into `out` (resized to
 /// `na * nb`, row-major: row i = k(a_i, b_*)). The low-rank posterior
 /// builds its inducing-vs-observation and inducing-vs-candidate blocks
 /// through this one function so both sides share the arithmetic.
+///
+/// Routed through the same blocked builder shape as the Gram build: the
+/// `b` side is tiled in cache-sized column blocks held hot across all
+/// `a` rows (no per-pair feature-difference recomputation thrashing on
+/// large `d`), with each segment computed as a vectorized squared-
+/// distance row plus an in-place Matérn map.
 #[allow(clippy::too_many_arguments)]
 pub fn matern52_cross(
     a: &[f64],
@@ -101,15 +164,21 @@ pub fn matern52_cross(
     var: f64,
     out: &mut Vec<f64>,
 ) {
+    const B: usize = 64;
     assert_eq!(a.len(), na * d);
     assert_eq!(b.len(), nb * d);
     out.clear();
     out.resize(na * nb, 0.0);
-    for i in 0..na {
-        let ai = &a[i * d..(i + 1) * d];
-        let row = &mut out[i * nb..(i + 1) * nb];
-        for (j, slot) in row.iter_mut().enumerate() {
-            *slot = matern52(ai, &b[j * d..(j + 1) * d], ls, var);
+    for jb in (0..nb).step_by(B) {
+        let je = (jb + B).min(nb);
+        for ib in (0..na).step_by(B) {
+            let ie = (ib + B).min(na);
+            for i in ib..ie {
+                let seg = i * nb + jb..i * nb + je;
+                let seg_out = &mut out[seg.clone()];
+                simd::sqdist_row(&a[i * d..(i + 1) * d], &b[jb * d..je * d], d, seg_out);
+                simd::matern52_map_from_d2(ls, var, &mut out[seg]);
+            }
         }
     }
 }
@@ -117,6 +186,12 @@ pub fn matern52_cross(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::testkit::property;
+
+    fn rel(a: f64, b: f64) -> f64 {
+        (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+    }
 
     #[test]
     fn cross_block_matches_pointwise() {
@@ -129,7 +204,18 @@ mod tests {
         for i in 0..4 {
             for j in 0..5 {
                 let want = matern52(&a[i * d..(i + 1) * d], &b[j * d..(j + 1) * d], 0.7, 1.3);
-                assert_eq!(out[i * 5 + j], want, "({i},{j})");
+                if simd::simd_active() {
+                    // The blocked builder maps through the vector exp;
+                    // pointwise matern52 stays on libm.
+                    assert!(
+                        rel(out[i * 5 + j], want) <= simd::SIMD_PARITY_RTOL,
+                        "({i},{j}): {} vs {}",
+                        out[i * 5 + j],
+                        want
+                    );
+                } else {
+                    assert_eq!(out[i * 5 + j], want, "({i},{j})");
+                }
             }
         }
     }
@@ -148,5 +234,66 @@ mod tests {
         for (i, (g, c)) in gram.iter().zip(&cross).enumerate() {
             assert!((g - c).abs() < 1e-12, "entry {i}: {g} vs {c}");
         }
+    }
+
+    #[test]
+    fn blocked_builders_match_pointwise_across_boundaries() {
+        // Random shapes up to and past the 64-wide block and 4-wide
+        // lane boundaries (including n % 4 != 0): the restructured
+        // pairwise build must reproduce the legacy per-pair bits
+        // exactly in both dispatch modes, and the Gram/cross builders
+        // must match the pointwise scalar map within SIMD_PARITY_RTOL
+        // (exactly when SIMD is off).
+        property("blocked builders vs pointwise", 12, |g| {
+            let n = g.usize_in(1, 131);
+            let d = g.usize_in(1, 6);
+            let (ls, var) = (g.f64_in(0.2, 2.0), g.f64_in(0.3, 3.0));
+            let x = g.vec_f64(n * d, -2.0, 2.0);
+
+            let mut d2 = Vec::new();
+            pairwise_sqdist(&x, n, d, &mut d2);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut want = 0.0;
+                    for k in 0..d {
+                        let diff = x[i * d + k] - x[j * d + k];
+                        want += diff * diff;
+                    }
+                    if i == j {
+                        want = 0.0;
+                    }
+                    prop_assert!(
+                        d2[i * n + j].to_bits() == want.to_bits(),
+                        "d2[{i},{j}] (n={n}, d={d}): {} vs {}",
+                        d2[i * n + j],
+                        want
+                    );
+                }
+            }
+
+            let mut gram = Vec::new();
+            matern52_gram_from_d2(&d2, n, ls, var, &mut gram);
+            let mut cross = Vec::new();
+            matern52_cross(&x, n, &x, n, d, ls, var, &mut cross);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = matern52_from_d2(d2[i * n + j], ls, var);
+                    let (gv, cv) = (gram[i * n + j], cross[i * n + j]);
+                    if simd::simd_active() {
+                        prop_assert!(
+                            rel(gv, want) <= simd::SIMD_PARITY_RTOL
+                                && rel(cv, want) <= simd::SIMD_PARITY_RTOL,
+                            "kernel[{i},{j}] (n={n}): gram {gv} cross {cv} vs {want}"
+                        );
+                    } else {
+                        prop_assert!(
+                            gv.to_bits() == want.to_bits() && cv.to_bits() == want.to_bits(),
+                            "kernel[{i},{j}] (n={n}): gram {gv} cross {cv} vs {want}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

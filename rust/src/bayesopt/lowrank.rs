@@ -100,7 +100,8 @@
 
 use super::chol::ObsDelta;
 use super::gp::{solve_lower_in_place, JITTER, VAR_FLOOR};
-use super::kernel::matern52_cross;
+use super::kernel::{dot, matern52_cross};
+use super::simd;
 
 /// Default inducing-set cap used by the auto-selected backend path.
 /// 64 points keep the per-candidate cost (~u² flops) near the exact
@@ -443,7 +444,9 @@ pub struct LowRankGp {
 
 /// Forward-solve `L X = B` for a row-major `u x w` right-hand side in
 /// place (column-per-candidate layout; same substitution order as
-/// [`solve_lower_in_place`] per column).
+/// [`solve_lower_in_place`] per column). The column loops run on the
+/// bit-exact [`simd`] column-lane kernels (one candidate per vector
+/// lane, no FMA), so SIMD dispatch never changes the solve bits.
 fn solve_lower_multi(l: &[f64], u: usize, b: &mut [f64], w: usize) {
     debug_assert_eq!(b.len(), u * w);
     for i in 0..u {
@@ -452,14 +455,9 @@ fn solve_lower_multi(l: &[f64], u: usize, b: &mut [f64], w: usize) {
         for k in 0..i {
             let lik = l[i * u + k];
             let zk = &prior[k * w..(k + 1) * w];
-            for c in 0..w {
-                row_i[c] -= lik * zk[c];
-            }
+            simd::axpy_sub(row_i, lik, zk);
         }
-        let diag = l[i * u + i];
-        for v in row_i.iter_mut() {
-            *v /= diag;
-        }
+        simd::scale_div(row_i, l[i * u + i]);
     }
 }
 
@@ -583,15 +581,15 @@ impl LowRankGp {
         matern52_cross(&self.z, u, x, n, d, ls, var, &mut b);
         solve_lower_multi(&self.lu, u, &mut b, n);
 
-        // BBᵀ (no σ² yet — the noise stage adds its diagonal).
+        // BBᵀ (no σ² yet — the noise stage adds its diagonal). Each
+        // entry is a row-pair dot over the n-wide B rows — the shared
+        // dispatched [`dot`] (scalar order preserved with SIMD off).
         self.bbt.clear();
         self.bbt.resize(u * u, 0.0);
         for i in 0..u {
+            let bi = &b[i * n..(i + 1) * n];
             for j in 0..=i {
-                let mut s = 0.0;
-                for c in 0..n {
-                    s += b[i * n + c] * b[j * n + c];
-                }
+                let s = dot(bi, &b[j * n..(j + 1) * n]);
                 self.bbt[i * u + j] = s;
                 self.bbt[j * u + i] = s;
             }
@@ -601,11 +599,7 @@ impl LowRankGp {
         self.by.clear();
         self.by.resize(u, 0.0);
         for i in 0..u {
-            let mut s = 0.0;
-            for c in 0..n {
-                s += b[i * n + c] * y[c];
-            }
-            self.by[i] = s;
+            self.by[i] = dot(&b[i * n..(i + 1) * n], y);
         }
         self.yty = y.iter().map(|v| v * v).sum();
         self.b_mat = b;
@@ -703,21 +697,15 @@ impl LowRankGp {
             matern52_cross(&self.z, u, tile, w, d, ls, var, &mut kt);
             // Means first: mu = k*uᵀ w before kt is overwritten by solves.
             for i in 0..u {
-                let wi = self.w[i];
                 let row = &kt[i * w..(i + 1) * w];
-                for c in 0..w {
-                    mu_out[start + c] += row[c] * wi;
-                }
+                simd::axpy(&mut mu_out[start..start + w], self.w[i], row);
             }
             // a = Lu⁻¹ k*u per column; |a|² accumulates into acc.
             solve_lower_multi(&self.lu, u, &mut kt, w);
             acc.clear();
             acc.resize(w, 0.0);
             for i in 0..u {
-                let row = &kt[i * w..(i + 1) * w];
-                for c in 0..w {
-                    acc[c] += row[c] * row[c];
-                }
+                simd::sq_accum(&mut acc, &kt[i * w..(i + 1) * w]);
             }
             for c in 0..w {
                 var_out[start + c] = var - acc[c];
@@ -727,10 +715,7 @@ impl LowRankGp {
             acc.clear();
             acc.resize(w, 0.0);
             for i in 0..u {
-                let row = &kt[i * w..(i + 1) * w];
-                for c in 0..w {
-                    acc[c] += row[c] * row[c];
-                }
+                simd::sq_accum(&mut acc, &kt[i * w..(i + 1) * w]);
             }
             for c in 0..w {
                 var_out[start + c] = (var_out[start + c] + self.sigma2 * acc[c]).max(VAR_FLOOR);

@@ -10,6 +10,7 @@ pub mod kernel;
 pub mod lowrank;
 pub mod pool;
 pub mod search;
+pub mod simd;
 
 pub use backend::{
     adaptive_gp_threads, backend_by_name, backend_factory_by_name,
@@ -28,3 +29,4 @@ pub use search::{
     hyperparameter_grid, run_search, BoParams, CursorSnapshot, SearchCursor, SearchOutcome,
     SearchStep,
 };
+pub use simd::{set_simd, simd_active, simd_available, SIMD_PARITY_RTOL};

@@ -42,6 +42,7 @@
 //! the test that caused it, just as it did under scoped threads.
 
 use super::lowrank::LowRankGp;
+use super::simd;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -62,6 +63,41 @@ pub struct LaneScratch {
     pub ks: Vec<f64>,
     pub acc: Vec<f64>,
     pub lowrank: LowRankGp,
+}
+
+impl LaneScratch {
+    /// Pre-size the exact-sweep buffers for `n` observations — the
+    /// cross-row (n-1 entries) and the n × n Gram build — padding the
+    /// capacities to whole SIMD lane groups ([`simd::lane_padded`]).
+    /// The search loop grows its observation window by one row per BO
+    /// iteration, so lane-group-rounded capacities absorb the next few
+    /// one-longer builds in already-owned storage instead of
+    /// reallocating at the top of a fan-out. Lengths are untouched:
+    /// every consumer still fully overwrites what it reads (the module
+    /// docs' scratch contract).
+    pub fn reserve_sweep(&mut self, n: usize) {
+        reserve_to(&mut self.row, simd::lane_padded(n));
+        reserve_to(&mut self.gram, simd::lane_padded(n * n));
+    }
+
+    /// Pre-size the prediction buffers for `gp::predict_into` over `n`
+    /// observations and up-to-`tile`-wide candidate tiles: the n × tile
+    /// cross-kernel block and the
+    /// [`PREDICT_ROW_BLOCK`](super::gp::PREDICT_ROW_BLOCK)-row
+    /// accumulator, with the same lane-padded capacities as
+    /// [`Self::reserve_sweep`].
+    pub fn reserve_tiles(&mut self, n: usize, tile: usize) {
+        reserve_to(&mut self.ks, simd::lane_padded(n * tile));
+        let acc_rows = super::gp::PREDICT_ROW_BLOCK.min(n.max(1));
+        reserve_to(&mut self.acc, simd::lane_padded(acc_rows * tile));
+    }
+}
+
+/// Grow `v`'s capacity to at least `cap` entries (length untouched).
+fn reserve_to(v: &mut Vec<f64>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
 }
 
 /// A unit of submitted work: runs once on a worker against that lane's

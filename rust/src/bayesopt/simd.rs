@@ -1,0 +1,773 @@
+//! Explicitly vectorized micro-kernels for the dense GP core, behind
+//! runtime feature detection with scalar fallbacks that preserve the
+//! legacy loops bit for bit.
+//!
+//! # Dispatch
+//!
+//! On x86_64 the AVX2(+FMA) arms engage when the CPU reports the
+//! features at runtime ([`simd_available`]); no compile-time target
+//! flags are required. The process-global mode is resolved once on
+//! first use and can be overridden:
+//!
+//! * `RUYA_FORCE_SCALAR=1` in the environment forces the scalar arms
+//!   before the first kernel call (the CI matrix leg uses this);
+//! * [`set_simd`]`(false)` / `(true)` toggles programmatically —
+//!   intended for single-threaded harnesses (benches, the dedicated
+//!   SIMD parity suite). The flag is process-global, so never toggle it
+//!   while other threads run kernel code.
+//!
+//! # Parity contract
+//!
+//! The kernels fall into two classes:
+//!
+//! * **Bit-exact class** — lane-per-pair and column-lane kernels whose
+//!   every lane replays the scalar operation sequence (separate
+//!   multiply and add, no FMA): [`sqdist_row`] and the column-lane
+//!   TRSM/fold helpers ([`axpy`], [`axpy_sub`], [`sub_div`],
+//!   [`sq_accum`], [`scale_div`]). These produce identical bits
+//!   whichever arm dispatch picks, so suites pinning exact equality
+//!   across paths (the incremental d2 cache, serial-vs-pooled tiles)
+//!   hold with SIMD on or off.
+//! * **Tolerance class** — reductions and transcendentals that
+//!   reassociate accumulation (multi-accumulator [`dot`]) or replace
+//!   libm's `exp` with a vector polynomial ([`matern52_map_from_d2`]).
+//!   Their SIMD arms are pinned to the scalar twins within
+//!   [`SIMD_PARITY_RTOL`] by seeded property tests here and by the
+//!   backend-level suite in `tests/simd_parity.rs`.
+//!
+//! Cross-path bit contracts (serial vs pooled, staged vs fresh,
+//! prepared vs direct decide) survive either way because both sides of
+//! each comparison route through the same dispatched kernel.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Relative tolerance pinning every tolerance-class SIMD kernel to its
+/// scalar twin, and whole-backend SIMD-on vs SIMD-off traces.
+///
+/// Why 1e-10: the reassociated reductions differ from the serial order
+/// by a few ulps over the ≤ few-thousand-term sums the GP builds, and
+/// the vector `exp` is accurate to ~2 ulp, so primitive-level
+/// divergence sits around 1e-15 relative. Triangular solves and the
+/// NLL fold amplify that by the factor conditioning — bounded well
+/// below 1e-10 for jittered covariance matrices — while a genuinely
+/// wrong kernel (bad polynomial constant, dropped remainder lane)
+/// misses by ≥1e-8. 1e-10 leaves headroom without masking real bugs.
+pub const SIMD_PARITY_RTOL: f64 = 1e-10;
+
+/// f64 lanes per vector register on the AVX2 arm; scratch buffers
+/// sized to a multiple of this keep remainder handling off the hot
+/// tiles (see [`lane_padded`]).
+pub const LANES: usize = 4;
+
+/// Round `n` up to a whole number of [`LANES`] — used when reserving
+/// per-lane scratch so vector bodies cover full rows and only the
+/// final row tail falls to the scalar remainder loop.
+pub fn lane_padded(n: usize) -> usize {
+    n.div_ceil(LANES) * LANES
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_SIMD: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Whether this CPU supports the vector arms (AVX2 + FMA on x86_64).
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn env_forces_scalar() -> bool {
+    std::env::var_os("RUYA_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Whether the vector arms are currently dispatched. Resolved on first
+/// call from feature detection and `RUYA_FORCE_SCALAR`; overridable
+/// via [`set_simd`].
+#[inline]
+pub fn simd_active() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_SIMD => true,
+        MODE_SCALAR => false,
+        _ => {
+            let on = simd_available() && !env_forces_scalar();
+            MODE.store(if on { MODE_SIMD } else { MODE_SCALAR }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force the dispatch mode; `set_simd(true)` still falls back to
+/// scalar when the CPU lacks the features. Returns the mode actually
+/// in effect. Process-global — only call from single-threaded
+/// harnesses (or under a lock that also guards every kernel caller).
+pub fn set_simd(on: bool) -> bool {
+    let eff = on && simd_available();
+    MODE.store(if eff { MODE_SIMD } else { MODE_SCALAR }, Ordering::Relaxed);
+    eff
+}
+
+// ---------------------------------------------------------------------------
+// dot — tolerance class (multi-accumulator reassociation + FMA)
+// ---------------------------------------------------------------------------
+
+/// Serial-order dot product: the legacy accumulation every bit-exact
+/// suite pins. The dispatched [`dot`] falls back to this exact loop.
+#[inline]
+pub(crate) fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Dot product, dispatched: the AVX2+FMA arm splits the sum across
+/// two 4-lane accumulators (breaking the serial add-latency chain),
+/// which reassociates — tolerance class. Short slices stay scalar.
+#[inline]
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if a.len() >= 8 && simd_active() {
+        // SAFETY: simd_active() implies AVX2+FMA were detected.
+        return unsafe { dot_avx2(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)), acc0);
+        acc1 = _mm256_fmadd_pd(
+            _mm256_loadu_pd(pa.add(i + 4)),
+            _mm256_loadu_pd(pb.add(i + 4)),
+            acc1,
+        );
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)), acc0);
+        i += 4;
+    }
+    let acc = _mm256_add_pd(acc0, acc1);
+    let lo = _mm256_castpd256_pd128(acc);
+    let hi = _mm256_extractf128_pd::<1>(acc);
+    let pair = _mm_add_pd(lo, hi);
+    let mut s = _mm_cvtsd_f64(_mm_add_sd(pair, _mm_unpackhi_pd(pair, pair)));
+    while i < n {
+        s += *pa.add(i) * *pb.add(i);
+        i += 1;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// sqdist row — bit-exact class (lane per pair, scalar order per lane)
+// ---------------------------------------------------------------------------
+
+/// Scalar squared-distance row: `out[j] = |p - rows_j|²` accumulated in
+/// ascending feature order — the legacy per-pair loop.
+#[inline]
+pub(crate) fn sqdist_row_scalar(p: &[f64], rows: &[f64], d: usize, out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), out.len() * d);
+    for (j, slot) in out.iter_mut().enumerate() {
+        let r = &rows[j * d..(j + 1) * d];
+        let mut d2 = 0.0;
+        for (x, y) in p.iter().zip(r) {
+            let diff = x - y;
+            d2 += diff * diff;
+        }
+        *slot = d2;
+    }
+}
+
+/// Squared distances from point `p` (length `d`) to each row of `rows`
+/// (row-major, `out.len()` rows), dispatched. **Bit-exact class**: the
+/// AVX2 arm assigns one pair per lane and replays the scalar
+/// subtract/multiply/add sequence per feature (no FMA), so both arms
+/// produce identical bits — the incremental d2 cache and the fresh
+/// pairwise build can therefore share this kernel under an exact
+/// equality pin.
+#[inline]
+pub(crate) fn sqdist_row(p: &[f64], rows: &[f64], d: usize, out: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if out.len() >= LANES && d > 0 && simd_active() {
+        // SAFETY: simd_active() implies AVX2 was detected.
+        unsafe { sqdist_row_avx2(p, rows, d, out) };
+        return;
+    }
+    sqdist_row_scalar(p, rows, d, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sqdist_row_avx2(p: &[f64], rows: &[f64], d: usize, out: &mut [f64]) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(rows.len(), out.len() * d);
+    let m = out.len();
+    let rp = rows.as_ptr();
+    let mut j = 0usize;
+    while j + LANES <= m {
+        let mut acc = _mm256_setzero_pd();
+        let base = j * d;
+        for (k, &pk) in p.iter().enumerate() {
+            // Lane l holds row j+l; rows are d-strided, so gather the
+            // k-th feature of the four rows with scalar loads.
+            let xs = _mm256_set_pd(
+                *rp.add(base + 3 * d + k),
+                *rp.add(base + 2 * d + k),
+                *rp.add(base + d + k),
+                *rp.add(base + k),
+            );
+            let diff = _mm256_sub_pd(_mm256_set1_pd(pk), xs);
+            // Separate multiply + add (no FMA): per-lane bits match the
+            // scalar `d2 += diff * diff`.
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(diff, diff));
+        }
+        _mm256_storeu_pd(out.as_mut_ptr().add(j), acc);
+        j += LANES;
+    }
+    if j < m {
+        sqdist_row_scalar(p, &rows[j * d..], d, &mut out[j..]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matérn-5/2 row map — tolerance class (vector exp)
+// ---------------------------------------------------------------------------
+
+/// Scalar in-place Matérn-5/2 map over a squared-distance row — the
+/// legacy pointwise build.
+#[inline]
+pub(crate) fn matern52_map_scalar(ls: f64, var: f64, row: &mut [f64]) {
+    for v in row.iter_mut() {
+        *v = super::kernel::matern52_from_d2(*v, ls, var);
+    }
+}
+
+/// In-place Matérn-5/2 map over a squared-distance row, dispatched.
+/// **Tolerance class**: the AVX2 arm evaluates `exp` with a Cephes-style
+/// vector polynomial (~2 ulp) instead of libm, so SIMD-on rows differ
+/// from scalar rows within [`SIMD_PARITY_RTOL`]. Remainder entries (row
+/// length % 4) use the scalar map — deterministic by position.
+#[inline]
+pub(crate) fn matern52_map_from_d2(ls: f64, var: f64, row: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if row.len() >= LANES && simd_active() {
+        // SAFETY: simd_active() implies AVX2+FMA were detected.
+        unsafe { matern52_map_avx2(ls, var, row) };
+        return;
+    }
+    matern52_map_scalar(ls, var, row)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn matern52_map_avx2(ls: f64, var: f64, row: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let inv_ls = _mm256_set1_pd(1.0 / ls);
+    let sqrt5 = _mm256_set1_pd(super::kernel::SQRT5);
+    let five_thirds = _mm256_set1_pd(5.0 / 3.0);
+    let inv_ls2 = _mm256_set1_pd(1.0 / (ls * ls));
+    let one = _mm256_set1_pd(1.0);
+    let varv = _mm256_set1_pd(var);
+    let n = row.len();
+    let ptr = row.as_mut_ptr();
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let d2 = _mm256_loadu_pd(ptr.add(i));
+        // r = sqrt(d2) / ls; a = sqrt(5) * r
+        let a = _mm256_mul_pd(sqrt5, _mm256_mul_pd(_mm256_sqrt_pd(d2), inv_ls));
+        // poly = 1 + a + (5/3) * d2 / ls^2
+        let t = _mm256_mul_pd(_mm256_mul_pd(five_thirds, d2), inv_ls2);
+        let poly = _mm256_add_pd(_mm256_add_pd(one, a), t);
+        let e = exp256(_mm256_sub_pd(_mm256_setzero_pd(), a));
+        _mm256_storeu_pd(ptr.add(i), _mm256_mul_pd(_mm256_mul_pd(varv, poly), e));
+        i += LANES;
+    }
+    if i < n {
+        matern52_map_scalar(ls, var, &mut row[i..]);
+    }
+}
+
+/// 4-lane `exp` after Cephes `exp.c`: Cody–Waite range reduction
+/// against ln 2, a degree-(2,3) rational in the reduced argument, and
+/// 2^n reassembled through the exponent bits. ~2 ulp over the
+/// covariance domain (arguments ≤ 0); inputs below the f64 underflow
+/// threshold flush to +0 like libm.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn exp256(x: std::arch::x86_64::__m256d) -> std::arch::x86_64::__m256d {
+    use std::arch::x86_64::*;
+    const LOG2E: f64 = std::f64::consts::LOG2_E;
+    const C1: f64 = 6.93145751953125e-1;
+    const C2: f64 = 1.42860682030941723212e-6;
+    const P0: f64 = 1.26177193074810590878e-4;
+    const P1: f64 = 3.02994407707441961300e-2;
+    const P2: f64 = 0.999999999999999999910;
+    const Q0: f64 = 3.00198505138664455042e-6;
+    const Q1: f64 = 2.52448340349684104192e-3;
+    const Q2: f64 = 2.27265548208155028766e-1;
+    const Q3: f64 = 2.00000000000000000005;
+    // Arguments this far down underflow to zero even as denormals.
+    const UNDERFLOW: f64 = -708.396418532264078749;
+
+    let n = _mm256_floor_pd(_mm256_fmadd_pd(x, _mm256_set1_pd(LOG2E), _mm256_set1_pd(0.5)));
+    let mut r = _mm256_fnmadd_pd(n, _mm256_set1_pd(C1), x);
+    r = _mm256_fnmadd_pd(n, _mm256_set1_pd(C2), r);
+    let rr = _mm256_mul_pd(r, r);
+    // px = r * P(r^2); e^r = 1 + 2 * px / (Q(r^2) - px)
+    let mut p = _mm256_set1_pd(P0);
+    p = _mm256_fmadd_pd(p, rr, _mm256_set1_pd(P1));
+    p = _mm256_fmadd_pd(p, rr, _mm256_set1_pd(P2));
+    let px = _mm256_mul_pd(r, p);
+    let mut q = _mm256_set1_pd(Q0);
+    q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(Q1));
+    q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(Q2));
+    q = _mm256_fmadd_pd(q, rr, _mm256_set1_pd(Q3));
+    let frac = _mm256_div_pd(px, _mm256_sub_pd(q, px));
+    let er = _mm256_fmadd_pd(_mm256_set1_pd(2.0), frac, _mm256_set1_pd(1.0));
+    // 2^n through the exponent field (n is integral and |n| < 1075 for
+    // non-underflowing inputs, so the i32 round-trip is exact).
+    let ni = _mm256_cvtepi32_epi64(_mm256_cvtpd_epi32(n));
+    let pow2 = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_add_epi64(
+        ni,
+        _mm256_set1_epi64x(1023),
+    )));
+    let res = _mm256_mul_pd(er, pow2);
+    // Flush underflow-range inputs (where the 2^n bit trick is out of
+    // range anyway) to zero.
+    let keep = _mm256_cmp_pd::<_CMP_GT_OQ>(x, _mm256_set1_pd(UNDERFLOW));
+    _mm256_and_pd(res, keep)
+}
+
+/// Test/bench hook for the vector `exp`: evaluates the AVX2 polynomial
+/// on each element when the features exist, otherwise libm. Exposed so
+/// the property suite can pin the polynomial against libm directly.
+pub(crate) fn vexp_slice(xs: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available() {
+        // SAFETY: feature-detected above.
+        unsafe { vexp_slice_avx2(xs) };
+        return;
+    }
+    for v in xs.iter_mut() {
+        *v = v.exp();
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn vexp_slice_avx2(xs: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = xs.len();
+    let ptr = xs.as_mut_ptr();
+    let mut i = 0usize;
+    while i + LANES <= n {
+        _mm256_storeu_pd(ptr.add(i), exp256(_mm256_loadu_pd(ptr.add(i))));
+        i += LANES;
+    }
+    while i < n {
+        let mut last = [*ptr.add(i); LANES];
+        _mm256_storeu_pd(last.as_mut_ptr(), exp256(_mm256_loadu_pd(last.as_ptr())));
+        *ptr.add(i) = last[0];
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Column-lane helpers — bit-exact class (elementwise, no FMA)
+// ---------------------------------------------------------------------------
+
+/// `acc[c] += s * z[c]` across a column tile — the GEMM step of the
+/// blocked multi-column TRSM in `predict_into`.
+///
+/// **Bit-exact class**: elementwise with separate multiply and add —
+/// both arms produce identical bits.
+#[inline]
+pub(crate) fn axpy(acc: &mut [f64], s: f64, z: &[f64]) {
+    debug_assert_eq!(acc.len(), z.len());
+    #[cfg(target_arch = "x86_64")]
+    if acc.len() >= LANES && simd_active() {
+        // SAFETY: simd_active() implies AVX2 was detected.
+        unsafe { axpy_avx2(acc, s, z) };
+        return;
+    }
+    for (a, v) in acc.iter_mut().zip(z) {
+        *a += s * v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(acc: &mut [f64], s: f64, z: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let (pa, pz) = (acc.as_mut_ptr(), z.as_ptr());
+    let sv = _mm256_set1_pd(s);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let a = _mm256_loadu_pd(pa.add(i));
+        let v = _mm256_loadu_pd(pz.add(i));
+        _mm256_storeu_pd(pa.add(i), _mm256_add_pd(a, _mm256_mul_pd(sv, v)));
+        i += LANES;
+    }
+    for (a, v) in acc[i..].iter_mut().zip(&z[i..]) {
+        *a += s * v;
+    }
+}
+
+/// `acc[c] -= s * z[c]` across a column tile — the elimination step of
+/// the low-rank multi-column forward solve.
+///
+/// **Bit-exact class**: elementwise with separate multiply and
+/// subtract — both arms produce identical bits.
+#[inline]
+pub(crate) fn axpy_sub(acc: &mut [f64], s: f64, z: &[f64]) {
+    debug_assert_eq!(acc.len(), z.len());
+    #[cfg(target_arch = "x86_64")]
+    if acc.len() >= LANES && simd_active() {
+        // SAFETY: simd_active() implies AVX2 was detected.
+        unsafe { axpy_sub_avx2(acc, s, z) };
+        return;
+    }
+    for (a, v) in acc.iter_mut().zip(z) {
+        *a -= s * v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_sub_avx2(acc: &mut [f64], s: f64, z: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let (pa, pz) = (acc.as_mut_ptr(), z.as_ptr());
+    let sv = _mm256_set1_pd(s);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let a = _mm256_loadu_pd(pa.add(i));
+        let v = _mm256_loadu_pd(pz.add(i));
+        _mm256_storeu_pd(pa.add(i), _mm256_sub_pd(a, _mm256_mul_pd(sv, v)));
+        i += LANES;
+    }
+    for (a, v) in acc[i..].iter_mut().zip(&z[i..]) {
+        *a -= s * v;
+    }
+}
+
+/// `row[c] = (row[c] - a[c]) / diag` across a column tile — the
+/// per-pivot step of the blocked multi-column TRSM.
+///
+/// **Bit-exact class**: elementwise subtract and divide.
+#[inline]
+pub(crate) fn sub_div(row: &mut [f64], a: &[f64], diag: f64) {
+    debug_assert_eq!(row.len(), a.len());
+    #[cfg(target_arch = "x86_64")]
+    if row.len() >= LANES && simd_active() {
+        // SAFETY: simd_active() implies AVX2 was detected.
+        unsafe { sub_div_avx2(row, a, diag) };
+        return;
+    }
+    for (r, v) in row.iter_mut().zip(a) {
+        *r = (*r - v) / diag;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sub_div_avx2(row: &mut [f64], a: &[f64], diag: f64) {
+    use std::arch::x86_64::*;
+    let n = row.len();
+    let (pr, pa) = (row.as_mut_ptr(), a.as_ptr());
+    let dv = _mm256_set1_pd(diag);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let r = _mm256_loadu_pd(pr.add(i));
+        let v = _mm256_loadu_pd(pa.add(i));
+        _mm256_storeu_pd(pr.add(i), _mm256_div_pd(_mm256_sub_pd(r, v), dv));
+        i += LANES;
+    }
+    for (r, v) in row[i..].iter_mut().zip(&a[i..]) {
+        *r = (*r - v) / diag;
+    }
+}
+
+/// `acc[c] += z[c] * z[c]` across a column tile — the |z|² fold of the
+/// posterior-variance path.
+///
+/// **Bit-exact class**: elementwise with separate multiply and add.
+#[inline]
+pub(crate) fn sq_accum(acc: &mut [f64], z: &[f64]) {
+    debug_assert_eq!(acc.len(), z.len());
+    #[cfg(target_arch = "x86_64")]
+    if acc.len() >= LANES && simd_active() {
+        // SAFETY: simd_active() implies AVX2 was detected.
+        unsafe { sq_accum_avx2(acc, z) };
+        return;
+    }
+    for (a, v) in acc.iter_mut().zip(z) {
+        *a += v * v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sq_accum_avx2(acc: &mut [f64], z: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let (pa, pz) = (acc.as_mut_ptr(), z.as_ptr());
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let a = _mm256_loadu_pd(pa.add(i));
+        let v = _mm256_loadu_pd(pz.add(i));
+        _mm256_storeu_pd(pa.add(i), _mm256_add_pd(a, _mm256_mul_pd(v, v)));
+        i += LANES;
+    }
+    for (a, v) in acc[i..].iter_mut().zip(&z[i..]) {
+        *a += v * v;
+    }
+}
+
+/// `row[c] /= diag` across a column tile — the pivot-scale step of the
+/// low-rank multi-column forward solve.
+///
+/// **Bit-exact class**: elementwise divide.
+#[inline]
+pub(crate) fn scale_div(row: &mut [f64], diag: f64) {
+    #[cfg(target_arch = "x86_64")]
+    if row.len() >= LANES && simd_active() {
+        // SAFETY: simd_active() implies AVX2 was detected.
+        unsafe { scale_div_avx2(row, diag) };
+        return;
+    }
+    for r in row.iter_mut() {
+        *r /= diag;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_div_avx2(row: &mut [f64], diag: f64) {
+    use std::arch::x86_64::*;
+    let n = row.len();
+    let pr = row.as_mut_ptr();
+    let dv = _mm256_set1_pd(diag);
+    let mut i = 0usize;
+    while i + LANES <= n {
+        _mm256_storeu_pd(pr.add(i), _mm256_div_pd(_mm256_loadu_pd(pr.add(i)), dv));
+        i += LANES;
+    }
+    for r in row[i..].iter_mut() {
+        *r /= diag;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit::property;
+
+    fn rel(a: f64, b: f64) -> f64 {
+        (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn lane_padding_rounds_up() {
+        assert_eq!(lane_padded(0), 0);
+        assert_eq!(lane_padded(1), 4);
+        assert_eq!(lane_padded(4), 4);
+        assert_eq!(lane_padded(9), 12);
+    }
+
+    // NOTE: `set_simd` itself is exercised in `tests/simd_parity.rs`,
+    // which serializes every global-toggle test behind one lock. The
+    // unit tests here compare the `_scalar`/`_avx2` twins directly and
+    // never touch the process-global dispatch mode, so they can run
+    // concurrently with the rest of the lib test binary.
+
+    #[test]
+    fn dot_simd_matches_scalar_within_rtol() {
+        if !simd_available() {
+            return;
+        }
+        property("dot simd-vs-scalar", 200, |g| {
+            // Lengths past both the 8-wide unroll and the 4-lane step,
+            // including remainders.
+            let n = g.usize_in(0, 300);
+            let a = g.vec_f64(n, -3.0, 3.0);
+            let b = g.vec_f64(n, -3.0, 3.0);
+            let want = dot_scalar(&a, &b);
+            // SAFETY: feature-detected above.
+            let got = unsafe { dot_avx2(&a, &b) };
+            prop_assert!(
+                rel(want, got) <= SIMD_PARITY_RTOL,
+                "n={n}: scalar {want} vs simd {got}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sqdist_row_simd_is_bit_exact() {
+        if !simd_available() {
+            return;
+        }
+        property("sqdist_row bit parity", 200, |g| {
+            let d = g.usize_in(1, 9);
+            let m = g.usize_in(1, 70);
+            let p = g.vec_f64(d, -2.0, 2.0);
+            let rows = g.vec_f64(m * d, -2.0, 2.0);
+            let mut want = vec![0.0; m];
+            let mut got = vec![0.0; m];
+            sqdist_row_scalar(&p, &rows, d, &mut want);
+            // SAFETY: feature-detected above.
+            unsafe { sqdist_row_avx2(&p, &rows, d, &mut got) };
+            for j in 0..m {
+                prop_assert!(
+                    want[j].to_bits() == got[j].to_bits(),
+                    "m={m} d={d} j={j}: {} vs {}",
+                    want[j],
+                    got[j]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vector_exp_matches_libm_within_ulps() {
+        if !simd_available() {
+            return;
+        }
+        property("vexp vs libm", 200, |g| {
+            let n = g.usize_in(1, 40);
+            // Covariance domain (≤ 0) through the underflow edge.
+            let mut xs = g.vec_f64(n, -760.0, 0.0);
+            xs.push(0.0);
+            xs.push(-708.5);
+            let want: Vec<f64> = xs.iter().map(|v| v.exp()).collect();
+            vexp_slice(&mut xs);
+            for (i, (w, got)) in want.iter().zip(&xs).enumerate() {
+                // ~2 ulp relative, and exact zero flush at underflow.
+                prop_assert!(
+                    rel(*w, *got) <= 1e-14 || (*w < 1e-300 && *got == 0.0),
+                    "exp[{i}]: libm {w} vs vector {got}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matern_map_simd_matches_scalar_within_rtol() {
+        if !simd_available() {
+            return;
+        }
+        property("matern row map simd-vs-scalar", 200, |g| {
+            let n = g.usize_in(1, 200);
+            let ls = g.f64_in(0.05, 3.0);
+            let var = g.f64_in(0.1, 4.0);
+            let d2 = g.vec_f64(n, 0.0, 50.0);
+            let mut want = d2.clone();
+            let mut got = d2;
+            matern52_map_scalar(ls, var, &mut want);
+            // SAFETY: feature-detected above.
+            unsafe { matern52_map_avx2(ls, var, &mut got) };
+            for j in 0..n {
+                prop_assert!(
+                    rel(want[j], got[j]) <= SIMD_PARITY_RTOL,
+                    "n={n} j={j}: {} vs {}",
+                    want[j],
+                    got[j]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn column_lane_helpers_are_bit_exact() {
+        if !simd_available() {
+            return;
+        }
+        property("column-lane bit parity", 200, |g| {
+            let n = g.usize_in(1, 70);
+            let s = g.f64_in(-2.0, 2.0);
+            let z = g.vec_f64(n, -2.0, 2.0);
+            let base = g.vec_f64(n, -2.0, 2.0);
+            let diag = g.f64_in(0.3, 2.0);
+
+            let check = |name: &str, a: &[f64], b: &[f64]| -> Result<(), String> {
+                for j in 0..a.len() {
+                    prop_assert!(
+                        a[j].to_bits() == b[j].to_bits(),
+                        "{name} j={j}: {} vs {}",
+                        a[j],
+                        b[j]
+                    );
+                }
+                Ok(())
+            };
+
+            let (mut sc, mut vx) = (base.clone(), base.clone());
+            for (acc, v) in sc.iter_mut().zip(&z) {
+                *acc += s * v;
+            }
+            // SAFETY: feature-detected above.
+            unsafe { axpy_avx2(&mut vx, s, &z) };
+            check("axpy", &sc, &vx)?;
+
+            let (mut sc, mut vx) = (base.clone(), base.clone());
+            for (acc, v) in sc.iter_mut().zip(&z) {
+                *acc -= s * v;
+            }
+            // SAFETY: feature-detected above.
+            unsafe { axpy_sub_avx2(&mut vx, s, &z) };
+            check("axpy_sub", &sc, &vx)?;
+
+            let (mut sc, mut vx) = (base.clone(), base.clone());
+            for (r, v) in sc.iter_mut().zip(&z) {
+                *r = (*r - v) / diag;
+            }
+            // SAFETY: feature-detected above.
+            unsafe { sub_div_avx2(&mut vx, &z, diag) };
+            check("sub_div", &sc, &vx)?;
+
+            let (mut sc, mut vx) = (base.clone(), base.clone());
+            for (acc, v) in sc.iter_mut().zip(&z) {
+                *acc += v * v;
+            }
+            // SAFETY: feature-detected above.
+            unsafe { sq_accum_avx2(&mut vx, &z) };
+            check("sq_accum", &sc, &vx)?;
+
+            let (mut sc, mut vx) = (base.clone(), base);
+            for r in sc.iter_mut() {
+                *r /= diag;
+            }
+            // SAFETY: feature-detected above.
+            unsafe { scale_div_avx2(&mut vx, diag) };
+            check("scale_div", &sc, &vx)?;
+            Ok(())
+        });
+    }
+}

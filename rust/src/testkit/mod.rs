@@ -363,6 +363,132 @@ pub fn assert_backend_parity(
     report
 }
 
+fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, v) in xs.iter().enumerate() {
+        if *v < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// One recorded step per script window: the grid NLLs and the decision
+/// at the lane's *own* NLL argmin (the selection the search loop makes).
+type ScriptTrace = Vec<(Vec<f64>, crate::bayesopt::Decision)>;
+
+/// Replay a whole script on one backend, recording NLL grid + decision
+/// per step — the shared producer of every replay-and-compare harness
+/// below (parallel parity, SIMD-vs-scalar parity).
+fn record_script_trace(
+    b: &mut dyn crate::bayesopt::GpBackend,
+    script: &ParityScript,
+    xc: &[f64],
+    m: usize,
+    grid: &[[f64; 3]],
+) -> ScriptTrace {
+    let d = script.d;
+    let cmask = vec![true; m];
+    let mut trace = Vec::with_capacity(script.steps.len());
+    for &(start, n) in script.steps() {
+        let x = &script.rows[start * d..(start + n) * d];
+        let y = &script.ys[start..start + n];
+        let nll = b.nll_grid(x, y, n, d, grid).expect("trace nll_grid");
+        let hyp = grid[argmin(&nll)];
+        let dec = b.decide(x, y, n, d, xc, &cmask, m, hyp).expect("trace decide");
+        trace.push((nll, dec));
+    }
+    trace
+}
+
+/// The two comparison modes of the replay harnesses: `tol = None` is
+/// bit identity (`f64::to_bits`); `Some(rtol)` is relative closeness on
+/// finite pairs (scale `max(|a|,|b|,1)`) and sign-respecting equality
+/// on non-finite ones (both sweeps must reject the same degenerate
+/// grid points).
+fn trace_close(a: f64, b: f64, tol: Option<f64>) -> bool {
+    match tol {
+        None => a.to_bits() == b.to_bits(),
+        Some(rtol) => {
+            if a.is_finite() && b.is_finite() {
+                (a - b).abs() / a.abs().max(b.abs()).max(1.0) <= rtol
+            } else {
+                a == b || (a.is_nan() && b.is_nan())
+            }
+        }
+    }
+}
+
+/// Compare two recorded traces of the same script step by step. In bit
+/// mode (`tol = None`) the chosen EI argmax must match exactly; in
+/// tolerance mode each side's pick must be tol-equivalent to the
+/// other's (robust to near ties the rounding may reorder).
+fn compare_script_traces(
+    label: &str,
+    steps: &[(usize, usize)],
+    reference: &ScriptTrace,
+    candidate: &ScriptTrace,
+    tol: Option<f64>,
+) {
+    for (step, ((rnll, rdec), (cnll, cdec))) in reference.iter().zip(candidate).enumerate() {
+        let n = steps[step].1;
+        for (g, (va, vb)) in rnll.iter().zip(cnll).enumerate() {
+            assert!(
+                trace_close(*va, *vb, tol),
+                "{label}: nll[{g}] diverged at step {step} (n={n}): {va:?} vs {vb:?}"
+            );
+        }
+        for j in 0..rdec.mu.len() {
+            assert!(
+                trace_close(rdec.mu[j], cdec.mu[j], tol),
+                "{label}: mu[{j}] diverged at step {step} (n={n}): {:?} vs {:?}",
+                rdec.mu[j],
+                cdec.mu[j]
+            );
+            assert!(
+                trace_close(rdec.var[j], cdec.var[j], tol),
+                "{label}: var[{j}] diverged at step {step} (n={n}): {:?} vs {:?}",
+                rdec.var[j],
+                cdec.var[j]
+            );
+            assert!(
+                trace_close(rdec.ei[j], cdec.ei[j], tol),
+                "{label}: ei[{j}] diverged at step {step} (n={n}): {:?} vs {:?}",
+                rdec.ei[j],
+                cdec.ei[j]
+            );
+        }
+        let (rp, cp) = (argmax(&rdec.ei), argmax(&cdec.ei));
+        match tol {
+            None => assert_eq!(
+                cp, rp,
+                "{label}: chosen argmax diverged at step {step} (n={n})"
+            ),
+            Some(rtol) => {
+                let scale = rdec.ei[rp].abs().max(cdec.ei[cp].abs()).max(1.0);
+                assert!(
+                    rdec.ei[rp] - rdec.ei[cp] <= rtol * scale
+                        && cdec.ei[cp] - cdec.ei[rp] <= rtol * scale,
+                    "{label}: argmax diverged at step {step} (n={n}): reference picks \
+                     {rp} (ei {}), candidate picks {cp} (ei {})",
+                    rdec.ei[rp],
+                    cdec.ei[cp]
+                );
+            }
+        }
+    }
+}
+
 /// Drive serial-vs-threaded [`NativeBackend`](crate::bayesopt::NativeBackend)s
 /// through the same observation script and assert **bit-identical**
 /// outputs — the deterministic-parallelism contract of the worker-pool
@@ -377,6 +503,9 @@ pub fn assert_backend_parity(
 /// (`f64::to_bits` equality — no tolerance). The decide hyperparameters
 /// are the grid argmin of the lane's own NLL, as in the search loop, so
 /// a bit-divergent grid would also surface as a diverged decision.
+/// This holds in *either* SIMD dispatch mode — serial and pooled lanes
+/// share one dispatch decision — which is why no tolerance is needed
+/// here; see [`assert_simd_scalar_parity`] for the cross-dispatch pin.
 pub fn assert_parallel_parity(
     make: &dyn Fn() -> crate::bayesopt::NativeBackend,
     threads: &[usize],
@@ -385,82 +514,81 @@ pub fn assert_parallel_parity(
     m: usize,
     grid: &[[f64; 3]],
 ) {
-    use crate::bayesopt::GpBackend;
+    assert_parallel_parity_tol(make, threads, script, xc, m, grid, None)
+}
+
+/// [`assert_parallel_parity`]'s tolerance mode: `tol = None` is the
+/// strict bit-identity contract; `Some(rtol)` relaxes every comparison
+/// to relative closeness (see `trace_close`) for configurations where
+/// the compared lanes legitimately round differently.
+pub fn assert_parallel_parity_tol(
+    make: &dyn Fn() -> crate::bayesopt::NativeBackend,
+    threads: &[usize],
+    script: &ParityScript,
+    xc: &[f64],
+    m: usize,
+    grid: &[[f64; 3]],
+    tol: Option<f64>,
+) {
     assert!(!grid.is_empty(), "empty hyperparameter grid");
     assert_eq!(xc.len(), m * script.d, "candidate matrix shape mismatch");
-    let d = script.d;
-    let cmask = vec![true; m];
-    let argmin = |xs: &[f64]| {
-        let mut best = 0usize;
-        for (i, v) in xs.iter().enumerate() {
-            if *v < xs[best] {
-                best = i;
-            }
-        }
-        best
-    };
-    let argmax = |xs: &[f64]| {
-        let mut best = 0usize;
-        for (i, v) in xs.iter().enumerate() {
-            if *v > xs[best] {
-                best = i;
-            }
-        }
-        best
-    };
 
     // Reference lane: fully serial.
-    let mut reference: Vec<(Vec<f64>, crate::bayesopt::Decision, usize)> = Vec::new();
     let mut serial = make();
     serial.set_parallelism(1);
-    for &(start, n) in script.steps() {
-        let x = &script.rows[start * d..(start + n) * d];
-        let y = &script.ys[start..start + n];
-        let nll = serial.nll_grid(x, y, n, d, grid).expect("serial nll_grid");
-        let hyp = grid[argmin(&nll)];
-        let dec = serial.decide(x, y, n, d, xc, &cmask, m, hyp).expect("serial decide");
-        let pick = argmax(&dec.ei);
-        reference.push((nll, dec, pick));
-    }
+    let reference = record_script_trace(&mut serial, script, xc, m, grid);
 
     for &t in threads {
         let mut b = make();
         b.set_parallelism(t);
-        for (step, &(start, n)) in script.steps().iter().enumerate() {
-            let x = &script.rows[start * d..(start + n) * d];
-            let y = &script.ys[start..start + n];
-            let nll = b.nll_grid(x, y, n, d, grid).expect("threaded nll_grid");
-            let (rnll, rdec, rpick) = &reference[step];
-            for (g, (va, vb)) in rnll.iter().zip(&nll).enumerate() {
-                assert!(
-                    va.to_bits() == vb.to_bits(),
-                    "gp-threads {t}: nll[{g}] not bit-identical at step {step} \
-                     (n={n}): {va:?} vs {vb:?}"
-                );
-            }
-            let hyp = grid[argmin(&nll)];
-            let dec = b.decide(x, y, n, d, xc, &cmask, m, hyp).expect("threaded decide");
-            for j in 0..m {
-                assert!(
-                    rdec.mu[j].to_bits() == dec.mu[j].to_bits(),
-                    "gp-threads {t}: mu[{j}] not bit-identical at step {step} (n={n})"
-                );
-                assert!(
-                    rdec.var[j].to_bits() == dec.var[j].to_bits(),
-                    "gp-threads {t}: var[{j}] not bit-identical at step {step} (n={n})"
-                );
-                assert!(
-                    rdec.ei[j].to_bits() == dec.ei[j].to_bits(),
-                    "gp-threads {t}: ei[{j}] not bit-identical at step {step} (n={n})"
-                );
-            }
-            assert_eq!(
-                argmax(&dec.ei),
-                *rpick,
-                "gp-threads {t}: chosen argmax diverged at step {step} (n={n})"
-            );
+        let trace = record_script_trace(&mut b, script, xc, m, grid);
+        compare_script_traces(&format!("gp-threads {t}"), script.steps(), &reference, &trace, tol);
+    }
+}
+
+/// Pin the SIMD-dispatched backend against the forced-scalar backend
+/// over a whole script, within relative tolerance `tol` (pass
+/// [`SIMD_PARITY_RTOL`](crate::bayesopt::SIMD_PARITY_RTOL) — the
+/// documented bound of `bayesopt::simd`'s tolerance class; reductions
+/// reassociate and the Matérn builders use the vector `exp`, so bit
+/// identity across dispatch modes is deliberately *not* the contract).
+///
+/// The scalar reference replays the script first under
+/// `set_simd(false)`, then a fresh backend replays it with SIMD
+/// restored; the prior dispatch mode is restored afterwards (on panic
+/// too). The toggle is process-global — callers running in a shared
+/// test binary must serialize through a lock. On hosts without
+/// AVX2+FMA both replays run scalar and agree bit-exactly, which the
+/// tolerance trivially covers.
+pub fn assert_simd_scalar_parity(
+    make: &dyn Fn() -> crate::bayesopt::NativeBackend,
+    script: &ParityScript,
+    xc: &[f64],
+    m: usize,
+    grid: &[[f64; 3]],
+    tol: f64,
+) {
+    use crate::bayesopt::{set_simd, simd_active};
+    assert!(!grid.is_empty(), "empty hyperparameter grid");
+    assert_eq!(xc.len(), m * script.d, "candidate matrix shape mismatch");
+
+    struct ModeGuard(bool);
+    impl Drop for ModeGuard {
+        fn drop(&mut self) {
+            crate::bayesopt::set_simd(self.0);
         }
     }
+    let _guard = ModeGuard(simd_active());
+
+    set_simd(false);
+    let mut scalar = make();
+    let reference = record_script_trace(&mut scalar, script, xc, m, grid);
+
+    set_simd(true);
+    let mut vectorized = make();
+    let candidate = record_script_trace(&mut vectorized, script, xc, m, grid);
+
+    compare_script_traces("simd-vs-scalar", script.steps(), &reference, &candidate, Some(tol));
 }
 
 /// A [`GpBackend`](crate::bayesopt::GpBackend) wrapper with an

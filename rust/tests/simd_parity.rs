@@ -1,0 +1,197 @@
+//! The dedicated SIMD parity suite: everything that toggles the
+//! process-global dispatch mode (`bayesopt::set_simd`) lives in this
+//! one integration binary and serializes behind a single lock, so the
+//! lib test binary (whose suites read `simd_active()` concurrently)
+//! never observes a mid-test mode flip.
+//!
+//! What is pinned here, on top of the per-kernel `_scalar`-vs-`_avx2`
+//! property tests inside `bayesopt/simd.rs`:
+//!
+//! * `assert_simd_scalar_parity` replays the randomized
+//!   `testkit::random_scripts` corpus — the same programs the
+//!   `tests/fuzz_parity.rs` suites drive — once with SIMD forced off
+//!   and once with it on, and requires every grid NLL, posterior
+//!   mean/variance, EI score and chosen argmax to agree within
+//!   [`SIMD_PARITY_RTOL`] (the tolerance-class contract: reductions
+//!   reassociate, the Matérn builders use the vector `exp`).
+//! * The same corpus under the forced-*scalar* mode must keep the
+//!   serial-vs-pooled **bit identity** contract — the escape hatch that
+//!   lets every legacy bit-exact suite keep pinning the scalar path.
+//! * `set_simd` / `simd_active` / `RUYA_FORCE_SCALAR` mode plumbing.
+//!
+//! Scripts reproduce from `RUYA_FUZZ_SEED` exactly as in
+//! `tests/fuzz_parity.rs`.
+
+use ruya::bayesopt::{
+    hyperparameter_grid, set_simd, simd_active, simd_available, LowRankPolicy,
+    NativeBackend, SIMD_PARITY_RTOL,
+};
+use ruya::testkit::{
+    assert_parallel_parity, assert_simd_scalar_parity, random_scripts, ParityScript,
+};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+/// One lock for every test in this binary: `set_simd` is process-global
+/// and `cargo test` runs tests on concurrent threads.
+static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialized<R>(body: impl FnOnce() -> R) -> R {
+    // A poisoned lock just means an earlier test failed; the guard in
+    // the harness already restored the dispatch mode.
+    let _guard = DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    body()
+}
+
+/// Scripts per fuzz run (matches `tests/fuzz_parity.rs`).
+const FUZZ_SCRIPTS: usize = 32;
+
+fn fuzz_seed() -> u64 {
+    std::env::var("RUYA_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA11C_E5EE_D5EEDu64)
+}
+
+/// Deterministic candidate matrix matching a script's feature width
+/// (same shape family as the fuzz_parity corpus).
+fn candidates(script: &ParityScript, salt: usize) -> (Vec<f64>, usize) {
+    let d = script.dim();
+    let m = 6 + (salt % 7); // 6..=12 candidates
+    let xc = (0..m * d)
+        .map(|i| ((i * 29 + salt * 13 + 7) % 97) as f64 / 97.0)
+        .collect();
+    (xc, m)
+}
+
+/// Run `body` over every generated script, re-panicking with the seed
+/// and script index so failures reproduce from the log line alone.
+fn for_each_script(body: impl Fn(usize, &ParityScript, &[f64], usize)) {
+    let seed = fuzz_seed();
+    let scripts = random_scripts(seed, FUZZ_SCRIPTS);
+    for (i, script) in scripts.iter().enumerate() {
+        let (xc, m) = candidates(script, i);
+        let result = catch_unwind(AssertUnwindSafe(|| body(i, script, &xc, m)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "simd fuzz script {i}/{FUZZ_SCRIPTS} (RUYA_FUZZ_SEED={seed:#x}, steps \
+                 {:?}) failed:\n  {msg}",
+                script.steps()
+            );
+        }
+    }
+}
+
+#[test]
+fn set_simd_respects_feature_detection() {
+    serialized(|| {
+        let prior = simd_active();
+        assert!(!set_simd(false));
+        assert!(!simd_active());
+        // Forcing SIMD on only sticks when the CPU has the features.
+        assert_eq!(set_simd(true), simd_available());
+        assert_eq!(simd_active(), simd_available());
+        set_simd(prior);
+    });
+}
+
+#[test]
+fn fuzz_simd_vs_scalar_within_rtol_over_random_programs() {
+    serialized(|| {
+        let grid = hyperparameter_grid();
+        for_each_script(|_, script, xc, m| {
+            let make = NativeBackend::new;
+            assert_simd_scalar_parity(&make, script, xc, m, &grid, SIMD_PARITY_RTOL);
+        });
+    });
+}
+
+#[test]
+fn fuzz_simd_vs_scalar_pooled_and_lowrank_within_rtol() {
+    serialized(|| {
+        let grid = hyperparameter_grid();
+        for_each_script(|i, script, xc, m| {
+            // Alternate the two non-default configurations across the
+            // corpus: the pooled exact sweep (multi-RHS batches fanned
+            // across lanes) and the forced low-rank routing.
+            let pooled = i % 2 == 0;
+            let make = move || {
+                let mut b = NativeBackend::new();
+                if pooled {
+                    b.set_parallelism(4);
+                    b.set_pool_min_obs(0);
+                } else {
+                    b.set_lowrank_nll_threshold(4);
+                    b.set_lowrank_policy(LowRankPolicy::Force { max_inducing: 6 });
+                }
+                b
+            };
+            assert_simd_scalar_parity(&make, script, xc, m, &grid, SIMD_PARITY_RTOL);
+        });
+    });
+}
+
+#[test]
+fn fuzz_forced_scalar_keeps_parallel_bit_identity() {
+    serialized(|| {
+        // The escape hatch contract: with SIMD forced off, the whole
+        // backend reproduces the legacy scalar bits, so the strict
+        // serial-vs-pooled bit-identity harness must pass untouched.
+        struct ModeGuard(bool);
+        impl Drop for ModeGuard {
+            fn drop(&mut self) {
+                set_simd(self.0);
+            }
+        }
+        let _restore = ModeGuard(simd_active());
+        set_simd(false);
+
+        let grid = hyperparameter_grid();
+        for_each_script(|_, script, xc, m| {
+            let make = || {
+                let mut b = NativeBackend::new();
+                b.set_pool_min_obs(0);
+                b
+            };
+            assert_parallel_parity(&make, &[2, 4], script, xc, m, &grid);
+        });
+    });
+}
+
+#[test]
+fn simd_dispatch_parallel_parity_stays_bit_identical() {
+    serialized(|| {
+        // With SIMD *on*, serial and pooled lanes share one dispatch
+        // decision, so the strict bit contract holds there too (no
+        // tolerance needed): reassociation changes bits vs scalar, not
+        // vs another thread count.
+        if !simd_available() {
+            return;
+        }
+        struct ModeGuard(bool);
+        impl Drop for ModeGuard {
+            fn drop(&mut self) {
+                set_simd(self.0);
+            }
+        }
+        let _restore = ModeGuard(simd_active());
+        set_simd(true);
+
+        let grid = hyperparameter_grid();
+        let scripts = random_scripts(fuzz_seed(), 8);
+        for (i, script) in scripts.iter().enumerate() {
+            let (xc, m) = candidates(script, i);
+            let make = || {
+                let mut b = NativeBackend::new();
+                b.set_pool_min_obs(0);
+                b
+            };
+            assert_parallel_parity(&make, &[2, 4], script, &xc, m, &grid);
+        }
+    });
+}
