@@ -1,0 +1,179 @@
+//! §Perf bench: the end-to-end memory-aware pipeline at catalog scale —
+//! profiler → memory model → shortlist → BO inside the shortlist, vs the
+//! full-catalog baseline at the same seed and iteration budget.
+//!
+//! The ablation sweeps generated catalogs of 1k / 10k / 40k configs
+//! (the generated grid caps at 42336, so the paper-style "50k" tier runs
+//! at 40k) and reports, per memory category: shortlist size, wall-clock
+//! per pipeline run, and iterations-to-(cost ≤ 1.1) narrowed vs full.
+//!
+//! `--smoke` (the CI mode) runs a generated:1000 catalog and *asserts*
+//! the narrowing behaves as the paper requires: the shortlist engages
+//! and is strictly smaller than the catalog for linear- and flat-memory
+//! jobs, degrades to the full catalog for unclear jobs, every narrowed
+//! pick stays inside the shortlist, and for the linear-memory Table II
+//! jobs the narrowed search reaches a ≤ 1.1-cost configuration in fewer
+//! iterations than the full-catalog search at the same seed.
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::coordinator::{ExperimentRunner, MemoryPipeline, SessionEngine, THRESHOLDS};
+use ruya::memmodel::MemCategory;
+use ruya::searchspace::SearchSpace;
+use ruya::workload::{evaluation_jobs, JobInstance};
+use std::time::Instant;
+
+const SEED: u64 = 0xC0FFEE;
+const BUDGET: usize = 96;
+
+fn pipeline_over(catalog: usize) -> MemoryPipeline {
+    MemoryPipeline::new(
+        ExperimentRunner::native().with_space(SearchSpace::generated(SEED, catalog)),
+    )
+}
+
+fn jobs_by_category() -> Vec<JobInstance> {
+    // One representative per memory category (Table I labels).
+    ["K-Means Spark huge", "Terasort Hadoop bigdata", "Lin. Regr. Spark huge"]
+        .iter()
+        .map(|l| evaluation_jobs().into_iter().find(|j| j.label() == *l).expect("known job"))
+        .collect()
+}
+
+fn fmt_iters(it: Option<usize>) -> String {
+    it.map_or_else(|| "-".to_string(), |k| k.to_string())
+}
+
+fn sweep(catalog: usize) {
+    let pipeline = pipeline_over(catalog);
+    let mut engine = SessionEngine::new(0);
+    for job in jobs_by_category() {
+        let t0 = Instant::now();
+        let out = pipeline.run_job(&mut engine, &job, SEED, BUDGET).expect("pipeline run");
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "{:7} configs  {:27} {:7}  shortlist {:>5}/{:<5}  narrow<=1.1 {:>4}  \
+             full<=1.1 {:>4}  best {:.4} vs {:.4}  {:6.2}s",
+            catalog,
+            out.label,
+            out.category.name(),
+            out.shortlist_len,
+            out.catalog_len,
+            fmt_iters(out.narrowed_iters_to(THRESHOLDS[1])),
+            fmt_iters(out.full_iters_to(THRESHOLDS[1])),
+            out.narrowed.best_after(BUDGET),
+            out.full.best_after(BUDGET),
+            secs
+        );
+    }
+}
+
+fn smoke() {
+    harness::section("pipeline smoke (CI guard, generated:1000)");
+    let pipeline = pipeline_over(1000);
+    let catalog = pipeline.runner.space.len();
+    assert_eq!(catalog, 1000, "generated:1000 must produce exactly 1000 configs");
+
+    let mut engine = SessionEngine::new(0);
+    let mut linear_narrowed = Vec::new();
+    let mut linear_full = Vec::new();
+    let t0 = Instant::now();
+    for job in evaluation_jobs() {
+        let (_, shortlist, _) = pipeline.shortlist_job(&job, SEED);
+        match shortlist.category {
+            MemCategory::Linear | MemCategory::Flat => {
+                assert!(
+                    shortlist.engaged(),
+                    "{}: {} shortlist did not engage ({} of {} configs)",
+                    job.label(),
+                    shortlist.category.name(),
+                    shortlist.indices.len(),
+                    catalog
+                );
+            }
+            MemCategory::Unclear => {
+                assert_eq!(
+                    shortlist.indices.len(),
+                    catalog,
+                    "{}: unclear jobs must keep the full space",
+                    job.label()
+                );
+            }
+        }
+
+        if shortlist.category != MemCategory::Linear {
+            continue;
+        }
+        // Linear jobs additionally run the narrowed-vs-full comparison,
+        // racing the two searches at the identical seed and averaging the
+        // verdict over two seeds so one lucky full-catalog trajectory
+        // cannot flip it.
+        for &seed in &[SEED, SEED ^ 0xBADC0DE] {
+            let out = pipeline.run_job(&mut engine, &job, seed, BUDGET).expect("pipeline run");
+            for &i in &out.narrowed.tried {
+                assert!(
+                    shortlist.indices.binary_search(&i).is_ok(),
+                    "{}: narrowed pick {i} escaped the shortlist",
+                    job.label()
+                );
+            }
+            let narrowed = out.narrowed_iters_to(THRESHOLDS[1]);
+            let full = out.full_iters_to(THRESHOLDS[1]);
+            println!(
+                "  {:27} seed {seed:>9x}  shortlist {:>4}/{catalog}  narrow<=1.1 {:>4}  \
+                 full<=1.1 {:>4}",
+                out.label,
+                out.shortlist_len,
+                fmt_iters(narrowed),
+                fmt_iters(full)
+            );
+            linear_narrowed.push(narrowed);
+            linear_full.push(full);
+        }
+    }
+    assert_eq!(linear_narrowed.len(), 12, "expected the 6 linear Table II jobs x 2 seeds");
+
+    // The paper's claim, at the smoke scale: narrowing makes the linear
+    // jobs reach near-optimal configurations sooner. Not-reached counts
+    // as budget+1 executions.
+    let spend = |it: &Option<usize>| it.unwrap_or(BUDGET + 1);
+    let narrowed_total: usize = linear_narrowed.iter().map(spend).sum();
+    let full_total: usize = linear_full.iter().map(spend).sum();
+    assert!(
+        narrowed_total < full_total,
+        "narrowed searches did not beat full-catalog searches over the linear jobs: \
+         {narrowed_total} vs {full_total} total executions to cost <= 1.1"
+    );
+    let strict_win = linear_narrowed.iter().zip(&linear_full).any(|(n, f)| match (n, f) {
+        (Some(n), Some(f)) => n < f,
+        (Some(_), None) => true,
+        _ => false,
+    });
+    assert!(
+        strict_win,
+        "no linear job reached cost <= 1.1 in strictly fewer narrowed iterations \
+         (narrowed {linear_narrowed:?} vs full {linear_full:?})"
+    );
+
+    println!(
+        "smoke ok: shortlists engage (linear+flat strict subsets, unclear = catalog), \
+         narrowed beats full over the 6 linear jobs x 2 seeds ({narrowed_total} vs \
+         {full_total} executions to <=1.1) in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
+
+    harness::section(&format!(
+        "pipeline ablation: narrowed vs full catalog at {BUDGET} iterations each"
+    ));
+    for &catalog in &[1_000usize, 10_000, 40_000] {
+        sweep(catalog);
+    }
+}

@@ -194,7 +194,7 @@ impl ExperimentRunner {
     /// Profile one job and fit its memory model (Table I / III rows).
     pub fn profile_job(&self, job: &JobInstance, seed: u64) -> ProfileSummary {
         let outcome = self.profiler.profile(job, seed);
-        let model = MemoryModel::fit(&outcome.readings());
+        let model = MemoryModel::fit(&outcome.valid_readings());
         ProfileSummary {
             label: job.label(),
             table1_cell: model.table1_cell(job.input_gb),

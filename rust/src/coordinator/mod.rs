@@ -1,7 +1,10 @@
 //! The Ruya coordinator — the paper's system contribution at Layer 3:
 //! profiling orchestration, memory-aware search-space splitting
-//! ([`planner`]) and the evaluation harness ([`experiment`]) that drives
-//! the Bayesian-optimized search over the simulated cluster substrate.
+//! ([`planner`]), the evaluation harness ([`experiment`]) that drives
+//! the Bayesian-optimized search over the simulated cluster substrate,
+//! and the end-to-end memory-aware loop ([`pipeline`]): profiler →
+//! memory model → catalog shortlist → BO restricted to the shortlist,
+//! run as resident sessions (`ruya pipeline` on the CLI).
 //!
 //! # Session architecture (optimizer-as-a-service)
 //!
@@ -29,6 +32,7 @@
 
 mod crispy;
 mod experiment;
+mod pipeline;
 mod planner;
 mod session;
 
@@ -37,6 +41,7 @@ pub use experiment::{
     ExperimentConfig, ExperimentResult, ExperimentRunner, JobComparison, MethodStats,
     ProfileSummary, StopQuality, THRESHOLDS,
 };
+pub use pipeline::{MemoryPipeline, PipelineOutcome, Shortlist, PIPELINE_DEFAULT_ITERS};
 pub use planner::{RuyaPlanner, SearchPlan};
 pub use session::{
     replay_cursor, SessionEngine, SessionState, SessionStats, SESSION_STATE_VERSION,

@@ -1,0 +1,353 @@
+//! The end-to-end memory-aware pipeline (§III-B/C): the paper's actual
+//! loop, wired through the fast engine at catalog scale.
+//!
+//! Mapping to the paper:
+//!
+//! 1. **§III-B small-sample profiling** — [`SingleNodeProfiler`] runs
+//!    the five sample-size-controlled measurement runs (30–300 s
+//!    controller band) on the simulated single node.
+//! 2. **§III-C memory modeling + categorization** — [`MemoryModel::fit`]
+//!    regresses peak memory on sample size and thresholds the R² score
+//!    into Linear / Flat / Unclear.
+//! 3. **§III-D memory-suitability shortlist** — the planner/Crispy
+//!    admissibility reasoning reduces the catalog: Linear ⇒ every
+//!    configuration at/above the extrapolated requirement (with leeway;
+//!    both memory extremes when the requirement exceeds the whole
+//!    catalog), Flat ⇒ the low-memory decile group, Unclear ⇒ the full
+//!    space. The [`Shortlist`] is phase 0 of [`RuyaPlanner::plan`],
+//!    taken *alone*.
+//! 4. **§III-E Bayesian-optimized search** — BO runs **only inside the
+//!    shortlist** ([`SearchPlan::restricted_to`]), driven through the
+//!    resident [`SessionEngine`] so a pipeline search suspends and
+//!    resumes like any session (the shortlist indices travel inside the
+//!    serialized `SessionState` phase plan). A full-catalog baseline
+//!    search at the same seed and iteration budget quantifies what the
+//!    narrowing bought — the paper's headline iterations-to-optimum
+//!    quotient — and a Crispy one-shot selection rides along as the
+//!    zero-iteration reference point.
+//!
+//! [`MemoryPipeline::run_matrix`] produces one [`PipelineOutcome`] per
+//! job; `report::render_pipeline_matrix` / `report::pipeline_to_json`
+//! turn the batch into the ruler-style experiment-matrix artifact the
+//! `ruya pipeline` verb prints and exports.
+
+use super::experiment::ExperimentRunner;
+use super::planner::SearchPlan;
+use super::session::SessionEngine;
+use crate::bayesopt::{BoParams, SearchOutcome};
+use crate::coordinator::CrispySelector;
+use crate::memmodel::{MemCategory, MemoryModel};
+use crate::workload::{JobCostTable, JobInstance};
+use anyhow::{anyhow, Result};
+
+/// Default equal-iteration budget for the narrowed-vs-full comparison
+/// on catalogs too large to exhaust (capped at the catalog size).
+pub const PIPELINE_DEFAULT_ITERS: usize = 96;
+
+/// The memory-suitability shortlist of a catalog for one job: the
+/// subset of configurations the narrowed BO search is allowed to try.
+#[derive(Debug, Clone)]
+pub struct Shortlist {
+    pub category: MemCategory,
+    /// Extrapolated job memory requirement (GB), Linear jobs only.
+    pub requirement_gb: Option<f64>,
+    /// Catalog indices in the shortlist, ascending.
+    pub indices: Vec<usize>,
+    /// Size of the catalog the shortlist was derived from.
+    pub catalog_len: usize,
+}
+
+impl Shortlist {
+    /// Derive the shortlist from a planner phase plan: phase 0 alone.
+    /// (For Unclear jobs — and Linear requirements so low the whole
+    /// space qualifies — phase 0 *is* the full catalog.)
+    pub fn from_plan(plan: &SearchPlan, catalog_len: usize) -> Self {
+        let mut indices = plan.phases[0].clone();
+        indices.sort_unstable();
+        Self { category: plan.category, requirement_gb: plan.requirement_gb, indices, catalog_len }
+    }
+
+    /// True when the shortlist is a strict subset of the catalog — the
+    /// narrowing actually engaged.
+    pub fn engaged(&self) -> bool {
+        self.indices.len() < self.catalog_len
+    }
+
+    /// The single-phase plan of the narrowed search: BO only inside the
+    /// shortlist.
+    pub fn plan(&self) -> SearchPlan {
+        SearchPlan::restricted_to(
+            self.category,
+            self.requirement_gb,
+            self.indices.clone(),
+            self.catalog_len,
+        )
+    }
+
+    /// The phase list handed to [`SessionEngine::register_job`] — one
+    /// phase holding exactly the shortlist indices, which is what ends
+    /// up (and is verifiable) in a suspended session's serialized state.
+    pub fn phases(&self) -> Vec<Vec<usize>> {
+        vec![self.indices.clone()]
+    }
+}
+
+/// End-to-end result of the pipeline for one job.
+#[derive(Debug, Clone)]
+pub struct PipelineOutcome {
+    pub label: String,
+    pub category: MemCategory,
+    pub requirement_gb: Option<f64>,
+    /// R² of the fitted memory model.
+    pub r2: f64,
+    /// Wall-clock seconds the (simulated) profiling phase cost.
+    pub profiling_time_s: f64,
+    pub catalog_len: usize,
+    pub shortlist_len: usize,
+    /// (min, max) usable memory over the shortlist (GB).
+    pub shortlist_mem_gb: Option<(f64, f64)>,
+    /// Normalized cost of the Crispy one-shot choice (zero iterations).
+    pub crispy_cost: f64,
+    /// The narrowed search: BO inside the shortlist only.
+    pub narrowed: SearchOutcome,
+    /// Full-catalog baseline at the same seed and iteration budget.
+    pub full: SearchOutcome,
+}
+
+impl PipelineOutcome {
+    /// Whether the shortlist was a strict subset of the catalog.
+    pub fn engaged(&self) -> bool {
+        self.shortlist_len < self.catalog_len
+    }
+
+    /// 1-based iterations until the narrowed search first tried a
+    /// configuration with normalized cost <= `thr` (None = never).
+    pub fn narrowed_iters_to(&self, thr: f64) -> Option<usize> {
+        self.narrowed.first_within(thr)
+    }
+
+    /// Same metric for the full-catalog baseline.
+    pub fn full_iters_to(&self, thr: f64) -> Option<usize> {
+        self.full.first_within(thr)
+    }
+
+    /// Iterations-to-threshold quotient narrowed/full — the paper's
+    /// headline metric shape. None unless both searches reached `thr`.
+    pub fn quotient(&self, thr: f64) -> Option<f64> {
+        match (self.narrowed_iters_to(thr), self.full_iters_to(thr)) {
+            (Some(a), Some(b)) => Some(a as f64 / b as f64),
+            _ => None,
+        }
+    }
+}
+
+/// The end-to-end pipeline driver: owns an [`ExperimentRunner`] (space,
+/// simulator, profiler, planner, backend factory) and wires its stages
+/// together (see the module docs for the §III mapping).
+pub struct MemoryPipeline {
+    pub runner: ExperimentRunner,
+}
+
+impl MemoryPipeline {
+    pub fn new(runner: ExperimentRunner) -> Self {
+        Self { runner }
+    }
+
+    /// Pipeline over the pure-rust backend (tests/benches).
+    pub fn native() -> Self {
+        Self::new(ExperimentRunner::native())
+    }
+
+    /// The default equal-iteration budget for this pipeline's catalog.
+    pub fn default_budget(&self) -> usize {
+        self.runner.space.len().min(PIPELINE_DEFAULT_ITERS)
+    }
+
+    /// Stages 1–3: profile the job, fit the memory model, derive the
+    /// memory-suitability shortlist of the catalog.
+    pub fn shortlist_job(&self, job: &JobInstance, seed: u64) -> (MemoryModel, Shortlist, f64) {
+        let profile = self.runner.profile_job(job, seed);
+        let shortlist = self.shortlist_for(&profile.model, job.input_gb);
+        (profile.model, shortlist, profile.profiling_time_s)
+    }
+
+    /// Stage 3 alone: the shortlist a fitted model induces over the
+    /// pipeline's catalog.
+    pub fn shortlist_for(&self, model: &MemoryModel, input_gb: f64) -> Shortlist {
+        let plan = self.runner.planner.plan(model, input_gb, &self.runner.space);
+        Shortlist::from_plan(&plan, self.runner.space.len())
+    }
+
+    /// Register `job` with a resident engine under its *shortlist-only*
+    /// phase plan (stages 1–3 run here; stage 4 is the engine's). Any
+    /// session opened on the returned handle searches only inside the
+    /// shortlist, and suspends/resumes like any other session — the
+    /// shortlist indices are the phase plan inside its serialized
+    /// state. Returns the engine job handle and the shortlist.
+    pub fn register_job_with_engine(
+        &self,
+        engine: &mut SessionEngine,
+        job: &JobInstance,
+        seed: u64,
+    ) -> Result<(usize, Shortlist)> {
+        let (_, shortlist, _) = self.shortlist_job(job, seed);
+        let table = JobCostTable::build(&self.runner.sim, job, &self.runner.space);
+        let handle = engine.register_job(
+            &job.label(),
+            &self.runner.space,
+            table.normalized,
+            shortlist.phases(),
+        )?;
+        Ok((handle, shortlist))
+    }
+
+    /// Run the whole pipeline for one job: profile → fit → shortlist →
+    /// narrowed BO (as a session on `engine`), plus the full-catalog
+    /// baseline search and the Crispy one-shot selection at the same
+    /// seed. `budget` caps both searches at an equal iteration count.
+    ///
+    /// The engine is caller-provided so many jobs (or repeated calls)
+    /// share one scoring pool; each job registers once per engine (a
+    /// label already registered is reused).
+    pub fn run_job(
+        &self,
+        engine: &mut SessionEngine,
+        job: &JobInstance,
+        seed: u64,
+        budget: usize,
+    ) -> Result<PipelineOutcome> {
+        let profile = self.runner.profile_job(job, seed);
+        let shortlist = self.shortlist_for(&profile.model, job.input_gb);
+        let table = JobCostTable::build(&self.runner.sim, job, &self.runner.space);
+
+        let handle = match engine.job_index(&job.label()) {
+            Some(h) => h,
+            None => engine.register_job(
+                &job.label(),
+                &self.runner.space,
+                table.normalized.clone(),
+                shortlist.phases(),
+            )?,
+        };
+        let params = BoParams { max_iters: budget.max(1), ..Default::default() };
+        let rep_seed = seed ^ job.job_id;
+        let sid = engine.open(handle, rep_seed, params)?;
+        engine.run_all()?;
+        let narrowed = engine
+            .outcome(sid)
+            .ok_or_else(|| anyhow!("engine lost session {sid} for {:?}", job.label()))?;
+
+        let full = self.runner.run_one_params(
+            &table,
+            &SearchPlan::unpartitioned(&self.runner.space),
+            rep_seed,
+            &params,
+        )?;
+
+        let choice = CrispySelector::default().select(&profile.model, job.input_gb, &self.runner.space);
+        Ok(PipelineOutcome {
+            label: job.label(),
+            category: shortlist.category,
+            requirement_gb: shortlist.requirement_gb,
+            r2: profile.model.r2,
+            profiling_time_s: profile.profiling_time_s,
+            catalog_len: self.runner.space.len(),
+            shortlist_len: shortlist.indices.len(),
+            shortlist_mem_gb: self.runner.space.usable_memory_bounds(&shortlist.indices),
+            crispy_cost: table.normalized[choice.config_idx],
+            narrowed,
+            full,
+        })
+    }
+
+    /// [`Self::run_job`] over a set of jobs, sharing one engine (and
+    /// hence one scoring pool) across them — the experiment-matrix run
+    /// behind `ruya pipeline`. `gp_threads` sizes the engine's scoring
+    /// pool exactly like `ruya serve` (0 = adaptive); results are
+    /// bit-identical for any width.
+    pub fn run_matrix(
+        &self,
+        jobs: &[JobInstance],
+        seed: u64,
+        budget: usize,
+        gp_threads: usize,
+    ) -> Result<Vec<PipelineOutcome>> {
+        let mut engine = SessionEngine::new(gp_threads);
+        jobs.iter().map(|job| self.run_job(&mut engine, job, seed, budget)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::searchspace::SearchSpace;
+    use crate::workload::evaluation_jobs;
+
+    fn job(label: &str) -> JobInstance {
+        evaluation_jobs().into_iter().find(|j| j.label() == label).unwrap()
+    }
+
+    #[test]
+    fn shortlist_is_sorted_subset_of_catalog() {
+        let pipeline = MemoryPipeline::native();
+        for j in evaluation_jobs() {
+            let (_, shortlist, _) = pipeline.shortlist_job(&j, 7);
+            assert!(!shortlist.indices.is_empty(), "{}", j.label());
+            assert!(shortlist.indices.windows(2).all(|w| w[0] < w[1]), "{}", j.label());
+            assert!(
+                shortlist.indices.iter().all(|&i| i < shortlist.catalog_len),
+                "{}",
+                j.label()
+            );
+        }
+    }
+
+    #[test]
+    fn unclear_shortlist_is_the_full_space_and_not_engaged() {
+        let pipeline = MemoryPipeline::native();
+        let (model, shortlist, _) = pipeline.shortlist_job(&job("Lin. Regr. Spark huge"), 7);
+        assert_eq!(model.category, MemCategory::Unclear);
+        assert!(!shortlist.engaged());
+        let all: Vec<usize> = (0..pipeline.runner.space.len()).collect();
+        assert_eq!(shortlist.indices, all);
+    }
+
+    #[test]
+    fn restricted_plan_holds_only_the_shortlist() {
+        let pipeline = MemoryPipeline::native();
+        let (_, shortlist, _) = pipeline.shortlist_job(&job("Terasort Hadoop bigdata"), 7);
+        assert!(shortlist.engaged());
+        let plan = shortlist.plan();
+        assert_eq!(plan.phases.len(), 1, "narrowed search must have exactly one phase");
+        assert_eq!(plan.phases[0], shortlist.indices);
+        assert!(plan.priority_fraction < 1.0);
+    }
+
+    #[test]
+    fn pipeline_runs_end_to_end_on_the_scout_space() {
+        let pipeline = MemoryPipeline::native();
+        let mut engine = SessionEngine::new(1);
+        let out = pipeline
+            .run_job(&mut engine, &job("K-Means Spark huge"), 7, 32)
+            .expect("pipeline run");
+        assert_eq!(out.category, MemCategory::Linear);
+        assert!(out.engaged(), "linear shortlist must engage on the scout space");
+        assert!(out.narrowed.tried.len() <= 32 && out.full.tried.len() <= 32);
+        // Every narrowed pick stays inside the shortlist band.
+        let (_, shortlist, _) = pipeline.shortlist_job(&job("K-Means Spark huge"), 7);
+        for &i in &out.narrowed.tried {
+            assert!(shortlist.indices.contains(&i), "pick {i} escaped the shortlist");
+        }
+        assert!(out.crispy_cost >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn generated_catalog_budget_caps_at_default() {
+        let pipeline = MemoryPipeline::new(
+            ExperimentRunner::native().with_space(SearchSpace::generated(0xF00, 1000)),
+        );
+        assert_eq!(pipeline.default_budget(), PIPELINE_DEFAULT_ITERS);
+        let small = MemoryPipeline::native();
+        assert_eq!(small.default_budget(), 69);
+    }
+}

@@ -32,6 +32,23 @@ impl SearchPlan {
     pub fn is_narrowed(&self) -> bool {
         self.phases.len() > 1 && self.priority_fraction < 1.0
     }
+
+    /// A single-phase plan *restricted* to `indices` — the end-to-end
+    /// pipeline's narrowed BO search. Unlike the two-phase plans built
+    /// by [`RuyaPlanner::plan`] (whose union is always the whole
+    /// space), the rest of the catalog is deliberately absent: the
+    /// search runs only inside the memory-suitability shortlist, so
+    /// `phases` does NOT partition the space here.
+    pub fn restricted_to(
+        category: MemCategory,
+        requirement_gb: Option<f64>,
+        indices: Vec<usize>,
+        catalog_len: usize,
+    ) -> Self {
+        assert!(!indices.is_empty(), "restricted plan needs a non-empty shortlist");
+        let priority_fraction = indices.len() as f64 / catalog_len.max(1) as f64;
+        Self { category, requirement_gb, phases: vec![indices], priority_fraction }
+    }
 }
 
 /// Builds Ruya search plans from memory models.

@@ -12,6 +12,7 @@
 //! ruya fig4 [--reps N]             # Fig. 4   : best cost per iteration
 //! ruya fig5 [--reps N]             # Fig. 5   : cumulative cost
 //! ruya search --job <label>        # one Ruya search, verbose trace
+//! ruya pipeline [--job <label>]    # profiler -> memmodel -> shortlist -> BO
 //! ruya profile --job <label>       # one profiling phase, verbose
 //! ruya space                       # dump the 69-configuration space
 //! ruya serve [--script F]          # resident multi-session engine
@@ -109,6 +110,7 @@ fn run(args: &Args) -> Result<()> {
         "fig4" | "fig5" => fig45(&runner, &cfg, out_dir),
         "search" => search_one(&runner, args, &cfg),
         "serve" => serve(&runner, args, &cfg, gp_threads),
+        "pipeline" => pipeline_cmd(runner, args, &cfg, gp_threads, out_dir),
         "crispy" => crispy(&runner, args, cfg.seed),
         "stopping" => stopping(&runner, &cfg),
         "all" => {
@@ -338,6 +340,38 @@ fn iters_to_optimum_line(ruya: Option<usize>, cherrypick: Option<usize>) -> Opti
         None => "not reached".to_string(),
     };
     Some(format!("iterations to optimum: ruya {} vs cherrypick {}", fmt(ruya), fmt(cherrypick)))
+}
+
+/// `ruya pipeline` — the paper's loop end-to-end, per job: profile on
+/// the single node, fit the memory model, shortlist the catalog by
+/// memory suitability, then BO *inside the shortlist only* (run as a
+/// resident engine session), with a full-catalog baseline search and a
+/// Crispy one-shot pick at the same seed and iteration budget for the
+/// narrowed-vs-full experiment matrix.
+fn pipeline_cmd(
+    runner: ExperimentRunner,
+    args: &Args,
+    cfg: &ExperimentConfig,
+    gp_threads: usize,
+    out: Option<&Path>,
+) -> Result<()> {
+    let jobs: Vec<JobInstance> = match args.opt("job") {
+        Some(label) => vec![job_by_label(label)?],
+        None => evaluation_jobs(),
+    };
+    let pipeline = ruya::coordinator::MemoryPipeline::new(runner);
+    let budget = args.opt_usize("max-iters", pipeline.default_budget());
+    eprintln!(
+        "pipeline: {} job(s) over {} configs; narrowed + full searches at {} iterations each",
+        jobs.len(),
+        pipeline.runner.space.len(),
+        budget
+    );
+    let outcomes = pipeline.run_matrix(&jobs, cfg.seed, budget, gp_threads)?;
+    let rendered = report::render_pipeline_matrix(&outcomes, budget);
+    println!("Memory-aware pipeline: profiler -> memory model -> shortlist -> BO\n\n{rendered}");
+    write_out(out, "pipeline.md", &rendered)?;
+    write_out(out, "pipeline.json", &report::pipeline_to_json(&outcomes, budget, cfg.seed))
 }
 
 fn profile_one(args: &Args, seed: u64) -> Result<()> {
@@ -680,6 +714,12 @@ SUBCOMMANDS
   fig3              Fig 3: profiling memory time series (K-Means/Spark)
   fig4, fig5        Fig 4/5: convergence + cumulative-cost curves
   search --job L    run one Ruya search (with CherryPick comparison)
+  pipeline          the paper's loop end-to-end, per job: profile -> fit
+                    memory model -> shortlist the catalog -> BO inside
+                    the shortlist only (as engine sessions), vs a
+                    full-catalog baseline at the same seed and budget
+                    (--job L for one job; default all 16; --max-iters N
+                    budget, default min(96, catalog size))
   crispy [--job L]  one-shot (Crispy-style) selection, no iteration
   stopping          enforced-stop search quality (stopping criterion)
   profile --job L   run one profiling phase, print readings + model

@@ -52,12 +52,40 @@ pub struct MemoryModel {
 }
 
 impl MemoryModel {
-    /// Fit on the profiler's readings. Needs at least two points; the
-    /// profiling phase always supplies five (§III-B).
+    /// Fit on the profiler's readings.
+    ///
+    /// Robustness (edge cases surfaced by the pipeline tests):
+    /// * Non-finite readings are dropped before fitting.
+    /// * Fewer than two valid readings carry no growth information at
+    ///   all, so the model is `Unclear` (plain CherryPick downstream)
+    ///   instead of a panic or a degenerate fit.
+    /// * Duplicate sample sizes — the controller re-running at the same
+    ///   fraction — are fine for OLS as long as at least two *distinct*
+    ///   sizes remain; if every reading sits at one sample size, growth
+    ///   is unobservable and the model is `Unclear` (note that a naive
+    ///   fit would call it `Flat`: zero fitted slope is absence of
+    ///   evidence here, not evidence of flatness).
     pub fn fit(readings: &[(f64, f64)]) -> Self {
-        assert!(readings.len() >= 2, "memory model needs >= 2 profiling readings");
-        let xs: Vec<f64> = readings.iter().map(|r| r.0).collect();
-        let ys: Vec<f64> = readings.iter().map(|r| r.1).collect();
+        let valid: Vec<(f64, f64)> =
+            readings.iter().copied().filter(|(x, y)| x.is_finite() && y.is_finite()).collect();
+        let distinct_xs = {
+            let mut xs: Vec<u64> = valid.iter().map(|r| r.0.to_bits()).collect();
+            xs.sort_unstable();
+            xs.dedup();
+            xs.len()
+        };
+        if valid.len() < 2 || distinct_xs < 2 {
+            let ys: Vec<f64> = valid.iter().map(|r| r.1).collect();
+            return Self {
+                category: MemCategory::Unclear,
+                slope_gb_per_gb: 0.0,
+                intercept_gb: crate::util::stats::mean(&ys),
+                r2: 0.0,
+                readings: valid,
+            };
+        }
+        let xs: Vec<f64> = valid.iter().map(|r| r.0).collect();
+        let ys: Vec<f64> = valid.iter().map(|r| r.1).collect();
         let (slope, intercept) = ols_fit(&xs, &ys);
         let r2 = r2_score(&xs, &ys);
 
@@ -77,7 +105,7 @@ impl MemoryModel {
         } else {
             MemCategory::Unclear
         };
-        Self { category, slope_gb_per_gb: slope, intercept_gb: intercept, r2, readings: readings.to_vec() }
+        Self { category, slope_gb_per_gb: slope, intercept_gb: intercept, r2, readings: valid }
     }
 
     /// Extrapolated memory requirement of the job itself (GB) for a full
@@ -175,8 +203,43 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "needs >= 2")]
-    fn rejects_single_reading() {
-        MemoryModel::fit(&[(1.0, 1.0)]);
+    fn fewer_than_two_valid_readings_is_unclear() {
+        // A single reading, an empty outcome, and a pair where one
+        // reading is non-finite all carry no growth information: the
+        // fit must degrade to Unclear, never panic or extrapolate.
+        for readings in [
+            vec![(1.0, 1.0)],
+            vec![],
+            vec![(1.0, 1.0), (2.0, f64::NAN)],
+            vec![(f64::INFINITY, 1.0), (2.0, 1.5)],
+        ] {
+            let m = MemoryModel::fit(&readings);
+            assert_eq!(m.category, MemCategory::Unclear, "readings {readings:?}");
+            assert!(m.slope_gb_per_gb.is_finite() && m.intercept_gb.is_finite());
+            assert!(m.estimate_requirement_gb(100.0).is_finite());
+        }
+    }
+
+    #[test]
+    fn duplicate_sample_sizes_do_not_poison_the_fit() {
+        // Controller re-runs at the same fraction: partial duplicates
+        // are legitimate OLS input and keep the true slope.
+        let readings =
+            [(1.0, 2.5), (1.0, 2.5), (2.0, 5.0), (3.0, 7.5), (4.0, 10.0)];
+        let m = MemoryModel::fit(&readings);
+        assert_eq!(m.category, MemCategory::Linear);
+        assert!((m.slope_gb_per_gb - 2.5).abs() < 1e-9, "slope {}", m.slope_gb_per_gb);
+    }
+
+    #[test]
+    fn all_readings_at_one_sample_size_are_unclear() {
+        // Every run at the same fraction: growth is unobservable, so the
+        // job is Unclear — a naive fit would report slope 0 and call it
+        // Flat, which is absence of evidence mislabeled as evidence.
+        let readings = [(2.0, 1.0), (2.0, 5.0), (2.0, 3.0), (2.0, 4.0), (2.0, 2.0)];
+        let m = MemoryModel::fit(&readings);
+        assert_eq!(m.category, MemCategory::Unclear);
+        assert_eq!(m.slope_gb_per_gb, 0.0);
+        assert!(m.intercept_gb.is_finite() && m.r2 == 0.0);
     }
 }

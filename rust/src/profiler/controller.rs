@@ -36,6 +36,19 @@ impl ProfilingOutcome {
     pub fn readings(&self) -> Vec<(f64, f64)> {
         self.runs.iter().map(|r| (r.sample_gb, r.peak_mem_gb)).collect()
     }
+
+    /// [`Self::readings`] restricted to valid measurements: finite
+    /// pairs from runs that were not cancelled at the runtime ceiling.
+    /// This is what the memory model should be fitted on — a truncated
+    /// profiling phase (crashed runs, < 2 survivors) then degrades to
+    /// an `Unclear` fit instead of extrapolating from garbage.
+    pub fn valid_readings(&self) -> Vec<(f64, f64)> {
+        self.runs
+            .iter()
+            .filter(|r| !r.cancelled && r.sample_gb.is_finite() && r.peak_mem_gb.is_finite())
+            .map(|r| (r.sample_gb, r.peak_mem_gb))
+            .collect()
+    }
 }
 
 /// Iteratively adjusts the sample fraction until the profiling run lands

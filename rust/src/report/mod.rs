@@ -2,7 +2,7 @@
 //! figures as gnuplot-style `.dat` series, plus JSON export for
 //! downstream tooling.
 
-use crate::coordinator::{ExperimentResult, ProfileSummary};
+use crate::coordinator::{ExperimentResult, PipelineOutcome, ProfileSummary, THRESHOLDS};
 use crate::util::json::JsonWriter;
 use std::fmt::Write as _;
 
@@ -119,6 +119,94 @@ pub fn experiment_to_json(result: &ExperimentResult) -> String {
         }
         w.end_array();
     }
+    w.end_object();
+    w.finish()
+}
+
+/// Render the end-to-end pipeline experiment matrix: per job, the
+/// shortlist narrowing and the narrowed-vs-full-catalog search at an
+/// equal iteration `budget` ("-" = threshold not reached in budget).
+pub fn render_pipeline_matrix(outcomes: &[PipelineOutcome], budget: usize) -> String {
+    let fmt_iters = |it: Option<usize>| match it {
+        Some(k) => k.to_string(),
+        None => "-".to_string(),
+    };
+    let mut t = TextTable::new(&[
+        "Job",
+        "Cat.",
+        "Shortlist",
+        "Narrow<=1.1",
+        "Full<=1.1",
+        "Narrow best",
+        "Full best",
+        "Crispy",
+        "Profiling s",
+    ]);
+    for o in outcomes {
+        t.row(&[
+            o.label.clone(),
+            o.category.name().to_string(),
+            format!("{}/{}", o.shortlist_len, o.catalog_len),
+            fmt_iters(o.narrowed_iters_to(THRESHOLDS[1])),
+            fmt_iters(o.full_iters_to(THRESHOLDS[1])),
+            format!("{:.4}", o.narrowed.best_after(budget)),
+            format!("{:.4}", o.full.best_after(budget)),
+            format!("{:.4}", o.crispy_cost),
+            format!("{:.0}", o.profiling_time_s),
+        ]);
+    }
+    t.render()
+}
+
+/// Export the pipeline experiment matrix as JSON.
+pub fn pipeline_to_json(outcomes: &[PipelineOutcome], budget: usize, seed: u64) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("budget").number(budget as f64);
+    w.key("seed").number(seed as f64);
+    w.key("jobs").begin_array();
+    for o in outcomes {
+        w.begin_object();
+        w.key("label").string(&o.label);
+        w.key("category").string(o.category.name());
+        if let Some(req) = o.requirement_gb {
+            w.key("requirement_gb").number(req);
+        }
+        w.key("r2").number(o.r2);
+        w.key("profiling_time_s").number(o.profiling_time_s);
+        w.key("catalog_len").number(o.catalog_len as f64);
+        w.key("shortlist_len").number(o.shortlist_len as f64);
+        w.key("engaged").boolean(o.engaged());
+        if let Some((lo, hi)) = o.shortlist_mem_gb {
+            w.key("shortlist_mem_gb").begin_array();
+            w.number(lo);
+            w.number(hi);
+            w.end_array();
+        }
+        w.key("crispy_cost").number(o.crispy_cost);
+        for (name, iters, best) in [
+            ("narrowed", &o.narrowed, o.narrowed.best_after(budget)),
+            ("full", &o.full, o.full.best_after(budget)),
+        ] {
+            w.key(name).begin_object();
+            w.key("iters_to").begin_array();
+            for thr in THRESHOLDS {
+                match iters.first_within(thr) {
+                    Some(k) => w.number(k as f64),
+                    None => w.null(),
+                };
+            }
+            w.end_array();
+            w.key("tried").number(iters.tried.len() as f64);
+            w.key("best").number(best);
+            w.end_object();
+        }
+        if let Some(q) = o.quotient(THRESHOLDS[1]) {
+            w.key("quotient_1_1").number(q);
+        }
+        w.end_object();
+    }
+    w.end_array();
     w.end_object();
     w.finish()
 }

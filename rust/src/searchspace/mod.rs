@@ -305,6 +305,21 @@ impl SearchSpace {
             .map(|c| c.usable_memory_gb())
             .fold(0.0, f64::max)
     }
+
+    /// (min, max) usable memory (GB) over a subset of the space — the
+    /// pipeline report prints this to show what memory band a
+    /// shortlist actually covers. `None` for an empty subset.
+    pub fn usable_memory_bounds(&self, indices: &[usize]) -> Option<(f64, f64)> {
+        let mut bounds: Option<(f64, f64)> = None;
+        for &i in indices {
+            let gb = self.configs[i].usable_memory_gb();
+            bounds = Some(match bounds {
+                None => (gb, gb),
+                Some((lo, hi)) => (lo.min(gb), hi.max(gb)),
+            });
+        }
+        bounds
+    }
 }
 
 pub use encoding::N_FEATURES;

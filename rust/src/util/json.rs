@@ -312,6 +312,12 @@ impl JsonWriter {
         self
     }
 
+    pub fn null(&mut self) -> &mut Self {
+        self.comma();
+        self.buf.push_str("null");
+        self
+    }
+
     pub fn finish(self) -> String {
         self.buf
     }
