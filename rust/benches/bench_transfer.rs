@@ -1,0 +1,208 @@
+//! §Transfer bench: warm-started BO from cross-job behavior clusters vs
+//! the cold narrowed search, under leave-one-out — each held-out job is
+//! warmed from a [`TransferStore`] built from the *other* jobs only, so
+//! a job can never warm itself (belt-and-braces: its label is also
+//! passed as the exclusion to `warm_start`).
+//!
+//! Per job and seed the race runs the memory-aware pipeline cold
+//! (profiler → model → shortlist → BO) over the scout catalog, then
+//! re-runs the narrowed search from the transferred prior at the same
+//! seed and budget, and reports iterations-to-(cost ≤ 1.1) for both
+//! legs.
+//!
+//! `--smoke` (the CI mode) asserts the transfer layer's contract:
+//! every held-out job finds applicable evidence, the warm leg is no
+//! worse than the cold leg in total executions-to-threshold over the
+//! full 16-job × 2-seed matrix (not-reached counts as budget+1), at
+//! least one job wins strictly, and a store holding only the job
+//! itself yields no warm start once that label is excluded.
+//!
+//! [`TransferStore`]: ruya::coordinator::TransferStore
+
+#[path = "harness.rs"]
+mod harness;
+
+use ruya::bayesopt::BoParams;
+use ruya::coordinator::{signature, MemoryPipeline, SessionEngine, TransferStore, THRESHOLDS};
+use ruya::workload::evaluation_jobs;
+use std::time::Instant;
+
+const SEED: u64 = 0xC0FFEE;
+
+/// One job's cold-vs-warm verdict at a given seed.
+struct Leg {
+    label: String,
+    /// Cold narrowed iterations to cost ≤ 1.1 (1-based; None = never).
+    cold: Option<usize>,
+    /// Warm iterations to the same threshold; equals `cold` when no
+    /// transferable evidence applied (a tie by definition).
+    warm: Option<usize>,
+    /// Whether a warm start was actually mined and run.
+    warmed: bool,
+    /// Seeds the prior offered (before the in-phase filter).
+    seeds: usize,
+}
+
+/// Race every evaluation job cold-vs-warm at one seed. The cold leg
+/// registers each job on a shared engine and absorbs nothing; the warm
+/// leg then rebuilds, per held-out job, a store from the other jobs'
+/// cold narrowed outcomes and reruns the narrowed search from that
+/// prior at the identical seed and budget.
+fn race(seed: u64) -> Vec<Leg> {
+    let pipeline = MemoryPipeline::native();
+    let space = &pipeline.runner.space;
+    let budget = space.len();
+    let jobs = evaluation_jobs();
+    let mut engine = SessionEngine::new(1);
+
+    // Cold pass: signatures + cold narrowed outcomes for every job.
+    let mut sigs = Vec::new();
+    let mut cold = Vec::new();
+    for job in &jobs {
+        let profile = pipeline.runner.profile_job(job, seed);
+        sigs.push(signature(job, &profile.model));
+        let out = pipeline.run_job(&mut engine, job, seed, budget).expect("cold pipeline run");
+        cold.push(out.narrowed);
+    }
+
+    // Warm pass under true leave-one-out.
+    let mut legs = Vec::new();
+    for (j, job) in jobs.iter().enumerate() {
+        let mut store = TransferStore::default();
+        for (k, outcome) in cold.iter().enumerate() {
+            if k != j {
+                store.absorb(&sigs[k], space, outcome);
+            }
+        }
+        let label = job.label();
+        let cold_iters = cold[j].first_within(THRESHOLDS[1]);
+        match store.warm_start(&sigs[j], space, Some(&label)) {
+            Some(warm) => {
+                let handle = engine.job_index(&label).expect("cold pass registered the job");
+                let params = BoParams { max_iters: budget, ..Default::default() };
+                let sid = engine
+                    .open_warm(handle, seed ^ job.job_id, params, &warm)
+                    .expect("open warm session");
+                engine.run_all().expect("run warm session");
+                let outcome = engine.outcome(sid).expect("warm session outcome");
+                legs.push(Leg {
+                    label,
+                    cold: cold_iters,
+                    warm: outcome.first_within(THRESHOLDS[1]),
+                    warmed: true,
+                    seeds: warm.seeds.len(),
+                });
+            }
+            None => legs.push(Leg {
+                label,
+                cold: cold_iters,
+                warm: cold_iters,
+                warmed: false,
+                seeds: 0,
+            }),
+        }
+    }
+    legs
+}
+
+fn fmt_iters(it: Option<usize>) -> String {
+    it.map_or_else(|| "-".to_string(), |k| k.to_string())
+}
+
+fn print_legs(seed: u64, legs: &[Leg]) {
+    for leg in legs {
+        let prior = if leg.warmed {
+            format!("{} seeds offered", leg.seeds)
+        } else {
+            "cold (no evidence)".to_string()
+        };
+        println!(
+            "  {:27} seed {seed:>9x}  cold<=1.1 {:>4}  warm<=1.1 {:>4}  {prior}",
+            leg.label,
+            fmt_iters(leg.cold),
+            fmt_iters(leg.warm),
+        );
+    }
+}
+
+fn smoke() {
+    harness::section("transfer smoke (CI guard, leave-one-out warm vs cold)");
+    let t0 = Instant::now();
+    let budget = MemoryPipeline::native().runner.space.len();
+    let spend = |it: &Option<usize>| it.unwrap_or(budget + 1);
+
+    let mut cold_total = 0usize;
+    let mut warm_total = 0usize;
+    let mut strict_win = false;
+    let mut jobs_seen = 0usize;
+    for &seed in &[SEED, SEED ^ 0xBADC0DE] {
+        let legs = race(seed);
+        print_legs(seed, &legs);
+        for leg in &legs {
+            assert!(
+                leg.warmed,
+                "{}: no transferable evidence despite 15 absorbed sibling jobs",
+                leg.label
+            );
+            cold_total += spend(&leg.cold);
+            warm_total += spend(&leg.warm);
+            strict_win |= spend(&leg.warm) < spend(&leg.cold);
+        }
+        jobs_seen += legs.len();
+    }
+    assert_eq!(jobs_seen, 32, "expected the 16 evaluation jobs x 2 seeds");
+    assert!(
+        warm_total <= cold_total,
+        "warm-started searches fell behind cold over the matrix: \
+         {warm_total} vs {cold_total} total executions to cost <= 1.1"
+    );
+    assert!(
+        strict_win,
+        "no job reached cost <= 1.1 strictly sooner warm than cold"
+    );
+
+    // The leave-one-out guarantee itself: a store that only ever saw the
+    // held-out job must refuse to warm it.
+    let pipeline = MemoryPipeline::native();
+    let job = &evaluation_jobs()[0];
+    let profile = pipeline.runner.profile_job(job, SEED);
+    let sig = signature(job, &profile.model);
+    let mut engine = SessionEngine::new(1);
+    let out = pipeline.run_job(&mut engine, job, SEED, budget).expect("pipeline run");
+    let mut own = TransferStore::default();
+    own.absorb(&sig, &pipeline.runner.space, &out.narrowed);
+    assert!(
+        own.warm_start(&sig, &pipeline.runner.space, Some(&job.label())).is_none(),
+        "a job warmed itself through the label exclusion"
+    );
+
+    println!(
+        "smoke ok: all 32 job-seed legs warmed, warm beats-or-ties cold \
+         ({warm_total} vs {cold_total} executions to <=1.1, with a strict win), \
+         self-transfer refused, in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
+
+    harness::section("cross-job transfer: leave-one-out warm vs cold narrowed search");
+    for &seed in &[SEED, SEED ^ 0xBADC0DE] {
+        let t0 = Instant::now();
+        let legs = race(seed);
+        print_legs(seed, &legs);
+        let spend = |it: &Option<usize>| it.unwrap_or(usize::MAX);
+        let wins = legs.iter().filter(|l| spend(&l.warm) < spend(&l.cold)).count();
+        let ties = legs.iter().filter(|l| spend(&l.warm) == spend(&l.cold)).count();
+        println!(
+            "seed {seed:x}: warm wins {wins}, ties {ties}, losses {} of {} jobs  ({:.1}s)",
+            legs.len() - wins - ties,
+            legs.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

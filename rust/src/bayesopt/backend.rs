@@ -236,6 +236,12 @@ pub trait GpBackend {
     ) -> Result<Decision>;
 
     /// Negative log marginal likelihood per hyperparameter triple.
+    /// `grid` is whatever the caller sweeps — usually the full
+    /// [`hyperparameter_grid`](super::hyperparameter_grid), but a
+    /// warm-started search passes a narrowed subset of its rows
+    /// ([`WarmStart::grid_slots`](super::WarmStart)); implementations
+    /// must size their output by `grid.len()`, not assume the AOT
+    /// 32-slot shape.
     fn nll_grid(
         &mut self,
         x: &[f64],

@@ -2,6 +2,11 @@
 //! regression with expected improvement, hyperparameter selection by
 //! marginal likelihood, and the phase-aware search loop shared by
 //! CherryPick and Ruya.
+//!
+//! Searches start cold by default; a [`WarmStart`] prior (mined by
+//! `coordinator::transfer` from completed searches on similar jobs)
+//! seeds the initial design and narrows the hyperparameter sweep — see
+//! the [`search`] module docs for the exact semantics.
 
 pub mod backend;
 pub mod chol;
@@ -27,6 +32,6 @@ pub use lowrank::{
 pub use pool::{LaneScratch, WorkerPool};
 pub use search::{
     hyperparameter_grid, run_search, BoParams, CursorSnapshot, SearchCursor, SearchOutcome,
-    SearchStep,
+    SearchStep, WarmStart,
 };
 pub use simd::{set_simd, simd_active, simd_available, SIMD_PARITY_RTOL};

@@ -35,6 +35,27 @@
 //! is plain data, exposed via [`SearchCursor::snapshot`] so the session
 //! layer (`coordinator::session`) can serialize a search mid-flight and
 //! resume it bit-identically.
+//!
+//! # Warm starts (cross-job transfer)
+//!
+//! A search may begin from a [`WarmStart`] prior instead of a cold
+//! random draw ([`SearchCursor::with_warm_start`]). The prior carries
+//! two things mined from completed searches on behaviorally similar
+//! jobs (`coordinator::transfer`):
+//!
+//! * **seed configs** — catalog indices that replace the random initial
+//!   design. Seeds outside the opening phase (or out of catalog bounds)
+//!   are ignored; if fewer than `n_init` seeds survive the filter the
+//!   design is topped up with the usual random draw, so a warm search
+//!   spends exactly the same initial budget as a cold one.
+//! * **grid slots** — a subset of the 32-slot hyperparameter grid
+//!   ([`hyperparameter_grid`]). When present, the cursor sweeps only
+//!   those slots in `nll_grid`; slot indices map back to the full grid
+//!   via [`SearchCursor::grid_slots`]. An empty subset means the full
+//!   grid (a cold search).
+//!
+//! An all-empty `WarmStart` is *exactly* a cold search: the RNG draw
+//! sequence, grid, and trace are bit-identical to [`SearchCursor::new`].
 
 use super::backend::GpBackend;
 use crate::util::rng::Pcg64;
@@ -86,6 +107,26 @@ pub fn hyperparameter_grid() -> Vec<[f64; 3]> {
     grid
 }
 
+/// A transfer prior for one search: seed configurations for the initial
+/// design plus a hyperparameter-grid restriction, both mined from
+/// completed searches on similar jobs (see the module docs and
+/// `coordinator::transfer`). `Default` is the cold search.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct WarmStart {
+    /// Catalog indices to execute as the initial design, best first.
+    pub seeds: Vec<usize>,
+    /// Full-grid slot indices (`< hyperparameter_grid().len()`) to keep
+    /// in the nll sweep; empty = the full grid.
+    pub grid_slots: Vec<usize>,
+}
+
+impl WarmStart {
+    /// True when this prior carries no information (cold search).
+    pub fn is_cold(&self) -> bool {
+        self.seeds.is_empty() && self.grid_slots.is_empty()
+    }
+}
+
 /// Complete trace of one search.
 #[derive(Debug, Clone)]
 pub struct SearchOutcome {
@@ -98,6 +139,10 @@ pub struct SearchOutcome {
     pub stop_after: Option<usize>,
     /// Execution count at which each phase was entered.
     pub phase_starts: Vec<usize>,
+    /// Times each full-grid hyperparameter slot won the nll sweep over
+    /// the trace (length = `hyperparameter_grid().len()`): the per-job
+    /// posterior over hyperparameters that the transfer layer persists.
+    pub grid_hits: Vec<u32>,
 }
 
 impl SearchOutcome {
@@ -164,7 +209,17 @@ pub struct SearchCursor {
     d: usize,
     rng: Pcg64,
     params: BoParams,
+    /// The (possibly warm-narrowed) hyperparameter grid this cursor
+    /// sweeps; row `r` is full-grid slot `grid_slots[r]`.
     grid: Vec<[f64; 3]>,
+    /// Full-grid slot index of each `grid` row (identity when cold).
+    grid_slots: Vec<usize>,
+    /// Per-full-slot count of nll-sweep wins (derived state: rebuilt by
+    /// resume replay, deliberately absent from [`CursorSnapshot`]).
+    grid_hits: Vec<u32>,
+    /// Warm seed configs for the initial design (validated, deduped;
+    /// empty = cold random draw).
+    warm_seeds: Vec<usize>,
     tried: Vec<usize>,
     costs: Vec<f64>,
     x_obs: Vec<f64>,
@@ -194,9 +249,45 @@ impl SearchCursor {
     /// `plan`'s phases. The RNG is consumed from its current position
     /// (pass a fresh `Pcg64::from_seed` for a reproducible session).
     pub fn new(plan: Arc<Vec<Vec<usize>>>, m: usize, d: usize, rng: Pcg64, params: BoParams) -> Self {
+        Self::with_warm_start(plan, m, d, rng, params, &WarmStart::default())
+    }
+
+    /// Like [`Self::new`] but seeded from a transfer prior (see the
+    /// module docs): `warm.seeds` replace the random initial design and
+    /// `warm.grid_slots` narrow the hyperparameter sweep. A cold
+    /// (`WarmStart::default`) prior reproduces `new` bit-for-bit.
+    pub fn with_warm_start(
+        plan: Arc<Vec<Vec<usize>>>,
+        m: usize,
+        d: usize,
+        rng: Pcg64,
+        params: BoParams,
+        warm: &WarmStart,
+    ) -> Self {
         for phase in plan.iter() {
             for &i in phase {
                 assert!(i < m, "phase index {i} out of bounds (space size {m})");
+            }
+        }
+        let full = hyperparameter_grid();
+        let mut slots: Vec<usize> =
+            warm.grid_slots.iter().copied().filter(|&s| s < full.len()).collect();
+        slots.sort_unstable();
+        slots.dedup();
+        let grid_hits = vec![0u32; full.len()];
+        let (grid, grid_slots) = if slots.is_empty() {
+            let n = full.len();
+            (full, (0..n).collect())
+        } else {
+            (slots.iter().map(|&s| full[s]).collect(), slots)
+        };
+        let mut warm_seeds: Vec<usize> = Vec::with_capacity(warm.seeds.len());
+        for &s in &warm.seeds {
+            // Out-of-catalog seeds (a prior mined on a different space)
+            // are dropped rather than rejected: a stale prior degrades
+            // to a cold start, it does not fail the search.
+            if s < m && !warm_seeds.contains(&s) {
+                warm_seeds.push(s);
             }
         }
         Self {
@@ -205,7 +296,10 @@ impl SearchCursor {
             d,
             rng,
             params,
-            grid: hyperparameter_grid(),
+            grid,
+            grid_slots,
+            grid_hits,
+            warm_seeds,
             tried: Vec::new(),
             costs: Vec::new(),
             x_obs: Vec::new(),
@@ -249,11 +343,30 @@ impl SearchCursor {
             if !self.phase_entered {
                 self.phase_entered = true;
                 self.phase_starts.push(self.tried.len());
-                // Random initialization (first phase only, drawn inside it).
+                // Initialization (first non-empty phase only, drawn
+                // inside it): warm seeds that fall inside this phase
+                // replace the random design, capped at `n_init` so warm
+                // and cold searches spend the same initial budget. If
+                // fewer than `n_init` seeds apply, the remainder is the
+                // usual random draw over the rest of the phase; with no
+                // seeds the draw call — and hence the RNG position and
+                // the whole trace — is identical to the cold search.
                 if self.tried.is_empty() {
                     let k = self.params.n_init.min(phase.len());
-                    let picks = self.rng.sample_distinct(phase.len(), k);
-                    self.pending = picks.into_iter().map(|p| phase[p]).collect();
+                    let mut init: Vec<usize> = self
+                        .warm_seeds
+                        .iter()
+                        .copied()
+                        .filter(|s| phase.contains(s))
+                        .take(k)
+                        .collect();
+                    if init.len() < k {
+                        let rest: Vec<usize> =
+                            phase.iter().copied().filter(|i| !init.contains(i)).collect();
+                        let picks = self.rng.sample_distinct(rest.len(), k - init.len());
+                        init.extend(picks.into_iter().map(|p| rest[p]));
+                    }
+                    self.pending = init.into_iter().collect();
                     self.pending_gate = true;
                     continue;
                 }
@@ -336,9 +449,49 @@ impl SearchCursor {
         &self.cmask
     }
 
-    /// The hyperparameter-selection grid this cursor sweeps.
+    /// The hyperparameter-selection grid this cursor sweeps (narrowed
+    /// under a warm start; see [`Self::grid_slots`] for the mapping).
     pub fn grid(&self) -> &[[f64; 3]] {
         &self.grid
+    }
+
+    /// Full-grid slot index of each [`Self::grid`] row (the identity
+    /// mapping for a cold search).
+    pub fn grid_slots(&self) -> &[usize] {
+        &self.grid_slots
+    }
+
+    /// Per-full-slot nll-sweep win counts so far (see
+    /// [`SearchOutcome::grid_hits`]).
+    pub fn grid_hits(&self) -> &[u32] {
+        &self.grid_hits
+    }
+
+    /// The validated warm seed configs this cursor was opened with.
+    pub fn warm_seeds(&self) -> &[usize] {
+        &self.warm_seeds
+    }
+
+    /// The (validated) transfer prior this cursor runs under, in the
+    /// form that reconstructs it exactly: passing the returned value to
+    /// [`Self::with_warm_start`] with the same plan/seed reproduces
+    /// this cursor's draw sequence bit for bit. Cold cursors return
+    /// `WarmStart::default()` (the identity grid encodes as empty).
+    pub fn warm_start(&self) -> WarmStart {
+        let grid_slots = if self.grid.len() == self.grid_hits.len() {
+            Vec::new()
+        } else {
+            self.grid_slots.clone()
+        };
+        WarmStart { seeds: self.warm_seeds.clone(), grid_slots }
+    }
+
+    /// Record that `row` of [`Self::grid`] won an nll sweep. Callers
+    /// running the nll/decide sequence externally (the session engine's
+    /// batched fan-out) must report the winning row here so the
+    /// transfer layer sees the same posterior as the direct path.
+    pub fn note_grid_choice(&mut self, row: usize) {
+        self.grid_hits[self.grid_slots[row]] += 1;
     }
 
     /// Close a decision whose EI/variance vectors were computed
@@ -395,7 +548,9 @@ impl SearchCursor {
 
         // Hyperparameter selection by marginal likelihood.
         let nll = backend.nll_grid(x_win, &y_std, n, self.d, &self.grid)?;
-        let hyp = self.grid[argmin(&nll)];
+        let row = argmin(&nll);
+        self.note_grid_choice(row);
+        let hyp = self.grid[row];
 
         // Acquisition over the eligible candidates.
         let decision =
@@ -458,6 +613,7 @@ impl SearchCursor {
             costs: self.costs.clone(),
             stop_after: self.stop_after,
             phase_starts: self.phase_starts.clone(),
+            grid_hits: self.grid_hits.clone(),
         }
     }
 
@@ -811,6 +967,99 @@ mod tests {
         assert_eq!(out.phase_starts, reference.phase_starts);
         // The wrapper also hands back the advanced RNG position.
         assert_eq!(rng.to_parts(), cursor.rng().to_parts());
+    }
+
+    fn run_warm(phases: &[Vec<usize>], seed: u64, warm: &WarmStart) -> (SearchOutcome, Vec<usize>) {
+        let m = 40;
+        let (features, costs) = toy_space(m);
+        let mut backend = NativeBackend::new();
+        let mut cursor = SearchCursor::with_warm_start(
+            Arc::new(phases.to_vec()),
+            m,
+            6,
+            Pcg64::from_seed(seed),
+            BoParams::default(),
+            warm,
+        );
+        loop {
+            match cursor.advance() {
+                SearchStep::Done => break,
+                SearchStep::Execute(i) => cursor.record(i, costs[i], &features),
+                SearchStep::NeedsDecision => {
+                    if let Some(p) =
+                        cursor.decide_with_backend(&features, &mut backend).expect("decision")
+                    {
+                        cursor.record(p, costs[p], &features);
+                    }
+                }
+            }
+        }
+        let slots = cursor.grid_slots().to_vec();
+        (cursor.outcome(), slots)
+    }
+
+    #[test]
+    fn warm_seeds_replace_the_random_initial_design() {
+        let phases = vec![(0..40).collect::<Vec<_>>()];
+        let warm = WarmStart { seeds: vec![30, 10, 2, 5], grid_slots: vec![] };
+        let (out, _) = run_warm(&phases, 13, &warm);
+        // n_init = 3: exactly the first three seeds, in order.
+        assert_eq!(out.tried[..3], [30, 10, 2]);
+    }
+
+    #[test]
+    fn short_warm_seed_list_is_topped_up_randomly() {
+        let phases = vec![(0..40).collect::<Vec<_>>()];
+        // 99 is out of catalog, 7 repeats: one usable seed survives.
+        let warm = WarmStart { seeds: vec![99, 7, 7], grid_slots: vec![] };
+        let (out, _) = run_warm(&phases, 13, &warm);
+        assert_eq!(out.tried[0], 7);
+        let mut inits = out.tried[..3].to_vec();
+        inits.sort_unstable();
+        inits.dedup();
+        assert_eq!(inits.len(), 3, "initial design must stay {} distinct configs", 3);
+    }
+
+    #[test]
+    fn out_of_phase_warm_seeds_fall_back_to_cold_draw() {
+        // Seeds outside the priority phase are ignored, and with none
+        // applying the trace is bit-identical to the cold search.
+        let priority: Vec<usize> = (20..30).collect();
+        let rest: Vec<usize> = (0..40).filter(|i| !priority.contains(i)).collect();
+        let phases = vec![priority, rest];
+        let warm = WarmStart { seeds: vec![0, 35], grid_slots: vec![] };
+        let (warm_out, _) = run_warm(&phases, 13, &warm);
+        let cold = run_toy(&phases, 13, &BoParams::default());
+        assert_eq!(warm_out.tried, cold.tried);
+    }
+
+    #[test]
+    fn warm_grid_slots_narrow_the_sweep() {
+        let phases = vec![(0..40).collect::<Vec<_>>()];
+        // Duplicate and out-of-range slots are dropped; the kept rows
+        // must be exactly the named full-grid entries.
+        let warm = WarmStart { seeds: vec![], grid_slots: vec![6, 4, 99, 4, 5, 7] };
+        let (out, slots) = run_warm(&phases, 13, &warm);
+        assert_eq!(slots, vec![4, 5, 6, 7]);
+        assert_eq!(out.grid_hits.len(), hyperparameter_grid().len());
+        for (s, &h) in out.grid_hits.iter().enumerate() {
+            assert!(
+                h == 0 || slots.contains(&s),
+                "full-grid slot {s} won a sweep outside the narrowed set"
+            );
+        }
+        // Every decision lands one hit; 40 executions minus 3 inits.
+        let total: u32 = out.grid_hits.iter().sum();
+        assert_eq!(total as usize, out.tried.len() - 3);
+    }
+
+    #[test]
+    fn cold_cursor_sweeps_the_identity_grid() {
+        let phases = vec![(0..40).collect::<Vec<_>>()];
+        let (out, slots) = run_warm(&phases, 11, &WarmStart::default());
+        assert_eq!(slots, (0..hyperparameter_grid().len()).collect::<Vec<_>>());
+        let cold = run_toy(&phases, 11, &BoParams::default());
+        assert_eq!(out.tried, cold.tried);
     }
 
     #[test]

@@ -56,10 +56,14 @@ impl CrispySelector {
             c.price_per_hour() / eff
         };
 
+        // Total order on (score, index): `total_cmp` sorts NaN after
+        // +inf, so a configuration with a non-finite score (a corrupt
+        // catalog price) can never shadow a finite one, and the index
+        // tie-break keeps the pick deterministic when scores tie.
         let best = admissible
             .iter()
             .copied()
-            .min_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap())
+            .min_by(|&a, &b| score(a).total_cmp(&score(b)).then(a.cmp(&b)))
             .expect("plan phases are never empty");
 
         CrispyChoice {
@@ -105,6 +109,38 @@ mod tests {
         // The pick comes from the low-memory priority group.
         let low = space.lowest_memory_configs(10);
         assert!(low.contains(&choice.config_idx));
+    }
+
+    #[test]
+    fn non_finite_price_never_wins_selection() {
+        use crate::searchspace::{
+            register_machine_for_tests, ClusterConfig, MachineFamily, MachineSize, MachineType,
+        };
+        // A corrupt catalog entry: plausible specs but a NaN price —
+        // this used to panic the comparator in `select` outright.
+        let nan_machine = register_machine_for_tests(MachineType {
+            name: "test.nan-price",
+            family: MachineFamily::R,
+            size: MachineSize::XXLarge,
+            cores: 8,
+            ram_gb: 61.0,
+            price_hourly: f64::NAN,
+        });
+        let space = SearchSpace::from_configs(vec![
+            ClusterConfig { machine: nan_machine, nodes: 12 },
+            ClusterConfig { machine: 8, nodes: 12 }, // r4.2xlarge, finite price
+        ]);
+        // Linear model, modest requirement: both configs admissible, so
+        // the NaN-priced one reaches the score comparator.
+        let readings: Vec<(f64, f64)> = (1..=5).map(|k| (k as f64, k as f64)).collect();
+        let model = MemoryModel::fit(&readings);
+        let choice = CrispySelector::default().select(&model, 100.8, &space);
+        assert_eq!(choice.category, MemCategory::Linear);
+        assert_eq!(choice.admissible, 2, "both configs must be memory-admissible");
+        assert_eq!(
+            choice.config_idx, 1,
+            "a non-finite score must never shadow a finite one"
+        );
     }
 
     #[test]

@@ -29,12 +29,23 @@
 //! uninterrupted run (pinned by `tests/session.rs` and the
 //! `fuzz_parity` seeded runner). [`SessionStats`] exposes the batching
 //! and lifecycle counters the `bench_sessions` smoke asserts on.
+//!
+//! # Cross-job transfer
+//!
+//! [`transfer`] closes the loop *across* jobs: completed searches
+//! deposit per-cluster posteriors (top evaluated configs + winning
+//! hyperparameter slots) keyed by a deterministic behavior signature,
+//! and new searches on similar jobs start from a mined
+//! [`WarmStart`](crate::bayesopt::WarmStart)
+//! (`ruya pipeline --warm`, inspected by `ruya transfer`) instead of
+//! random initial picks.
 
 mod crispy;
 mod experiment;
 mod pipeline;
 mod planner;
 mod session;
+mod transfer;
 
 pub use crispy::{CrispyChoice, CrispySelector};
 pub use experiment::{
@@ -45,4 +56,8 @@ pub use pipeline::{MemoryPipeline, PipelineOutcome, Shortlist, PIPELINE_DEFAULT_
 pub use planner::{RuyaPlanner, SearchPlan};
 pub use session::{
     replay_cursor, SessionEngine, SessionState, SessionStats, SESSION_STATE_VERSION,
+};
+pub use transfer::{
+    distance, signature, JobEvidence, JobSignature, TopConfig, TransferCluster, TransferStore,
+    DEFAULT_CLUSTER_RADIUS, DEFAULT_TOP_K, SIG_DIM, TRANSFER_STORE_VERSION,
 };

@@ -34,6 +34,7 @@
 use super::experiment::ExperimentRunner;
 use super::planner::SearchPlan;
 use super::session::SessionEngine;
+use super::transfer::{signature, TransferStore};
 use crate::bayesopt::{BoParams, SearchOutcome};
 use crate::coordinator::CrispySelector;
 use crate::memmodel::{MemCategory, MemoryModel};
@@ -112,6 +113,13 @@ pub struct PipelineOutcome {
     pub narrowed: SearchOutcome,
     /// Full-catalog baseline at the same seed and iteration budget.
     pub full: SearchOutcome,
+    /// Warm-started narrowed search (same shortlist, seed and budget,
+    /// but initialized from the transfer store's nearest-cluster
+    /// posterior). None when the run was cold or no evidence applied.
+    pub warm: Option<SearchOutcome>,
+    /// Seed configurations the transfer store offered (before the
+    /// cursor's phase filter and `n_init` cap).
+    pub warm_seeds: usize,
 }
 
 impl PipelineOutcome {
@@ -129,6 +137,12 @@ impl PipelineOutcome {
     /// Same metric for the full-catalog baseline.
     pub fn full_iters_to(&self, thr: f64) -> Option<usize> {
         self.full.first_within(thr)
+    }
+
+    /// Same metric for the warm-started narrowed search (None when the
+    /// run was cold or the warm search never reached `thr`).
+    pub fn warm_iters_to(&self, thr: f64) -> Option<usize> {
+        self.warm.as_ref().and_then(|w| w.first_within(thr))
     }
 
     /// Iterations-to-threshold quotient narrowed/full — the paper's
@@ -229,7 +243,7 @@ impl MemoryPipeline {
                 shortlist.phases(),
             )?,
         };
-        let params = BoParams { max_iters: budget.max(1), ..Default::default() };
+        let params = BoParams { max_iters: budget, ..Default::default() };
         let rep_seed = seed ^ job.job_id;
         let sid = engine.open(handle, rep_seed, params)?;
         engine.run_all()?;
@@ -257,7 +271,46 @@ impl MemoryPipeline {
             crispy_cost: table.normalized[choice.config_idx],
             narrowed,
             full,
+            warm: None,
+            warm_seeds: 0,
         })
+    }
+
+    /// [`Self::run_job`] plus the cross-job transfer leg: after the cold
+    /// narrowed/full/Crispy trio, mine `store` for a [`WarmStart`] from
+    /// the nearest behavior cluster (the job's own label is excluded, so
+    /// re-running a job never warms it with itself) and — when evidence
+    /// applies — run one more narrowed search from that prior at the
+    /// same seed and budget. The cold narrowed outcome is then absorbed
+    /// into `store`, so jobs later in a matrix draw on every earlier
+    /// one.
+    ///
+    /// [`WarmStart`]: crate::bayesopt::WarmStart
+    pub fn run_job_warm(
+        &self,
+        engine: &mut SessionEngine,
+        job: &JobInstance,
+        seed: u64,
+        budget: usize,
+        store: &mut TransferStore,
+    ) -> Result<PipelineOutcome> {
+        let profile = self.runner.profile_job(job, seed);
+        let sig = signature(job, &profile.model);
+        let mut out = self.run_job(engine, job, seed, budget)?;
+        if let Some(warm) = store.warm_start(&sig, &self.runner.space, Some(&job.label())) {
+            let handle = engine
+                .job_index(&job.label())
+                .ok_or_else(|| anyhow!("run_job left {:?} unregistered", job.label()))?;
+            let params = BoParams { max_iters: budget, ..Default::default() };
+            let sid = engine.open_warm(handle, seed ^ job.job_id, params, &warm)?;
+            engine.run_all()?;
+            out.warm_seeds = warm.seeds.len();
+            out.warm = Some(engine.outcome(sid).ok_or_else(|| {
+                anyhow!("engine lost warm session {sid} for {:?}", job.label())
+            })?);
+        }
+        store.absorb(&sig, &self.runner.space, &out.narrowed);
+        Ok(out)
     }
 
     /// [`Self::run_job`] over a set of jobs, sharing one engine (and
@@ -274,6 +327,27 @@ impl MemoryPipeline {
     ) -> Result<Vec<PipelineOutcome>> {
         let mut engine = SessionEngine::new(gp_threads);
         jobs.iter().map(|job| self.run_job(&mut engine, job, seed, budget)).collect()
+    }
+
+    /// [`Self::run_matrix`] with the transfer loop engaged: jobs run in
+    /// order against one growing [`TransferStore`], so each job's warm
+    /// leg draws on every job before it (the first job is necessarily
+    /// cold). Returns the outcomes plus the final store, ready to be
+    /// persisted or inspected (`ruya pipeline --warm`).
+    pub fn run_matrix_warm(
+        &self,
+        jobs: &[JobInstance],
+        seed: u64,
+        budget: usize,
+        gp_threads: usize,
+    ) -> Result<(Vec<PipelineOutcome>, TransferStore)> {
+        let mut engine = SessionEngine::new(gp_threads);
+        let mut store = TransferStore::default();
+        let outcomes = jobs
+            .iter()
+            .map(|job| self.run_job_warm(&mut engine, job, seed, budget, &mut store))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((outcomes, store))
     }
 }
 
@@ -339,6 +413,40 @@ mod tests {
             assert!(shortlist.indices.contains(&i), "pick {i} escaped the shortlist");
         }
         assert!(out.crispy_cost >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn zero_budget_degrades_gracefully() {
+        let pipeline = MemoryPipeline::native();
+        let mut engine = SessionEngine::new(1);
+        let out =
+            pipeline.run_job(&mut engine, &job("K-Means Spark huge"), 7, 0).expect("budget 0");
+        assert!(out.narrowed.tried.is_empty() && out.full.tried.is_empty());
+        assert_eq!(out.quotient(1.1), None, "no search reached anything");
+        assert!(out.narrowed.best_after(usize::MAX).is_infinite());
+    }
+
+    #[test]
+    fn warm_matrix_runs_the_transfer_leg_inside_the_shortlist() {
+        let pipeline = MemoryPipeline::native();
+        let jobs = [job("K-Means Spark bigdata"), job("K-Means Spark huge")];
+        let (outs, store) =
+            pipeline.run_matrix_warm(&jobs, 7, 24, 1).expect("warm matrix");
+        assert_eq!(store.evidence_len(), 2, "both jobs deposit evidence");
+        assert!(outs[0].warm.is_none(), "first job has nothing to draw on");
+        let warm = outs[1].warm.as_ref().expect("sibling scale warms the second job");
+        assert!(outs[1].warm_seeds > 0);
+        assert!(!warm.tried.is_empty() && warm.tried.len() <= 24);
+        // The warm leg obeys the same shortlist as the cold narrowed one.
+        let (_, shortlist, _) = pipeline.shortlist_job(&jobs[1], 7);
+        for &i in &warm.tried {
+            assert!(shortlist.indices.contains(&i), "warm pick {i} escaped the shortlist");
+        }
+        // Same store, same inputs ⇒ bit-identical store and warm trace.
+        let (outs2, store2) =
+            pipeline.run_matrix_warm(&jobs, 7, 24, 1).expect("warm matrix again");
+        assert_eq!(store2.encode(), store.encode());
+        assert_eq!(outs2[1].warm.as_ref().unwrap().tried, warm.tried);
     }
 
     #[test]

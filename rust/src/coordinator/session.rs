@@ -39,12 +39,16 @@
 //! append-one calling pattern the live search used — which rewarms
 //! every incremental cache to the identical state, then verifies the
 //! rebuilt cursor's snapshot equals the suspended one bit for bit.
+//! Warm-started sessions ([`SessionEngine::open_warm`]) serialize their
+//! [`WarmStart`] prior inside the state, so the replay reconstructs the
+//! same seeded initial design and narrowed hyperparameter grid — a
+//! warm session suspends/resumes exactly like a cold one.
 
 use crate::bayesopt::gp::{expected_improvement, predict_into, standardize};
 use crate::bayesopt::{
     adaptive_gp_threads, BoParams, CholFactor, CursorSnapshot, GpBackend, LowRankGp,
-    NativeBackend, PreparedDecide, SearchCursor, SearchOutcome, SearchStep, WorkerPool,
-    DECIDE_TILE,
+    NativeBackend, PreparedDecide, SearchCursor, SearchOutcome, SearchStep, WarmStart,
+    WorkerPool, DECIDE_TILE,
 };
 use crate::searchspace::SearchSpace;
 use crate::util::json::{JsonValue, JsonWriter};
@@ -74,6 +78,11 @@ pub struct SessionState {
     pub params: BoParams,
     /// The phase plan (disjoint index sets explored in order).
     pub phases: Vec<Vec<usize>>,
+    /// The transfer prior the session was opened with (cold =
+    /// `WarmStart::default()`). Rides along so a warm-started search
+    /// resumes under the identical initial design and narrowed grid —
+    /// replay would diverge without it.
+    pub warm: WarmStart,
     /// The cursor's serializable cross-iteration state.
     pub snapshot: CursorSnapshot,
 }
@@ -164,6 +173,7 @@ impl SessionState {
             d: cursor.dim(),
             params,
             phases: phases.to_vec(),
+            warm: cursor.warm_start(),
             snapshot: cursor.snapshot(),
         }
     }
@@ -200,6 +210,23 @@ impl SessionState {
             w.end_array();
         }
         w.end_array();
+        // The warm block is omitted entirely for cold sessions, so
+        // every pre-transfer state (and its hash) is unchanged — the
+        // version stays at 1 and old states keep decoding.
+        if !self.warm.is_cold() {
+            w.key("warm").begin_object();
+            w.key("seeds").begin_array();
+            for &s in &self.warm.seeds {
+                w.number(s as f64);
+            }
+            w.end_array();
+            w.key("grid_slots").begin_array();
+            for &s in &self.warm.grid_slots {
+                w.number(s as f64);
+            }
+            w.end_array();
+            w.end_object();
+        }
         w.key("trace").begin_object();
         w.key("tried").begin_array();
         for &i in &self.snapshot.tried {
@@ -286,6 +313,14 @@ impl SessionState {
             }
         }
 
+        let warm = match v.get("warm") {
+            None | Some(JsonValue::Null) => WarmStart::default(),
+            Some(wv) => WarmStart {
+                seeds: field_usize_list(wv, "seeds")?,
+                grid_slots: field_usize_list(wv, "grid_slots")?,
+            },
+        };
+
         let trace = field(v, "trace")?;
         let tried = field_usize_list(trace, "tried")?;
         let costs: Vec<f64> = field(trace, "costs")?
@@ -320,7 +355,7 @@ impl SessionState {
             rng_state: parse_hex_u128(field_str(c, "rng_state")?)?,
             rng_inc: parse_hex_u128(field_str(c, "rng_inc")?)?,
         };
-        Ok(Self { job_label, seed, m, d, params, phases, snapshot })
+        Ok(Self { job_label, seed, m, d, params, phases, warm, snapshot })
     }
 }
 
@@ -346,13 +381,40 @@ pub fn replay_cursor(
         state.m,
         state.d
     );
+    // A cross-catalog or hand-built state can carry indices the
+    // m x d check above does not see; validate them here rather than
+    // panicking mid-replay (decode() performs the same checks, but
+    // programmatic `SessionState`s never pass through decode).
+    for (p, phase) in state.phases.iter().enumerate() {
+        for &i in phase {
+            ensure!(
+                i < state.m,
+                "phase {p} holds config index {i}, outside the {}-config catalog",
+                state.m
+            );
+        }
+    }
     let snap = &state.snapshot;
-    let mut cursor = SearchCursor::new(
+    ensure!(
+        snap.tried.len() == snap.costs.len(),
+        "trace records {} picks but {} costs",
+        snap.tried.len(),
+        snap.costs.len()
+    );
+    for (j, &i) in snap.tried.iter().enumerate() {
+        ensure!(
+            i < state.m,
+            "trace execution {j} tried config index {i}, outside the {}-config catalog",
+            state.m
+        );
+    }
+    let mut cursor = SearchCursor::with_warm_start(
         Arc::new(state.phases.clone()),
         state.m,
         state.d,
         Pcg64::from_seed(state.seed),
         state.params,
+        &state.warm,
     );
     let k = snap.tried.len();
     while cursor.executions() < k {
@@ -572,13 +634,30 @@ impl SessionEngine {
 
     /// Open a session on a registered job; returns its engine-unique id.
     pub fn open(&mut self, job: usize, seed: u64, params: BoParams) -> Result<u64> {
+        self.open_warm(job, seed, params, &WarmStart::default())
+    }
+
+    /// Open a session seeded from a transfer prior (see
+    /// `coordinator::transfer`): `warm.seeds` replace the random initial
+    /// design and `warm.grid_slots` narrow the hyperparameter sweep. A
+    /// cold prior is exactly [`Self::open`]. The prior rides in the
+    /// suspended [`SessionState`], so warm sessions suspend/resume
+    /// bit-identically like cold ones.
+    pub fn open_warm(
+        &mut self,
+        job: usize,
+        seed: u64,
+        params: BoParams,
+        warm: &WarmStart,
+    ) -> Result<u64> {
         let j = self.jobs.get(job).ok_or_else(|| anyhow!("no job with handle {job}"))?;
-        let cursor = SearchCursor::new(
+        let cursor = SearchCursor::with_warm_start(
             Arc::clone(&j.phases),
             j.m,
             j.d,
             Pcg64::from_seed(seed),
             params,
+            warm,
         );
         let id = self.next_id;
         self.next_id += 1;
@@ -641,7 +720,9 @@ impl SessionEngine {
                             job.d,
                             sess.cursor.grid(),
                         )?;
-                        let hyp = sess.cursor.grid()[argmin(&nll)];
+                        let row = argmin(&nll);
+                        sess.cursor.note_grid_choice(row);
+                        let hyp = sess.cursor.grid()[row];
                         let best_std = y_std.iter().cloned().fold(f64::INFINITY, f64::min);
                         let prepared = sess.backend.prepare_decide(
                             sess.cursor.x_window(skip),
@@ -1092,6 +1173,87 @@ mod tests {
         let mut unbound = state.clone();
         unbound.job_label = "nope".into();
         assert!(engine.resume(&unbound).is_err());
+    }
+
+    #[test]
+    fn out_of_catalog_state_is_rejected_not_panicking() {
+        // Regression: resume only checked m/d, so a state whose phase
+        // plan or trace carried indices outside the registered job's
+        // catalog assert-panicked (or index-panicked) mid-replay. It
+        // must be a clean Err naming the offending index.
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 8);
+        let phases = two_phase(&space);
+        let mut engine = SessionEngine::new(1);
+        let job = engine.register_job("j", &space, costs, phases).expect("register");
+        let id = engine.open(job, 21, small_params()).expect("open");
+        for _ in 0..4 {
+            engine.step_all().expect("step");
+        }
+        let state = engine.suspend(id).expect("suspend");
+
+        let oob = space.len() + 7;
+        let mut bad = state.clone();
+        bad.phases[1].push(oob);
+        let err = engine.resume(&bad).expect_err("oob phase index must not resume");
+        assert!(
+            err.to_string().contains(&oob.to_string()),
+            "error must name the offending index: {err}"
+        );
+
+        let mut bad = state.clone();
+        bad.snapshot.tried[0] = oob;
+        let err = engine.resume(&bad).expect_err("oob tried index must not resume");
+        assert!(
+            err.to_string().contains(&oob.to_string()),
+            "error must name the offending index: {err}"
+        );
+
+        let mut bad = state.clone();
+        bad.snapshot.costs.pop();
+        assert!(
+            engine.resume(&bad).is_err(),
+            "a picks/costs length mismatch must not resume"
+        );
+    }
+
+    #[test]
+    fn warm_session_resumes_exactly_at_every_round_boundary() {
+        let space = SearchSpace::scout();
+        let costs = scout_costs(&space, 9);
+        let phases = two_phase(&space);
+        let params = BoParams { max_iters: 10, ..Default::default() };
+        // Seeds from the priority phase (so they actually engage) and a
+        // narrowed two-lengthscale grid.
+        let warm = WarmStart {
+            seeds: vec![phases[0][5], phases[0][1], phases[0][8]],
+            grid_slots: vec![4, 5, 6, 7, 16, 17, 18, 19],
+        };
+
+        let mut engine = SessionEngine::new(2);
+        let job = engine.register_job("j", &space, costs.clone(), phases.clone()).expect("reg");
+        let id = engine.open_warm(job, 31, params, &warm).expect("open");
+        engine.run_all().expect("run");
+        let reference = engine.outcome(id).expect("outcome");
+        assert_eq!(reference.tried[..3], warm.seeds[..], "warm seeds must open the trace");
+
+        for cut in 0..12 {
+            let mut engine = SessionEngine::new(2);
+            let job =
+                engine.register_job("j", &space, costs.clone(), phases.clone()).expect("reg");
+            let id = engine.open_warm(job, 31, params, &warm).expect("open");
+            for _ in 0..cut {
+                engine.step_all().expect("step");
+            }
+            let state = engine.suspend(id).expect("suspend");
+            let decoded = SessionState::decode(&state.encode()).expect("decode");
+            assert_eq!(decoded.warm, warm, "the prior must ride in the serialized state");
+            let resumed = engine.resume(&decoded).expect("resume");
+            engine.run_all().expect("run");
+            let out = engine.outcome(resumed).expect("outcome");
+            assert_trace_eq(&out, &reference);
+            assert_eq!(out.grid_hits, reference.grid_hits, "replay must rebuild grid hits");
+        }
     }
 
     #[test]

@@ -1,0 +1,588 @@
+//! Cross-job transfer: behavior signatures, job clustering and warm
+//! starts for new searches (the Flora direction — arXiv 2502.21046 —
+//! grafted onto Ruya's own corpus shape).
+//!
+//! Every search in the repo used to start cold. This layer closes the
+//! loop across *jobs*: each completed search deposits a compact
+//! per-cluster posterior, and each new search draws a [`WarmStart`]
+//! prior from the nearest cluster instead of random initial picks.
+//!
+//! * **Signature** — [`signature`] maps a job to a deterministic
+//!   feature vector: static workload features (`workload/jobs.rs`),
+//!   the profiler's memory series, and the fitted [`MemoryModel`]
+//!   slope/R²/category. The ground-truth `mem_behavior` is
+//!   deliberately excluded — the signature only sees what a real
+//!   deployment could observe.
+//! * **Clustering** — [`TransferStore::absorb`] runs leader-style
+//!   clustering: a signature joins the nearest existing cluster within
+//!   [`DEFAULT_CLUSTER_RADIUS`], else founds a new cluster whose
+//!   center *is* the founding signature. No running means, no
+//!   iteration-order ambiguity: the same corpus absorbed in the same
+//!   order always yields bit-identical clusters.
+//! * **Posterior** — per absorbed job the store keeps the top-k
+//!   cheapest evaluated configurations (as portable
+//!   `(machine, nodes)` pairs plus their costs) and the
+//!   hyperparameter-grid slots that won nll sweeps
+//!   ([`SearchOutcome::grid_hits`]).
+//! * **Warm start** — [`TransferStore::warm_start`] walks clusters by
+//!   center distance and mines the nearest one with usable evidence:
+//!   merged top configs (deduped, cheapest first, mapped into the
+//!   target catalog) become seed picks, and the union of winning grid
+//!   slots — expanded to whole lengthscale rows so the noise level
+//!   stays free — becomes the narrowed sweep. `exclude_label` is the
+//!   leave-one-out guard: a job's own evidence never warms itself.
+//!
+//! The store serializes via `util/json.rs` with hex-encoded floats
+//! ([`TransferStore::encode`]/[`TransferStore::decode`]), so a corpus
+//! posterior survives process exit bit-exactly, like a
+//! [`SessionState`](super::SessionState).
+
+use crate::bayesopt::{hyperparameter_grid, SearchOutcome, WarmStart};
+use crate::memmodel::{MemCategory, MemoryModel};
+use crate::searchspace::SearchSpace;
+use crate::util::json::{JsonValue, JsonWriter};
+use crate::workload::{Framework, JobInstance};
+use anyhow::{anyhow, ensure, Result};
+
+/// Version tag of the [`TransferStore`] encoding.
+pub const TRANSFER_STORE_VERSION: u64 = 1;
+
+/// Dimension of a behavior signature (see [`signature`]).
+pub const SIG_DIM: usize = 12;
+
+/// Leader-clustering admission radius in signature space. Signature
+/// coordinates are scaled to roughly [0, 1]; on the Table II corpus
+/// this groups the two input scales of one algorithm (distance ~0.1)
+/// and separates algorithms (distance ≳ 0.4).
+pub const DEFAULT_CLUSTER_RADIUS: f64 = 0.25;
+
+/// Top evaluated configurations kept per absorbed job.
+pub const DEFAULT_TOP_K: usize = 8;
+
+/// Noise levels per lengthscale row of [`hyperparameter_grid`]: slot
+/// `s` belongs to lengthscale row `s / 4`.
+const NOISE_LEVELS_PER_LS: usize = 4;
+
+fn hex_f64(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn parse_hex_f64(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad f64 hex {s:?}: {e}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn field<'a>(v: &'a JsonValue, key: &str) -> Result<&'a JsonValue> {
+    v.get(key).ok_or_else(|| anyhow!("transfer store missing field {key:?}"))
+}
+
+fn field_str<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+    field(v, key)?.as_str().ok_or_else(|| anyhow!("field {key:?} is not a string"))
+}
+
+fn field_usize(v: &JsonValue, key: &str) -> Result<usize> {
+    let f = field(v, key)?.as_f64().ok_or_else(|| anyhow!("field {key:?} is not a number"))?;
+    ensure!(
+        f.is_finite() && f >= 0.0 && f.fract() == 0.0 && f <= 2f64.powi(53),
+        "field {key:?} is not an index-sized integer: {f}"
+    );
+    Ok(f as usize)
+}
+
+fn field_array<'a>(v: &'a JsonValue, key: &str) -> Result<&'a [JsonValue]> {
+    field(v, key)?.as_array().ok_or_else(|| anyhow!("field {key:?} is not an array"))
+}
+
+/// A job's deterministic behavior signature: the clustering key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSignature {
+    /// The job's display label (doubles as the leave-one-out key).
+    pub label: String,
+    /// [`SIG_DIM`] coordinates, each scaled to roughly [0, 1].
+    pub features: Vec<f64>,
+}
+
+/// Squared-error distance between two signatures.
+pub fn distance(a: &JobSignature, b: &JobSignature) -> f64 {
+    debug_assert_eq!(a.features.len(), b.features.len());
+    a.features
+        .iter()
+        .zip(&b.features)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Build the behavior signature of `job` from its fitted memory model
+/// (which carries the profiler's memory series in
+/// [`MemoryModel::readings`]). Pure and deterministic: same job + same
+/// model ⇒ bit-identical signature.
+pub fn signature(job: &JobInstance, model: &MemoryModel) -> JobSignature {
+    let a = &job.algo;
+    // Relative memory growth across the profiled sample range — the
+    // series' own evidence, independent of the fitted line.
+    let mut series: Vec<(f64, f64)> = model.readings.clone();
+    series.sort_by(|x, y| x.0.total_cmp(&y.0));
+    let series_growth = if series.len() >= 2 {
+        let mean = series.iter().map(|r| r.1).sum::<f64>() / series.len() as f64;
+        if mean.abs() > 1e-12 {
+            (((series[series.len() - 1].1 - series[0].1) / mean).clamp(-2.0, 2.0) + 2.0) / 4.0
+        } else {
+            0.0
+        }
+    } else {
+        0.0
+    };
+    let features = vec![
+        match a.framework {
+            Framework::Spark => 0.0,
+            Framework::Hadoop => 1.0,
+        },
+        (a.passes.max(1) as f64).ln() / (16f64).ln(),
+        (a.cpu_core_h_per_gb_pass / 0.02).clamp(0.0, 1.5),
+        (a.serial_h / 0.02).clamp(0.0, 1.5),
+        a.shuffle_frac.clamp(0.0, 1.0),
+        if a.cache_sensitive { 1.0 } else { 0.0 },
+        job.input_gb.max(1.0).log10() / 3.0,
+        (model.slope_gb_per_gb / 6.0).clamp(-1.0, 1.0),
+        model.r2.clamp(0.0, 1.0),
+        if model.category == MemCategory::Linear { 1.0 } else { 0.0 },
+        if model.category == MemCategory::Flat { 1.0 } else { 0.0 },
+        series_growth,
+    ];
+    debug_assert_eq!(features.len(), SIG_DIM);
+    JobSignature { label: job.label(), features }
+}
+
+/// One evaluated configuration worth remembering, stored as a portable
+/// `(machine, nodes)` pair (catalog indices are catalog-specific; the
+/// machine registry is process-global).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopConfig {
+    pub machine: usize,
+    pub nodes: u32,
+    /// Normalized cost the source search observed.
+    pub cost: f64,
+}
+
+/// The posterior one completed search deposited.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobEvidence {
+    /// Source job label (the leave-one-out key).
+    pub label: String,
+    /// Full-grid hyperparameter slots that won ≥ 1 nll sweep, ascending.
+    pub slots: Vec<usize>,
+    /// Cheapest evaluated configurations, best first (≤ top_k).
+    pub top: Vec<TopConfig>,
+}
+
+/// One behavior cluster: the founding signature plus the evidence of
+/// every member job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferCluster {
+    pub center: JobSignature,
+    pub evidence: Vec<JobEvidence>,
+}
+
+/// The persistent cross-job posterior store (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferStore {
+    radius: f64,
+    top_k: usize,
+    clusters: Vec<TransferCluster>,
+}
+
+impl Default for TransferStore {
+    fn default() -> Self {
+        Self::new(DEFAULT_CLUSTER_RADIUS, DEFAULT_TOP_K)
+    }
+}
+
+impl TransferStore {
+    pub fn new(radius: f64, top_k: usize) -> Self {
+        Self { radius, top_k, clusters: Vec::new() }
+    }
+
+    pub fn clusters(&self) -> &[TransferCluster] {
+        &self.clusters
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clusters.is_empty()
+    }
+
+    /// Total jobs absorbed across all clusters.
+    pub fn evidence_len(&self) -> usize {
+        self.clusters.iter().map(|c| c.evidence.len()).sum()
+    }
+
+    /// Clusters ranked by center distance to `sig` (ties broken by the
+    /// lower cluster index — founding order — for determinism).
+    fn ranked(&self, sig: &JobSignature) -> Vec<(usize, f64)> {
+        let mut order: Vec<(usize, f64)> = self
+            .clusters
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, distance(&c.center, sig)))
+            .collect();
+        order.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        order
+    }
+
+    /// Deposit a completed search: cluster `sig` (leader clustering —
+    /// join the nearest cluster within the radius, else found a new
+    /// one) and record the job's top-k cheapest evaluated configs plus
+    /// its winning grid slots. Re-absorbing a label replaces its
+    /// evidence in place.
+    pub fn absorb(&mut self, sig: &JobSignature, space: &SearchSpace, outcome: &SearchOutcome) {
+        let mut order: Vec<usize> = (0..outcome.tried.len())
+            .filter(|&i| outcome.tried[i] < space.len() && outcome.costs[i].is_finite())
+            .collect();
+        order.sort_by(|&a, &b| outcome.costs[a].total_cmp(&outcome.costs[b]).then(a.cmp(&b)));
+        let top: Vec<TopConfig> = order
+            .iter()
+            .take(self.top_k)
+            .map(|&i| {
+                let c = space.config(outcome.tried[i]);
+                TopConfig { machine: c.machine, nodes: c.nodes, cost: outcome.costs[i] }
+            })
+            .collect();
+        let slots: Vec<usize> = outcome
+            .grid_hits
+            .iter()
+            .enumerate()
+            .filter(|&(_, &h)| h > 0)
+            .map(|(s, _)| s)
+            .collect();
+        let evidence = JobEvidence { label: sig.label.clone(), slots, top };
+
+        let target = match self.ranked(sig).first() {
+            Some(&(ci, dist)) if dist <= self.radius => ci,
+            _ => {
+                self.clusters.push(TransferCluster { center: sig.clone(), evidence: Vec::new() });
+                self.clusters.len() - 1
+            }
+        };
+        let cluster = &mut self.clusters[target];
+        match cluster.evidence.iter_mut().find(|e| e.label == evidence.label) {
+            Some(existing) => *existing = evidence,
+            None => cluster.evidence.push(evidence),
+        }
+    }
+
+    /// Mine a warm start for the job with signature `sig` against
+    /// `space`: walk clusters by center distance and use the nearest
+    /// one holding evidence from a job other than `exclude_label` (the
+    /// leave-one-out guard). Returns `None` when no usable evidence
+    /// exists anywhere — the search then starts cold.
+    pub fn warm_start(
+        &self,
+        sig: &JobSignature,
+        space: &SearchSpace,
+        exclude_label: Option<&str>,
+    ) -> Option<WarmStart> {
+        for (ci, _) in self.ranked(sig) {
+            let evidence: Vec<&JobEvidence> = self.clusters[ci]
+                .evidence
+                .iter()
+                .filter(|e| exclude_label != Some(e.label.as_str()))
+                .collect();
+            if evidence.is_empty() {
+                continue;
+            }
+
+            // Seeds: merged top configs, cheapest first, deduped by the
+            // catalog index they map to in *this* space (configs absent
+            // from the target catalog are dropped).
+            let mut ranked_tops: Vec<(f64, usize)> = Vec::new();
+            for e in &evidence {
+                for t in &e.top {
+                    if let Some(idx) = space
+                        .configs()
+                        .iter()
+                        .position(|c| c.machine == t.machine && c.nodes == t.nodes)
+                    {
+                        ranked_tops.push((t.cost, idx));
+                    }
+                }
+            }
+            ranked_tops.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut seeds: Vec<usize> = Vec::new();
+            for (_, idx) in ranked_tops {
+                if !seeds.contains(&idx) {
+                    seeds.push(idx);
+                    if seeds.len() == self.top_k {
+                        break;
+                    }
+                }
+            }
+
+            // Grid restriction: the union of winning slots, expanded to
+            // whole lengthscale rows — the transferred belief is about
+            // the cost surface's smoothness, not the new job's noise
+            // level, so all four noise columns of a winning row stay in.
+            let mut slots: Vec<usize> = Vec::new();
+            let grid_len = hyperparameter_grid().len();
+            for e in &evidence {
+                for &s in &e.slots {
+                    let row = s.min(grid_len - 1) / NOISE_LEVELS_PER_LS;
+                    for col in 0..NOISE_LEVELS_PER_LS {
+                        let full = row * NOISE_LEVELS_PER_LS + col;
+                        if !slots.contains(&full) {
+                            slots.push(full);
+                        }
+                    }
+                }
+            }
+            slots.sort_unstable();
+            if slots.len() == grid_len {
+                // Everything survived: that is no restriction at all.
+                slots.clear();
+            }
+
+            if seeds.is_empty() && slots.is_empty() {
+                continue;
+            }
+            return Some(WarmStart { seeds, grid_slots: slots });
+        }
+        None
+    }
+
+    /// Serialize to versioned JSON; floats are hex bit-patterns so the
+    /// round-trip is bit-exact.
+    pub fn encode(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("version").number(TRANSFER_STORE_VERSION as f64);
+        w.key("radius").string(&hex_f64(self.radius));
+        w.key("top_k").number(self.top_k as f64);
+        w.key("clusters").begin_array();
+        for cluster in &self.clusters {
+            w.begin_object();
+            w.key("center").begin_object();
+            w.key("label").string(&cluster.center.label);
+            w.key("features").begin_array();
+            for &f in &cluster.center.features {
+                w.string(&hex_f64(f));
+            }
+            w.end_array();
+            w.end_object();
+            w.key("evidence").begin_array();
+            for e in &cluster.evidence {
+                w.begin_object();
+                w.key("label").string(&e.label);
+                w.key("slots").begin_array();
+                for &s in &e.slots {
+                    w.number(s as f64);
+                }
+                w.end_array();
+                w.key("top").begin_array();
+                for t in &e.top {
+                    w.begin_object();
+                    w.key("machine").number(t.machine as f64);
+                    w.key("nodes").number(t.nodes as f64);
+                    w.key("cost").string(&hex_f64(t.cost));
+                    w.end_object();
+                }
+                w.end_array();
+                w.end_object();
+            }
+            w.end_array();
+            w.end_object();
+        }
+        w.end_array();
+        w.end_object();
+        w.finish()
+    }
+
+    /// Parse a store produced by [`Self::encode`].
+    pub fn decode(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text).map_err(|e| anyhow!("bad transfer store JSON: {e}"))?;
+        let version = field_usize(&v, "version")? as u64;
+        ensure!(
+            version == TRANSFER_STORE_VERSION,
+            "transfer store version {version} (this build reads {TRANSFER_STORE_VERSION})"
+        );
+        let radius = parse_hex_f64(field_str(&v, "radius")?)?;
+        let top_k = field_usize(&v, "top_k")?;
+        let mut clusters = Vec::new();
+        for cv in field_array(&v, "clusters")? {
+            let center_v = field(cv, "center")?;
+            let features: Vec<f64> = field_array(center_v, "features")?
+                .iter()
+                .map(|f| {
+                    parse_hex_f64(
+                        f.as_str().ok_or_else(|| anyhow!("feature is not a hex string"))?,
+                    )
+                })
+                .collect::<Result<_>>()?;
+            ensure!(
+                features.len() == SIG_DIM,
+                "cluster center has {} features, signatures have {SIG_DIM}",
+                features.len()
+            );
+            let center =
+                JobSignature { label: field_str(center_v, "label")?.to_string(), features };
+            let mut evidence = Vec::new();
+            for ev in field_array(cv, "evidence")? {
+                let slots: Vec<usize> = field_array(ev, "slots")?
+                    .iter()
+                    .map(|s| {
+                        let f = s.as_f64().ok_or_else(|| anyhow!("slot is not a number"))?;
+                        ensure!(f.fract() == 0.0 && f >= 0.0, "slot {f} is not an index");
+                        Ok(f as usize)
+                    })
+                    .collect::<Result<_>>()?;
+                let mut top = Vec::new();
+                for tv in field_array(ev, "top")? {
+                    top.push(TopConfig {
+                        machine: field_usize(tv, "machine")?,
+                        nodes: u32::try_from(field_usize(tv, "nodes")?)
+                            .map_err(|_| anyhow!("node count out of range"))?,
+                        cost: parse_hex_f64(field_str(tv, "cost")?)?,
+                    });
+                }
+                evidence.push(JobEvidence {
+                    label: field_str(ev, "label")?.to_string(),
+                    slots,
+                    top,
+                });
+            }
+            clusters.push(TransferCluster { center, evidence });
+        }
+        Ok(Self { radius, top_k, clusters })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::evaluation_jobs;
+
+    fn sig(label: &str, x: f64) -> JobSignature {
+        JobSignature { label: label.to_string(), features: vec![x; SIG_DIM] }
+    }
+
+    fn outcome(tried: Vec<usize>, costs: Vec<f64>, hot_slots: &[usize]) -> SearchOutcome {
+        let mut grid_hits = vec![0u32; hyperparameter_grid().len()];
+        for &s in hot_slots {
+            grid_hits[s] += 1;
+        }
+        SearchOutcome { tried, costs, stop_after: None, phase_starts: vec![0], grid_hits }
+    }
+
+    fn space() -> SearchSpace {
+        SearchSpace::scout()
+    }
+
+    #[test]
+    fn leader_clustering_groups_by_radius() {
+        let mut store = TransferStore::new(0.2, 4);
+        let sp = space();
+        store.absorb(&sig("a", 0.0), &sp, &outcome(vec![0], vec![1.0], &[0]));
+        store.absorb(&sig("b", 0.01), &sp, &outcome(vec![1], vec![1.1], &[1]));
+        store.absorb(&sig("c", 0.9), &sp, &outcome(vec![2], vec![1.2], &[2]));
+        assert_eq!(store.clusters().len(), 2, "a/b join, c founds its own");
+        assert_eq!(store.clusters()[0].evidence.len(), 2);
+        assert_eq!(store.clusters()[1].evidence.len(), 1);
+        // Centers are founding signatures, not running means.
+        assert_eq!(store.clusters()[0].center.label, "a");
+    }
+
+    #[test]
+    fn warm_start_never_uses_the_excluded_jobs_evidence() {
+        let mut store = TransferStore::default();
+        let sp = space();
+        store.absorb(&sig("only", 0.5), &sp, &outcome(vec![3, 4], vec![1.0, 1.3], &[8]));
+        // The one job in the store is the one being warmed: leave-one-
+        // out must leave nothing.
+        assert!(store.warm_start(&sig("only", 0.5), &sp, Some("only")).is_none());
+        // Without exclusion the evidence is usable.
+        let warm = store.warm_start(&sig("only", 0.5), &sp, None).expect("warm");
+        assert_eq!(warm.seeds, vec![3, 4]);
+        assert_eq!(warm.grid_slots, vec![8, 9, 10, 11], "slot 8 expands to its ls row");
+    }
+
+    #[test]
+    fn warm_start_merges_cluster_evidence_cheapest_first() {
+        let mut store = TransferStore::new(0.2, 4);
+        let sp = space();
+        store.absorb(&sig("a", 0.0), &sp, &outcome(vec![5, 6], vec![1.4, 1.0], &[0]));
+        store.absorb(&sig("b", 0.02), &sp, &outcome(vec![6, 7], vec![1.2, 1.1], &[4]));
+        let warm = store.warm_start(&sig("q", 0.01), &sp, None).expect("warm");
+        // Merged and deduped: 6 (cost 1.0) then 7 (1.1) then 5 (1.4);
+        // config 6 appears once despite two sources.
+        assert_eq!(warm.seeds, vec![6, 7, 5]);
+        assert_eq!(warm.grid_slots, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn warm_start_falls_through_to_the_nearest_cluster_with_evidence() {
+        let mut store = TransferStore::new(0.05, 4);
+        let sp = space();
+        store.absorb(&sig("self", 0.5), &sp, &outcome(vec![1], vec![1.0], &[0]));
+        store.absorb(&sig("far", 0.8), &sp, &outcome(vec![2], vec![1.0], &[4]));
+        // Nearest cluster holds only the excluded job; the farther one
+        // must be used instead of returning None.
+        let warm = store.warm_start(&sig("self", 0.5), &sp, Some("self")).expect("warm");
+        assert_eq!(warm.seeds, vec![2]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_exact() {
+        let mut store = TransferStore::default();
+        let sp = space();
+        let jobs = evaluation_jobs();
+        for (i, job) in jobs.iter().take(4).enumerate() {
+            let model = MemoryModel::fit(&[(1.0, 2.0 + i as f64), (2.0, 3.0 + i as f64)]);
+            let s = signature(job, &model);
+            store.absorb(&s, &sp, &outcome(vec![i, i + 1], vec![1.0 + i as f64 * 0.1, 1.5], &[i]));
+        }
+        let text = store.encode();
+        let back = TransferStore::decode(&text).expect("decode");
+        assert_eq!(back, store);
+        assert_eq!(back.encode(), text, "re-encode must be byte-identical");
+    }
+
+    #[test]
+    fn signatures_are_deterministic_and_ignore_ground_truth() {
+        let jobs = evaluation_jobs();
+        let model = MemoryModel::fit(&[(1.0, 2.5), (2.0, 5.0), (3.0, 7.5)]);
+        let a = signature(&jobs[0], &model);
+        let b = signature(&jobs[0], &model);
+        assert_eq!(a, b);
+        assert_eq!(a.features.len(), SIG_DIM);
+        assert!(a.features.iter().all(|f| f.is_finite()));
+    }
+
+    #[test]
+    fn sibling_scales_cluster_together_and_algorithms_apart() {
+        // Same algorithm at its two input scales must land within the
+        // default radius; structurally different algorithms must not.
+        let jobs = evaluation_jobs();
+        let model = MemoryModel::fit(&[(1.0, 2.5), (2.0, 5.0), (3.0, 7.5)]);
+        let nb_big = signature(&jobs[0], &model); // Naive Bayes bigdata
+        let nb_huge = signature(&jobs[1], &model); // Naive Bayes huge
+        let terasort = signature(&jobs[14], &model); // Terasort bigdata
+        assert!(
+            distance(&nb_big, &nb_huge) <= DEFAULT_CLUSTER_RADIUS,
+            "sibling scales too far apart: {}",
+            distance(&nb_big, &nb_huge)
+        );
+        assert!(
+            distance(&nb_big, &terasort) > DEFAULT_CLUSTER_RADIUS,
+            "different algorithms clustered together: {}",
+            distance(&nb_big, &terasort)
+        );
+    }
+
+    #[test]
+    fn full_grid_coverage_means_no_restriction() {
+        let mut store = TransferStore::default();
+        let sp = space();
+        let all: Vec<usize> = (0..hyperparameter_grid().len()).collect();
+        store.absorb(&sig("wide", 0.5), &sp, &outcome(vec![0], vec![1.0], &all));
+        let warm = store.warm_start(&sig("near", 0.5), &sp, None).expect("warm");
+        assert!(warm.grid_slots.is_empty(), "covering every slot is not a restriction");
+    }
+}

@@ -48,7 +48,7 @@ use std::io::BufRead;
 use std::path::Path;
 
 fn main() {
-    let args = Args::parse(&["verbose", "help"]);
+    let args = Args::parse(&["verbose", "help", "warm"]);
     if let Err(e) = run(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -111,6 +111,7 @@ fn run(args: &Args) -> Result<()> {
         "search" => search_one(&runner, args, &cfg),
         "serve" => serve(&runner, args, &cfg, gp_threads),
         "pipeline" => pipeline_cmd(runner, args, &cfg, gp_threads, out_dir),
+        "transfer" => transfer_cmd(runner, args, &cfg, gp_threads, out_dir),
         "crispy" => crispy(&runner, args, cfg.seed),
         "stopping" => stopping(&runner, &cfg),
         "all" => {
@@ -361,17 +362,111 @@ fn pipeline_cmd(
     };
     let pipeline = ruya::coordinator::MemoryPipeline::new(runner);
     let budget = args.opt_usize("max-iters", pipeline.default_budget());
+    let warm = args.flag("warm");
     eprintln!(
-        "pipeline: {} job(s) over {} configs; narrowed + full searches at {} iterations each",
+        "pipeline: {} job(s) over {} configs; narrowed + full searches at {} iterations each{}",
         jobs.len(),
         pipeline.runner.space.len(),
-        budget
+        budget,
+        if warm { " (+ warm-started leg via cross-job transfer)" } else { "" }
     );
-    let outcomes = pipeline.run_matrix(&jobs, cfg.seed, budget, gp_threads)?;
+    let (outcomes, store) = if warm {
+        let (o, s) = pipeline.run_matrix_warm(&jobs, cfg.seed, budget, gp_threads)?;
+        (o, Some(s))
+    } else {
+        (pipeline.run_matrix(&jobs, cfg.seed, budget, gp_threads)?, None)
+    };
     let rendered = report::render_pipeline_matrix(&outcomes, budget);
     println!("Memory-aware pipeline: profiler -> memory model -> shortlist -> BO\n\n{rendered}");
     write_out(out, "pipeline.md", &rendered)?;
-    write_out(out, "pipeline.json", &report::pipeline_to_json(&outcomes, budget, cfg.seed))
+    write_out(out, "pipeline.json", &report::pipeline_to_json(&outcomes, budget, cfg.seed))?;
+    if let Some(store) = store {
+        eprintln!(
+            "transfer store: {} behavior cluster(s) holding {} job posterior(s)",
+            store.clusters().len(),
+            store.evidence_len()
+        );
+        write_out(out, "transfer.json", &store.encode())?;
+    }
+    Ok(())
+}
+
+/// `ruya transfer` — inspect the cross-job transfer layer: absorb one
+/// cold narrowed search per evaluation job into a fresh store, print
+/// the behavior clusters with their deposited posteriors, then the
+/// leave-one-out warm start each job would inherit from the others
+/// (a job's own evidence is always excluded). `--out` also writes the
+/// serialized store (`transfer.json`).
+fn transfer_cmd(
+    runner: ExperimentRunner,
+    args: &Args,
+    cfg: &ExperimentConfig,
+    gp_threads: usize,
+    out: Option<&Path>,
+) -> Result<()> {
+    use ruya::coordinator::{signature, TransferStore};
+    use ruya::searchspace::machine_by_index;
+    let pipeline = ruya::coordinator::MemoryPipeline::new(runner);
+    let jobs = evaluation_jobs();
+    let budget = args.opt_usize("max-iters", pipeline.default_budget());
+    eprintln!(
+        "transfer: absorbing {} cold narrowed searches at {} iterations each, \
+         then mining leave-one-out warm starts",
+        jobs.len(),
+        budget
+    );
+    let mut engine = SessionEngine::new(gp_threads);
+    let mut store = TransferStore::default();
+    let mut sigs = Vec::new();
+    for job in &jobs {
+        let profile = pipeline.runner.profile_job(job, cfg.seed);
+        let sig = signature(job, &profile.model);
+        let outcome = pipeline.run_job(&mut engine, job, cfg.seed, budget)?;
+        store.absorb(&sig, &pipeline.runner.space, &outcome.narrowed);
+        sigs.push(sig);
+    }
+
+    println!(
+        "Behavior clusters: {} over {} absorbed jobs\n",
+        store.clusters().len(),
+        store.evidence_len()
+    );
+    for (ci, cluster) in store.clusters().iter().enumerate() {
+        println!("cluster {ci} (center: {})", cluster.center.label);
+        for e in &cluster.evidence {
+            let tops: Vec<String> = e
+                .top
+                .iter()
+                .take(3)
+                .map(|t| format!("{}x{} {:.3}", t.nodes, machine_by_index(t.machine).name, t.cost))
+                .collect();
+            println!(
+                "  {:27} grid slots {:?}  top: {}",
+                e.label,
+                e.slots,
+                tops.join(", ")
+            );
+        }
+    }
+
+    let grid_len = ruya::bayesopt::hyperparameter_grid().len();
+    println!("\nLeave-one-out warm starts (what a fresh run of each job inherits):\n");
+    for (job, sig) in jobs.iter().zip(&sigs) {
+        match store.warm_start(sig, &pipeline.runner.space, Some(&job.label())) {
+            Some(w) => {
+                let seeds: Vec<String> =
+                    w.seeds.iter().map(|&i| pipeline.runner.space.config(i).name()).collect();
+                let grid = if w.grid_slots.is_empty() {
+                    format!("full {grid_len}-slot grid")
+                } else {
+                    format!("{}/{grid_len} grid slots", w.grid_slots.len())
+                };
+                println!("{:27} seeds [{}], {grid}", job.label(), seeds.join(", "));
+            }
+            None => println!("{:27} cold (no usable evidence)", job.label()),
+        }
+    }
+    write_out(out, "transfer.json", &store.encode())
 }
 
 fn profile_one(args: &Args, seed: u64) -> Result<()> {
@@ -719,7 +814,13 @@ SUBCOMMANDS
                     the shortlist only (as engine sessions), vs a
                     full-catalog baseline at the same seed and budget
                     (--job L for one job; default all 16; --max-iters N
-                    budget, default min(96, catalog size))
+                    budget, default min(96, catalog size); --warm adds a
+                    third, warm-started leg per job, seeded from the
+                    behavior clusters of every job before it)
+  transfer          inspect cross-job transfer: absorb one cold narrowed
+                    search per job into a behavior-cluster store, print
+                    the clusters + per-job leave-one-out warm starts
+                    (--out writes the serialized store, transfer.json)
   crispy [--job L]  one-shot (Crispy-style) selection, no iteration
   stopping          enforced-stop search quality (stopping criterion)
   profile --job L   run one profiling phase, print readings + model
@@ -758,6 +859,8 @@ OPTIONS
                          stays an explicit choice); 1 forces serial;
                          windows of <= 16 observations always run serial
                          (work-size floor)
+  --warm                 pipeline: run the warm-started transfer leg and
+                         report the transfer store
   --seed S               experiment seed (default 0xC0FFEE)
   --script FILE          serve: read requests from FILE instead of stdin
   --sessions N           submit: sessions per open request (k/m suffixes)

@@ -125,35 +125,59 @@ pub fn experiment_to_json(result: &ExperimentResult) -> String {
 
 /// Render the end-to-end pipeline experiment matrix: per job, the
 /// shortlist narrowing and the narrowed-vs-full-catalog search at an
-/// equal iteration `budget` ("-" = threshold not reached in budget).
+/// equal iteration `budget` ("-" = threshold not reached in budget, or
+/// no observation at all under a zero budget; the quotient column is
+/// "n/a" unless BOTH searches reached the threshold). Warm-start
+/// columns appear only when at least one outcome ran the transfer leg.
 pub fn render_pipeline_matrix(outcomes: &[PipelineOutcome], budget: usize) -> String {
     let fmt_iters = |it: Option<usize>| match it {
         Some(k) => k.to_string(),
         None => "-".to_string(),
     };
-    let mut t = TextTable::new(&[
+    let fmt_best = |b: f64| if b.is_finite() { format!("{b:.4}") } else { "-".to_string() };
+    let fmt_quot = |q: Option<f64>| match q {
+        Some(q) => format!("{:.1}%", q * 100.0),
+        None => "n/a".to_string(),
+    };
+    let warm_cols = outcomes.iter().any(|o| o.warm.is_some());
+    let mut headers = vec![
         "Job",
         "Cat.",
         "Shortlist",
         "Narrow<=1.1",
         "Full<=1.1",
+        "Q<=1.1",
         "Narrow best",
         "Full best",
         "Crispy",
         "Profiling s",
-    ]);
+    ];
+    if warm_cols {
+        headers.push("Warm<=1.1");
+        headers.push("Warm best");
+    }
+    let mut t = TextTable::new(&headers);
     for o in outcomes {
-        t.row(&[
+        let mut cells = vec![
             o.label.clone(),
             o.category.name().to_string(),
             format!("{}/{}", o.shortlist_len, o.catalog_len),
             fmt_iters(o.narrowed_iters_to(THRESHOLDS[1])),
             fmt_iters(o.full_iters_to(THRESHOLDS[1])),
-            format!("{:.4}", o.narrowed.best_after(budget)),
-            format!("{:.4}", o.full.best_after(budget)),
+            fmt_quot(o.quotient(THRESHOLDS[1])),
+            fmt_best(o.narrowed.best_after(budget)),
+            fmt_best(o.full.best_after(budget)),
             format!("{:.4}", o.crispy_cost),
             format!("{:.0}", o.profiling_time_s),
-        ]);
+        ];
+        if warm_cols {
+            cells.push(fmt_iters(o.warm_iters_to(THRESHOLDS[1])));
+            cells.push(match &o.warm {
+                Some(w) => fmt_best(w.best_after(budget)),
+                None => "-".to_string(),
+            });
+        }
+        t.row(&cells);
     }
     t.render()
 }
@@ -201,9 +225,28 @@ pub fn pipeline_to_json(outcomes: &[PipelineOutcome], budget: usize, seed: u64) 
             w.key("best").number(best);
             w.end_object();
         }
-        if let Some(q) = o.quotient(THRESHOLDS[1]) {
-            w.key("quotient_1_1").number(q);
+        if let Some(warm) = &o.warm {
+            w.key("warm").begin_object();
+            w.key("iters_to").begin_array();
+            for thr in THRESHOLDS {
+                match warm.first_within(thr) {
+                    Some(k) => w.number(k as f64),
+                    None => w.null(),
+                };
+            }
+            w.end_array();
+            w.key("tried").number(warm.tried.len() as f64);
+            w.key("best").number(warm.best_after(budget));
+            w.key("seeds_offered").number(o.warm_seeds as f64);
+            w.end_object();
         }
+        // The headline quotient is always present: null (not omitted)
+        // unless both searches reached the threshold, so downstream
+        // tooling can tell "not measured" from "key missing".
+        match o.quotient(THRESHOLDS[1]) {
+            Some(q) => w.key("quotient_1_1").number(q),
+            None => w.key("quotient_1_1").null(),
+        };
         w.end_object();
     }
     w.end_array();
@@ -259,6 +302,86 @@ impl TextTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bayesopt::{hyperparameter_grid, SearchOutcome};
+    use crate::memmodel::MemCategory;
+
+    fn outcome(costs: Vec<f64>) -> SearchOutcome {
+        SearchOutcome {
+            tried: (0..costs.len()).collect(),
+            costs,
+            stop_after: None,
+            phase_starts: vec![0],
+            grid_hits: vec![0; hyperparameter_grid().len()],
+        }
+    }
+
+    fn pipeline_outcome(narrowed: Vec<f64>, full: Vec<f64>) -> PipelineOutcome {
+        PipelineOutcome {
+            label: "job".to_string(),
+            category: MemCategory::Linear,
+            requirement_gb: Some(100.0),
+            r2: 0.99,
+            profiling_time_s: 120.0,
+            catalog_len: 69,
+            shortlist_len: 12,
+            shortlist_mem_gb: Some((100.0, 600.0)),
+            crispy_cost: 1.3,
+            narrowed: outcome(narrowed),
+            full: outcome(full),
+            warm: None,
+            warm_seeds: 0,
+        }
+    }
+
+    #[test]
+    fn quotient_is_na_unless_both_sides_reached() {
+        // Narrowed reaches 1.1, full never does: no quotient.
+        let one_sided = pipeline_outcome(vec![1.05], vec![1.5, 1.4]);
+        let text = render_pipeline_matrix(&[one_sided.clone()], 4);
+        assert!(text.contains(" n/a "), "one-sided quotient must render n/a:\n{text}");
+        let json = pipeline_to_json(&[one_sided], 4, 7);
+        assert!(
+            json.contains("\"quotient_1_1\":null"),
+            "one-sided quotient must be JSON null: {json}"
+        );
+        // Both reach: a percentage and a JSON number.
+        let both = pipeline_outcome(vec![1.05], vec![1.5, 1.05]);
+        let text = render_pipeline_matrix(&[both.clone()], 4);
+        assert!(text.contains("50.0%"), "1/2 quotient expected:\n{text}");
+        let json = pipeline_to_json(&[both], 4, 7);
+        assert!(json.contains("\"quotient_1_1\":0.5"), "{json}");
+    }
+
+    #[test]
+    fn zero_budget_outcomes_render_without_inf() {
+        // A zero-budget run has empty traces: best is -inf-free "-",
+        // iteration cells are "-", the quotient is n/a.
+        let empty = pipeline_outcome(vec![], vec![]);
+        let text = render_pipeline_matrix(&[empty.clone()], 0);
+        assert!(!text.contains("inf"), "non-finite best must not leak:\n{text}");
+        assert!(text.contains(" n/a "), "{text}");
+        let json = pipeline_to_json(&[empty], 0, 7);
+        assert!(!json.contains("inf"), "{json}");
+        assert!(json.contains("\"best\":null"), "non-finite best must be null: {json}");
+    }
+
+    #[test]
+    fn warm_columns_appear_only_with_a_warm_leg() {
+        let cold = pipeline_outcome(vec![1.05], vec![1.05]);
+        let text = render_pipeline_matrix(&[cold.clone()], 4);
+        assert!(!text.contains("Warm<=1.1"), "{text}");
+        let json = pipeline_to_json(&[cold.clone()], 4, 7);
+        assert!(!json.contains("\"warm\""), "{json}");
+
+        let mut warm = cold;
+        warm.warm = Some(outcome(vec![1.02]));
+        warm.warm_seeds = 3;
+        let text = render_pipeline_matrix(&[warm.clone()], 4);
+        assert!(text.contains("Warm<=1.1") && text.contains("Warm best"), "{text}");
+        let json = pipeline_to_json(&[warm], 4, 7);
+        assert!(json.contains("\"warm\":{"), "{json}");
+        assert!(json.contains("\"seeds_offered\":3"), "{json}");
+    }
 
     #[test]
     fn table_renders_aligned() {

@@ -182,6 +182,15 @@ fn register_machine(mt: MachineType) -> usize {
     MACHINE_CATALOG.len() + reg.len() - 1
 }
 
+/// Test-only registry access: lets tests plant a machine with corrupt
+/// specs (e.g. a non-finite price) behind a real catalog index, so
+/// NaN-hardening paths can be exercised end to end. Deduplicates by
+/// name like every registration; use a unique name per test.
+#[cfg(test)]
+pub(crate) fn register_machine_for_tests(mt: MachineType) -> usize {
+    register_machine(mt)
+}
+
 /// FNV-1a over a machine name — the only source of spec jitter, so specs
 /// are deterministic per name across processes and catalog seeds.
 fn name_hash(name: &str) -> u64 {

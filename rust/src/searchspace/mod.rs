@@ -22,6 +22,8 @@ mod encoding;
 pub use catalog::{
     machine_by_index, machine_count, MachineFamily, MachineSize, MachineType, MACHINE_CATALOG,
 };
+#[cfg(test)]
+pub(crate) use catalog::register_machine_for_tests;
 pub use encoding::FeatureEncoder;
 
 use crate::util::rng::Pcg64;
