@@ -5,7 +5,8 @@
 //! `--smoke` (the CI mode) runs 64 concurrent sessions and *asserts*
 //! (via `SessionStats`) that the admission layer batches concurrent
 //! same-catalog decisions into shared fan-outs, that sessions share the
-//! engine's one worker pool (zero per-session pool creations), and that
+//! one process-global worker pool (zero per-session pool creations, and
+//! live GP threads bounded by the pool width), and that
 //! a suspend -> serialize -> deserialize -> resume round-trip performed
 //! inside the bench rejoins the uninterrupted trace bit for bit — so
 //! the optimizer-as-a-service layer cannot silently regress in CI.
@@ -115,6 +116,15 @@ fn smoke() {
         engine.session_backend_pool_creates(),
         0,
         "a session created its own worker pool instead of sharing the engine's"
+    );
+    // The thread-budget contract of the process-global pool: however
+    // many engines, sessions and backends this process has run, the
+    // parked GP worker threads never exceed the one shared pool's width.
+    assert!(
+        ruya::bayesopt::spawned_pool_threads() <= ruya::bayesopt::global_pool_width(),
+        "GP threads exceeded the shared pool width: {} > {}",
+        ruya::bayesopt::spawned_pool_threads(),
+        ruya::bayesopt::global_pool_width()
     );
     assert_eq!((stats.suspends, stats.resumes), (1, 1), "round-trip not performed: {stats:?}");
     assert_eq!(stats.sessions_finished, 64);

@@ -5,31 +5,39 @@
 //!
 //! # Deterministic parallelism — on by default
 //!
-//! [`NativeBackend`] owns a lazily-created **persistent** worker pool
-//! ([`super::pool::WorkerPool`]): the hyperparameter-grid nll sweep fans
-//! its independent [`FactorCache`] slots (or, past the low-rank routing
-//! threshold, its (lengthscale, variance) stage groups) across the pool
-//! lanes, and a single exact decide fans its [`DECIDE_TILE`] candidate
-//! chunks the same way. Every unit of work writes to a fixed, disjoint
-//! output slot and no floating-point reduction ever crosses units, so
-//! **results are bit-identical for any worker count** —
-//! `testkit::assert_parallel_parity`, the CI determinism stress test and
-//! the randomized script fuzz (`tests/fuzz_parity.rs`) pin nll grids,
-//! posteriors, EI and the chosen argmax across `--gp-threads` 1/2/4/8.
+//! [`NativeBackend`] fans its parallel work across the **process-global**
+//! worker pool ([`super::pool::global_pool`]): the hyperparameter-grid
+//! nll sweep fans its independent [`FactorCache`] slots (or, past the
+//! low-rank routing threshold, its (lengthscale, variance) stage groups)
+//! across the shared lanes, and a single exact decide fans its
+//! [`DECIDE_TILE`] candidate chunks the same way. Every unit of work
+//! writes to a fixed, disjoint output slot and no floating-point
+//! reduction ever crosses units, so **results are bit-identical for any
+//! pool width** — and independent of any other backend concurrently
+//! sharing the lanes. `testkit::assert_parallel_parity`, its shared-pool
+//! mode, the CI determinism stress test and the randomized script fuzz
+//! (`tests/fuzz_parity.rs`) pin nll grids, posteriors, EI and the chosen
+//! argmax across `--gp-threads` 1/2/4/8.
 //!
 //! # Pool lifecycle
 //!
-//! * **Width**: `--gp-threads N` / [`NativeBackend::set_parallelism`];
-//!   `0` (the CLI default) resolves to [`adaptive_gp_threads`] — the
-//!   machine's `available_parallelism` capped at
-//!   [`MAX_ADAPTIVE_GP_THREADS`] (the grid sweep has only 8 fan-out
-//!   groups, so wider pools cannot help it). The parallel sweep is
-//!   therefore **on by default** on multicore hosts.
-//! * **Creation**: lazy — the pool spawns on the first fan-out whose
-//!   work clears the serial floor, then persists across calls (and BO
-//!   iterations) with reusable per-lane scratch
-//!   ([`super::pool::LaneScratch`]). Changing the width drops and
-//!   lazily respawns it; dropping the backend joins the workers.
+//! * **Width**: process-global, chosen once per process (`--gp-threads
+//!   N` lands in [`super::pool::configure_global_pool_width`] before the
+//!   pool first spawns); unset or `0` resolves to
+//!   [`adaptive_gp_threads`] — the machine's `available_parallelism`
+//!   capped at [`MAX_ADAPTIVE_GP_THREADS`] (the grid sweep has only 8
+//!   fan-out groups, so wider pools cannot help it). The parallel sweep
+//!   is therefore **on by default** on multicore hosts.
+//!   [`NativeBackend::set_parallelism`] no longer sizes a pool of its
+//!   own: it only gates *whether* this backend fans out (`<= 1` pins it
+//!   serial — the per-worker default of the experiment engine).
+//! * **Attachment**: lazy — the global pool spawns on the process's
+//!   first fan-out that clears the serial floor, then serves every
+//!   backend and session engine for the process lifetime with reusable
+//!   per-lane scratch keyed by backend epoch
+//!   ([`super::pool::LaneScratch`]). However many backends `--threads T`
+//!   workers instantiate, parked pool threads never exceed the global
+//!   width — the old per-backend design's T×G multiplication is gone.
 //! * **Serial floor**: grid sweeps over `n <=` [`GP_POOL_MIN_OBS`]
 //!   observations stay serial — at that size the per-call handoff
 //!   overhead exceeds the O(n²) slot work, so tiny scout-scale runs
@@ -40,8 +48,9 @@
 //!
 //! [`DecideStats`] counters make all of it observable: routing
 //! (`nll_exact`/`nll_lowrank`), fan-outs (`parallel_nll_sweeps`,
-//! `parallel_decide_fanouts`), pool lifecycle (`pool_creates`,
-//! `pool_reuses`, `serial_floor_bypasses`), inducing refreshes
+//! `parallel_decide_fanouts`), pool lifecycle (`global_pool_attach`,
+//! `pool_thread_count`, `pool_creates`, `pool_reuses`,
+//! `serial_floor_bypasses`), inducing refreshes
 //! (`fps_full_refreshes`/`fps_incremental_refreshes`) and the low-rank
 //! stage split (`lowrank_hyp_stage_builds`/`lowrank_noise_stage_builds`).
 
@@ -52,9 +61,9 @@ use super::gp::{expected_improvement, matern52_gram_from_d2, predict_into};
 use super::lowrank::{
     InducingCache, LowRankGp, LowRankStats, DEFAULT_MAX_INDUCING,
 };
-use super::pool::WorkerPool;
+use super::pool;
 use super::simd;
-use crate::runtime::{GpExecutor, XlaRuntime};
+use crate::runtime::{ExecutorPool, XlaRuntime};
 use anyhow::Result;
 
 /// Candidate count above which [`NativeBackend::decide`] switches from
@@ -158,9 +167,18 @@ pub struct DecideStats {
     pub parallel_nll_sweeps: u64,
     /// Decides whose tiles fanned out across the worker pool.
     pub parallel_decide_fanouts: u64,
-    /// Persistent pools spawned (lazy creation or width change).
+    /// 1 once this backend has attached to the process-global pool (its
+    /// first fan-out that cleared the serial floor), 0 while it has only
+    /// run serially — the thread-budget observable per backend.
+    pub global_pool_attach: u64,
+    /// The global pool width observed at attach time (0 before attach).
+    pub pool_thread_count: u64,
+    /// Fan-outs by *this* backend that actually spawned the process-
+    /// global pool — at most 1, and 0 whenever another backend (or a
+    /// session engine) got there first.
     pub pool_creates: u64,
-    /// Fan-outs served by an already-running pool — the persistence win.
+    /// Fan-outs after the first attach, served by the already-running
+    /// shared pool — the persistence win.
     pub pool_reuses: u64,
     /// Fan-outs that stayed serial under the work-size floor
     /// ([`GP_POOL_MIN_OBS`]) despite a multi-lane pool being configured.
@@ -479,12 +497,15 @@ pub struct NativeBackend {
     /// Serial-path prediction scratch (each pool worker owns its own).
     ks_scratch: Vec<f64>,
     acc_scratch: Vec<f64>,
-    /// Worker-pool width for the grid nll sweep and the decide tile
-    /// fan-out; 1 = fully serial. Defaults to [`adaptive_gp_threads`].
+    /// Fan-out gate for the grid nll sweep and the decide tiles: `<= 1`
+    /// pins this backend serial, anything larger lets it attach to the
+    /// process-global pool (whose width is set once per process, not
+    /// here). Defaults to [`adaptive_gp_threads`].
     gp_threads: usize,
-    /// The lazily-created persistent worker pool (None until the first
-    /// fan-out clears the serial floor; dropped on width change).
-    pool: Option<WorkerPool>,
+    /// This backend's scratch-keying epoch on the shared pool: stamped
+    /// on every task so a lane's persistent [`pool::LaneScratch`] is
+    /// reset whenever it changes hands between backends.
+    epoch: u64,
     /// Observation floor below which fan-outs stay serial
     /// ([`GP_POOL_MIN_OBS`]; settable for tests and benches).
     pool_min_obs: usize,
@@ -515,7 +536,7 @@ impl Default for NativeBackend {
             ks_scratch: Vec::new(),
             acc_scratch: Vec::new(),
             gp_threads: adaptive_gp_threads(),
-            pool: None,
+            epoch: pool::next_pool_epoch(),
             pool_min_obs: GP_POOL_MIN_OBS,
             inducing: InducingCache::new(),
             nll_lowrank_min_obs: LOWRANK_NLL_OBS_THRESHOLD,
@@ -539,22 +560,19 @@ impl NativeBackend {
         self.lowrank_policy = policy;
     }
 
-    /// Worker-pool width for the grid nll sweep and the decide tile
-    /// fan-out (CLI `--gp-threads`; default [`adaptive_gp_threads`],
-    /// which `0` also resolves to). Outputs are bit-identical for every
-    /// value — the module docs' deterministic-parallelism contract.
-    /// Workers live in a lazily-created persistent pool (see the module
-    /// docs' *Pool lifecycle*); changing the width drops the running
-    /// pool so the next engaging fan-out respawns it at the new width.
+    /// Fan-out gate for the grid nll sweep and the decide tiles
+    /// (default [`adaptive_gp_threads`], which `0` also resolves to):
+    /// `1` pins this backend serial, anything larger lets its engaging
+    /// fan-outs run on the process-global pool. Outputs are
+    /// bit-identical for every value — the module docs' deterministic-
+    /// parallelism contract. The pool's *width* is process-global
+    /// ([`pool::configure_global_pool_width`], set once before first
+    /// spawn); this knob no longer sizes or respawns anything.
     pub fn set_parallelism(&mut self, threads: usize) {
-        let threads = if threads == 0 { adaptive_gp_threads() } else { threads };
-        if threads != self.gp_threads {
-            self.pool = None;
-        }
-        self.gp_threads = threads;
+        self.gp_threads = if threads == 0 { adaptive_gp_threads() } else { threads };
     }
 
-    /// The configured worker-pool width.
+    /// The configured fan-out gate (see [`Self::set_parallelism`]).
     pub fn parallelism(&self) -> usize {
         self.gp_threads
     }
@@ -567,11 +585,11 @@ impl NativeBackend {
     }
 
     /// Decide whether a fan-out of `units` work groups over `n`
-    /// observations runs on the pool, creating or reusing it as needed
-    /// (and counting every outcome in [`DecideStats`]). True means
-    /// `self.pool` is `Some` and sized to the configured width. The
-    /// grid sweeps gate on the observation floor directly; `decide`
-    /// gates on its column-scaled equivalent ([`Self::engage_pool_gated`]).
+    /// observations runs on the process-global pool, attaching to it as
+    /// needed (and counting every outcome in [`DecideStats`]). True
+    /// means [`pool::global_pool`] is running. The grid sweeps gate on
+    /// the observation floor directly; `decide` gates on its
+    /// column-scaled equivalent ([`Self::engage_pool_gated`]).
     fn engage_pool(&mut self, units: usize, n: usize) -> bool {
         let below_floor = n <= self.pool_min_obs;
         self.engage_pool_gated(units, below_floor)
@@ -588,14 +606,15 @@ impl NativeBackend {
             self.decide_stats.serial_floor_bypasses += 1;
             return false;
         }
-        match &self.pool {
-            Some(p) if p.width() == self.gp_threads => {
-                self.decide_stats.pool_reuses += 1;
-            }
-            _ => {
-                self.pool = Some(WorkerPool::new(self.gp_threads));
+        let (shared, spawned_here) = pool::global_pool_acquire();
+        if self.decide_stats.global_pool_attach == 0 {
+            self.decide_stats.global_pool_attach = 1;
+            self.decide_stats.pool_thread_count = shared.width() as u64;
+            if spawned_here {
                 self.decide_stats.pool_creates += 1;
             }
+        } else {
+            self.decide_stats.pool_reuses += 1;
         }
         true
     }
@@ -832,8 +851,7 @@ impl NativeBackend {
                     vec![(items, gs)]
                 })
                 .collect();
-            let pool = self.pool.as_ref().expect("engage_pool ensured the pool");
-            pool.run_groups(units, |lane, scratch| {
+            pool::global_pool().run_groups(self.epoch, units, |lane, scratch| {
                 for (items, gs) in lane {
                     let lr = &mut scratch.lowrank;
                     lr.take_stats(); // group-local counting
@@ -967,7 +985,7 @@ impl GpBackend for NativeBackend {
         self.decide_stats.exact += 1;
 
         // Engagement is decided before the factor borrow below: the
-        // pool (a disjoint field) is created/reused here, so the fan-out
+        // global pool is attached (and counted) here, so the fan-out
         // branch only needs immutable access to it and to the factor.
         // Decide work scales with the candidate count, not just the
         // observation count, so the floor is column-scaled: a fan-out is
@@ -1002,7 +1020,6 @@ impl GpBackend for NativeBackend {
             // count (module docs). Lanes predict through their
             // persistent LaneScratch buffers (fully overwritten per
             // tile).
-            let pool = self.pool.as_ref().expect("engage_pool ensured the pool");
             let alpha_ref = &alpha[..];
             let groups: Vec<Vec<(usize, &mut [f64], &mut [f64])>> = mu
                 .chunks_mut(DECIDE_TILE)
@@ -1010,7 +1027,7 @@ impl GpBackend for NativeBackend {
                 .enumerate()
                 .map(|(t, (mu_c, var_c))| vec![(t, mu_c, var_c)])
                 .collect();
-            pool.run_groups(groups, |lane, scratch| {
+            pool::global_pool().run_groups(self.epoch, groups, |lane, scratch| {
                 scratch.reserve_tiles(n, DECIDE_TILE);
                 for (t, mu_c, var_c) in lane {
                     let start = t * DECIDE_TILE;
@@ -1147,8 +1164,7 @@ impl GpBackend for NativeBackend {
             let units: Vec<Vec<Vec<(&mut SlotTask<'_>, &mut f64)>>> =
                 groups.into_iter().map(|g| vec![g]).collect();
             let d2 = &self.d2;
-            let pool = self.pool.as_ref().expect("engage_pool ensured the pool");
-            pool.run_groups(units, |lane, scratch| {
+            pool::global_pool().run_groups(self.epoch, units, |lane, scratch| {
                 scratch.reserve_sweep(n);
                 // Memo keys are re-seeded per fan-out — the persistent
                 // lane buffers are only trusted when the keys match, so
@@ -1183,23 +1199,36 @@ impl GpBackend for NativeBackend {
     }
 }
 
-/// The deployed backend: AOT artifacts through PJRT.
+/// The deployed backend: AOT artifacts through PJRT, loaded via the
+/// pooled executor cache. Backends built from one [`ExecutorPool`] on
+/// the same OS thread share a single compiled executable set — `run_reps`
+/// repetitions and repeated factory calls no longer recompile per
+/// backend.
 pub struct XlaBackend {
-    exec: GpExecutor,
-    // keep the runtime alive as long as the executables
-    _rt: XlaRuntime,
+    pool: ExecutorPool,
+    calls: u64,
 }
 
 impl XlaBackend {
-    /// Load from the default artifact directory.
+    /// Load from the default artifact directory (a private single-use
+    /// pool; use [`XlaBackend::from_pool`] to share compilations).
     pub fn from_default_artifacts() -> Result<Self> {
-        let rt = XlaRuntime::new(XlaRuntime::default_artifact_dir())?;
-        let exec = GpExecutor::new(&rt)?;
-        Ok(Self { exec, _rt: rt })
+        Self::from_pool(ExecutorPool::from_default_artifacts())
     }
 
+    /// A backend over a shared executor pool. Probes the pool once so a
+    /// missing or malformed artifact set fails here, not on the first
+    /// decide call.
+    pub fn from_pool(pool: ExecutorPool) -> Result<Self> {
+        pool.with_executor(|_| Ok(()))?;
+        Ok(Self { pool, calls: 0 })
+    }
+
+    /// PJRT executions issued through *this* backend (the pooled
+    /// executor underneath is shared, so its own counter aggregates
+    /// across backends).
     pub fn call_count(&self) -> u64 {
-        self.exec.call_count()
+        self.calls
     }
 }
 
@@ -1217,7 +1246,8 @@ impl GpBackend for XlaBackend {
     ) -> Result<Decision> {
         debug_assert_eq!(d, crate::runtime::AOT_N_FEATURES);
         let cm: Vec<f64> = cmask.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
-        let out = self.exec.gp_ei(x, y, n, xc, &cm, m, hyp)?;
+        let out = self.pool.with_executor(|exec| exec.gp_ei(x, y, n, xc, &cm, m, hyp))?;
+        self.calls += 1;
         Ok(Decision { ei: out.ei, mu: out.mu, var: out.var })
     }
 
@@ -1230,7 +1260,9 @@ impl GpBackend for XlaBackend {
         grid: &[[f64; 3]],
     ) -> Result<Vec<f64>> {
         debug_assert_eq!(d, crate::runtime::AOT_N_FEATURES);
-        self.exec.gp_nll(x, y, n, grid)
+        let out = self.pool.with_executor(|exec| exec.gp_nll(x, y, n, grid))?;
+        self.calls += 1;
+        Ok(out)
     }
 
     fn max_obs(&self) -> usize {
@@ -1271,24 +1303,28 @@ pub fn backend_by_name(name: &str) -> Result<Box<dyn GpBackend>> {
 
 /// Backend *factory* selection by name — the parallel experiment engine
 /// instantiates one backend per worker thread from this. Equivalent to
-/// [`backend_factory_with_parallelism`] with a serial GP worker pool
-/// (deliberately: the engine multiplies backends by `--threads` workers,
-/// so per-backend pools are opted into explicitly, not defaulted).
+/// [`backend_factory_with_parallelism`] with the GP fan-out gate pinned
+/// serial (deliberately: `--threads` evaluation workers already consume
+/// the host's cores, so their backends share the global pool only when
+/// `--gp-threads` opts them in explicitly).
 pub fn backend_factory_by_name(name: &str) -> Result<BackendFactory> {
     backend_factory_with_parallelism(name, 1)
 }
 
-/// Backend factory with an explicit GP worker-pool width (CLI
+/// Backend factory with an explicit GP fan-out gate (CLI
 /// `--gp-threads`; `0` resolves to [`adaptive_gp_threads`], the CLI
 /// default): every native backend the factory produces has
 /// [`NativeBackend::set_parallelism`] applied, so each evaluation
-/// worker's backend fans its grid sweep and decide tiles across its own
-/// persistent pool. The XLA backend has no tunable internal parallelism
-/// — the knob is ignored there. Name validation is shared with
+/// worker's backend fans its grid sweep and decide tiles across the one
+/// process-global pool — T workers share the same W lanes instead of
+/// parking T×G threads. The XLA backend has no tunable internal
+/// parallelism — the knob is ignored there. Name validation is shared with
 /// [`backend_by_name`] through [`BackendKind::parse`]; the xla arm
 /// additionally probes the artifacts so an obviously bad configuration
-/// fails at startup, while the expensive PJRT client creation +
-/// artifact compilation happens once per worker, inside the worker.
+/// fails at startup, and hands every produced backend a clone of one
+/// shared [`ExecutorPool`] — PJRT client creation + artifact compilation
+/// happens once per worker *thread*, not once per backend, and repeated
+/// factory calls on the same thread reuse the compiled executables.
 pub fn backend_factory_with_parallelism(
     name: &str,
     gp_threads: usize,
@@ -1305,8 +1341,9 @@ pub fn backend_factory_with_parallelism(
                 "XLA backend unavailable: AOT artifacts not found (run `make artifacts`; \
                  the binary must also be built with the `xla-pjrt` feature)"
             );
-            Ok(Box::new(|| -> Result<Box<dyn GpBackend>> {
-                Ok(Box::new(XlaBackend::from_default_artifacts()?))
+            let pool = ExecutorPool::from_default_artifacts();
+            Ok(Box::new(move || -> Result<Box<dyn GpBackend>> {
+                Ok(Box::new(XlaBackend::from_pool(pool.clone())?))
             }))
         }
     }
@@ -1433,14 +1470,15 @@ mod tests {
         assert_eq!(nb.parallelism(), 4);
         assert_eq!(nb.decide_stats().parallel_nll_sweeps, 1);
         assert_eq!(nb.decide_stats().nll_exact, 1);
-        assert_eq!(nb.decide_stats().pool_creates, 1);
+        assert_eq!(nb.decide_stats().global_pool_attach, 1);
     }
 
     #[test]
-    fn pool_persists_and_follows_width_changes() {
-        // The persistent pool spawns once, is reused across consecutive
-        // nll_grid + decide calls, and is dropped/respawned on a width
-        // change — all observable through the lifecycle counters.
+    fn backend_attaches_to_the_global_pool_once() {
+        // A backend's first engaging fan-out attaches to the process-
+        // global pool (recording the width it saw); every later fan-out
+        // counts as a reuse — never a second attach, never a respawn on
+        // a gate change.
         let d = 3;
         let n = GP_POOL_MIN_OBS + 8; // clears the serial floor
         let (x, y, _) = synth(n, 4, d);
@@ -1453,21 +1491,34 @@ mod tests {
         b.set_parallelism(4);
         b.nll_grid(&x, &y, n, d, &grid).unwrap();
         let s = b.decide_stats();
-        assert_eq!(s.pool_creates, 1, "first engaging sweep must spawn the pool: {s:?}");
+        assert_eq!(s.global_pool_attach, 1, "first engaging sweep must attach: {s:?}");
+        assert_eq!(s.pool_thread_count, pool::global_pool_width() as u64, "{s:?}");
+        assert!(s.pool_creates <= 1, "at most one spawn per process: {s:?}");
         assert_eq!(s.pool_reuses, 0);
+        assert!(pool::global_pool_is_running());
         b.decide(&x, &y, n, d, &xc, &cmask, m, grid[5]).unwrap();
         b.nll_grid(&x, &y, n, d, &grid).unwrap();
         let s = b.decide_stats();
-        assert_eq!(s.pool_creates, 1, "later fan-outs must reuse the pool: {s:?}");
+        assert_eq!(s.global_pool_attach, 1, "attach is once per backend: {s:?}");
         assert_eq!(s.pool_reuses, 2, "decide + second sweep both reuse: {s:?}");
         assert_eq!(s.parallel_nll_sweeps, 2);
         assert_eq!(s.parallel_decide_fanouts, 1);
-        // Width change: the old pool is dropped, the next fan-out
-        // respawns at the new width.
+        // Changing the gate neither respawns nor resizes the shared
+        // pool: the next fan-out is one more reuse.
         b.set_parallelism(2);
         b.nll_grid(&x, &y, n, d, &grid).unwrap();
         let s = b.decide_stats();
-        assert_eq!(s.pool_creates, 2, "width change must respawn the pool: {s:?}");
+        assert_eq!(s.pool_reuses, 3, "gate change must not re-attach: {s:?}");
+        assert_eq!(s.pool_thread_count, pool::global_pool_width() as u64);
+        // A second backend sharing the process attaches to the same
+        // pool without spawning another one.
+        let mut b2 = NativeBackend::new();
+        b2.set_lowrank_policy(LowRankPolicy::Off);
+        b2.set_parallelism(4);
+        b2.nll_grid(&x, &y, n, d, &grid).unwrap();
+        let s2 = b2.decide_stats();
+        assert_eq!(s2.global_pool_attach, 1, "{s2:?}");
+        assert_eq!(s2.pool_creates, 0, "pool already running — no second spawn: {s2:?}");
     }
 
     #[test]
@@ -1481,14 +1532,14 @@ mod tests {
         b.nll_grid(&x, &y, n, d, &grid).unwrap();
         let s = b.decide_stats();
         assert_eq!(s.parallel_nll_sweeps, 0, "floor breached: {s:?}");
-        assert_eq!(s.pool_creates, 0, "floored sweep must not spawn a pool: {s:?}");
+        assert_eq!(s.global_pool_attach, 0, "floored sweep must not attach: {s:?}");
         assert_eq!(s.serial_floor_bypasses, 1, "bypass not counted: {s:?}");
         // Lowering the floor lets the same shape engage.
         b.set_pool_min_obs(0);
         b.nll_grid(&x, &y, n, d, &grid).unwrap();
         let s = b.decide_stats();
         assert_eq!(s.parallel_nll_sweeps, 1);
-        assert_eq!(s.pool_creates, 1);
+        assert_eq!(s.global_pool_attach, 1);
         // A single-lane backend never counts bypasses (nothing to skip).
         let mut serial = NativeBackend::new();
         serial.set_parallelism(1);

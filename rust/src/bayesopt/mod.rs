@@ -29,7 +29,10 @@ pub use lowrank::{
     farthest_point_sample, InducingCache, LowRankGp, LowRankStats, DEFAULT_MAX_INDUCING,
     INDUCING_DRIFT_LIMIT,
 };
-pub use pool::{LaneScratch, WorkerPool};
+pub use pool::{
+    configure_global_pool_width, global_pool, global_pool_is_running, global_pool_width,
+    next_pool_epoch, spawned_pool_threads, LaneScratch, WorkerPool,
+};
 pub use search::{
     hyperparameter_grid, run_search, BoParams, CursorSnapshot, SearchCursor, SearchOutcome,
     SearchStep, WarmStart,

@@ -1,54 +1,76 @@
-//! The persistent GP worker pool — the always-on execution engine behind
-//! `NativeBackend`'s parallel paths (the hyperparameter-grid nll sweep,
-//! its low-rank counterpart, and the decide tile fan-out).
+//! The **process-global** GP worker pool — the one execution engine
+//! behind every `NativeBackend` parallel path (the hyperparameter-grid
+//! nll sweep, its low-rank counterpart, the decide tile fan-out) *and*
+//! the `SessionEngine`'s batched scoring fan-out.
 //!
-//! # Why persistent
+//! # Why one pool per process
 //!
-//! The previous design spawned `std::thread::scope` workers per call:
-//! correct, but the spawn/join overhead (~tens of µs) recurs every BO
-//! iteration — twice per iteration (`nll_grid` + `decide`), thousands of
-//! iterations per experiment. [`WorkerPool`] spawns its lanes once
-//! (lazily, on the first fan-out that clears the backend's work-size
-//! floor) and keeps them parked on a channel; a fan-out is then two
-//! channel sends and a completion wait per lane.
+//! Earlier designs owned a [`WorkerPool`] per backend (and one more per
+//! session engine). Correct, but a `--threads T` engine instantiating
+//! `--gp-threads G` backends parked T×G threads — quadratic thread
+//! growth that capped how many concurrent searches a resident `ruya
+//! serve` process could multiplex. Now [`global_pool`] lazily spawns a
+//! single shared pool (width = [`adaptive_gp_threads`] unless
+//! [`configure_global_pool_width`] overrode it first) and every fan-out
+//! in the process attaches to it: total parked worker threads never
+//! exceed the pool width, no matter how many backends, engines or
+//! engine workers exist ([`spawned_pool_threads`] makes the budget
+//! observable; the `bench_sessions --smoke` CI guard asserts it).
 //!
-//! # Per-lane scratch
+//! [`adaptive_gp_threads`]: super::backend::adaptive_gp_threads
 //!
-//! Each worker owns a [`LaneScratch`] that survives across fan-outs: the
-//! cross-row/Gram buffers of the exact sweep, the prediction buffers of
-//! the decide tiles, and a whole [`LowRankGp`] (with all its internal
-//! fit scratch) for the low-rank sweep. Steady-state fan-outs therefore
-//! allocate nothing per call — the pool analog of the backend's serial
-//! scratch fields. Every consumer fully overwrites the buffers it reads
-//! (and re-seeds its memo keys per fan-out), so stale scratch can never
-//! leak into results: bit-determinism is preserved by construction.
+//! # Shared-pool determinism contract
 //!
-//! # Determinism contract
+//! [`WorkerPool::run_groups`] deals whole work groups round-robin:
+//! group `g` of `G` goes to lane `g % min(width, G)`, in order — the
+//! same stable lane order per fan-out as the per-backend pools used.
+//! Every item writes only its own caller-disjoint outputs and no
+//! floating-point reduction crosses items, so each fan-out's results
+//! are **bit-identical for any pool width** and independent of whatever
+//! other fan-outs run concurrently: two backends interleaving on the
+//! shared lanes cannot perturb each other's outputs because a lane runs
+//! one fan-out's task to completion before taking the next, and the
+//! task's arithmetic depends only on its own inputs and scratch (see
+//! below). `testkit::assert_parallel_parity` pins the serial-vs-pooled
+//! contract; its shared-pool mode (`assert_shared_pool_parity`) pins
+//! the concurrent-backends case under the randomized script fuzz.
 //!
-//! [`WorkerPool::run_groups`] deals whole work groups round-robin across
-//! its lanes exactly as the former per-call scaffold did: group `g` of
-//! `G` goes to lane `g % min(width, G)`, in order. Every item writes
-//! only its own caller-disjoint outputs and no floating-point reduction
-//! crosses items, so results are **bit-identical for any pool width** —
-//! the same contract `testkit::assert_parallel_parity` pins (now also
-//! under the randomized script fuzz).
+//! # Per-lane scratch, keyed by backend epoch
+//!
+//! Each worker owns a [`LaneScratch`] that survives across fan-outs —
+//! the cross-row/Gram buffers of the exact sweep, the prediction
+//! buffers of the decide tiles, and a whole [`LowRankGp`] for the
+//! low-rank sweep — so a backend's steady-state fan-outs allocate
+//! nothing per call. Because the lanes are now shared, scratch is keyed
+//! per **(lane, backend epoch)**: every backend (and session engine)
+//! draws a unique epoch from [`next_pool_epoch`] and stamps its tasks
+//! with it, and a worker resets its scratch to defaults whenever the
+//! incoming epoch differs from the one the scratch last served. A
+//! backend that has the pool to itself keeps its warm buffers exactly
+//! as before; interleaved backends trade reuse for a reset, never for
+//! cross-backend leakage. Consumers still fully overwrite the buffers
+//! they read (and re-seed their memo keys per fan-out), so the reset is
+//! a belt-and-suspenders guarantee, not a correctness crutch.
 //!
 //! # Panic behavior
 //!
 //! A panic inside a work closure is caught on the worker, reported back
-//! over the completion channel, and re-raised on the caller after every
-//! submitted lane has drained — workers stay alive (the scratch and the
-//! lanes survive), and a failing `assert!` inside swept code surfaces in
-//! the test that caused it, just as it did under scoped threads.
+//! over the fan-out's private completion channel, and re-raised on the
+//! caller after every submitted lane has drained — workers stay alive
+//! (the pool and the other fan-outs survive), and a failing `assert!`
+//! inside swept code surfaces in the test that caused it.
 
 use super::lowrank::LowRankGp;
 use super::simd;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
 use std::thread::JoinHandle;
 
-/// Reusable per-lane buffers, owned by one worker thread for its
-/// lifetime. One field per consumer:
+/// Reusable per-lane buffers, owned by one worker thread and keyed to
+/// the backend epoch they last served (see the module docs). One field
+/// per consumer:
 ///
 /// * `row` / `gram` — the exact nll sweep's (lengthscale, variance)
 ///   memoized cross-row and Gram builds;
@@ -100,22 +122,31 @@ fn reserve_to(v: &mut Vec<f64>, cap: usize) {
     }
 }
 
-/// A unit of submitted work: runs once on a worker against that lane's
-/// persistent scratch. Tasks are type-erased to `'static` inside
+/// A unit of submitted work: the closure runs once on a worker against
+/// that lane's persistent scratch (reset first if `epoch` differs from
+/// the scratch's last owner), then the result — unit or a caught panic
+/// payload — is acknowledged on the submitting fan-out's private `ack`
+/// channel. Closures are type-erased to `'static` inside
 /// [`WorkerPool::run_groups`], which blocks until every task has
 /// acknowledged completion — see the SAFETY note there.
-type Task = Box<dyn FnOnce(&mut LaneScratch) + Send + 'static>;
+struct Task {
+    epoch: u64,
+    work: Box<dyn FnOnce(&mut LaneScratch) + Send + 'static>,
+    ack: Sender<std::thread::Result<()>>,
+}
 
 /// A fixed-width pool of parked worker threads (see the module docs).
-/// Owned by `NativeBackend`; created lazily and dropped (threads joined)
-/// when the backend is dropped or its width changes.
+/// Production code shares the one process-global instance behind
+/// [`global_pool`]; unit tests may still build private pools directly.
+/// Concurrent [`run_groups`](Self::run_groups) calls from different
+/// threads are safe: each fan-out carries its own completion channel,
+/// and lane submission goes through a short per-lane mutex.
 pub struct WorkerPool {
     /// One submission channel per worker: lane → worker pinning is
-    /// 1:1 and stable, so each lane's scratch stays with its lane.
-    txs: Vec<Sender<Task>>,
-    /// Completion acknowledgements (one per submitted task; `Err`
-    /// carries a captured panic payload).
-    done_rx: Receiver<std::thread::Result<()>>,
+    /// 1:1 and stable, so each lane's scratch stays with its lane. The
+    /// mutex only guards the `send` (senders are cheap to serialize);
+    /// workers never contend on it.
+    txs: Vec<Mutex<Sender<Task>>>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -125,35 +156,62 @@ impl std::fmt::Debug for WorkerPool {
     }
 }
 
+/// Live `gp-pool-*` worker threads in this process (spawned minus
+/// exited) — the thread-budget observable the `bench_sessions --smoke`
+/// CI guard asserts stays at or below [`global_pool_width`] no matter
+/// how many engines and backends exist.
+static POOL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Decrements [`POOL_THREADS`] when a worker's loop exits (drop-guard,
+/// so even an unexpected unwind keeps the count honest).
+struct ThreadCountGuard;
+
+impl Drop for ThreadCountGuard {
+    fn drop(&mut self) {
+        POOL_THREADS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 impl WorkerPool {
     /// Spawn `width` parked workers (floored at 1), each owning a fresh
     /// [`LaneScratch`].
     pub fn new(width: usize) -> Self {
         let width = width.max(1);
-        let (done_tx, done_rx) = channel();
         let mut txs = Vec::with_capacity(width);
         let mut handles = Vec::with_capacity(width);
         for lane in 0..width {
             let (tx, rx) = channel::<Task>();
-            let done = done_tx.clone();
+            POOL_THREADS.fetch_add(1, Ordering::SeqCst);
             let handle = std::thread::Builder::new()
                 .name(format!("gp-pool-{lane}"))
                 .spawn(move || {
+                    let _count = ThreadCountGuard;
                     let mut scratch = LaneScratch::default();
-                    while let Ok(task) = rx.recv() {
-                        // The task (and every borrow it captured) is
-                        // consumed — dropped — before the ack is sent.
-                        let result = catch_unwind(AssertUnwindSafe(|| task(&mut scratch)));
-                        if done.send(result).is_err() {
-                            break; // owner dropped mid-shutdown
+                    // Epoch the scratch last served; 0 never matches a
+                    // real epoch (next_pool_epoch starts at 1), so the
+                    // first task always claims the scratch explicitly.
+                    let mut owner = 0u64;
+                    while let Ok(Task { epoch, work, ack }) = rx.recv() {
+                        if epoch != owner {
+                            scratch = LaneScratch::default();
+                            owner = epoch;
                         }
+                        // The closure (and every borrow it captured) is
+                        // consumed — dropped — before the ack is sent.
+                        let result = catch_unwind(AssertUnwindSafe(|| work(&mut scratch)));
+                        // A dead ack receiver means the submitting
+                        // fan-out is gone; nothing left to report.
+                        let _ = ack.send(result);
                     }
                 })
-                .expect("spawning a GP pool worker");
-            txs.push(tx);
+                .unwrap_or_else(|e| {
+                    POOL_THREADS.fetch_sub(1, Ordering::SeqCst);
+                    panic!("spawning a GP pool worker: {e}");
+                });
+            txs.push(Mutex::new(tx));
             handles.push(handle);
         }
-        Self { txs, done_rx, handles }
+        Self { txs, handles }
     }
 
     /// The number of worker lanes.
@@ -164,10 +222,13 @@ impl WorkerPool {
     /// Deal `groups` round-robin across the lanes (group `g` → lane
     /// `g % min(width, groups)`, in order — the deterministic dealing of
     /// the module docs) and run `work` once per used lane over that
-    /// lane's items, against the lane's persistent [`LaneScratch`].
-    /// Blocks until every lane has finished; re-raises the first caught
-    /// panic after all lanes have drained.
-    pub fn run_groups<T, F>(&self, groups: Vec<Vec<T>>, work: F)
+    /// lane's items, against the lane's persistent [`LaneScratch`]
+    /// (reset first when its last owner differs from `epoch` — pass the
+    /// caller's [`next_pool_epoch`] handle). Blocks until every lane has
+    /// finished; re-raises the first caught panic after all lanes have
+    /// drained. Safe to call concurrently from many threads: every call
+    /// waits on its own private completion channel.
+    pub fn run_groups<T, F>(&self, epoch: u64, groups: Vec<Vec<T>>, work: F)
     where
         T: Send,
         F: Fn(Vec<T>, &mut LaneScratch) + Sync,
@@ -180,6 +241,7 @@ impl WorkerPool {
         for (g, group) in groups.into_iter().enumerate() {
             lanes[g % used].extend(group);
         }
+        let (ack_tx, ack_rx) = channel::<std::thread::Result<()>>();
         let work_ref = &work;
         for (lane_idx, lane) in lanes.into_iter().enumerate() {
             let task: Box<dyn FnOnce(&mut LaneScratch) + Send + '_> =
@@ -192,26 +254,31 @@ impl WorkerPool {
             // worker sends its ack only after the task has run *and been
             // dropped* — no borrow outlives this call, even on panic
             // (the payload is re-raised only after all lanes drained).
-            let task: Task = unsafe {
+            let work_erased: Box<dyn FnOnce(&mut LaneScratch) + Send + 'static> = unsafe {
                 std::mem::transmute::<
                     Box<dyn FnOnce(&mut LaneScratch) + Send + '_>,
                     Box<dyn FnOnce(&mut LaneScratch) + Send + 'static>,
                 >(task)
             };
+            let task = Task { epoch, work: work_erased, ack: ack_tx.clone() };
+            let tx = self.txs[lane_idx].lock().unwrap_or_else(|p| p.into_inner());
             // A send can only fail if a worker exited its recv loop,
             // which cannot happen while the pool owns the channels — but
             // if that invariant is ever broken, unwinding here would
             // free the caller frame while already-submitted tasks still
             // borrow it. Abort instead: the SAFETY contract must hold on
             // every path, not just the expected one.
-            if self.txs[lane_idx].send(task).is_err() {
+            if tx.send(task).is_err() {
                 eprintln!("fatal: GP pool worker died with tasks in flight");
                 std::process::abort();
             }
         }
+        // Drop our own sender so a worker dropping an unrun task (its
+        // ack sender with it) is distinguishable from "still running".
+        drop(ack_tx);
         let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
         for _ in 0..used {
-            let ack = self.done_rx.recv().unwrap_or_else(|_| {
+            let ack = ack_rx.recv().unwrap_or_else(|_| {
                 // Same reasoning as the send above: returning (or
                 // unwinding) before every ack arrives would dangle the
                 // erased borrows of any still-running task.
@@ -245,6 +312,75 @@ impl Drop for WorkerPool {
     }
 }
 
+/// The process-global pool width chosen before (or at) first spawn.
+static GLOBAL_WIDTH: OnceLock<usize> = OnceLock::new();
+
+/// The process-global pool itself (spawned lazily by [`global_pool`]).
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Backend-epoch counter for [`next_pool_epoch`]; starts at 1 so the
+/// workers' "no owner yet" sentinel 0 never collides.
+static NEXT_EPOCH: AtomicU64 = AtomicU64::new(1);
+
+/// Draw a fresh backend epoch for scratch keying (see the module docs).
+/// Every [`WorkerPool::run_groups`] caller owns exactly one.
+pub fn next_pool_epoch() -> u64 {
+    NEXT_EPOCH.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Set the process-global pool width **once per process** (the
+/// `--gp-threads` CLI knob lands here): `0` resolves to the adaptive
+/// default, anything else is floored at 1. The first call wins — later
+/// calls (and a pool already spawned at the adaptive default) keep the
+/// established width, because resizing a shared pool under live
+/// fan-outs is exactly the lifecycle churn the global design removes.
+/// Returns the width the process settled on.
+pub fn configure_global_pool_width(threads: usize) -> usize {
+    let requested =
+        if threads == 0 { super::backend::adaptive_gp_threads() } else { threads.max(1) };
+    *GLOBAL_WIDTH.get_or_init(|| requested)
+}
+
+/// The width of the process-global pool: the spawned pool's lane count,
+/// or the width it *will* spawn with (configured, else adaptive).
+pub fn global_pool_width() -> usize {
+    if let Some(pool) = GLOBAL_POOL.get() {
+        return pool.width();
+    }
+    *GLOBAL_WIDTH.get_or_init(super::backend::adaptive_gp_threads)
+}
+
+/// The process-global worker pool, spawned on first use at
+/// [`global_pool_width`] lanes and alive for the rest of the process.
+pub fn global_pool() -> &'static WorkerPool {
+    global_pool_acquire().0
+}
+
+/// [`global_pool`], also reporting whether *this* call spawned it —
+/// the backend stats use the flag to count process-level pool creation
+/// exactly once without a second synchronization point.
+pub fn global_pool_acquire() -> (&'static WorkerPool, bool) {
+    let mut spawned_here = false;
+    let pool = GLOBAL_POOL.get_or_init(|| {
+        spawned_here = true;
+        WorkerPool::new(global_pool_width())
+    });
+    (pool, spawned_here)
+}
+
+/// True once the process-global pool has spawned.
+pub fn global_pool_is_running() -> bool {
+    GLOBAL_POOL.get().is_some()
+}
+
+/// Live GP pool worker threads in this process, counting the global
+/// pool and any private [`WorkerPool`]s alike. With only the global
+/// pool in play this is `<= global_pool_width()` for the whole process
+/// lifetime — the no-T×G-multiplication acceptance guard.
+pub fn spawned_pool_threads() -> usize {
+    POOL_THREADS.load(Ordering::SeqCst)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,13 +389,14 @@ mod tests {
     fn pool_runs_borrowed_work_to_disjoint_slots() {
         let pool = WorkerPool::new(4);
         assert_eq!(pool.width(), 4);
+        let epoch = next_pool_epoch();
         let mut out = vec![0.0f64; 10];
         let inputs: Vec<f64> = (0..10).map(|i| i as f64).collect();
         {
             let groups: Vec<Vec<(usize, &mut f64)>> =
                 out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
             let inputs = &inputs;
-            pool.run_groups(groups, |lane, _scratch| {
+            pool.run_groups(epoch, groups, |lane, _scratch| {
                 for (i, slot) in lane {
                     *slot = inputs[i] * 2.0;
                 }
@@ -271,11 +408,12 @@ mod tests {
     #[test]
     fn pool_survives_repeated_runs_and_reuses_scratch() {
         let pool = WorkerPool::new(2);
+        let epoch = next_pool_epoch();
         for round in 0..5 {
             let mut out = vec![0usize; 6];
             let groups: Vec<Vec<(usize, &mut usize)>> =
                 out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
-            pool.run_groups(groups, |lane, scratch| {
+            pool.run_groups(epoch, groups, |lane, scratch| {
                 // Persistent scratch: grow a marker buffer across runs.
                 scratch.row.push(round as f64);
                 for (i, slot) in lane {
@@ -289,13 +427,41 @@ mod tests {
     }
 
     #[test]
+    fn scratch_resets_when_the_epoch_changes_hands() {
+        // One lane, two epochs: the second epoch must not see the first
+        // epoch's scratch contents, and the first must start over when
+        // it comes back — the (lane, backend-epoch) keying contract.
+        let pool = WorkerPool::new(1);
+        let a = next_pool_epoch();
+        let b = next_pool_epoch();
+        let observe = |pool: &WorkerPool, epoch: u64| -> usize {
+            let mut len = 0usize;
+            {
+                let groups: Vec<Vec<&mut usize>> = vec![vec![&mut len]];
+                pool.run_groups(epoch, groups, |lane, scratch| {
+                    for slot in lane {
+                        *slot = scratch.row.len();
+                    }
+                    scratch.row.push(1.0);
+                });
+            }
+            len
+        };
+        assert_eq!(observe(&pool, a), 0, "epoch a starts fresh");
+        assert_eq!(observe(&pool, a), 1, "same epoch keeps its scratch");
+        assert_eq!(observe(&pool, b), 0, "epoch b must not inherit a's scratch");
+        assert_eq!(observe(&pool, a), 0, "a returning after b starts over, not from 2");
+    }
+
+    #[test]
     fn pool_uses_at_most_one_lane_per_group() {
         // 3 groups over 8 lanes: only 3 lanes are used, in order.
         let pool = WorkerPool::new(8);
+        let epoch = next_pool_epoch();
         let mut out = vec![String::new(), String::new(), String::new()];
         let groups: Vec<Vec<(usize, &mut String)>> =
             out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
-        pool.run_groups(groups, |lane, _| {
+        pool.run_groups(epoch, groups, |lane, _| {
             let name = std::thread::current().name().unwrap_or("?").to_string();
             for (_, slot) in lane {
                 *slot = name.clone();
@@ -309,11 +475,45 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_fanouts_share_the_lanes_without_crosstalk() {
+        // Many threads fanning out on one pool at once: every fan-out's
+        // private ack channel must pair its own tasks, and the disjoint
+        // outputs must come back exactly as a solo run produces them.
+        let pool = std::sync::Arc::new(WorkerPool::new(4));
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let pool = std::sync::Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                let epoch = next_pool_epoch();
+                for round in 0..16u64 {
+                    let mut out = vec![0u64; 12];
+                    {
+                        let groups: Vec<Vec<(usize, &mut u64)>> =
+                            out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
+                        pool.run_groups(epoch, groups, |lane, _| {
+                            for (i, slot) in lane {
+                                *slot = t * 1000 + round * 100 + i as u64;
+                            }
+                        });
+                    }
+                    for (i, v) in out.iter().enumerate() {
+                        assert_eq!(*v, t * 1000 + round * 100 + i as u64);
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().expect("concurrent fan-out thread");
+        }
+    }
+
+    #[test]
     fn pool_propagates_worker_panics_after_draining() {
         let pool = WorkerPool::new(2);
+        let epoch = next_pool_epoch();
         let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
             let groups: Vec<Vec<usize>> = vec![vec![0], vec![1]];
-            pool.run_groups(groups, |lane, _| {
+            pool.run_groups(epoch, groups, |lane, _| {
                 if lane.contains(&1) {
                     panic!("lane boom");
                 }
@@ -324,11 +524,28 @@ mod tests {
         let mut out = vec![0usize; 2];
         let groups: Vec<Vec<(usize, &mut usize)>> =
             out.iter_mut().enumerate().map(|(i, s)| vec![(i, s)]).collect();
-        pool.run_groups(groups, |lane, _| {
+        pool.run_groups(epoch, groups, |lane, _| {
             for (i, slot) in lane {
                 *slot = i + 7;
             }
         });
         assert_eq!(out, vec![7, 8]);
+    }
+
+    #[test]
+    fn global_pool_spawns_once_and_counts_its_threads() {
+        let (pool, _) = global_pool_acquire();
+        assert!(global_pool_is_running());
+        assert_eq!(pool.width(), global_pool_width());
+        let (again, spawned_again) = global_pool_acquire();
+        assert!(!spawned_again, "second acquire must reuse the global pool");
+        assert!(std::ptr::eq(pool, again));
+        // Configuration after the fact cannot resize it.
+        let width = configure_global_pool_width(pool.width() + 5);
+        assert_eq!(width, global_pool_width());
+        assert_eq!(global_pool().width(), pool.width());
+        // The thread budget covers at least the global lanes; private
+        // test pools may add to the count transiently, never subtract.
+        assert!(spawned_pool_threads() >= pool.width());
     }
 }

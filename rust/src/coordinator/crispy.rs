@@ -7,7 +7,9 @@
 //! here both as a library feature (`ruya crispy` in the CLI) and as a
 //! reference point for how much the *iterative* part of Ruya adds.
 
-use super::planner::RuyaPlanner;
+use anyhow::{bail, Result};
+
+use super::planner::{RuyaPlanner, SearchPlan};
 use crate::memmodel::{MemCategory, MemoryModel};
 use crate::searchspace::SearchSpace;
 
@@ -31,21 +33,46 @@ pub struct CrispySelector {
 
 impl CrispySelector {
     /// Pick the single most promising configuration for a job with the
-    /// given fitted memory model and full input size.
+    /// given fitted memory model and full input size. `job` labels the
+    /// job in error messages only.
     ///
     /// Heuristic (after the memory filter, which is Crispy's actual
     /// contribution): cost-efficiency prefers the cheapest *effective*
     /// compute — price per core discounted by a mild scale-out
     /// contention factor — which is the best prior-only guess without any
     /// execution history.
+    ///
+    /// Fails cleanly (instead of panicking, as it once did) when the
+    /// planner produces no phases or an empty first phase — e.g. a
+    /// degenerate search space with zero configurations.
     pub fn select(
         &self,
+        job: &str,
         model: &MemoryModel,
         input_gb: f64,
         space: &SearchSpace,
-    ) -> CrispyChoice {
+    ) -> Result<CrispyChoice> {
         let plan = self.planner.plan(model, input_gb, space);
-        let admissible = &plan.phases[0];
+        self.select_from_plan(job, &plan, space)
+    }
+
+    /// The selection step of [`select`](Self::select), starting from an
+    /// already-built plan. Split out so callers holding a plan (and
+    /// tests exercising degenerate ones) skip the planning pass.
+    pub fn select_from_plan(
+        &self,
+        job: &str,
+        plan: &SearchPlan,
+        space: &SearchSpace,
+    ) -> Result<CrispyChoice> {
+        let admissible = match plan.phases.first() {
+            Some(phase) if !phase.is_empty() => phase,
+            _ => bail!(
+                "crispy selection for job {job:?}: the phase plan is empty \
+                 ({} configuration(s) in the search space)",
+                space.len()
+            ),
+        };
 
         let score = |idx: usize| -> f64 {
             let c = space.config(idx);
@@ -64,14 +91,14 @@ impl CrispySelector {
             .iter()
             .copied()
             .min_by(|&a, &b| score(a).total_cmp(&score(b)).then(a.cmp(&b)))
-            .expect("plan phases are never empty");
+            .expect("phase emptiness was checked above");
 
-        CrispyChoice {
+        Ok(CrispyChoice {
             config_idx: best,
             category: plan.category,
             requirement_gb: plan.requirement_gb,
             admissible: admissible.len(),
-        }
+        })
     }
 }
 
@@ -87,7 +114,7 @@ mod tests {
             (1..=5).map(|k| (k as f64, 2.5 * k as f64)).collect();
         let model = MemoryModel::fit(&readings);
         let space = SearchSpace::scout();
-        let choice = CrispySelector::default().select(&model, 100.8, &space);
+        let choice = CrispySelector::default().select("kmeans", &model, 100.8, &space).unwrap();
         assert_eq!(choice.category, MemCategory::Linear);
         let req = choice.requirement_gb.unwrap();
         assert!(space.config(choice.config_idx).usable_memory_gb() >= req);
@@ -103,7 +130,7 @@ mod tests {
             (5.0, 1.21),
         ]);
         let space = SearchSpace::scout();
-        let choice = CrispySelector::default().select(&model, 300.0, &space);
+        let choice = CrispySelector::default().select("flat", &model, 300.0, &space).unwrap();
         assert_eq!(choice.category, MemCategory::Flat);
         assert_eq!(choice.admissible, 10);
         // The pick comes from the low-memory priority group.
@@ -134,7 +161,8 @@ mod tests {
         // the NaN-priced one reaches the score comparator.
         let readings: Vec<(f64, f64)> = (1..=5).map(|k| (k as f64, k as f64)).collect();
         let model = MemoryModel::fit(&readings);
-        let choice = CrispySelector::default().select(&model, 100.8, &space);
+        let choice =
+            CrispySelector::default().select("nan-price", &model, 100.8, &space).unwrap();
         assert_eq!(choice.category, MemCategory::Linear);
         assert_eq!(choice.admissible, 2, "both configs must be memory-admissible");
         assert_eq!(
@@ -153,12 +181,45 @@ mod tests {
         let mut regrets = Vec::new();
         for job in evaluation_jobs() {
             let profile = runner.profile_job(&job, 0xC0FFEE);
-            let choice = selector.select(&profile.model, job.input_gb, &runner.space);
+            let choice = selector
+                .select(&job.label(), &profile.model, job.input_gb, &runner.space)
+                .unwrap();
             let table = JobCostTable::build(&runner.sim, &job, &runner.space);
             regrets.push(table.normalized[choice.config_idx]);
         }
         let mean = crate::util::stats::mean(&regrets);
         assert!(mean < 3.0, "one-shot mean normalized cost {mean}");
         assert!(mean > 1.0, "one-shot selection cannot be universally optimal");
+    }
+
+    #[test]
+    fn empty_phase_plan_is_a_clean_error_naming_the_job() {
+        // This used to be an `.expect("plan phases are never empty")`
+        // panic. The planner cannot emit empty phases for a constructible
+        // space today, but a degenerate plan must still fail cleanly —
+        // the CLI and the pipeline surface this error to the user.
+        let space = SearchSpace::scout();
+        let selector = CrispySelector::default();
+        for plan in [
+            SearchPlan {
+                category: MemCategory::Unclear,
+                requirement_gb: None,
+                phases: vec![],
+                priority_fraction: 0.0,
+            },
+            SearchPlan {
+                category: MemCategory::Flat,
+                requirement_gb: None,
+                phases: vec![vec![]],
+                priority_fraction: 0.0,
+            },
+        ] {
+            let err = selector
+                .select_from_plan("terasort/bigdata", &plan, &space)
+                .expect_err("an empty phase plan must not select anything");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("terasort/bigdata"), "error must name the job: {msg}");
+            assert!(msg.contains("phase plan is empty"), "unexpected message: {msg}");
+        }
     }
 }

@@ -145,11 +145,13 @@ impl ExperimentRunner {
     }
 
     /// Runner over the pure-rust backend — the common case in tests,
-    /// benches and examples. The per-backend GP worker pool is kept
-    /// serial, matching `backend_factory_by_name`: the engine multiplies
-    /// backends by its own worker count, so per-backend pools (threads ~=
-    /// engine workers x pool lanes) are opted into explicitly via
-    /// `backend_factory_with_parallelism`, never defaulted here.
+    /// benches and examples. Each backend's GP fan-out is kept serial,
+    /// matching `backend_factory_by_name`: the engine already multiplies
+    /// backends by its own worker count, so attaching them to the
+    /// process-global worker pool is opted into explicitly via
+    /// `backend_factory_with_parallelism` (the pool is shared, so even
+    /// then total parked GP threads stay at the pool width — they are
+    /// never multiplied per backend), never defaulted here.
     pub fn native() -> Self {
         Self::new(Box::new(|| -> Result<Box<dyn GpBackend>> {
             let mut b = NativeBackend::new();

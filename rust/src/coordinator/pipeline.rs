@@ -258,7 +258,12 @@ impl MemoryPipeline {
             &params,
         )?;
 
-        let choice = CrispySelector::default().select(&profile.model, job.input_gb, &self.runner.space);
+        let choice = CrispySelector::default().select(
+            &job.label(),
+            &profile.model,
+            job.input_gb,
+            &self.runner.space,
+        )?;
         Ok(PipelineOutcome {
             label: job.label(),
             category: shortlist.category,

@@ -7,8 +7,11 @@
 //! incremental caches (distance matrix, Cholesky factors, inducing set)
 //! are rewarmed from the cursor trace on resume. Everything else is
 //! shared: the catalog's feature matrix and cost table live once per
-//! job (`Arc`-shared phases), and *one* engine-wide [`WorkerPool`]
-//! serves the candidate-scoring fan-out of every session.
+//! job (`Arc`-shared phases), and the **process-global** worker pool
+//! ([`pool::global_pool`]) serves the candidate-scoring fan-out of
+//! every session — engines park no scoring threads of their own, so any
+//! number of engines (and their `--threads` workers) share one budget
+//! of `pool_width` lanes.
 //!
 //! # Batched decide
 //!
@@ -18,8 +21,8 @@
 //! [`NativeBackend::prepare_decide`] fit on the session's own backend.
 //! (B) one pooled fan-out: the pure scoring passes of *all* pending
 //! decisions — borrowed factor views or fitted low-rank posteriors —
-//! are dealt round-robin across the shared pool in a single
-//! [`WorkerPool::run_groups`] call, instead of N serial decides.
+//! are dealt round-robin across the shared lanes in a single
+//! `run_groups` call, instead of N serial decides.
 //! (C) serial finish: EI + stopping criterion close each decision via
 //! [`SearchCursor::finish_decision`]. Per session the arithmetic is the
 //! call-for-call sequence of [`SearchCursor::decide_with_backend`], and
@@ -45,10 +48,10 @@
 //! warm session suspends/resumes exactly like a cold one.
 
 use crate::bayesopt::gp::{expected_improvement, predict_into, standardize};
+use crate::bayesopt::pool;
 use crate::bayesopt::{
-    adaptive_gp_threads, BoParams, CholFactor, CursorSnapshot, GpBackend, LowRankGp,
-    NativeBackend, PreparedDecide, SearchCursor, SearchOutcome, SearchStep, WarmStart,
-    WorkerPool, DECIDE_TILE,
+    BoParams, CholFactor, CursorSnapshot, GpBackend, LowRankGp, NativeBackend,
+    PreparedDecide, SearchCursor, SearchOutcome, SearchStep, WarmStart, DECIDE_TILE,
 };
 use crate::searchspace::SearchSpace;
 use crate::util::json::{JsonValue, JsonWriter};
@@ -547,6 +550,11 @@ pub struct SessionStats {
     pub suspends: u64,
     /// Sessions resumed from a [`SessionState`].
     pub resumes: u64,
+    /// 1 once this engine's first scoring fan-out has attached to the
+    /// process-global pool, 0 while it has only prepped serially.
+    pub global_pool_attach: u64,
+    /// The global pool width observed at attach time (0 before attach).
+    pub pool_thread_count: u64,
 }
 
 /// A resident multi-session optimizer (see the module docs).
@@ -554,14 +562,17 @@ pub struct SessionEngine {
     jobs: Vec<EngineJob>,
     sessions: Vec<Session>,
     next_id: u64,
-    pool: WorkerPool,
+    /// Scratch-keying epoch on the process-global pool (the engine's
+    /// batched fan-outs stamp their tasks with it, like a backend).
+    epoch: u64,
     stats: SessionStats,
 }
 
 /// Per-session backends are strictly serial: all scoring parallelism
-/// belongs to the engine's one shared pool, so thousands of sessions
-/// never spawn a thread each (`pool_creates` stays 0 across sessions —
-/// the bench smoke asserts exactly that).
+/// belongs to the one process-global pool the engine fans out on, so
+/// thousands of sessions never attach (let alone spawn) a pool each
+/// (`global_pool_attach` and `pool_creates` stay 0 across session
+/// backends — the bench smoke asserts exactly that).
 fn session_backend() -> NativeBackend {
     let mut b = NativeBackend::new();
     b.set_parallelism(1);
@@ -579,15 +590,20 @@ fn argmin(xs: &[f64]) -> usize {
 }
 
 impl SessionEngine {
-    /// An engine whose shared scoring pool has `gp_threads` lanes
-    /// (0 = adaptive, matching `--gp-threads` semantics).
+    /// An engine fanning its batched scoring out on the process-global
+    /// pool. `gp_threads` is forwarded to
+    /// [`pool::configure_global_pool_width`] (0 = adaptive, matching
+    /// `--gp-threads` semantics) — it sets the *process* width if no
+    /// pool width was established yet, and is otherwise a no-op: the
+    /// first configuration per process wins, and every engine after it
+    /// shares the same lanes instead of parking more threads.
     pub fn new(gp_threads: usize) -> Self {
-        let width = if gp_threads == 0 { adaptive_gp_threads() } else { gp_threads };
+        pool::configure_global_pool_width(gp_threads);
         Self {
             jobs: Vec::new(),
             sessions: Vec::new(),
             next_id: 1,
-            pool: WorkerPool::new(width),
+            epoch: pool::next_pool_epoch(),
             stats: SessionStats::default(),
         }
     }
@@ -755,6 +771,11 @@ impl SessionEngine {
         // so the result is identical for any pool width.
         if any_decides {
             self.stats.fanout_rounds += 1;
+            let (shared, _) = pool::global_pool_acquire();
+            if self.stats.global_pool_attach == 0 {
+                self.stats.global_pool_attach = 1;
+                self.stats.pool_thread_count = shared.width() as u64;
+            }
             let jobs = &self.jobs;
             let mut units: Vec<Vec<ScoreUnit>> = Vec::new();
             for sess in self.sessions.iter_mut() {
@@ -799,7 +820,7 @@ impl SessionEngine {
                     }
                 }
             }
-            self.pool.run_groups(units, |lane, scratch| {
+            shared.run_groups(self.epoch, units, |lane, scratch| {
                 for unit in lane {
                     match unit {
                         ScoreUnit::Exact { factor, alpha, x, n, d, hyp, xc, mu, var } => {
@@ -963,16 +984,23 @@ impl SessionEngine {
         self.sessions.iter().find(|s| s.id == id).map(|s| s.finished)
     }
 
-    /// Pool creations across all *session* backends — the shared-pool
+    /// Pool attachments across all *session* backends — the shared-pool
     /// invariant says this stays 0 no matter how many sessions run
-    /// (scoring parallelism lives in the engine's own pool).
+    /// (scoring parallelism is the engine fan-out's job, on the
+    /// process-global pool; session backends are pinned serial).
     pub fn session_backend_pool_creates(&self) -> u64 {
-        self.sessions.iter().map(|s| s.backend.decide_stats().pool_creates).sum()
+        self.sessions
+            .iter()
+            .map(|s| {
+                let ds = s.backend.decide_stats();
+                ds.pool_creates + ds.global_pool_attach
+            })
+            .sum()
     }
 
-    /// Lanes in the engine's shared scoring pool.
+    /// Lanes in the process-global scoring pool the engine fans out on.
     pub fn pool_width(&self) -> usize {
-        self.pool.width()
+        pool::global_pool_width()
     }
 
     /// Ids of all sessions currently held by the engine.

@@ -27,12 +27,14 @@
 //! `--seed <u64>`, `--reps <N>` (default 200 as in the paper),
 //! `--threads <N>` (worker threads; `table2` shards jobs x methods x
 //! repetitions as one flat task list, other commands shard repetitions —
-//! results are bit-identical for any value), `--gp-threads <N>` (each
-//! backend's internal persistent worker pool: the hyperparameter-grid
-//! nll sweep and the decide tile fan-out — also bit-identical for any
-//! value; default 0 = adaptive from `available_parallelism`, with a
-//! work-size floor keeping tiny windows serial), `--out <dir>` (export
-//! .dat/.json/.md files).
+//! results are bit-identical for any value), `--gp-threads <N>` (the
+//! **process-wide** GP worker-pool width, set once at startup: every
+//! backend and session engine fans its hyperparameter-grid nll sweep
+//! and decide tiles across the same shared lanes, so total parked GP
+//! threads never exceed this value whatever `--threads` is — also
+//! bit-identical for any value; default 0 = adaptive from
+//! `available_parallelism`, with a work-size floor keeping tiny windows
+//! serial), `--out <dir>` (export .dat/.json/.md files).
 
 use anyhow::{anyhow, bail, Context, Result};
 use ruya::bayesopt::backend_factory_with_parallelism;
@@ -44,8 +46,13 @@ use ruya::searchspace::SearchSpace;
 use ruya::util::cli::Args;
 use ruya::util::json::{JsonValue, JsonWriter};
 use ruya::workload::{evaluation_jobs, ClusterSim, JobCostTable, JobInstance};
-use std::io::BufRead;
+use std::io::{BufRead, Read};
 use std::path::Path;
+
+/// Upper bound on one `serve` request line (1 MiB). Longer lines get an
+/// `{"error":...}` reply and are skipped without ever being buffered
+/// whole, so a runaway client cannot balloon the resident process.
+const MAX_REQUEST_LINE: usize = 1 << 20;
 
 fn main() {
     let args = Args::parse(&["verbose", "help", "warm"]);
@@ -78,15 +85,13 @@ fn run(args: &Args) -> Result<()> {
     }
 
     let backend_name = args.opt_or("backend", "native");
-    // Resolve the adaptive `--gp-threads 0` sentinel with the engine
-    // width in view: a parallel engine (`--threads N`) already uses the
-    // machine, so per-worker GP pools stay serial unless the user sizes
-    // them explicitly — total threads ~= threads x gp-threads must be an
-    // explicit choice, never an adaptive^2 default.
-    let gp_threads = match args.opt_gp_threads() {
-        0 if args.opt_threads() > 1 => 1,
-        t => t,
-    };
+    // One GP worker pool serves the whole process, so `--threads` and
+    // `--gp-threads` no longer multiply: every engine worker fans out
+    // across the same shared lanes. Fix the pool width here, once,
+    // before any backend or session engine can race to spawn it
+    // (0 = adaptive from `available_parallelism`).
+    let gp_threads = args.opt_gp_threads();
+    ruya::bayesopt::configure_global_pool_width(gp_threads);
     let factory = backend_factory_with_parallelism(&backend_name, gp_threads)
         .with_context(|| format!("initializing backend {backend_name}"))?;
     let seed = args.opt_u64("seed", 0xC0FFEE);
@@ -500,7 +505,7 @@ fn crispy(runner: &ExperimentRunner, args: &Args, seed: u64) -> Result<()> {
     let mut regrets = Vec::new();
     for job in jobs {
         let profile = runner.profile_job(&job, seed);
-        let choice = selector.select(&profile.model, job.input_gb, &runner.space);
+        let choice = selector.select(&job.label(), &profile.model, job.input_gb, &runner.space)?;
         let table = JobCostTable::build(&runner.sim, &job, &runner.space);
         let cost = table.normalized[choice.config_idx];
         regrets.push(cost);
@@ -613,7 +618,7 @@ fn serve(
     gp_threads: usize,
 ) -> Result<()> {
     let mut engine = SessionEngine::new(gp_threads);
-    let reader: Box<dyn BufRead> = match args.opt("script") {
+    let mut reader: Box<dyn BufRead> = match args.opt("script") {
         Some(path) => {
             let f = std::fs::File::open(path).with_context(|| format!("opening --script {path}"))?;
             Box::new(std::io::BufReader::new(f))
@@ -624,16 +629,61 @@ fn serve(
         "ruya serve: engine up ({} scoring lane(s)); one JSON request per line",
         engine.pool_width()
     );
-    for line in reader.lines() {
-        let line = line.context("reading request stream")?;
-        let line = line.trim();
+    let error_reply = |msg: &str| {
+        let mut w = JsonWriter::new();
+        w.begin_object().key("error").string(msg).end_object();
+        println!("{}", w.finish());
+    };
+    // Bounded byte-wise reader: a resident service must survive every
+    // byte sequence a client can feed it. Oversized lines are answered
+    // with an error reply and skipped (never buffered whole), invalid
+    // UTF-8 degrades to a parse error on the lossy text, and only a
+    // hard I/O failure on the stream itself ends the loop.
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        let n = {
+            let mut limited = (&mut reader).take(MAX_REQUEST_LINE as u64 + 1);
+            match limited.read_until(b'\n', &mut buf) {
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("reading request stream"),
+            }
+        };
+        if n == 0 {
+            break; // EOF
+        }
+        if buf.len() > MAX_REQUEST_LINE && buf.last() != Some(&b'\n') {
+            // Drain the rest of the physical line so the stream stays
+            // aligned on line boundaries, then keep serving.
+            loop {
+                let available = match reader.fill_buf() {
+                    Ok(bytes) => bytes,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e).context("reading request stream"),
+                };
+                if available.is_empty() {
+                    break; // EOF mid-line
+                }
+                let (used, done) = match available.iter().position(|&b| b == b'\n') {
+                    Some(pos) => (pos + 1, true),
+                    None => (available.len(), false),
+                };
+                reader.consume(used);
+                if done {
+                    break;
+                }
+            }
+            error_reply(&format!("request line exceeds {MAX_REQUEST_LINE} bytes"));
+            continue;
+        }
+        let text = String::from_utf8_lossy(&buf);
+        let line = text.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
         if let Err(e) = serve_request(runner, &mut engine, cfg, line) {
-            let mut w = JsonWriter::new();
-            w.begin_object().key("error").string(&format!("{e:#}")).end_object();
-            println!("{}", w.finish());
+            error_reply(&format!("{e:#}"));
         }
     }
     Ok(())
@@ -746,6 +796,9 @@ fn serve_request(
                 ("resumes", s.resumes),
                 ("pool_width", engine.pool_width() as u64),
                 ("pool_creates", engine.session_backend_pool_creates()),
+                ("global_pool_attach", s.global_pool_attach),
+                ("pool_thread_count", s.pool_thread_count),
+                ("pool_threads_live", ruya::bayesopt::spawned_pool_threads() as u64),
             ] {
                 w.key(k).number(v as f64);
             }
@@ -848,17 +901,18 @@ OPTIONS
   --threads N            worker threads (default 1; table2 shards jobs x
                          methods x repetitions, other commands shard
                          repetitions; results bit-identical for any value)
-  --gp-threads N         GP-internal worker pool: each backend fans its
-                         32-point nll sweep and its 1024-wide decide
-                         tiles across a persistent N-lane pool; results
-                         are bit-identical for any value and multiply
-                         with --threads (total ~= threads * gp-threads).
-                         Default 0 = adaptive (available_parallelism,
-                         capped at 8) when --threads is 1, serial when
-                         the engine is parallel (threads x gp-threads
-                         stays an explicit choice); 1 forces serial;
-                         windows of <= 16 observations always run serial
-                         (work-size floor)
+  --gp-threads N         process-wide GP worker-pool width, fixed once at
+                         startup: ONE persistent N-lane pool serves every
+                         backend and session engine in the process, which
+                         fan their 32-point nll sweeps and 1024-wide
+                         decide tiles across the shared lanes. Total
+                         parked GP threads stay <= N no matter how many
+                         backends --threads spins up (no threads x
+                         gp-threads multiplication), and results are
+                         bit-identical for any value. Default 0 =
+                         adaptive (available_parallelism, capped at 8);
+                         1 forces serial; windows of <= 16 observations
+                         always run serial (work-size floor)
   --warm                 pipeline: run the warm-started transfer leg and
                          report the transfer store
   --seed S               experiment seed (default 0xC0FFEE)

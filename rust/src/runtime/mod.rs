@@ -2,18 +2,22 @@
 //!
 //! With the `xla-pjrt` feature this module loads the AOT-compiled HLO
 //! artifacts produced by `python/compile/aot.py` and executes them on
-//! the CPU PJRT client ([`pjrt`] is the only place the `xla` FFI crate
-//! is touched). Python is never on the request path: artifacts are
-//! compiled when a backend is constructed — once per evaluation worker
-//! in the parallel engine (PJRT handles are not `Send`, so workers
-//! cannot share one) — and reused for every search iteration that
-//! worker runs.
+//! the CPU PJRT client ([`pjrt`] is the only place the `xla` crate is
+//! touched — by default the vendored API shim at `vendor/xla/`, which
+//! type-checks this layer in CI and fails at runtime without a real
+//! plugin). Python is never on the request path: PJRT handles are not
+//! `Send`, so compiled executables live in [`ExecutorPool`]'s per-thread
+//! cache — each OS thread (evaluation worker, repetition loop) compiles
+//! the artifact set at most once and reuses it for every backend and
+//! every search iteration it runs.
 //!
-//! Without the feature (the default — the `xla` crate and its C++
-//! toolchain are not vendored) a dependency-free [`stub`] keeps the
-//! public surface compiling: `XlaRuntime::artifacts_available()` reports
-//! `false` and runtime construction fails with a clear error, so every
-//! XLA-gated test, bench and CLI path skips gracefully.
+//! Without the feature (the default) a dependency-free [`stub`] keeps
+//! the public surface compiling: `XlaRuntime::artifacts_available()`
+//! reports `false` and runtime construction fails with a clear error, so
+//! every XLA-gated test, bench and CLI path skips gracefully.
+
+mod executor_pool;
+pub use executor_pool::ExecutorPool;
 
 #[cfg(feature = "xla-pjrt")]
 mod artifact;

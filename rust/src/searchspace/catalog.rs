@@ -153,26 +153,36 @@ fn dynamic_machines() -> &'static Mutex<Vec<&'static MachineType>> {
     DYNAMIC_MACHINES.get_or_init(|| Mutex::new(Vec::new()))
 }
 
+/// Lock the registry, recovering from poisoning: a panic on some other
+/// thread that happened to hold this lock (a GP worker dying mid-lookup,
+/// a test's `catch_unwind`) must not turn every later catalog access
+/// into a cascading panic. Recovery is sound here because the registry's
+/// only mutation is a single `push` of a fully-built leaked entry — the
+/// `Vec` behind a poisoned lock is always structurally intact.
+fn lock_registry() -> std::sync::MutexGuard<'static, Vec<&'static MachineType>> {
+    dynamic_machines().lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Resolve a machine index — static catalog first, then the generated
 /// registry. Panics on an index no [`super::ClusterConfig`] can hold.
 pub fn machine_by_index(idx: usize) -> &'static MachineType {
     if let Some(m) = MACHINE_CATALOG.get(idx) {
         return m;
     }
-    let reg = dynamic_machines().lock().expect("machine registry poisoned");
+    let reg = lock_registry();
     reg[idx - MACHINE_CATALOG.len()]
 }
 
 /// Total registered machine types (static + generated).
 pub fn machine_count() -> usize {
-    MACHINE_CATALOG.len() + dynamic_machines().lock().expect("machine registry poisoned").len()
+    MACHINE_CATALOG.len() + lock_registry().len()
 }
 
 /// Register a machine type, deduplicating by name (specs are derived from
 /// the name alone, so a name collision is always the same machine).
 /// Returns its global index.
 fn register_machine(mt: MachineType) -> usize {
-    let mut reg = dynamic_machines().lock().expect("machine registry poisoned");
+    let mut reg = lock_registry();
     if let Some(pos) = reg.iter().position(|m| m.name == mt.name) {
         debug_assert_eq!(*reg[pos], mt, "machine {:?} re-registered with different specs", mt.name);
         return MACHINE_CATALOG.len() + pos;
@@ -207,7 +217,7 @@ fn generated_machine(family: MachineFamily, size: MachineSize, generation: u32) 
     let name = format!("{}{}.{}", family.letter(), generation, size.suffix());
     {
         // Fast path: already registered — nothing to build or leak.
-        let reg = dynamic_machines().lock().expect("machine registry poisoned");
+        let reg = lock_registry();
         if let Some(pos) = reg.iter().position(|m| m.name == name) {
             return MACHINE_CATALOG.len() + pos;
         }
@@ -373,6 +383,50 @@ mod tests {
         // The documented bound is reachable, not just a rejection line.
         let grid = generated_grid(max_generated_len());
         assert_eq!(grid.len(), max_generated_len());
+    }
+
+    #[test]
+    fn registry_survives_a_panic_while_the_lock_is_held() {
+        // Poison the registry mutex the way a dying thread would: panic
+        // with the guard live. Every registry operation afterwards must
+        // recover (`into_inner`) instead of cascading the panic — a
+        // resident `serve` process keeps answering requests after one
+        // worker dies mid-catalog-access.
+        let before = machine_count();
+        let poison = std::panic::catch_unwind(|| {
+            let _guard = lock_registry();
+            panic!("simulated worker death with the registry lock held");
+        });
+        assert!(poison.is_err(), "the poisoning closure must panic");
+        assert!(
+            DYNAMIC_MACHINES.get().expect("registry initialized above").is_poisoned(),
+            "the panic above must actually poison the mutex"
+        );
+        // Reads recover (>= because concurrently running tests may
+        // legitimately register machines of their own)...
+        assert!(machine_count() >= before, "reads must see the intact registry");
+        // ...and so do registrations: the full lookup + append path.
+        let idx = register_machine_for_tests(MachineType {
+            name: "test.poison-recovery",
+            family: MachineFamily::M,
+            size: MachineSize::Large,
+            cores: 2,
+            ram_gb: 8.0,
+            price_hourly: 0.1,
+        });
+        assert_eq!(machine_by_index(idx).name, "test.poison-recovery");
+        assert_eq!(
+            register_machine_for_tests(MachineType {
+                name: "test.poison-recovery",
+                family: MachineFamily::M,
+                size: MachineSize::Large,
+                cores: 2,
+                ram_gb: 8.0,
+                price_hourly: 0.1,
+            }),
+            idx,
+            "dedup-by-name must still work on the recovered registry"
+        );
     }
 
     #[test]

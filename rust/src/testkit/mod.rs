@@ -546,6 +546,79 @@ pub fn assert_parallel_parity_tol(
     }
 }
 
+/// The *shared*-pool mode of [`assert_parallel_parity`]: `backends`
+/// identically-configured [`NativeBackend`](crate::bayesopt::NativeBackend)s
+/// replay the same script **simultaneously**, on their own OS threads,
+/// all fanning out over the one process-global worker pool — and every
+/// trace must still match a serial single-backend replay to the bit.
+///
+/// This is the determinism contract the global pool adds over the old
+/// per-backend pools: a fan-out's outputs depend only on its own inputs
+/// and group order, never on what other backends are concurrently
+/// running on the same lanes (lane scratch is reset on epoch change and
+/// every group writes disjoint output slots). `make` builds each
+/// backend (lower `set_pool_min_obs` there so tiny scripts still engage
+/// the pool); the harness pins the serial reference with
+/// `set_parallelism(1)` and runs every concurrent backend at
+/// `gp_threads`. Each concurrent backend must also report having
+/// attached to the global pool — otherwise the run silently degrades to
+/// the serial path and the "concurrent" part of the contract goes
+/// untested — and the process must never hold more parked pool threads
+/// than the global width.
+pub fn assert_shared_pool_parity(
+    make: &(dyn Fn() -> crate::bayesopt::NativeBackend + Sync),
+    backends: usize,
+    gp_threads: usize,
+    script: &ParityScript,
+    xc: &[f64],
+    m: usize,
+    grid: &[[f64; 3]],
+) {
+    assert!(backends > 0, "need at least one concurrent backend");
+    assert!(gp_threads > 1, "gp_threads must engage the pool (> 1)");
+    assert!(!grid.is_empty(), "empty hyperparameter grid");
+    assert_eq!(xc.len(), m * script.d, "candidate matrix shape mismatch");
+
+    let mut serial = make();
+    serial.set_parallelism(1);
+    let reference = record_script_trace(&mut serial, script, xc, m, grid);
+
+    let traces: Vec<(ScriptTrace, crate::bayesopt::DecideStats)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..backends)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut b = make();
+                    b.set_parallelism(gp_threads);
+                    let trace = record_script_trace(&mut b, script, xc, m, grid);
+                    (trace, b.decide_stats())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shared-pool lane panicked")).collect()
+    });
+
+    for (i, (trace, stats)) in traces.iter().enumerate() {
+        assert_eq!(
+            stats.global_pool_attach, 1,
+            "concurrent backend {i} never attached to the global pool — \
+             the script is too small for its floor, so nothing ran concurrently"
+        );
+        compare_script_traces(
+            &format!("shared-pool backend {i} of {backends}"),
+            script.steps(),
+            &reference,
+            trace,
+            None,
+        );
+    }
+    let (spawned, width) =
+        (crate::bayesopt::spawned_pool_threads(), crate::bayesopt::global_pool_width());
+    assert!(
+        spawned <= width,
+        "{spawned} parked pool thread(s) exceed the process-global width {width}"
+    );
+}
+
 /// Pin the SIMD-dispatched backend against the forced-scalar backend
 /// over a whole script, within relative tolerance `tol` (pass
 /// [`SIMD_PARITY_RTOL`](crate::bayesopt::SIMD_PARITY_RTOL) — the

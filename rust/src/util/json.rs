@@ -22,7 +22,7 @@ pub enum JsonValue {
 
 impl JsonValue {
     pub fn parse(text: &str) -> Result<Self, String> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -68,9 +68,19 @@ impl JsonValue {
     }
 }
 
+/// Maximum container nesting the recursive-descent parser accepts.
+///
+/// Every `[` or `{` recurses once through [`Parser::value`]; without a
+/// cap, a few hundred KB of `[[[[…` overflows the thread stack and
+/// aborts the whole process — fatal for the resident `serve` loop,
+/// which must answer hostile input with an error line and keep going.
+/// 128 is far beyond anything this project writes or reads.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -96,8 +106,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<JsonValue, String> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Self::object),
+            Some(b'[') => self.nested(Self::array),
             Some(b'"') => Ok(JsonValue::String(self.string()?)),
             Some(b't') => self.literal("true", JsonValue::Bool(true)),
             Some(b'f') => self.literal("false", JsonValue::Bool(false)),
@@ -105,6 +115,22 @@ impl<'a> Parser<'a> {
             Some(_) => self.number(),
             None => Err("unexpected end of input".into()),
         }
+    }
+
+    /// Run one container parse a level deeper, enforcing [`MAX_DEPTH`]
+    /// so adversarial `[[[[…` input is a parse error, not a stack
+    /// overflow.
+    fn nested(
+        &mut self,
+        parse: fn(&mut Self) -> Result<JsonValue, String>,
+    ) -> Result<JsonValue, String> {
+        if self.depth >= MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos));
+        }
+        self.depth += 1;
+        let v = parse(self);
+        self.depth -= 1;
+        v
     }
 
     fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue, String> {
@@ -376,6 +402,26 @@ mod tests {
         let a = v.as_array().unwrap();
         assert_eq!(a[0].as_f64(), Some(-1500.0));
         assert_eq!(a[3].as_f64(), Some(0.125));
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // At MAX_DEPTH the parser still works...
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(JsonValue::parse(&ok).is_ok());
+        // ...one level past it is a clean error...
+        let over = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let err = JsonValue::parse(&over).unwrap_err();
+        assert!(err.contains("nesting deeper than"), "unexpected error: {err}");
+        // ...and hostile megabyte-scale nesting (which used to overflow
+        // the stack and abort the process) fails the same way, for
+        // arrays, objects, and mixtures.
+        let hostile = "[".repeat(200_000);
+        assert!(JsonValue::parse(&hostile).unwrap_err().contains("nesting deeper than"));
+        let objects = r#"{"k":"#.repeat(200_000);
+        assert!(JsonValue::parse(&objects).unwrap_err().contains("nesting deeper than"));
+        let mixed = r#"[{"k":["#.repeat(100_000);
+        assert!(JsonValue::parse(&mixed).unwrap_err().contains("nesting deeper than"));
     }
 
     #[test]

@@ -1,0 +1,87 @@
+//! Resident-service robustness pins: `ruya serve` must answer malformed,
+//! hostile, and oversized request lines with an `{"error":...}` reply
+//! and keep serving the valid requests around them — a resident engine
+//! that exits (or overflows its stack) on one bad client line loses
+//! every other client's open sessions with it.
+//!
+//! Drives the real binary (`CARGO_BIN_EXE_ruya`) over a `--script` file
+//! interleaving garbage with valid ops, end to end through the bounded
+//! line reader, the depth-capped JSON parser, and the op dispatcher.
+
+use std::io::Write as _;
+use std::process::Command;
+
+/// Must match `MAX_REQUEST_LINE` in `main.rs`.
+const MAX_REQUEST_LINE: usize = 1 << 20;
+
+#[test]
+fn serve_survives_garbage_between_valid_ops() {
+    let job = ruya::workload::evaluation_jobs()[0].label();
+
+    let mut script: Vec<u8> = Vec::new();
+    writeln!(script, "# comments and blank lines are skipped").unwrap();
+    writeln!(script).unwrap();
+    writeln!(script, r#"{{"op":"stats"}}"#).unwrap();
+    // 1: not JSON at all.
+    writeln!(script, "this is not json").unwrap();
+    // 2: valid JSON, unknown op.
+    writeln!(script, r#"{{"op":"frobnicate"}}"#).unwrap();
+    // 3: invalid UTF-8 — `.lines()` used to kill the whole loop here.
+    script.extend_from_slice(&[0xff, 0xfe, 0x80, b'\n']);
+    // 4: hostile nesting, below the size cap so it reaches the parser —
+    // used to overflow the recursive descent and abort the process.
+    script.extend(std::iter::repeat(b'[').take(300_000));
+    script.push(b'\n');
+    // 5: oversized line — must be skipped without being buffered whole.
+    script.extend(std::iter::repeat(b'x').take(MAX_REQUEST_LINE + 512));
+    script.push(b'\n');
+    // The engine still works after all of the above.
+    writeln!(script, r#"{{"op":"open","job":"{job}","sessions":1,"max_iters":3}}"#).unwrap();
+    writeln!(script, r#"{{"op":"run"}}"#).unwrap();
+    writeln!(script, r#"{{"op":"stats"}}"#).unwrap();
+
+    let dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("serve_garbage");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("script.jsonl");
+    std::fs::write(&path, &script).unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_ruya"))
+        .arg("serve")
+        .arg("--script")
+        .arg(&path)
+        .output()
+        .expect("spawning ruya serve");
+    assert!(
+        out.status.success(),
+        "serve must exit cleanly after a garbage-laced script; stderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = stdout.lines().collect();
+    let errors: Vec<&&str> = lines.iter().filter(|l| l.starts_with(r#"{"error""#)).collect();
+    let oks: Vec<&&str> = lines.iter().filter(|l| l.starts_with(r#"{"ok""#)).collect();
+    assert_eq!(
+        errors.len(),
+        5,
+        "each of the five garbage lines gets exactly one error reply; got:\n{stdout}"
+    );
+    assert_eq!(
+        oks.len(),
+        4,
+        "stats/open/run/stats must all still be answered; got:\n{stdout}"
+    );
+    assert!(
+        errors.iter().any(|l| l.contains("nesting deeper than")),
+        "the hostile-nesting line must die in the parser, not the stack:\n{stdout}"
+    );
+    assert!(
+        errors.iter().any(|l| l.contains("exceeds") && l.contains("bytes")),
+        "the oversized line must be rejected by length:\n{stdout}"
+    );
+    // Replies stay in request order: the last line answers the last
+    // stats op, after the garbage, with the completed session counted.
+    let last = lines.last().expect("serve printed nothing");
+    assert!(last.contains(r#""ok":"stats""#), "last reply: {last}");
+    assert!(last.contains(r#""sessions_opened":1"#), "last reply: {last}");
+}

@@ -162,3 +162,27 @@ fn rejects_oversized_inputs() {
     let (xc, cmask, m) = toy_candidates();
     assert!(exec.gp_ei(&x, &y, n, &xc, &cmask, m, [0.5, 1.0, 1e-4]).is_err());
 }
+
+#[test]
+fn executor_pool_compiles_once_per_thread() {
+    // Backends cloned from one pool on one thread must share a single
+    // compiled executable set instead of recompiling per backend.
+    use ruya::bayesopt::{GpBackend, XlaBackend};
+    use ruya::runtime::ExecutorPool;
+
+    if !XlaRuntime::artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let pool = ExecutorPool::from_default_artifacts();
+    let (x, y, n) = toy_data();
+    let (xc, cmaskf, m) = toy_candidates();
+    let cmask: Vec<bool> = cmaskf.iter().map(|&v| v > 0.0).collect();
+    for _ in 0..3 {
+        let mut b = XlaBackend::from_pool(pool.clone()).expect("backend from pool");
+        b.decide(&x, &y, n, AOT_N_FEATURES, &xc, &cmask, m, [0.5, 1.0, 1e-4])
+            .expect("pooled decide");
+        assert_eq!(b.call_count(), 1);
+    }
+    assert_eq!(pool.compile_count(), 1, "three backends, one compilation");
+}

@@ -1,0 +1,201 @@
+//! Dependency-free API shim for the `xla` PJRT FFI crate — see
+//! `README.md` one directory up.
+//!
+//! The shim exists so the `xla-pjrt` feature of the parent crate can be
+//! **built and type-checked** without the native XLA toolchain. Host-side
+//! literal plumbing (`Literal::vec1`/`reshape`/`to_vec`) actually works;
+//! everything that would need the PJRT plugin (`PjRtClient::cpu`,
+//! compilation, execution) returns a descriptive [`Error`] instead, so
+//! callers fail through their normal `Result` paths at runtime.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: convertible into `anyhow`
+/// chains (`std::error::Error + Send + Sync + 'static`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    fn no_plugin(what: &str) -> Self {
+        Self::new(format!(
+            "{what}: the vendored `xla` shim has no real PJRT plugin linked \
+             (swap in the real FFI crate — see rust/vendor/xla/README.md)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. The shim can never construct one.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::no_plugin("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "shim".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::no_plugin("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module. Parsing needs the native text parser, so the shim
+/// fails here — before anything could try to execute.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(Error::no_plugin(&format!("HloModuleProto::from_text_file({path:?})")))
+    }
+}
+
+/// An XLA computation wrapping an HLO module — pure marshaling, so the
+/// shim constructs it fine (it can only be reached via an
+/// [`HloModuleProto`], which the shim never yields).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// Compiled-and-loaded executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real crate's generic execute (callers write
+    /// `exe.execute::<Literal>(&literals)`); returns per-device,
+    /// per-output buffer vectors there — and an error here.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::no_plugin("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::no_plugin("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Element types [`Literal::to_vec`] can read out. The shim only ever
+/// holds f32 data (that is all the parent crate marshals).
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl NativeType for f64 {
+    fn from_f32(v: f32) -> Self {
+        v as f64
+    }
+}
+
+/// Host-side literal: flat f32 data plus dimensions. Fully functional —
+/// input marshaling runs for real even under the shim, so shape bugs
+/// surface in CI without the plugin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// A rank-1 literal over `data`.
+    pub fn vec1(data: &[f32]) -> Self {
+        Self { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions; errors when element counts
+    /// disagree (matching the real crate's shape check).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch ({} elements)",
+                self.dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal. Shim literals are never tuples (tuples
+    /// only come back from execution, which the shim refuses).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::new("to_tuple: shim literals are never tuples (nothing executes)"))
+    }
+
+    /// Read the flat data out as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_marshaling_works_without_the_plugin() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let shaped = lit.reshape(&[2, 3]).expect("2x3 reshape");
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[4, 2]).is_err(), "element-count mismatch must error");
+        assert!(lit.to_tuple().is_err());
+    }
+
+    #[test]
+    fn plugin_paths_fail_with_pointers_to_the_readme() {
+        let err = PjRtClient::cpu().expect_err("shim has no plugin");
+        let msg = err.to_string();
+        assert!(msg.contains("no real PJRT plugin"), "{msg}");
+        assert!(msg.contains("vendor/xla/README.md"), "{msg}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
